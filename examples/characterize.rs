@@ -1,0 +1,24 @@
+//! Measurement-study walkthrough (paper §2): probe the function models
+//! the way the paper's ~8K profiling runs probe the real functions —
+//! input-size scaling, the videoprocess resolution effect, and bounded
+//! parallelism.
+//!
+//!     cargo run --release --example characterize [--function compress]
+
+use shabari::experiments::{characterize, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::default();
+    println!("### §2.1 input properties (Figures 2 & 3)\n");
+    characterize::fig2(&ctx)?;
+    characterize::fig3(&ctx)?;
+    println!("\n### §2.2 function semantics / bounded parallelism (Figure 4)\n");
+    characterize::fig4(&ctx)?;
+    println!("\n### §2.3 resource-type binding (Figure 1)\n");
+    characterize::fig1(&ctx)?;
+
+    let (s1, s2) = characterize::fig3_vcpu_spread(ctx.seed);
+    println!("\nresolution effect: set-1 vCPU spread {:.0}%, set-2 {:.0}%", s1 * 100.0, s2 * 100.0);
+    println!("(Takeaway #1: input properties beyond size drive resource usage.)");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Head-to-head allocator comparison on one trace: all six Fig-8 systems
+//! at a chosen load.
+//!
+//!     cargo run --release --example compare_allocators -- --rps 5
+
+use shabari::experiments::common::{run_one, sim_config, Ctx};
+use shabari::experiments::e2e::FIG8_POLICIES;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let rps = args
+        .iter()
+        .position(|a| a == "--rps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(4.0);
+
+    let ctx = Ctx { duration_s: 600.0, ..Default::default() };
+    let workload = ctx.workload();
+    let cfg = sim_config(&ctx);
+
+    println!(
+        "{:<16} {:>10} {:>14} {:>14} {:>12} {:>12}",
+        "system", "SLO viol", "waste vCPU p50", "waste mem p50", "cpu util", "cold starts"
+    );
+    println!("{:-<82}", "");
+    for name in FIG8_POLICIES {
+        let (_, m) = run_one(name, &ctx, &workload, rps, &cfg)?;
+        println!(
+            "{:<16} {:>9.1}% {:>14.1} {:>11.2} GB {:>11.0}% {:>11.1}%",
+            name,
+            m.slo_violation_pct,
+            m.wasted_vcpus.p50,
+            m.wasted_mem_gb.p50,
+            100.0 * m.vcpu_utilization.p50,
+            m.cold_start_pct,
+        );
+    }
+    println!("\n(rps = {rps}; see `shabari experiment fig8` for the full sweep)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: run Shabari on a small Azure-like trace and print the
+//! paper's three evaluation metrics.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the native learner backend so it runs without artifacts; pass
+//! `--xla` (after `make artifacts`) to exercise the production
+//! Pallas/JAX/XLA path.
+
+use shabari::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::ShabariPolicy;
+use shabari::metrics::from_result;
+use shabari::simulator::engine::simulate;
+use shabari::simulator::{Policy, SimConfig};
+use shabari::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let use_xla = std::env::args().any(|a| a == "--xla");
+
+    // 1. Build the Table-1 workload with 1.4x SLOs.
+    let workload = Workload::build(42, 1.4);
+
+    // 2. Assemble Shabari: online allocator + cold-start-aware scheduler.
+    let cfg = if use_xla { AllocatorConfig::xla("artifacts") } else { AllocatorConfig::default() };
+    let backend = cfg.learner_backend;
+    let allocator = ResourceAllocator::new(cfg)?;
+    let mut shabari = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(42)));
+    println!("policy: {} (backend: {backend:?})", shabari.name());
+
+    // 3. A 5-minute trace at 4 requests/second.
+    let trace = workload.trace(4.0, 300.0, 7);
+    println!("trace: {} invocations over 300 s", trace.len());
+
+    // 4. Simulate on the paper's 16-invoker testbed.
+    let res = simulate(SimConfig::default(), &mut shabari, trace);
+    let m = from_result("shabari", &res);
+
+    println!("\n== results ==");
+    println!("SLO violations:        {:.1}%", m.slo_violation_pct);
+    println!("wasted vCPUs (p50):    {:.1}", m.wasted_vcpus.p50);
+    println!("wasted memory (p50):   {:.2} GB", m.wasted_mem_gb.p50);
+    println!("vCPU utilization p50:  {:.0}%", 100.0 * m.vcpu_utilization.p50);
+    println!("mem utilization p50:   {:.0}%", 100.0 * m.mem_utilization.p50);
+    println!("cold starts:           {:.1}%", m.cold_start_pct);
+    println!("containers created:    {}", res.containers_created);
+    println!("background launches:   {}", res.background_launches);
+    Ok(())
+}

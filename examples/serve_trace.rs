@@ -1,0 +1,119 @@
+//! End-to-end validation driver (DESIGN.md §4, EXPERIMENTS.md §E2E):
+//! serve a full Azure-like trace through the complete three-layer stack —
+//! rust coordinator routing predict/update calls through the
+//! AOT-compiled Pallas/JAX artifacts on PJRT — on the paper's 16-invoker
+//! testbed, and report latency/throughput vs the static-large baseline.
+//!
+//!     make artifacts && cargo run --release --example serve_trace
+//!
+//! Falls back to the native learner (with a notice) if artifacts are
+//! missing, so the example always runs.
+
+use std::time::Instant;
+
+use shabari::baselines::StaticPolicy;
+use shabari::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::ShabariPolicy;
+use shabari::metrics::from_result;
+use shabari::simulator::engine::simulate;
+use shabari::simulator::SimConfig;
+use shabari::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let acfg = if have_artifacts {
+        println!("learner backend: XLA/PJRT (AOT Pallas/JAX artifacts)");
+        AllocatorConfig::xla("artifacts")
+    } else {
+        println!("learner backend: native (run `make artifacts` for the XLA path)");
+        AllocatorConfig::default()
+    };
+
+    let rps = 4.0;
+    let duration = 600.0;
+    let workload = Workload::build(42, 1.4);
+    let trace = workload.trace(rps, duration, 11);
+    println!(
+        "trace: {} invocations over {duration} s (~{rps} rps), 16 workers x 90 vCPU / 125 GB\n",
+        trace.len()
+    );
+
+    // Shabari (full system)
+    let allocator = ResourceAllocator::new(acfg)?;
+    let mut shabari = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(42)));
+    let t0 = Instant::now();
+    let res_s = simulate(SimConfig::default(), &mut shabari, trace.clone());
+    let wall_s = t0.elapsed().as_secs_f64();
+    let ms = from_result("shabari", &res_s);
+
+    // static-large comparison
+    let mut static_large = StaticPolicy::large(42);
+    let t0 = Instant::now();
+    let res_l = simulate(SimConfig::default(), &mut static_large, trace);
+    let wall_l = t0.elapsed().as_secs_f64();
+    let ml = from_result("static-large", &res_l);
+
+    println!("{:<28} {:>12} {:>14}", "metric", "shabari", "static-large");
+    println!("{:-<56}", "");
+    let row = |k: &str, a: String, b: String| println!("{k:<28} {a:>12} {b:>14}");
+    row(
+        "SLO violations",
+        format!("{:.1}%", ms.slo_violation_pct),
+        format!("{:.1}%", ml.slo_violation_pct),
+    );
+    row(
+        "wasted vCPUs p50",
+        format!("{:.1}", ms.wasted_vcpus.p50),
+        format!("{:.1}", ml.wasted_vcpus.p50),
+    );
+    row(
+        "wasted vCPUs p95",
+        format!("{:.1}", ms.wasted_vcpus.p95),
+        format!("{:.1}", ml.wasted_vcpus.p95),
+    );
+    row(
+        "wasted memory p50 (GB)",
+        format!("{:.2}", ms.wasted_mem_gb.p50),
+        format!("{:.2}", ml.wasted_mem_gb.p50),
+    );
+    row(
+        "vCPU utilization p50",
+        format!("{:.0}%", 100.0 * ms.vcpu_utilization.p50),
+        format!("{:.0}%", 100.0 * ml.vcpu_utilization.p50),
+    );
+    row(
+        "mem utilization p50",
+        format!("{:.0}%", 100.0 * ms.mem_utilization.p50),
+        format!("{:.0}%", 100.0 * ml.mem_utilization.p50),
+    );
+    row(
+        "cold starts",
+        format!("{:.1}%", ms.cold_start_pct),
+        format!("{:.1}%", ml.cold_start_pct),
+    );
+    row("mean e2e latency", format!("{:.2}s", ms.mean_e2e_s), format!("{:.2}s", ml.mean_e2e_s));
+    row(
+        "throughput (completed/s)",
+        format!("{:.2}", ms.throughput),
+        format!("{:.2}", ml.throughput),
+    );
+    row("driver wall time", format!("{wall_s:.2}s"), format!("{wall_l:.2}s"));
+    row(
+        "simulated inv/s (driver)",
+        format!("{:.0}", ms.invocations as f64 / wall_s),
+        format!("{:.0}", ml.invocations as f64 / wall_l),
+    );
+
+    // The qualitative headline must hold end-to-end:
+    anyhow::ensure!(
+        ms.wasted_vcpus.p50 <= ml.wasted_vcpus.p50,
+        "Shabari must waste fewer vCPUs than static-large"
+    );
+    anyhow::ensure!(
+        ms.wasted_mem_gb.p50 <= ml.wasted_mem_gb.p50,
+        "Shabari must waste less memory than static-large"
+    );
+    println!("\nE2E check OK: Shabari right-sizes vs static-large on the same trace.");
+    Ok(())
+}

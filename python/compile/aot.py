@@ -1,0 +1,77 @@
+"""AOT compile path: lower the L2 JAX graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+resulting ``artifacts/*.hlo.txt`` through the PJRT C API and python never
+appears on the request path again.
+
+HLO *text* (not ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry: str) -> str:
+    fn, args = model.example_args(entry)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Kept for Makefile compatibility: --out <file> writes the predict
+    # artifact to that exact path in addition to the standard set.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "num_classes": model.NUM_CLASSES,
+        "feat_dim": model.FEAT_DIM,
+        "batch": model.BATCH,
+        "entrypoints": list(model.ENTRYPOINTS),
+        "jax_version": jax.__version__,
+    }
+    for entry in model.ENTRYPOINTS:
+        text = lower_entry(entry)
+        path = os.path.join(args.out_dir, f"{entry}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+    if args.out:
+        # Legacy single-file target (Makefile sentinel).
+        text = lower_entry("csmc_predict")
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the CSMC learner hot-spot + pure-jnp oracle.
+from . import csmc, ref  # noqa: F401

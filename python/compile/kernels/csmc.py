@@ -1,0 +1,173 @@
+"""Layer-1 Pallas kernels for the CSMC (cost-sensitive multi-class) learner.
+
+Shabari's resource allocator trains one CSOAA model per function and per
+resource type (vCPU, memory): C per-class linear regressors over an
+F-dimensional padded feature vector. The three hot operations are:
+
+  * ``score``        — W[C,F] @ x[F]        -> scores[C]   (predict path)
+  * ``score_batch``  — X[B,F] @ W[C,F]^T    -> scores[B,C] (bulk predict)
+  * ``update``       — rank-1 CSOAA SGD step on W           (feedback path)
+
+All kernels run with ``interpret=True``: this CPU-PJRT image cannot execute
+Mosaic custom-calls, so interpret mode is both the correctness vehicle and
+the form that AOT-lowers into plain HLO the rust runtime can run.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the weight panel for the
+production shape (C=48, F=16, f32) is 3 KiB — it lives comfortably in VMEM,
+so the single-example kernels use one grid step with the whole panel
+resident (BlockSpec = whole array). The batched kernel tiles over
+(block_b x block_c) output tiles with the F dimension kept whole, i.e. an
+MXU-friendly ``(block_b, F) @ (F, block_c)`` inner matmul per grid cell.
+Block sizes are parameters so the perf pass can sweep them.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# score: W[C,F] @ x[F] -> [C]
+# ---------------------------------------------------------------------------
+
+def _score_kernel(w_ref, x_ref, o_ref):
+    # Whole-panel matvec: W (block_c, F) against the full feature vector.
+    o_ref[...] = w_ref[...] @ x_ref[...]
+
+
+def score(w, x, *, block_c=None):
+    """Per-class cost scores for one example (Pallas).
+
+    w: [C, F] f32, x: [F] f32 -> [C] f32.
+    ``block_c`` tiles the class dimension; default = whole panel in one
+    grid step (C*F*4B fits VMEM for the production shape).
+    """
+    c, f = w.shape
+    assert x.shape == (f,), (w.shape, x.shape)
+    if block_c is None or block_c >= c:
+        return pl.pallas_call(
+            _score_kernel,
+            out_shape=jax.ShapeDtypeStruct((c,), w.dtype),
+            interpret=True,
+        )(w, x)
+    assert c % block_c == 0, f"block_c={block_c} must divide C={c}"
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(c // block_c,),
+        in_specs=[
+            pl.BlockSpec((block_c, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), w.dtype),
+        interpret=True,
+    )(w, x)
+
+
+# ---------------------------------------------------------------------------
+# score_batch: X[B,F] @ W[C,F]^T -> [B,C]
+# ---------------------------------------------------------------------------
+
+def _score_batch_kernel(x_ref, w_ref, o_ref):
+    # (block_b, F) @ (F, block_c): contraction kept whole so each grid cell
+    # is one MXU-shaped matmul; no cross-step accumulation needed.
+    o_ref[...] = x_ref[...] @ w_ref[...].T
+
+
+def score_batch(w, xs, *, block_b=None, block_c=None):
+    """Batched scores (Pallas). w: [C,F], xs: [B,F] -> [B,C]."""
+    c, f = w.shape
+    b, f2 = xs.shape
+    assert f == f2, (w.shape, xs.shape)
+    if (block_b is None or block_b >= b) and (block_c is None or block_c >= c):
+        return pl.pallas_call(
+            _score_batch_kernel,
+            out_shape=jax.ShapeDtypeStruct((b, c), w.dtype),
+            interpret=True,
+        )(xs, w)
+    bb = block_b or b
+    bc = block_c or c
+    assert b % bb == 0 and c % bc == 0, (b, bb, c, bc)
+    return pl.pallas_call(
+        _score_batch_kernel,
+        grid=(b // bb, c // bc),
+        in_specs=[
+            pl.BlockSpec((bb, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), w.dtype),
+        interpret=True,
+    )(xs, w)
+
+
+# ---------------------------------------------------------------------------
+# update: W' = W - lr * outer(W@x - costs, x)
+# ---------------------------------------------------------------------------
+
+def _update_kernel(w_ref, x_ref, c_ref, lr_ref, o_ref):
+    x = x_ref[...]
+    pred = w_ref[...] @ x           # (block_c,)
+    err = pred - c_ref[...]         # (block_c,)
+    o_ref[...] = w_ref[...] - lr_ref[0] * err[:, None] * x[None, :]
+
+
+def update(w, x, costs, lr, *, block_c=None):
+    """One CSOAA SGD step (Pallas).
+
+    w: [C,F], x: [F], costs: [C], lr: scalar (passed as a length-1 vector
+    internally so the interpret-mode BlockSpec stays rank-1) -> [C,F].
+    """
+    c, f = w.shape
+    assert x.shape == (f,) and costs.shape == (c,)
+    lr_vec = jnp.reshape(jnp.asarray(lr, dtype=w.dtype), (1,))
+    if block_c is None or block_c >= c:
+        return pl.pallas_call(
+            _update_kernel,
+            out_shape=jax.ShapeDtypeStruct((c, f), w.dtype),
+            interpret=True,
+        )(w, x, costs, lr_vec)
+    assert c % block_c == 0
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(c // block_c,),
+        in_specs=[
+            pl.BlockSpec((block_c, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_c, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, f), w.dtype),
+        interpret=True,
+    )(w, x, costs, lr_vec)
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU estimate used by DESIGN.md §Perf (structure-only: interpret
+# mode gives CPU-numpy timings, which are NOT a TPU proxy).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes(c, f, b=1, dtype_bytes=4, block_b=None, block_c=None):
+    """Worst-case VMEM residency of one grid step of score_batch."""
+    bb = block_b or b
+    bc = block_c or c
+    x_tile = bb * f * dtype_bytes
+    w_tile = bc * f * dtype_bytes
+    o_tile = bb * bc * dtype_bytes
+    return x_tile + w_tile + o_tile
+
+
+def mxu_utilization(c, f, b, block_b=None, block_c=None, mxu=128):
+    """Fraction of MXU lanes busy for the inner (bb, F) @ (F, bc) matmul.
+
+    The systolic array processes mxu x mxu tiles; utilization is the product
+    of the fill ratios of each dimension (B and C fill the spatial dims, F
+    streams through).
+    """
+    bb = min(block_b or b, mxu)
+    bc = min(block_c or c, mxu)
+    return (bb / mxu) * (bc / mxu)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the CSMC (cost-sensitive multi-class) kernels.
+
+This is the CORE correctness signal for Layer 1: every Pallas kernel in
+``csmc.py`` must match these reference implementations (we assert
+``allclose`` with tight f32 tolerances in pytest and hypothesis sweeps).
+
+The learner is Vowpal-Wabbit-style CSOAA: one linear regressor per class
+predicts the *cost* of choosing that class; prediction = argmin over class
+scores (the argmin itself stays in rust, where confidence gating and
+safeguards live).
+"""
+
+import jax.numpy as jnp
+
+
+def score_ref(w, x):
+    """Per-class cost scores for one example.
+
+    w: [C, F] per-class regressor weights
+    x: [F]    feature vector
+    returns [C] scores (predicted cost per class)
+    """
+    return w @ x
+
+
+def score_batch_ref(w, xs):
+    """Batched scores.
+
+    w:  [C, F]
+    xs: [B, F]
+    returns [B, C]
+    """
+    return xs @ w.T
+
+
+def update_ref(w, x, costs, lr):
+    """One CSOAA SGD step on squared loss, all classes at once.
+
+    Per class i:  pred_i = w_i . x ;  w_i' = w_i - lr * (pred_i - c_i) * x
+    (rank-1 update: W' = W - lr * outer(pred - costs, x))
+
+    w:     [C, F]
+    x:     [F]
+    costs: [C]  observed cost labels (from the rust cost function)
+    lr:    []   scalar learning rate
+    returns [C, F] updated weights
+    """
+    pred = w @ x
+    return w - lr * jnp.outer(pred - costs, x)

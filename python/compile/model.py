@@ -1,0 +1,82 @@
+"""Layer-2 JAX graphs for Shabari's online CSMC learner.
+
+These are the computations the rust coordinator executes through PJRT on
+the request path (predict) and the feedback path (update). Each function
+here calls the Layer-1 Pallas kernels in ``kernels/csmc.py`` so that the
+kernel lowers into the same HLO module — one artifact per entrypoint,
+compiled once by the rust runtime at startup.
+
+Production shapes (mirrored in ``rust/src/runtime/mod.rs`` and checked via
+``artifacts/manifest.json``):
+
+  C = 48  classes  (vCPU classes 1..48; memory classes 128MB * 1..48)
+  F = 16  padded feature dimension (Table 2 features + bias + SLO slots)
+  B = 64  bulk-predict batch
+
+The argmin / confidence gating / safeguard logic intentionally stays in
+rust (Layer 3): it is branchy scalar logic entangled with scheduler state,
+not tensor compute.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import csmc
+
+# Shape constants baked into the AOT artifacts.
+NUM_CLASSES = 48
+FEAT_DIM = 16
+BATCH = 64
+# Default CSOAA learning rate; the rust side passes lr explicitly so this
+# is only the value used for documentation/tests.
+DEFAULT_LR = 0.05
+
+
+def csmc_predict(w, x):
+    """Predict per-class costs for one invocation.
+
+    w: [C, F] model weights, x: [F] featurized input (+ SLO slot).
+    Returns a 1-tuple (scores[C],) — all artifacts return tuples.
+    """
+    return (csmc.score(w, x),)
+
+
+def csmc_update(w, x, costs, lr):
+    """One online CSOAA update after an invocation completes.
+
+    costs[C] comes from the rust cost function (§4.3.1 of the paper:
+    lowest cost 1 at the target class, growing linearly away from it,
+    underprediction penalized more than overprediction).
+    """
+    return (csmc.update(w, x, costs, lr),)
+
+
+def csmc_predict_batch(w, xs):
+    """Bulk predict: xs [B, F] -> scores [B, C] (warm-up, replay, bench)."""
+    return (csmc.score_batch(w, xs),)
+
+
+def reference_predict(w, x):
+    """Pure-jnp mirror of csmc_predict (used by pytest only)."""
+    from .kernels import ref
+
+    return (ref.score_ref(w, x),)
+
+
+def example_args(entry):
+    """ShapeDtypeStructs to lower each entrypoint with."""
+    import jax
+
+    f32 = jnp.float32
+    w = jax.ShapeDtypeStruct((NUM_CLASSES, FEAT_DIM), f32)
+    x = jax.ShapeDtypeStruct((FEAT_DIM,), f32)
+    c = jax.ShapeDtypeStruct((NUM_CLASSES,), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    xs = jax.ShapeDtypeStruct((BATCH, FEAT_DIM), f32)
+    return {
+        "csmc_predict": (csmc_predict, (w, x)),
+        "csmc_update": (csmc_update, (w, x, c, lr)),
+        "csmc_predict_batch": (csmc_predict_batch, (w, xs)),
+    }[entry]
+
+
+ENTRYPOINTS = ("csmc_predict", "csmc_update", "csmc_predict_batch")

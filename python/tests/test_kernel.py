@@ -1,0 +1,219 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Fixed-shape smoke tests plus hypothesis sweeps over shapes, block sizes,
+and value ranges. Tolerances are tight: the kernels perform the same ops
+as the oracle, so only reduction-order noise is allowed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import csmc, ref
+
+RTOL = 1e-4
+ATOL = 1e-4
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# Fixed production shapes
+# ---------------------------------------------------------------------------
+
+class TestProductionShapes:
+    C, F, B = 48, 16, 64
+
+    def test_score(self):
+        kw, kx = keys(0, 2)
+        w, x = rand(kw, (self.C, self.F)), rand(kx, (self.F,))
+        np.testing.assert_allclose(
+            csmc.score(w, x), ref.score_ref(w, x), rtol=RTOL, atol=ATOL
+        )
+
+    def test_score_tiled(self):
+        kw, kx = keys(1, 2)
+        w, x = rand(kw, (self.C, self.F)), rand(kx, (self.F,))
+        for block_c in (8, 16, 24, 48):
+            np.testing.assert_allclose(
+                csmc.score(w, x, block_c=block_c),
+                ref.score_ref(w, x),
+                rtol=RTOL,
+                atol=ATOL,
+                err_msg=f"block_c={block_c}",
+            )
+
+    def test_score_batch(self):
+        kw, kx = keys(2, 2)
+        w, xs = rand(kw, (self.C, self.F)), rand(kx, (self.B, self.F))
+        np.testing.assert_allclose(
+            csmc.score_batch(w, xs), ref.score_batch_ref(w, xs), rtol=RTOL, atol=ATOL
+        )
+
+    def test_score_batch_tiled(self):
+        kw, kx = keys(3, 2)
+        w, xs = rand(kw, (self.C, self.F)), rand(kx, (self.B, self.F))
+        for bb, bc in [(8, 8), (16, 24), (32, 48), (64, 16)]:
+            np.testing.assert_allclose(
+                csmc.score_batch(w, xs, block_b=bb, block_c=bc),
+                ref.score_batch_ref(w, xs),
+                rtol=RTOL,
+                atol=ATOL,
+                err_msg=f"block=({bb},{bc})",
+            )
+
+    def test_update(self):
+        kw, kx, kc = keys(4, 3)
+        w, x = rand(kw, (self.C, self.F)), rand(kx, (self.F,))
+        costs = rand(kc, (self.C,), 1.0, 10.0)
+        np.testing.assert_allclose(
+            csmc.update(w, x, costs, 0.05),
+            ref.update_ref(w, x, costs, 0.05),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+    def test_update_tiled(self):
+        kw, kx, kc = keys(5, 3)
+        w, x = rand(kw, (self.C, self.F)), rand(kx, (self.F,))
+        costs = rand(kc, (self.C,), 1.0, 10.0)
+        for block_c in (8, 12, 24):
+            np.testing.assert_allclose(
+                csmc.update(w, x, costs, 0.05, block_c=block_c),
+                ref.update_ref(w, x, costs, 0.05),
+                rtol=RTOL,
+                atol=ATOL,
+                err_msg=f"block_c={block_c}",
+            )
+
+    def test_update_lr_zero_is_identity(self):
+        kw, kx, kc = keys(6, 3)
+        w, x = rand(kw, (self.C, self.F)), rand(kx, (self.F,))
+        costs = rand(kc, (self.C,))
+        np.testing.assert_allclose(csmc.update(w, x, costs, 0.0), w, rtol=0, atol=0)
+
+    def test_update_reduces_loss(self):
+        """A small-lr CSOAA step must not increase the squared cost error."""
+        kw, kx, kc = keys(7, 3)
+        w, x = rand(kw, (self.C, self.F)), rand(kx, (self.F,))
+        costs = rand(kc, (self.C,), 1.0, 10.0)
+
+        def loss(wm):
+            e = wm @ x - costs
+            return float(jnp.sum(e * e))
+
+        w2 = csmc.update(w, x, costs, 0.01)
+        assert loss(np.asarray(w2)) <= loss(w) + 1e-6
+
+    def test_score_zero_weights(self):
+        x = rand(keys(8, 1)[0], (self.F,))
+        out = csmc.score(jnp.zeros((self.C, self.F), jnp.float32), x)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros(self.C, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape/value sweeps
+# ---------------------------------------------------------------------------
+
+@st.composite
+def shapes(draw):
+    c = draw(st.integers(1, 96))
+    f = draw(st.integers(1, 48))
+    return c, f
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes(), st.integers(0, 2**31 - 1))
+def test_score_sweep(shape, seed):
+    c, f = shape
+    kw, kx = keys(seed, 2)
+    w, x = rand(kw, (c, f)), rand(kx, (f,))
+    np.testing.assert_allclose(csmc.score(w, x), ref.score_ref(w, x), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes(), st.integers(1, 32), st.integers(0, 2**31 - 1))
+def test_score_batch_sweep(shape, b, seed):
+    c, f = shape
+    kw, kx = keys(seed, 2)
+    w, xs = rand(kw, (c, f)), rand(kx, (b, f))
+    np.testing.assert_allclose(
+        csmc.score_batch(w, xs), ref.score_batch_ref(w, xs), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    shapes(),
+    st.floats(0.0, 0.5, allow_nan=False),
+    st.integers(0, 2**31 - 1),
+)
+def test_update_sweep(shape, lr, seed):
+    c, f = shape
+    kw, kx, kc = keys(seed, 3)
+    w, x = rand(kw, (c, f)), rand(kx, (f,))
+    costs = rand(kc, (c,), 1.0, 10.0)
+    np.testing.assert_allclose(
+        csmc.update(w, x, costs, lr),
+        ref.update_ref(w, x, costs, lr),
+        rtol=RTOL,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_score_tiled_sweep(c_tiles, block_c, seed):
+    """Tiled and untiled scoring agree for any divisible (C, block) combo."""
+    c = c_tiles * block_c
+    f = 16
+    kw, kx = keys(seed, 2)
+    w, x = rand(kw, (c, f)), rand(kx, (f,))
+    np.testing.assert_allclose(
+        csmc.score(w, x, block_c=block_c), csmc.score(w, x), rtol=RTOL, atol=ATOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# Extreme values: the cost function emits values in [1, ~2C]; weights stay
+# bounded. Check no overflow/NaN creep at the edges.
+# ---------------------------------------------------------------------------
+
+def test_large_costs_finite():
+    C, F = 48, 16
+    kw, kx = keys(100, 2)
+    w, x = rand(kw, (C, F)), rand(kx, (F,))
+    costs = jnp.full((C,), 96.0, jnp.float32)
+    out = csmc.update(w, x, costs, 0.05)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_repeated_updates_converge():
+    """Online CSOAA on a fixed example converges to predicting the costs."""
+    C, F = 8, 4
+    kx, kc = keys(101, 2)
+    x = rand(kx, (F,), 0.1, 1.0)
+    costs = rand(kc, (C,), 1.0, 8.0)
+    w = jnp.zeros((C, F), jnp.float32)
+    for _ in range(300):
+        w = csmc.update(w, x, costs, 0.2)
+    np.testing.assert_allclose(csmc.score(w, x), costs, rtol=1e-3, atol=1e-3)
+
+
+def test_vmem_estimate_production_fits():
+    # 48x16 f32 panel + batch tiles must fit a 16 MiB VMEM budget easily.
+    assert csmc.vmem_bytes(48, 16, b=64) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_monotone_in_tiles():
+    u_small = csmc.mxu_utilization(48, 16, 64, block_b=8, block_c=8)
+    u_big = csmc.mxu_utilization(48, 16, 64, block_b=64, block_c=48)
+    assert u_big > u_small

@@ -1,0 +1,116 @@
+"""L2 checks: model entrypoints produce correct shapes/values and the AOT
+lowering pipeline yields parseable HLO text with stable parameter order."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand(seed, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, lo, hi)
+
+
+class TestEntrypoints:
+    def test_predict_matches_ref(self):
+        w = rand(0, (model.NUM_CLASSES, model.FEAT_DIM))
+        x = rand(1, (model.FEAT_DIM,))
+        (scores,) = model.csmc_predict(w, x)
+        np.testing.assert_allclose(scores, ref.score_ref(w, x), rtol=1e-5, atol=1e-6)
+
+    def test_update_matches_ref(self):
+        w = rand(2, (model.NUM_CLASSES, model.FEAT_DIM))
+        x = rand(3, (model.FEAT_DIM,))
+        c = rand(4, (model.NUM_CLASSES,), 1.0, 10.0)
+        (w2,) = model.csmc_update(w, x, c, jnp.float32(0.05))
+        np.testing.assert_allclose(w2, ref.update_ref(w, x, c, 0.05), rtol=1e-5, atol=1e-5)
+
+    def test_predict_batch_shape(self):
+        w = rand(5, (model.NUM_CLASSES, model.FEAT_DIM))
+        xs = rand(6, (model.BATCH, model.FEAT_DIM))
+        (scores,) = model.csmc_predict_batch(w, xs)
+        assert scores.shape == (model.BATCH, model.NUM_CLASSES)
+        np.testing.assert_allclose(
+            scores, ref.score_batch_ref(w, xs), rtol=1e-5, atol=1e-6
+        )
+
+    def test_entrypoints_registry_complete(self):
+        for entry in model.ENTRYPOINTS:
+            fn, args = model.example_args(entry)
+            assert callable(fn)
+            assert all(hasattr(a, "shape") for a in args)
+
+
+class TestLowering:
+    @pytest.mark.parametrize("entry", model.ENTRYPOINTS)
+    def test_lowering_produces_hlo_text(self, entry):
+        text = aot.lower_entry(entry)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # tuple return convention the rust loader depends on
+        assert "tuple(" in text or ") tuple" in text
+
+    def test_predict_param_order(self):
+        """Rust passes (W, x); parameter(0) must be the [48,16] weights."""
+        text = aot.lower_entry("csmc_predict")
+        entry_lines = []
+        seen_entry = False
+        for line in text.splitlines():
+            t = line.strip()
+            if t.startswith("ENTRY"):
+                seen_entry = True
+                continue
+            if seen_entry:
+                if t.startswith("}"):
+                    break
+                if "parameter(" in t:
+                    entry_lines.append(t)
+        assert len(entry_lines) == 2
+        p0 = next(l for l in entry_lines if "parameter(0)" in l)
+        p1 = next(l for l in entry_lines if "parameter(1)" in l)
+        assert f"f32[{model.NUM_CLASSES},{model.FEAT_DIM}]" in p0
+        assert f"f32[{model.FEAT_DIM}]" in p1
+
+    def test_update_param_order(self):
+        text = aot.lower_entry("csmc_update")
+        assert f"f32[{model.NUM_CLASSES},{model.FEAT_DIM}]" in text
+        # lr is a scalar parameter
+        assert "f32[]" in text
+
+    def test_no_custom_calls(self):
+        """interpret=True must lower to plain HLO ops executable on CPU
+        PJRT — a mosaic/tpu custom-call would break the rust runtime."""
+        for entry in model.ENTRYPOINTS:
+            text = aot.lower_entry(entry)
+            assert "custom-call" not in text, f"{entry} contains a custom-call"
+
+
+class TestArtifacts:
+    """If artifacts/ exists (make artifacts), verify it is consistent."""
+
+    def _dir(self):
+        import os
+
+        here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        return os.path.join(os.path.dirname(here), "artifacts")
+
+    def test_manifest_consistent(self):
+        import json
+        import os
+
+        d = self._dir()
+        if not os.path.exists(os.path.join(d, "manifest.json")):
+            pytest.skip("artifacts not built")
+        with open(os.path.join(d, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["num_classes"] == model.NUM_CLASSES
+        assert m["feat_dim"] == model.FEAT_DIM
+        assert m["batch"] == model.BATCH
+        for entry in model.ENTRYPOINTS:
+            path = os.path.join(d, f"{entry}.hlo.txt")
+            assert os.path.exists(path), f"missing artifact {path}"
+            with open(path) as fh:
+                assert "HloModule" in fh.read(200)

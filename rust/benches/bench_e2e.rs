@@ -1,0 +1,51 @@
+//! End-to-end driver throughput: simulated invocations per wall-second
+//! for the full stack (trace → coordinator → DES cluster → metrics) —
+//! one bench per Fig-8 system, plus Shabari on the XLA production path.
+//!
+//! §Perf target: the native-learner coordinator must sustain >= 10^4
+//! simulated invocations/s so full fig8 sweeps stay interactive.
+
+use std::time::Instant;
+
+use shabari::experiments::common::{make_policy, sim_config, Ctx};
+use shabari::learner::xla::Backend;
+use shabari::simulator::engine::simulate;
+
+fn bench_policy(name: &str, ctx: &Ctx, rps: f64) {
+    let w = ctx.workload();
+    let cfg = sim_config(ctx);
+    let trace = w.trace(rps, ctx.duration_s, 31);
+    let n = trace.len();
+    let mut policy = make_policy(name, ctx, &w).unwrap();
+    let t0 = Instant::now();
+    let res = simulate(cfg, &mut policy, trace);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<22} {:>6} invocations  {:>8.2}s wall  {:>10.0} sim-inv/s  ({} containers)",
+        name,
+        n,
+        wall,
+        n as f64 / wall,
+        res.containers_created
+    );
+}
+
+fn main() {
+    println!("### e2e driver throughput (600 s trace @ 5 rps, 16 workers)");
+    let ctx = Ctx { duration_s: 600.0, ..Default::default() };
+    for name in ["shabari", "static-large", "parrotfish", "cypress", "aquatope"] {
+        bench_policy(name, &ctx, 5.0);
+    }
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n### shabari with the XLA/PJRT learner (production path)");
+        let ctx = Ctx {
+            duration_s: 600.0,
+            backend: Backend::Xla,
+            ..Default::default()
+        };
+        bench_policy("shabari", &ctx, 5.0);
+    } else {
+        println!("(skipping XLA e2e: run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,60 @@
+//! Learner hot-path benchmarks (Fig 14's predict/update overheads):
+//! native mirror vs the AOT XLA/PJRT production path, single + batched.
+
+use shabari::learner::native::NativeCsmc;
+use shabari::learner::xla::XlaCsmc;
+use shabari::learner::{cost_vector, CsmcModel};
+use shabari::runtime::{XlaEngine, BATCH, FEAT_DIM, NUM_CLASSES};
+use shabari::util::bench;
+
+fn x_vec(seed: f32) -> [f32; FEAT_DIM] {
+    let mut x = [0f32; FEAT_DIM];
+    for (j, v) in x.iter_mut().enumerate() {
+        *v = ((j as f32 + seed) * 0.37).sin();
+    }
+    x[0] = 1.0;
+    x
+}
+
+fn main() {
+    bench::section("learner: native CSOAA (48 classes x 16 features)");
+    let mut native = NativeCsmc::new(0.3);
+    let x = x_vec(1.0);
+    let costs = cost_vector(12, 2.0);
+    bench::run_batched("native predict", 100, 200, 100, || {
+        bench::keep(native.scores(&x));
+    });
+    bench::run_batched("native update", 100, 200, 100, || {
+        native.update(&x, &costs);
+    });
+
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("(skipping XLA benches: run `make artifacts` first)");
+        return;
+    }
+    bench::section("learner: XLA/PJRT (AOT Pallas/JAX artifacts)");
+    let engine = std::rc::Rc::new(XlaEngine::load_dir(artifacts).expect("artifacts"));
+    let mut xla = XlaCsmc::new(engine, 0.3);
+    // warm the executable caches
+    for _ in 0..50 {
+        bench::keep(xla.scores(&x));
+    }
+    bench::run("xla predict", 50, 1000, || {
+        bench::keep(xla.scores(&x));
+    });
+    bench::run("xla update", 50, 1000, || {
+        xla.update(&x, &costs);
+    });
+
+    let xs: Vec<f32> = (0..BATCH).flat_map(|i| x_vec(i as f32)).collect();
+    let r = bench::run("xla predict_batch (B=64)", 20, 500, || {
+        bench::keep(xla.scores_batch(&xs).unwrap());
+    });
+    println!(
+        "  -> per-example amortized: {}",
+        bench::fmt_ns(r.mean_ns / BATCH as f64)
+    );
+    println!("  (paper fig14: predict 2-4 ms, update 4-5 ms on their shim)");
+    let _ = NUM_CLASSES;
+}

@@ -1,0 +1,71 @@
+//! Fig-14 micro-overheads: featurization per input type, cost-function
+//! evaluation, feature-cache hit path.
+
+use shabari::coordinator::allocator::cost::{self, SlackPolicy};
+use shabari::featurizer::{self, FeatureCache, InputKind, InputSpec};
+use shabari::functions::catalog::CATALOG;
+use shabari::functions::inputs;
+use shabari::simulator::{InvocationRecord, Verdict};
+use shabari::util::bench;
+use shabari::util::rng::Rng;
+
+fn main() {
+    bench::section("featurizer: extraction compute per input type");
+    let mut rng = Rng::new(3);
+    for kind in InputKind::all() {
+        // pick a representative input of this kind from the catalog pools
+        let spec = CATALOG.iter().find(|f| f.input_kind == *kind);
+        let input = match spec {
+            Some(f) => inputs::pool(f, &mut rng)[2].clone(),
+            None => {
+                let mut s = InputSpec::new(*kind);
+                s.size_bytes = 1e6;
+                s.length = 500.0;
+                s
+            }
+        };
+        bench::run_batched(&format!("featurize {}", kind.name()), 100, 100, 100, || {
+            bench::keep(featurizer::featurize(&input));
+        });
+    }
+
+    bench::section("feature cache");
+    let f = &CATALOG[2]; // imageprocess
+    let input = inputs::pool(f, &mut rng)[3].clone();
+    let mut cache = FeatureCache::new();
+    cache.persist(&input);
+    bench::run_batched("cache hit", 100, 100, 100, || {
+        bench::keep(cache.featurize_invocation(&input));
+    });
+
+    bench::section("cost function");
+    let rec = InvocationRecord {
+        id: 1,
+        func: 0,
+        input: InputSpec::new(InputKind::Payload),
+        worker: 0,
+        vcpus: 16,
+        mem_mb: 4096,
+        requested_vcpus: 16,
+        requested_mem_mb: 4096,
+        arrival: 0.0,
+        cold_start_s: 0.0,
+        had_cold_start: false,
+        overhead_s: 0.0,
+        exec_s: 7.0,
+        e2e_s: 7.0,
+        end: 7.0,
+        slo_s: 5.0,
+        verdict: Verdict::Completed,
+        avg_vcpus_used: 15.5,
+        peak_vcpus_used: 16.0,
+        mem_used_gb: 2.0,
+    };
+    bench::run_batched("vcpu cost vector", 100, 100, 100, || {
+        bench::keep(cost::vcpu_costs(&rec, SlackPolicy::absolute_default()));
+    });
+    bench::run_batched("mem cost vector", 100, 100, 100, || {
+        bench::keep(cost::mem_costs(&rec));
+    });
+    println!("  (paper fig14: featurization 0.13-35 ms modeled; see experiment fig14)");
+}

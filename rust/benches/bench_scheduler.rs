@@ -1,0 +1,71 @@
+//! Scheduler decision latency (Fig 14: 0.5-1.5 ms on the paper's
+//! 16-invoker cluster) under empty, warm-rich, and loaded cluster states.
+
+use shabari::coordinator::scheduler::hermod::HermodScheduler;
+use shabari::coordinator::scheduler::openwhisk::OpenWhiskScheduler;
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::scheduler::Scheduler;
+use shabari::featurizer::{InputKind, InputSpec};
+use shabari::functions::catalog::index_of;
+use shabari::simulator::container::Container;
+use shabari::simulator::worker::Cluster;
+use shabari::simulator::{Request, SimConfig};
+use shabari::util::bench;
+use shabari::util::rng::Rng;
+
+fn request() -> Request {
+    Request {
+        id: 1,
+        func: index_of("qr").unwrap(),
+        input: InputSpec::new(InputKind::Payload),
+        arrival: 0.0,
+        slo_s: 1.0,
+    }
+}
+
+fn warm_cluster(n_containers: usize) -> Cluster {
+    let mut cluster = Cluster::new(&SimConfig::default());
+    let mut rng = Rng::new(7);
+    for id in 1..=n_containers as u64 {
+        let func = rng.below(12);
+        let vcpus = rng.range_usize(1, 32) as u32;
+        let mem = (rng.range_usize(2, 32) as u32) * 128;
+        let w = rng.below(cluster.len());
+        let mut c = Container::new(id, func, vcpus, mem, 0.0);
+        c.mark_ready(0.0);
+        cluster.workers[w].containers.insert(id, c);
+    }
+    cluster
+}
+
+fn main() {
+    let req = request();
+
+    bench::section("scheduler: shabari (16 workers)");
+    let empty = Cluster::new(&SimConfig::default());
+    let mut s = ShabariScheduler::new(1);
+    bench::run_batched("shabari / empty cluster", 50, 200, 50, || {
+        bench::keep(s.schedule(&req, 4, 512, &empty));
+    });
+
+    let warm = warm_cluster(200);
+    bench::run_batched("shabari / 200 warm containers", 50, 200, 50, || {
+        bench::keep(s.schedule(&req, 4, 512, &warm));
+    });
+
+    let warm_big = warm_cluster(2000);
+    bench::run_batched("shabari / 2000 warm containers", 50, 200, 50, || {
+        bench::keep(s.schedule(&req, 4, 512, &warm_big));
+    });
+
+    bench::section("scheduler: baselines");
+    let mut ow = OpenWhiskScheduler::new(1);
+    bench::run_batched("openwhisk / 200 warm", 50, 200, 50, || {
+        bench::keep(ow.schedule(&req, 4, 512, &warm));
+    });
+    let mut hermod = HermodScheduler::new(1);
+    bench::run_batched("hermod / 200 warm", 50, 200, 50, || {
+        bench::keep(hermod.schedule(&req, 4, 512, &warm));
+    });
+    println!("  (paper fig14: 0.5-1.5 ms)");
+}

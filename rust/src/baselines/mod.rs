@@ -1,0 +1,25 @@
+//! Comparison systems (§7.1): two static baselines and three
+//! state-of-the-art allocators, each implemented at the granularity the
+//! paper's evaluation exercises.
+//!
+//! * Static-{Medium,Large} — fixed per-function allocation, default
+//!   OpenWhisk resource management + scheduling.
+//! * Parrotfish — offline parametric-regression developer tool; one
+//!   (memory-bound, vCPU-coupled) allocation per function from two
+//!   representative inputs.
+//! * Aquatope — offline Bayesian-optimization-style search, decoupled
+//!   resource types, uncertainty-aware over-provisioning; paired with
+//!   Shabari's scheduler (as the paper does, §7.1(3)).
+//! * Cypress — input-size-only linear regression for execution time,
+//!   batch-oriented container provisioning, single-threaded assumption.
+
+pub mod aquatope;
+pub mod cypress;
+pub mod parrotfish;
+pub mod profiling;
+pub mod statics;
+
+pub use aquatope::AquatopePolicy;
+pub use cypress::CypressPolicy;
+pub use parrotfish::ParrotfishPolicy;
+pub use statics::StaticPolicy;

@@ -1,0 +1,76 @@
+//! Offline profiling substrate shared by the baselines and the SLO
+//! derivation: run a function/input in isolation (no contention, idle
+//! NIC) at a given vCPU count and report execution time / utilization —
+//! what the paper does on the real testbed to configure Parrotfish,
+//! Aquatope, and the per-input SLOs (§7.1).
+
+use crate::featurizer::InputSpec;
+use crate::functions::catalog::CATALOG;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Median isolated execution time over `runs` noisy executions.
+pub fn isolated_exec_s(func: usize, input: &InputSpec, vcpus: u32, runs: usize, rng: &mut Rng) -> f64 {
+    let spec = &CATALOG[func];
+    let times: Vec<f64> = (0..runs)
+        .map(|_| {
+            let d = spec.noisy_demand(input, rng);
+            d.ideal_exec_s(vcpus as f64, 10.0)
+        })
+        .collect();
+    stats::median(&times)
+}
+
+/// Median peak memory footprint (GB) over `runs` noisy executions.
+pub fn isolated_mem_gb(func: usize, input: &InputSpec, runs: usize, rng: &mut Rng) -> f64 {
+    let spec = &CATALOG[func];
+    let peaks: Vec<f64> = (0..runs)
+        .map(|_| spec.noisy_demand(input, rng).mem_gb)
+        .collect();
+    // use the max (a profiling tool sizes for the worst case it saw)
+    peaks.into_iter().fold(0.0, f64::max)
+}
+
+/// The two "representative inputs" (medium and large) the paper hands to
+/// Parrotfish and Aquatope: the middle and last entries of the pool.
+pub fn representative_inputs(pool: &[InputSpec]) -> (&InputSpec, &InputSpec) {
+    let medium = &pool[pool.len() / 2];
+    let large = &pool[pool.len() - 1];
+    (medium, large)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::catalog::index_of;
+    use crate::functions::inputs;
+
+    #[test]
+    fn more_cores_never_hurt_isolated_time() {
+        let fi = index_of("compress").unwrap();
+        let mut rng = Rng::new(1);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let input = &pool[pool.len() - 1];
+        let t4 = isolated_exec_s(fi, input, 4, 5, &mut Rng::new(2));
+        let t16 = isolated_exec_s(fi, input, 16, 5, &mut Rng::new(2));
+        assert!(t16 < t4);
+    }
+
+    #[test]
+    fn representative_inputs_ordering() {
+        let fi = index_of("compress").unwrap();
+        let mut rng = Rng::new(1);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let (m, l) = representative_inputs(&pool);
+        assert!(l.size_bytes > m.size_bytes);
+    }
+
+    #[test]
+    fn mem_profile_covers_footprint() {
+        let fi = index_of("sentiment").unwrap();
+        let mut rng = Rng::new(1);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let gb = isolated_mem_gb(fi, &pool[pool.len() - 1], 8, &mut rng);
+        assert!(gb > 3.0, "large sentiment batch footprint, got {gb}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Static-{Medium, Large} baselines: one fixed allocation for every
+//! invocation of every function, routed by the default OpenWhisk
+//! (memory-centric) scheduler — §7.1(1).
+
+use crate::coordinator::scheduler::openwhisk::OpenWhiskScheduler;
+use crate::coordinator::scheduler::Scheduler;
+use crate::simulator::worker::Cluster;
+use crate::simulator::{Decision, InvocationRecord, Policy, Request, SimTime};
+
+pub struct StaticPolicy {
+    vcpus: u32,
+    mem_mb: u32,
+    scheduler: OpenWhiskScheduler,
+    label: String,
+}
+
+impl StaticPolicy {
+    pub fn new(label: &str, vcpus: u32, mem_mb: u32, seed: u64) -> Self {
+        StaticPolicy {
+            vcpus,
+            mem_mb,
+            scheduler: OpenWhiskScheduler::new(seed),
+            label: label.to_string(),
+        }
+    }
+
+    /// "Medium" static ask: 12 vCPUs / 3 GB (§7.1).
+    pub fn medium(seed: u64) -> Self {
+        Self::new("static-medium", 12, 3072, seed)
+    }
+
+    /// "Large" static ask: 20 vCPUs / 5 GB (§7.1).
+    pub fn large(seed: u64) -> Self {
+        Self::new("static-large", 20, 5120, seed)
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn on_request(&mut self, _now: SimTime, req: &Request, cluster: &Cluster) -> Decision {
+        let sched = self.scheduler.schedule(req, self.vcpus, self.mem_mb, cluster);
+        Decision {
+            worker: sched.worker,
+            vcpus: self.vcpus,
+            mem_mb: self.mem_mb,
+            container: sched.container,
+            background: None,
+            overhead_s: sched.latency_s,
+        }
+    }
+
+    fn on_complete(&mut self, _now: SimTime, _rec: &InvocationRecord, _cluster: &Cluster) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurizer::{InputKind, InputSpec};
+    use crate::functions::catalog::index_of;
+    use crate::simulator::engine::simulate;
+    use crate::simulator::SimConfig;
+
+    #[test]
+    fn every_invocation_gets_the_same_size() {
+        let mut p = StaticPolicy::medium(1);
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| {
+                let mut input = InputSpec::new(InputKind::Payload);
+                input.length = 100.0 * (i + 1) as f64;
+                Request {
+                    id: i + 1,
+                    func: index_of("qr").unwrap(),
+                    input,
+                    arrival: i as f64,
+                    slo_s: 1.0,
+                }
+            })
+            .collect();
+        let res = simulate(SimConfig::small(), &mut p, reqs);
+        assert!(res.records.iter().all(|r| r.requested_vcpus == 12));
+        assert!(res.records.iter().all(|r| r.requested_mem_mb == 3072));
+    }
+
+    #[test]
+    fn large_bigger_than_medium() {
+        let m = StaticPolicy::medium(1);
+        let l = StaticPolicy::large(1);
+        assert!(l.vcpus > m.vcpus && l.mem_mb > m.mem_mb);
+    }
+}

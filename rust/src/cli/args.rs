@@ -1,0 +1,122 @@
+//! Tiny flag parser: `--key value`, `--key=value`, `--flag` booleans and
+//! positional arguments. Sufficient for the `shabari` subcommands; no
+//! third-party CLI crate is available in the offline build.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: positionals in order plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a flat argv slice. `bool_flags` lists flags that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                } else {
+                    let Some(v) = argv.get(i + 1) else {
+                        bail!("flag --{stripped} expects a value");
+                    };
+                    out.options.insert(stripped.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value() {
+        let a = Args::parse(&sv(&["--rps", "4", "fig8"]), &[]).unwrap();
+        assert_eq!(a.get("rps"), Some("4"));
+        assert_eq!(a.positional, vec!["fig8"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&sv(&["--seed=7"]), &[]).unwrap();
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn bool_flags_take_no_value() {
+        let a = Args::parse(&sv(&["--native", "fig8"]), &["native"]).unwrap();
+        assert!(a.get_bool("native"));
+        assert_eq!(a.positional, vec!["fig8"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--rps"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters_validate() {
+        let a = Args::parse(&sv(&["--rps", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("rps", 2).is_err());
+        assert_eq!(a.get_usize("other", 2).unwrap(), 2);
+    }
+}

@@ -1,0 +1,192 @@
+//! Hand-rolled CLI (no `clap` available offline).
+//!
+//! Subcommands:
+//!   run         — run one policy over a trace, print metrics
+//!   experiment  — regenerate a paper figure/table (fig1..fig14, table1-3)
+//!   profile     — isolated profiling of one function (SLO derivation)
+//!   selfcheck   — artifacts load + XLA/native learner parity
+//!   list        — known policies and experiments
+
+pub mod args;
+
+use anyhow::{bail, Result};
+
+use crate::experiments::{self, Ctx};
+use crate::learner::xla::Backend;
+
+/// Entrypoint called by `main.rs`. Returns the process exit code.
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+const BOOL_FLAGS: &[&str] = &["xla", "native", "verbose"];
+
+fn ctx_from(a: &args::Args) -> Result<Ctx> {
+    let backend = if a.get_bool("xla") { Backend::Xla } else { Backend::Native };
+    Ok(Ctx {
+        seed: a.get_u64("seed", 42)?,
+        backend,
+        duration_s: a.get_f64("duration", 600.0)?,
+        slo_multiplier: a.get_f64("slo-multiplier", 1.4)?,
+        artifacts_dir: a.get_or("artifacts", "artifacts"),
+    })
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    let a = args::Args::parse(rest, BOOL_FLAGS)?;
+    if a.get_bool("verbose") {
+        crate::util::log::set_level(crate::util::log::Level::Debug);
+    }
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        "list" => {
+            println!("policies:    {}", experiments::common::POLICIES.join(", "));
+            println!("experiments: {} (or 'all')", experiments::EXPERIMENTS.join(", "));
+            Ok(())
+        }
+        "run" => cmd_run(&a),
+        "experiment" => {
+            let ctx = ctx_from(&a)?;
+            let id = a
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: shabari experiment <id> [flags]"))?;
+            experiments::run(id, &ctx)
+        }
+        "profile" => cmd_profile(&a),
+        "selfcheck" => cmd_selfcheck(&a),
+        other => bail!("unknown subcommand '{other}' (see `shabari help`)"),
+    }
+}
+
+fn cmd_run(a: &args::Args) -> Result<()> {
+    let ctx = ctx_from(a)?;
+    let policy = a.get_or("policy", "shabari");
+    let rps = a.get_f64("rps", 4.0)?;
+    let workload = ctx.workload();
+    let cfg = experiments::common::sim_config(&ctx);
+    let t0 = std::time::Instant::now();
+    let (res, m) = experiments::common::run_one(&policy, &ctx, &workload, rps, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = crate::util::table::Table::new(
+        &format!("run: {policy} @ {rps} rps, {}s trace", ctx.duration_s),
+        &["metric", "value"],
+    );
+    t.row(vec!["invocations".into(), m.invocations.to_string()]);
+    t.row(vec!["SLO violations".into(), format!("{:.1}%", m.slo_violation_pct)]);
+    t.row(vec!["wasted vCPUs p50/p95".into(), format!("{:.1} / {:.1}", m.wasted_vcpus.p50, m.wasted_vcpus.p95)]);
+    t.row(vec!["wasted mem GB p50/p95".into(), format!("{:.2} / {:.2}", m.wasted_mem_gb.p50, m.wasted_mem_gb.p95)]);
+    t.row(vec!["vCPU util p50".into(), format!("{:.0}%", 100.0 * m.vcpu_utilization.p50)]);
+    t.row(vec!["mem util p50".into(), format!("{:.0}%", 100.0 * m.mem_utilization.p50)]);
+    t.row(vec!["cold starts".into(), format!("{:.1}%", m.cold_start_pct)]);
+    t.row(vec!["OOM / timeout".into(), format!("{:.1}% / {:.1}%", m.oom_pct, m.timeout_pct)]);
+    t.row(vec!["mean e2e latency".into(), format!("{:.2}s", m.mean_e2e_s)]);
+    t.row(vec!["throughput".into(), format!("{:.2}/s", m.throughput)]);
+    t.row(vec!["containers created".into(), res.containers_created.to_string()]);
+    t.row(vec!["background launches".into(), res.background_launches.to_string()]);
+    t.row(vec!["sim wall time".into(), format!("{wall:.2}s ({:.0} inv/s)", m.invocations as f64 / wall)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_profile(a: &args::Args) -> Result<()> {
+    let ctx = ctx_from(a)?;
+    let fname = a.get_or("function", "compress");
+    let fi = crate::functions::catalog::index_of(&fname)
+        .ok_or_else(|| anyhow::anyhow!("unknown function '{fname}'"))?;
+    let spec = &crate::functions::catalog::CATALOG[fi];
+    let mut rng = crate::util::rng::Rng::new(ctx.seed);
+    let pool = crate::functions::inputs::pool(spec, &mut rng);
+    let mut t = crate::util::table::Table::new(
+        &format!("profile: {fname} (isolated, median of 5)"),
+        &["size (MB)", "t@1", "t@4", "t@16", "t@32", "mem (GB)", "SLO@1.4x"],
+    );
+    for input in &pool {
+        let mut row = vec![crate::util::table::fnum(input.size_mb(), 2)];
+        for k in [1u32, 4, 16, 32] {
+            let t = crate::baselines::profiling::isolated_exec_s(fi, input, k, 5, &mut rng);
+            row.push(format!("{t:.2}"));
+        }
+        let d = (spec.demand)(input);
+        row.push(format!("{:.2}", d.mem_gb));
+        let slo = crate::workload::slo::derive_slo(spec, input, ctx.slo_multiplier, &mut rng);
+        row.push(format!("{slo:.2}"));
+        t.row(row);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_selfcheck(a: &args::Args) -> Result<()> {
+    let ctx = ctx_from(a)?;
+    println!("checking artifacts in '{}' ...", ctx.artifacts_dir);
+    let engine = crate::runtime::XlaEngine::load_dir(&ctx.artifacts_dir)?;
+    println!("  platform: {}", engine.platform());
+    for name in crate::runtime::ARTIFACTS {
+        anyhow::ensure!(engine.has(name), "missing executable {name}");
+        println!("  loaded {name}");
+    }
+    // XLA vs native parity on a quick update sequence
+    use crate::learner::{cost_vector, CsmcModel};
+    let engine = std::rc::Rc::new(engine);
+    let mut xla = crate::learner::xla::XlaCsmc::new(engine, 0.3);
+    let mut native = crate::learner::native::NativeCsmc::new(0.3);
+    let mut rng = crate::util::rng::Rng::new(ctx.seed);
+    for _ in 0..30 {
+        let mut x = [0f32; crate::runtime::FEAT_DIM];
+        for v in x.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0) as f32;
+        }
+        x[0] = 1.0;
+        let costs = cost_vector(rng.below(crate::runtime::NUM_CLASSES), 2.0);
+        xla.update(&x, &costs);
+        native.update(&x, &costs);
+        anyhow::ensure!(
+            xla.predict(&x) == native.predict(&x),
+            "XLA/native prediction mismatch"
+        );
+    }
+    println!("  XLA/native parity: OK (30 update steps)");
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "shabari — delayed, input-aware serverless resource management\n\
+         (reproduction of Sinha et al., 2024; rust + JAX + Pallas via XLA/PJRT)\n\
+         \n\
+         USAGE: shabari <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           run          run a policy over a trace\n\
+                          --policy <name>   (default shabari; see `list`)\n\
+                          --rps <f>         (default 4)\n\
+           experiment   regenerate a paper figure/table\n\
+                          <id>              fig1..fig14, table1-3, or 'all'\n\
+           profile      isolated profiling runs (SLO derivation)\n\
+                          --function <name>\n\
+           selfcheck    verify artifacts + XLA/native learner parity\n\
+           list         known policies and experiment ids\n\
+           help         this message\n\
+         \n\
+         COMMON FLAGS:\n\
+           --seed <u64>            deterministic seed (default 42)\n\
+           --duration <s>          trace length (default 600)\n\
+           --slo-multiplier <f>    SLO = f x median isolated time (default 1.4)\n\
+           --xla                   use the AOT XLA learner (production path)\n\
+           --artifacts <dir>       artifact directory (default artifacts/)"
+    );
+}

@@ -1,0 +1,293 @@
+//! Model formulations explored in §4.2 / Figure 6:
+//!
+//! * **PerFunction** (the winner, Shabari's default): one vCPU + one
+//!   memory model per function — customizes to function semantics with no
+//!   function-level features.
+//! * **OneHot**: a single model per resource across all functions; the
+//!   feature vector is the concatenation of per-function blocks with only
+//!   the invoked function's block populated (one-hot block encoding).
+//!   Needs a wide learner (`DynCsmc`) — the paper found it wastes ~5x p90
+//!   vCPUs because the shared model cannot specialize.
+//! * **PerInputType**: one model per input *type* (image, video, ...);
+//!   functions sharing a type share a model — fast-completing functions
+//!   dominate the early updates and starve slower ones (mobilenet's SLO
+//!   violations in Fig 6a).
+
+use std::collections::HashMap;
+
+use crate::featurizer::{FeatureVector, InputKind};
+use crate::learner::native::DynCsmc;
+use crate::learner::xla::ModelFactory;
+use crate::learner::CsmcModel;
+use crate::runtime::{FEAT_DIM, NUM_CLASSES};
+
+/// Which formulation the allocator uses (Fig 6 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Formulation {
+    PerFunction,
+    OneHot,
+    PerInputType,
+}
+
+impl Formulation {
+    pub fn parse(s: &str) -> Option<Formulation> {
+        match s {
+            "per-function" => Some(Formulation::PerFunction),
+            "one-hot" => Some(Formulation::OneHot),
+            "per-input-type" => Some(Formulation::PerInputType),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Formulation::PerFunction => "per-function",
+            Formulation::OneHot => "one-hot",
+            Formulation::PerInputType => "per-input-type",
+        }
+    }
+}
+
+/// Number of functions the one-hot block layout supports.
+const ONEHOT_FUNCS: usize = 12;
+/// Wide feature dim: one F-block per function + shared bias slot.
+const WIDE_DIM: usize = ONEHOT_FUNCS * FEAT_DIM + 1;
+
+/// A bank of CSOAA models keyed per the chosen formulation, one bank per
+/// resource type (vCPU / memory — trained separately, §4.3).
+pub struct ModelBank {
+    formulation: Formulation,
+    /// PerFunction: keyed by function index. PerInputType: keyed by
+    /// input-kind index.
+    models: HashMap<usize, Box<dyn CsmcModel>>,
+    /// OneHot: single wide model.
+    wide: Option<DynCsmc>,
+    /// Per-function observation counts (confidence gating is always
+    /// per function, regardless of model sharing).
+    func_obs: HashMap<usize, u64>,
+    lr: f32,
+    /// Experience replay: ring of recent (x, costs) per model key, plus
+    /// how many replayed updates accompany each fresh one. The memory
+    /// bank uses replay to converge within its confidence window (the
+    /// footprint surface is stationary, so replay is sound); the vCPU
+    /// bank keeps replay at 0 so the explore/revert dynamics of Fig 9a
+    /// stay responsive.
+    replay: usize,
+    history: HashMap<usize, Vec<([f32; FEAT_DIM], [f32; NUM_CLASSES])>>,
+    replay_cursor: u64,
+}
+
+/// Capacity of each per-key replay ring.
+const REPLAY_RING: usize = 64;
+
+impl ModelBank {
+    pub fn new(formulation: Formulation, lr: f32) -> Self {
+        Self::with_replay(formulation, lr, 0)
+    }
+
+    pub fn with_replay(formulation: Formulation, lr: f32, replay: usize) -> Self {
+        let wide = if formulation == Formulation::OneHot {
+            Some(DynCsmc::new(NUM_CLASSES, WIDE_DIM, lr))
+        } else {
+            None
+        };
+        ModelBank {
+            formulation,
+            models: HashMap::new(),
+            wide,
+            func_obs: HashMap::new(),
+            lr,
+            replay,
+            history: HashMap::new(),
+            replay_cursor: 0,
+        }
+    }
+
+    fn key(&self, func: usize, kind: InputKind) -> usize {
+        match self.formulation {
+            Formulation::PerFunction => func,
+            Formulation::PerInputType => kind.index(),
+            Formulation::OneHot => 0,
+        }
+    }
+
+    fn widen(func: usize, x: &FeatureVector) -> Vec<f32> {
+        let mut wide = vec![0f32; WIDE_DIM];
+        wide[0] = 1.0; // shared bias
+        let at = 1 + (func % ONEHOT_FUNCS) * FEAT_DIM;
+        wide[at..at + FEAT_DIM].copy_from_slice(x.as_slice());
+        wide
+    }
+
+    /// Per-class scores for an invocation of `func` with features `x`.
+    /// `factory` supplies backend models on first use (per-function /
+    /// per-input-type formulations only).
+    pub fn scores(
+        &mut self,
+        factory: &ModelFactory,
+        func: usize,
+        kind: InputKind,
+        x: &FeatureVector,
+    ) -> [f32; NUM_CLASSES] {
+        if let Some(wide) = &self.wide {
+            let s = wide.scores_dyn(&Self::widen(func, x));
+            let mut out = [0f32; NUM_CLASSES];
+            out.copy_from_slice(&s);
+            return out;
+        }
+        let key = self.key(func, kind);
+        let model = self.models.entry(key).or_insert_with(|| factory.make());
+        model.scores(&fixed(x))
+    }
+
+    /// Absorb feedback for an invocation of `func`.
+    pub fn update(
+        &mut self,
+        factory: &ModelFactory,
+        func: usize,
+        kind: InputKind,
+        x: &FeatureVector,
+        costs: &[f32; NUM_CLASSES],
+    ) {
+        *self.func_obs.entry(func).or_insert(0) += 1;
+        if let Some(wide) = &mut self.wide {
+            wide.update_dyn(&Self::widen(func, x), costs);
+            return;
+        }
+        let key = self.key(func, kind);
+        let model = self.models.entry(key).or_insert_with(|| factory.make());
+        model.update(&fixed(x), costs);
+        if self.replay > 0 {
+            let ring = self.history.entry(key).or_default();
+            if ring.len() >= REPLAY_RING {
+                ring.remove(0);
+            }
+            ring.push((fixed(x), *costs));
+            for _ in 0..self.replay {
+                // deterministic strided walk over the ring
+                self.replay_cursor = self.replay_cursor.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let idx = (self.replay_cursor >> 33) as usize % ring.len();
+                let (rx, rc) = ring[idx];
+                model.update(&rx, &rc);
+            }
+        }
+    }
+
+    /// Observations of this *function* (confidence gating input).
+    pub fn observations(&self, func: usize) -> u64 {
+        self.func_obs.get(&func).copied().unwrap_or(0)
+    }
+
+    pub fn formulation(&self) -> Formulation {
+        self.formulation
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Number of distinct underlying models (scalability comparison §4.2).
+    pub fn model_count(&self) -> usize {
+        if self.wide.is_some() {
+            1
+        } else {
+            self.models.len()
+        }
+    }
+}
+
+fn fixed(x: &FeatureVector) -> [f32; FEAT_DIM] {
+    let mut out = [0f32; FEAT_DIM];
+    out.copy_from_slice(x.as_slice());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::cost_vector;
+    use crate::learner::xla::{Backend, ModelFactory};
+
+    fn factory() -> ModelFactory {
+        ModelFactory::new(Backend::Native, "artifacts", 0.1).unwrap()
+    }
+
+    fn feats(slot: usize) -> FeatureVector {
+        let mut f = FeatureVector::zeros();
+        f.0[0] = 1.0;
+        f.0[slot] = 1.0;
+        f
+    }
+
+    #[test]
+    fn per_function_isolates_functions() {
+        let fac = factory();
+        let mut bank = ModelBank::new(Formulation::PerFunction, 0.1);
+        let x = feats(1);
+        for _ in 0..200 {
+            bank.update(&fac, 0, InputKind::Image, &x, &cost_vector(4, 2.0));
+            bank.update(&fac, 1, InputKind::Image, &x, &cost_vector(30, 2.0));
+        }
+        let s0 = bank.scores(&fac, 0, InputKind::Image, &x);
+        let s1 = bank.scores(&fac, 1, InputKind::Image, &x);
+        assert_eq!(crate::learner::argmin(&s0), 4);
+        assert_eq!(crate::learner::argmin(&s1), 30);
+        assert_eq!(bank.model_count(), 2);
+    }
+
+    #[test]
+    fn per_input_type_shares_models() {
+        let fac = factory();
+        let mut bank = ModelBank::new(Formulation::PerInputType, 0.1);
+        let x = feats(2);
+        // two functions, same input type -> same model (interference)
+        for _ in 0..100 {
+            bank.update(&fac, 0, InputKind::Image, &x, &cost_vector(4, 2.0));
+        }
+        let s1 = bank.scores(&fac, 1, InputKind::Image, &x);
+        assert_eq!(
+            crate::learner::argmin(&s1),
+            4,
+            "function 1 inherits function 0's learning through the shared model"
+        );
+        assert_eq!(bank.model_count(), 1);
+    }
+
+    #[test]
+    fn one_hot_distinguishes_but_shares_capacity() {
+        let fac = factory();
+        let mut bank = ModelBank::new(Formulation::OneHot, 0.1);
+        let x = feats(1);
+        for _ in 0..400 {
+            bank.update(&fac, 0, InputKind::Image, &x, &cost_vector(4, 2.0));
+            bank.update(&fac, 5, InputKind::Video, &x, &cost_vector(20, 2.0));
+        }
+        let s0 = bank.scores(&fac, 0, InputKind::Image, &x);
+        let s5 = bank.scores(&fac, 5, InputKind::Video, &x);
+        assert_eq!(crate::learner::argmin(&s0), 4);
+        assert_eq!(crate::learner::argmin(&s5), 20);
+        assert_eq!(bank.model_count(), 1);
+    }
+
+    #[test]
+    fn observations_counted_per_function_in_all_formulations() {
+        for f in [Formulation::PerFunction, Formulation::OneHot, Formulation::PerInputType] {
+            let fac = factory();
+            let mut bank = ModelBank::new(f, 0.1);
+            let x = feats(1);
+            bank.update(&fac, 3, InputKind::Image, &x, &cost_vector(4, 2.0));
+            bank.update(&fac, 3, InputKind::Image, &x, &cost_vector(4, 2.0));
+            bank.update(&fac, 7, InputKind::Image, &x, &cost_vector(4, 2.0));
+            assert_eq!(bank.observations(3), 2, "{f:?}");
+            assert_eq!(bank.observations(7), 1, "{f:?}");
+            assert_eq!(bank.observations(9), 0, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn formulation_parsing() {
+        assert_eq!(Formulation::parse("per-function"), Some(Formulation::PerFunction));
+        assert_eq!(Formulation::parse("one-hot"), Some(Formulation::OneHot));
+        assert_eq!(Formulation::parse("nope"), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shabari's coordinator: the Resource Allocator (§4), the Scheduler
+//! (§5), and the router that composes them into a `simulator::Policy`
+//! (Figure 5's life cycle: interface → featurizer → allocator →
+//! scheduler → worker daemon → metadata store → online update).
+
+pub mod allocator;
+pub mod router;
+pub mod scheduler;
+
+pub use allocator::{AllocatorConfig, ResourceAllocator};
+pub use router::ShabariPolicy;

@@ -1,0 +1,187 @@
+//! The router: glues the Resource Allocator and a Scheduler into a
+//! `simulator::Policy` — this is the Shabari system the experiments run
+//! (Figure 5's invocation life cycle).
+
+use crate::simulator::worker::Cluster;
+use crate::simulator::{Decision, InvocationRecord, Policy, Request, SimTime};
+
+use super::allocator::ResourceAllocator;
+use super::scheduler::Scheduler;
+
+/// Shabari (or an ablation of it): allocator + pluggable scheduler.
+pub struct ShabariPolicy {
+    pub allocator: ResourceAllocator,
+    pub scheduler: Box<dyn Scheduler>,
+    name: String,
+}
+
+impl ShabariPolicy {
+    pub fn new(allocator: ResourceAllocator, scheduler: Box<dyn Scheduler>) -> Self {
+        let name = format!("shabari({})", scheduler.name());
+        ShabariPolicy { allocator, scheduler, name }
+    }
+
+    /// The full system with default config + Shabari scheduler.
+    pub fn standard(seed: u64) -> anyhow::Result<Self> {
+        let allocator =
+            ResourceAllocator::new(super::allocator::AllocatorConfig::default())?;
+        let scheduler = Box::new(super::scheduler::shabari::ShabariScheduler::new(seed));
+        Ok(Self::new(allocator, scheduler))
+    }
+}
+
+impl Policy for ShabariPolicy {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn on_request(&mut self, _now: SimTime, req: &Request, cluster: &Cluster) -> Decision {
+        // 2-3: featurize + predict (§4)
+        let alloc = self.allocator.allocate(req);
+        // 4: schedule (§5)
+        let sched = self
+            .scheduler
+            .schedule(req, alloc.vcpus, alloc.mem_mb, cluster);
+        Decision {
+            worker: sched.worker,
+            vcpus: alloc.vcpus,
+            mem_mb: alloc.mem_mb,
+            container: sched.container,
+            background: sched.background,
+            overhead_s: alloc.overhead_s + sched.latency_s,
+        }
+    }
+
+    fn on_complete(&mut self, _now: SimTime, rec: &InvocationRecord, _cluster: &Cluster) {
+        // 5: daemon -> metadata store -> online update (off critical path)
+        self.allocator.feedback(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allocator::AllocatorConfig;
+    use crate::coordinator::scheduler::shabari::ShabariScheduler;
+    use crate::featurizer::InputSpec;
+    use crate::functions::catalog::{index_of, CATALOG};
+    use crate::functions::inputs;
+    use crate::simulator::engine::simulate;
+    use crate::simulator::{SimConfig, Verdict};
+    use crate::util::rng::Rng;
+
+    fn requests_for(func: &str, n: usize, gap: f64, slo: f64) -> Vec<Request> {
+        let fi = index_of(func).unwrap();
+        let mut rng = Rng::new(33);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        (0..n)
+            .map(|i| Request {
+                id: i as u64 + 1,
+                func: fi,
+                input: pool[i % pool.len()].clone(),
+                arrival: i as f64 * gap,
+                slo_s: slo,
+            })
+            .collect()
+    }
+
+    fn policy() -> ShabariPolicy {
+        let allocator = ResourceAllocator::new(AllocatorConfig::default()).unwrap();
+        ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(7)))
+    }
+
+    #[test]
+    fn end_to_end_learning_shrinks_single_threaded() {
+        let mut p = policy();
+        // imageprocess SLO of 3 s: 1 vCPU suffices; default is 16
+        let reqs = requests_for("imageprocess", 60, 4.0, 3.0);
+        let res = simulate(SimConfig::small(), &mut p, reqs);
+        let recs = res.sorted_records();
+        assert_eq!(recs.len(), 60);
+        // early invocations use the 16-vCPU default
+        assert_eq!(recs[0].requested_vcpus, 16);
+        // after the confidence threshold the model shrinks hard
+        let late: Vec<u32> = recs[40..].iter().map(|r| r.requested_vcpus).collect();
+        let avg: f64 = late.iter().map(|v| *v as f64).sum::<f64>() / late.len() as f64;
+        assert!(avg <= 4.0, "single-threaded should settle near 1-2 vCPUs, got {avg} ({late:?})");
+    }
+
+    #[test]
+    fn feedback_loop_reduces_memory_waste() {
+        let mut p = policy();
+        let reqs = requests_for("qr", 80, 2.0, 1.0);
+        let res = simulate(SimConfig::small(), &mut p, reqs);
+        let recs = res.sorted_records();
+        let early_waste: f64 = recs[..20].iter().map(|r| r.wasted_mem_gb()).sum::<f64>() / 20.0;
+        let late_waste: f64 =
+            recs[60..].iter().map(|r| r.wasted_mem_gb()).sum::<f64>() / (recs.len() - 60) as f64;
+        assert!(
+            late_waste < 0.3 * early_waste,
+            "memory waste must collapse after learning: early {early_waste} late {late_waste}"
+        );
+    }
+
+    #[test]
+    fn no_oom_kills_with_default_safeguards() {
+        let mut p = policy();
+        let reqs = requests_for("sentiment", 80, 2.0, 10.0);
+        let res = simulate(SimConfig::small(), &mut p, reqs);
+        let ooms = res
+            .records
+            .iter()
+            .filter(|r| r.verdict == Verdict::OomKilled)
+            .count();
+        let pct = 100.0 * ooms as f64 / res.records.len() as f64;
+        assert!(pct <= 2.0, "OOM kill rate must stay ~<1% (§7.5), got {pct}% ({ooms})");
+    }
+
+    #[test]
+    fn warm_hits_accumulate_over_time() {
+        let mut p = policy();
+        let reqs = requests_for("encrypt", 60, 1.0, 2.0);
+        let res = simulate(SimConfig::small(), &mut p, reqs);
+        let cold: usize = res.records.iter().filter(|r| r.had_cold_start).count();
+        assert!(
+            cold < res.records.len() / 2,
+            "stable workload must mostly hit warm containers: {cold}/{}",
+            res.records.len()
+        );
+    }
+
+    #[test]
+    fn multi_threaded_gets_more_cores_for_tight_slo() {
+        let fi = index_of("matmult").unwrap();
+        let mut rng = Rng::new(5);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let input: InputSpec = pool[6].clone(); // larger matrix
+        // SLO achievable only with many cores
+        let d = (CATALOG[fi].demand)(&input);
+        let slo = d.ideal_exec_s(24.0, 10.0) * 1.1;
+        let reqs: Vec<Request> = (0..50)
+            .map(|i| Request {
+                id: i + 1,
+                func: fi,
+                input: input.clone(),
+                arrival: i as f64 * 8.0,
+                slo_s: slo,
+            })
+            .collect();
+        let mut p = policy();
+        let res = simulate(SimConfig::small(), &mut p, reqs);
+        let recs = res.sorted_records();
+        let late_alloc: f64 = recs[30..]
+            .iter()
+            .map(|r| r.requested_vcpus as f64)
+            .sum::<f64>()
+            / (recs.len() - 30) as f64;
+        assert!(
+            late_alloc >= 12.0,
+            "tight SLO on a parallel function needs many cores, got {late_alloc}"
+        );
+        let late_viol = recs[30..].iter().filter(|r| r.slo_violated()).count();
+        assert!(
+            late_viol * 3 <= recs.len() - 30,
+            "most late invocations should meet the SLO ({late_viol} violations)"
+        );
+    }
+}

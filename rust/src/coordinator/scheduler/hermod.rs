@@ -1,0 +1,97 @@
+//! Hermod-style packing scheduler (Fig 7b comparison): pack invocations
+//! onto the lowest-numbered worker until its capacity is reached before
+//! spilling to the next.
+//!
+//! The paper shows this backfires for Shabari's workload: functions that
+//! fetch inputs from an external database (matmult, lrtrain, image
+//! functions) saturate the packed worker's NIC, degrading everyone on it
+//! (§5). The simulator reproduces that through the NIC fair-sharing
+//! model.
+
+use crate::simulator::worker::Cluster;
+use crate::simulator::{ContainerChoice, Request};
+use crate::util::rng::Rng;
+
+use super::{SchedDecision, Scheduler};
+
+pub struct HermodScheduler {
+    rng: Rng,
+    pub latency_s: f64,
+}
+
+impl HermodScheduler {
+    pub fn new(seed: u64) -> Self {
+        HermodScheduler { rng: Rng::new(seed ^ 0x4E58_410D), latency_s: 0.001 }
+    }
+}
+
+impl Scheduler for HermodScheduler {
+    fn name(&self) -> &'static str {
+        "hermod-packing"
+    }
+
+    fn schedule(
+        &mut self,
+        req: &Request,
+        vcpus: u32,
+        mem_mb: u32,
+        cluster: &Cluster,
+    ) -> SchedDecision {
+        // Prefer a warm container on the most-packed admissible worker;
+        // otherwise pack: first worker (ascending id) with capacity.
+        let mut chosen = None;
+        for w in &cluster.workers {
+            if w.has_capacity(vcpus, mem_mb) {
+                chosen = Some(w.id);
+                break;
+            }
+        }
+        let worker = chosen.unwrap_or_else(|| self.rng.below(cluster.len()));
+        let container = match cluster.worker(worker).find_warm_larger(req.func, vcpus, mem_mb) {
+            Some(c) => ContainerChoice::Warm(c.id),
+            None => ContainerChoice::Cold,
+        };
+        SchedDecision { worker, container, background: None, latency_s: self.latency_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurizer::{InputKind, InputSpec};
+    use crate::functions::catalog::index_of;
+    use crate::simulator::SimConfig;
+
+    fn req() -> Request {
+        Request {
+            id: 1,
+            func: index_of("qr").unwrap(),
+            input: InputSpec::new(InputKind::Payload),
+            arrival: 0.0,
+            slo_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn packs_first_worker_until_full() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let mut s = HermodScheduler::new(1);
+        let d = s.schedule(&req(), 8, 1024, &cl);
+        assert_eq!(d.worker, 0);
+        // fill worker 0
+        cl.workers[0].allocated_vcpus = 85.0;
+        let d = s.schedule(&req(), 8, 1024, &cl);
+        assert_eq!(d.worker, 1, "spill to next worker when full");
+    }
+
+    #[test]
+    fn random_when_everything_full() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        for w in &mut cl.workers {
+            w.allocated_vcpus = 90.0;
+        }
+        let mut s = HermodScheduler::new(1);
+        let d = s.schedule(&req(), 8, 1024, &cl);
+        assert!(d.worker < cl.len());
+    }
+}

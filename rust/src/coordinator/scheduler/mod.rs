@@ -1,0 +1,97 @@
+//! Schedulers: Shabari's cold-start-aware, dual-resource scheduler (§5)
+//! plus the OpenWhisk default (memory-centric) and Hermod-style packing
+//! comparison policies (Fig 7b, Fig 10).
+
+pub mod hermod;
+pub mod openwhisk;
+pub mod shabari;
+
+use crate::simulator::worker::Cluster;
+use crate::simulator::{BackgroundLaunch, ContainerChoice, Request};
+
+/// Scheduler output: where to run and in what container.
+#[derive(Debug, Clone)]
+pub struct SchedDecision {
+    pub worker: usize,
+    pub container: ContainerChoice,
+    pub background: Option<BackgroundLaunch>,
+    /// Scheduling latency on the critical path (Fig 14: 0.5–1.5 ms).
+    pub latency_s: f64,
+}
+
+/// A container-placement policy. The allocator decides *how much*; the
+/// scheduler decides *where* and *in which container*.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    fn schedule(
+        &mut self,
+        req: &Request,
+        vcpus: u32,
+        mem_mb: u32,
+        cluster: &Cluster,
+    ) -> SchedDecision;
+}
+
+/// Deterministic "home server" for a function (OpenWhisk-style hashing;
+/// reduces cache contention / improves locality, §5).
+pub fn home_server(func_name: &str, n_workers: usize) -> usize {
+    (crate::util::rng::fnv1a(func_name.as_bytes()) % n_workers as u64) as usize
+}
+
+/// First worker at-or-after `start` (wrapping) that can admit the size;
+/// falls back to `fallback` when none has capacity.
+pub fn probe_from(
+    cluster: &Cluster,
+    start: usize,
+    vcpus: u32,
+    mem_mb: u32,
+    fallback: usize,
+) -> usize {
+    let n = cluster.len();
+    for off in 0..n {
+        let w = (start + off) % n;
+        if cluster.worker(w).has_capacity(vcpus, mem_mb) {
+            return w;
+        }
+    }
+    fallback
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SimConfig;
+
+    #[test]
+    fn home_server_stable_and_spread() {
+        let a = home_server("matmult", 16);
+        assert_eq!(a, home_server("matmult", 16));
+        // the 12 catalog functions should not all collide
+        let homes: std::collections::BTreeSet<usize> = crate::functions::catalog::CATALOG
+            .iter()
+            .map(|f| home_server(f.name, 16))
+            .collect();
+        assert!(homes.len() >= 6, "expected spread, got {homes:?}");
+    }
+
+    #[test]
+    fn probe_skips_full_workers() {
+        let cfg = SimConfig::small();
+        let mut cl = Cluster::new(&cfg);
+        cl.workers[1].allocated_vcpus = 89.0; // nearly full
+        cl.workers[2].allocated_vcpus = 0.0;
+        let w = probe_from(&cl, 1, 8, 1024, 0);
+        assert_eq!(w, 2, "worker 1 cannot admit 8 vCPUs");
+    }
+
+    #[test]
+    fn probe_falls_back_when_all_full() {
+        let cfg = SimConfig::small();
+        let mut cl = Cluster::new(&cfg);
+        for w in &mut cl.workers {
+            w.allocated_vcpus = 90.0;
+        }
+        assert_eq!(probe_from(&cl, 0, 8, 1024, 3), 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! The default OpenWhisk scheduler (§5 observation 3): *memory-centric*
+//! load balancing. It hashes a function to a home invoker and only checks
+//! the invoker's **memory** load when admitting — vCPU allocations are
+//! invisible to it, which is exactly why independent per-resource
+//! allocations oversubscribe vCPUs under this scheduler (Fig 10's
+//! "Shabari-alloc + OW-sched" ablation, static baselines in Fig 8).
+
+use crate::simulator::worker::Cluster;
+use crate::simulator::{ContainerChoice, Request};
+use crate::util::rng::Rng;
+
+use super::{home_server, SchedDecision, Scheduler};
+
+pub struct OpenWhiskScheduler {
+    rng: Rng,
+    pub latency_s: f64,
+}
+
+impl OpenWhiskScheduler {
+    pub fn new(seed: u64) -> Self {
+        OpenWhiskScheduler { rng: Rng::new(seed ^ 0x0111_5C4E), latency_s: 0.001 }
+    }
+
+    /// Memory-only admission (ignores vCPU load entirely).
+    fn mem_fits(cluster: &Cluster, w: usize, mem_mb: u32) -> bool {
+        cluster.worker(w).free_mem_mb() >= mem_mb as f64
+    }
+}
+
+impl Scheduler for OpenWhiskScheduler {
+    fn name(&self) -> &'static str {
+        "openwhisk"
+    }
+
+    fn schedule(
+        &mut self,
+        req: &Request,
+        vcpus: u32,
+        mem_mb: u32,
+        cluster: &Cluster,
+    ) -> SchedDecision {
+        let _ = vcpus; // memory-centric: vCPUs are not load-balanced
+        let func_name = crate::functions::catalog::CATALOG[req.func].name;
+        let home = home_server(func_name, cluster.len());
+        let n = cluster.len();
+
+        // OpenWhisk reuses warm containers on the chosen invoker only.
+        let mut chosen = home;
+        for off in 0..n {
+            let w = (home + off) % n;
+            if Self::mem_fits(cluster, w, mem_mb) {
+                chosen = w;
+                break;
+            }
+            if off == n - 1 {
+                chosen = self.rng.below(n);
+            }
+        }
+
+        // same-size warm container on that invoker?
+        let container = match cluster.worker(chosen).find_warm_exact(req.func, vcpus, mem_mb) {
+            Some(c) => ContainerChoice::Warm(c.id),
+            None => ContainerChoice::Cold,
+        };
+        SchedDecision { worker: chosen, container, background: None, latency_s: self.latency_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurizer::{InputKind, InputSpec};
+    use crate::functions::catalog::index_of;
+    use crate::simulator::SimConfig;
+
+    fn req(func: &str) -> Request {
+        Request {
+            id: 1,
+            func: index_of(func).unwrap(),
+            input: InputSpec::new(InputKind::Payload),
+            arrival: 0.0,
+            slo_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn ignores_vcpu_load() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("matmult");
+        let home = home_server("matmult", cl.len());
+        // home is fully vCPU-loaded but has free memory
+        cl.workers[home].allocated_vcpus = 90.0;
+        let mut s = OpenWhiskScheduler::new(1);
+        let d = s.schedule(&r, 16, 1024, &cl);
+        assert_eq!(
+            d.worker, home,
+            "memory-centric OW keeps packing a vCPU-saturated worker"
+        );
+    }
+
+    #[test]
+    fn respects_memory_load() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("matmult");
+        let home = home_server("matmult", cl.len());
+        cl.workers[home].allocated_mem_mb = 125.0 * 1024.0; // memory full
+        let mut s = OpenWhiskScheduler::new(1);
+        let d = s.schedule(&r, 16, 1024, &cl);
+        assert_ne!(d.worker, home, "memory-full worker must be skipped");
+    }
+
+    #[test]
+    fn reuses_same_size_warm_on_home_only() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        let home = home_server("qr", cl.len());
+        let other = (home + 1) % cl.len();
+        // warm container on a non-home worker: OW won't look there
+        let mut c = crate::simulator::container::Container::new(5, r.func, 4, 512, 0.0);
+        c.mark_ready(0.0);
+        cl.workers[other].containers.insert(5, c);
+        let mut s = OpenWhiskScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.worker, home);
+        assert_eq!(d.container, ContainerChoice::Cold);
+    }
+}

@@ -1,0 +1,257 @@
+//! Shabari's Scheduler (§5): mitigate the cold starts that delayed,
+//! per-invocation sizing introduces.
+//!
+//! Routing order:
+//! 1. warm container of the **exact** predicted size (any worker with
+//!    admission capacity);
+//! 2. warm container **larger but closest** to the prediction — and
+//!    proactively launch a perfectly-sized container in the background
+//!    for future invocations;
+//! 3. **cold** container of the exact size on the function's home server
+//!    (hash-based), probing forward when the home server is full, random
+//!    when every server is full.
+//!
+//! Load tracking is dual-resource: a worker admits an invocation only if
+//! both its vCPU (`userCpu` limit) and memory loads fit (§6).
+
+use crate::simulator::worker::Cluster;
+use crate::simulator::{BackgroundLaunch, ContainerChoice, Request};
+use crate::util::rng::Rng;
+
+use super::{home_server, probe_from, SchedDecision, Scheduler};
+
+pub struct ShabariScheduler {
+    rng: Rng,
+    /// Modeled critical-path latency (Fig 14: 0.5–1.5 ms).
+    pub latency_s: f64,
+    /// Counters for the cold-start analysis (Fig 10).
+    pub warm_exact_hits: u64,
+    pub warm_larger_hits: u64,
+    pub cold_routes: u64,
+}
+
+impl ShabariScheduler {
+    pub fn new(seed: u64) -> Self {
+        ShabariScheduler {
+            rng: Rng::new(seed ^ 0x5C4E_D011),
+            latency_s: 0.001,
+            warm_exact_hits: 0,
+            warm_larger_hits: 0,
+            cold_routes: 0,
+        }
+    }
+
+    fn decide(
+        &mut self,
+        req: &Request,
+        vcpus: u32,
+        mem_mb: u32,
+        cluster: &Cluster,
+    ) -> (usize, ContainerChoice, Option<BackgroundLaunch>) {
+        let func_name = crate::functions::catalog::CATALOG[req.func].name;
+        let home = home_server(func_name, cluster.len());
+
+        // (1) exact-size warm container, admissible worker.
+        if let Some((w, cid)) = self.find_warm(cluster, req.func, vcpus, mem_mb, true) {
+            self.warm_exact_hits += 1;
+            return (w, ContainerChoice::Warm(cid), None);
+        }
+
+        // (2) larger-but-closest warm container; background-launch the
+        // perfect size for future invocations.
+        if let Some((w, cid)) = self.find_warm(cluster, req.func, vcpus, mem_mb, false) {
+            self.warm_larger_hits += 1;
+            let bg_worker = if cluster.worker(home).has_capacity(vcpus, mem_mb) {
+                home
+            } else {
+                probe_from(cluster, home, vcpus, mem_mb, w)
+            };
+            let background = Some(BackgroundLaunch { worker: bg_worker, vcpus, mem_mb });
+            return (w, ContainerChoice::Warm(cid), background);
+        }
+
+        // (3) cold on the home server, probing forward; random if full.
+        self.cold_routes += 1;
+        let worker = if cluster.worker(home).has_capacity(vcpus, mem_mb) {
+            home
+        } else {
+            let probed = probe_from(cluster, home, vcpus, mem_mb, usize::MAX);
+            if probed == usize::MAX {
+                self.rng.below(cluster.len())
+            } else {
+                probed
+            }
+        };
+        (worker, ContainerChoice::Cold, None)
+    }
+
+    /// Search all workers for a warm container; `exact` selects mode.
+    /// Only admissible placements count (the worker must fit the
+    /// *container's* size, since that is what gets allocated).
+    fn find_warm(
+        &self,
+        cluster: &Cluster,
+        func: usize,
+        vcpus: u32,
+        mem_mb: u32,
+        exact: bool,
+    ) -> Option<(usize, u64)> {
+        let mut best: Option<(u32, u32, usize, u64)> = None;
+        for w in &cluster.workers {
+            let cand = if exact {
+                w.find_warm_exact(func, vcpus, mem_mb)
+            } else {
+                w.find_warm_larger(func, vcpus, mem_mb)
+            };
+            if let Some(c) = cand {
+                if !w.has_capacity(c.vcpus, c.mem_mb) {
+                    continue;
+                }
+                let key = (c.vcpus, c.mem_mb, w.id, c.id);
+                if best.map_or(true, |b| (key.0, key.1) < (b.0, b.1)) {
+                    best = Some(key);
+                    if exact {
+                        break; // any exact hit is equally good
+                    }
+                }
+            }
+        }
+        best.map(|(_, _, w, c)| (w, c))
+    }
+}
+
+impl Scheduler for ShabariScheduler {
+    fn name(&self) -> &'static str {
+        "shabari"
+    }
+
+    fn schedule(
+        &mut self,
+        req: &Request,
+        vcpus: u32,
+        mem_mb: u32,
+        cluster: &Cluster,
+    ) -> SchedDecision {
+        let (worker, container, background) = self.decide(req, vcpus, mem_mb, cluster);
+        SchedDecision { worker, container, background, latency_s: self.latency_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::catalog::index_of;
+    use crate::featurizer::{InputKind, InputSpec};
+    use crate::simulator::container::Container;
+    use crate::simulator::SimConfig;
+
+    fn req(func: &str) -> Request {
+        Request {
+            id: 1,
+            func: index_of(func).unwrap(),
+            input: InputSpec::new(InputKind::Payload),
+            arrival: 0.0,
+            slo_s: 1.0,
+        }
+    }
+
+    fn warm(cl: &mut Cluster, worker: usize, id: u64, func: usize, vcpus: u32, mem: u32) {
+        let mut c = Container::new(id, func, vcpus, mem, 0.0);
+        c.mark_ready(0.0);
+        cl.workers[worker].containers.insert(id, c);
+    }
+
+    #[test]
+    fn prefers_exact_warm() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        warm(&mut cl, 2, 10, r.func, 8, 1024); // larger
+        warm(&mut cl, 3, 11, r.func, 4, 512); // exact
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.worker, 3);
+        assert_eq!(d.container, ContainerChoice::Warm(11));
+        assert!(d.background.is_none(), "exact hits need no background launch");
+        assert_eq!(s.warm_exact_hits, 1);
+    }
+
+    #[test]
+    fn larger_warm_triggers_background_launch() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        warm(&mut cl, 1, 10, r.func, 16, 4096);
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.container, ContainerChoice::Warm(10));
+        let bg = d.background.expect("must pre-warm the right size");
+        assert_eq!(bg.vcpus, 4);
+        assert_eq!(bg.mem_mb, 512);
+        assert_eq!(s.warm_larger_hits, 1);
+    }
+
+    #[test]
+    fn closest_larger_wins() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        warm(&mut cl, 0, 10, r.func, 32, 4096);
+        warm(&mut cl, 1, 11, r.func, 6, 1024);
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.container, ContainerChoice::Warm(11), "6 vCPUs closer than 32");
+    }
+
+    #[test]
+    fn cold_goes_to_home_server() {
+        let cl = Cluster::new(&SimConfig::small());
+        let r = req("matmult");
+        let home = home_server("matmult", cl.len());
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 8, 2048, &cl);
+        assert_eq!(d.worker, home);
+        assert_eq!(d.container, ContainerChoice::Cold);
+        assert_eq!(s.cold_routes, 1);
+    }
+
+    #[test]
+    fn full_home_probes_forward() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("matmult");
+        let home = home_server("matmult", cl.len());
+        cl.workers[home].allocated_vcpus = 90.0;
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 8, 2048, &cl);
+        assert_ne!(d.worker, home);
+    }
+
+    #[test]
+    fn smaller_warm_never_reused() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        warm(&mut cl, 0, 10, r.func, 2, 256);
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.container, ContainerChoice::Cold, "2-vCPU box can't serve a 4-vCPU ask");
+    }
+
+    #[test]
+    fn warm_on_full_worker_skipped() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        warm(&mut cl, 0, 10, r.func, 4, 512);
+        cl.workers[0].allocated_vcpus = 88.0; // 4 vCPUs won't fit under 90
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_ne!(d.worker, 0, "admission control must skip the full worker");
+    }
+
+    #[test]
+    fn other_functions_warm_pool_ignored() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("qr");
+        let other = index_of("encrypt").unwrap();
+        warm(&mut cl, 0, 10, other, 4, 512);
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.container, ContainerChoice::Cold);
+    }
+}

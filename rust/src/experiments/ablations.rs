@@ -1,0 +1,103 @@
+//! Design-exploration ablations: Figure 6 (ML formulation), Figure 7a
+//! (cost function), Figure 7b (scheduler placement policy).
+
+use anyhow::Result;
+
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{run_one, sim_config, Ctx};
+
+/// Figure 6: per-function vs one-hot vs per-input-type formulations —
+/// SLO violations and idle (wasted) vCPU distribution.
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    let workload = ctx.workload();
+    let cfg = sim_config(ctx);
+    let mut t = Table::new(
+        "Fig 6 — ML formulations for the online allocator (RPS 4)",
+        &["formulation", "SLO viol %", "idle vCPUs p50", "idle vCPUs p90", "idle mem p50 (GB)"],
+    );
+    for name in ["shabari", "shabari-onehot", "shabari-per-input-type"] {
+        let (_, m) = run_one(name, ctx, &workload, 4.0, &cfg)?;
+        let label = match name {
+            "shabari" => "per-function",
+            "shabari-onehot" => "one-hot",
+            _ => "per-input-type",
+        };
+        t.row(vec![
+            label.to_string(),
+            fpct(m.slo_violation_pct),
+            fnum(m.wasted_vcpus.p50, 1),
+            fnum(m.wasted_vcpus.p90, 1),
+            fnum(m.wasted_mem_gb.p50, 2),
+        ]);
+    }
+    t.note("paper: per-function wins on both compliance and utilization; one-hot ~5x p90 idle vCPUs");
+    t.print();
+    Ok(())
+}
+
+/// Figure 7a: Absolute vs Proportional cost function — SLO violations.
+pub fn fig7a(ctx: &Ctx) -> Result<()> {
+    let workload = ctx.workload();
+    let cfg = sim_config(ctx);
+    let mut t = Table::new(
+        "Fig 7a — cost function: Absolute (X=0.5s, Y=1.5s) vs Proportional",
+        &["rps", "absolute viol %", "proportional viol %"],
+    );
+    for rps in [4.0, 5.0, 6.0] {
+        let (_, ma) = run_one("shabari", ctx, &workload, rps, &cfg)?;
+        let (_, mp) = run_one("shabari-proportional", ctx, &workload, rps, &cfg)?;
+        t.row(vec![
+            fnum(rps, 0),
+            fpct(ma.slo_violation_pct),
+            fpct(mp.slo_violation_pct),
+        ]);
+    }
+    t.note("paper: absolute ~25% fewer violations (more aggressive on misses)");
+    t.print();
+    Ok(())
+}
+
+/// Figure 7b: hashing-based placement vs Hermod packing at high load.
+pub fn fig7b(ctx: &Ctx) -> Result<()> {
+    let workload = ctx.workload();
+    let cfg = sim_config(ctx);
+    let mut t = Table::new(
+        "Fig 7b — scheduler placement: hashing vs Hermod packing",
+        &["rps", "hashing viol %", "hermod-packing viol %"],
+    );
+    for rps in [5.0, 6.0] {
+        let (_, mh) = run_one("shabari", ctx, &workload, rps, &cfg)?;
+        let (_, mp) = run_one("shabari-hermod", ctx, &workload, rps, &cfg)?;
+        t.row(vec![
+            fnum(rps, 0),
+            fpct(mh.slo_violation_pct),
+            fpct(mp.slo_violation_pct),
+        ]);
+    }
+    t.note("packing makes NIC the bottleneck for DB-fetching functions (§5)");
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_absolute_no_worse() {
+        // Short run; the qualitative shape (absolute <= proportional + eps)
+        // must hold.
+        let ctx = Ctx { duration_s: 240.0, ..Default::default() };
+        let w = ctx.workload();
+        let cfg = sim_config(&ctx);
+        let (_, ma) = run_one("shabari", &ctx, &w, 5.0, &cfg).unwrap();
+        let (_, mp) = run_one("shabari-proportional", &ctx, &w, 5.0, &cfg).unwrap();
+        assert!(
+            ma.slo_violation_pct <= mp.slo_violation_pct + 6.0,
+            "absolute {} vs proportional {}",
+            ma.slo_violation_pct,
+            mp.slo_violation_pct
+        );
+    }
+}

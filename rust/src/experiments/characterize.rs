@@ -1,0 +1,233 @@
+//! Measurement-study experiments (paper §2): Figures 1–4.
+//! These probe the ground-truth function models in isolation, exactly as
+//! the paper's ~8K profiling runs do on the real testbed.
+
+use anyhow::Result;
+
+use crate::baselines::profiling;
+use crate::featurizer::InputKind;
+use crate::functions::catalog::{by_name, index_of, CATALOG};
+use crate::functions::inputs;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::Ctx;
+
+/// Figure 1: (a) slowdown w.r.t. best runtime across coupled memory
+/// sizes; (b) max memory utilized vs allocated — for `videoprocess`.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    let fi = index_of("videoprocess").unwrap();
+    let mut rng = Rng::new(ctx.seed);
+    let pool = inputs::pool(&CATALOG[fi], &mut rng);
+
+    // OpenWhisk/Lambda-style coupled sizing: vCPUs proportional to memory.
+    let mem_ladder_mb: &[u32] = &[1024, 2048, 3072, 4096, 5120, 6144, 8192, 10240];
+    let coupled_vcpus = |mem_mb: u32| ((mem_mb as f64 / 1769.0).ceil() as u32).max(1);
+
+    let mut t = Table::new(
+        "Fig 1a — videoprocess slowdown vs best, per coupled memory size (100 invocations)",
+        &["mem", "vcpus", "median exec (s)", "slowdown p50", "slowdown p95"],
+    );
+    // 100 invocations spread over the pool per memory size
+    let mut per_mem: Vec<Vec<f64>> = Vec::new();
+    for &mem in mem_ladder_mb {
+        let vcpus = coupled_vcpus(mem);
+        let mut times = Vec::new();
+        for i in 0..100 {
+            let input = &pool[i % pool.len()];
+            let d = CATALOG[fi].noisy_demand(input, &mut rng);
+            times.push(d.ideal_exec_s(vcpus as f64, 10.0));
+        }
+        per_mem.push(times);
+    }
+    // best runtime per invocation index across memory sizes
+    let best: Vec<f64> = (0..100)
+        .map(|i| per_mem.iter().map(|v| v[i]).fold(f64::INFINITY, f64::min))
+        .collect();
+    for (mi, &mem) in mem_ladder_mb.iter().enumerate() {
+        let slowdowns: Vec<f64> =
+            (0..100).map(|i| per_mem[mi][i] / best[i]).collect();
+        let s = stats::summarize(&slowdowns);
+        let med = stats::median(&per_mem[mi]);
+        t.row(vec![
+            format!("{:.1}GB", mem as f64 / 1024.0),
+            coupled_vcpus(mem).to_string(),
+            fnum(med, 2),
+            fnum(s.p50, 2),
+            fnum(s.p95, 2),
+        ]);
+    }
+    t.note("paper: up to 6x performance variability across sizes/inputs");
+    t.print();
+
+    let mut t2 = Table::new(
+        "Fig 1b — videoprocess max memory utilized vs allocated",
+        &["alloc", "max used (GB)", "p50 used (GB)", "util % (p50)"],
+    );
+    for &mem in mem_ladder_mb {
+        let used: Vec<f64> = (0..100)
+            .map(|i| CATALOG[fi].noisy_demand(&pool[i % pool.len()], &mut rng).mem_gb)
+            .collect();
+        let s = stats::summarize(&used);
+        let alloc_gb = mem as f64 / 1024.0;
+        t2.row(vec![
+            format!("{alloc_gb:.1}GB"),
+            fnum(s.max, 2),
+            fnum(s.p50, 2),
+            fpct(100.0 * s.p50 / alloc_gb),
+        ]);
+    }
+    t2.note("paper: up to 80% of allocated memory idle (compute-bound function)");
+    t2.print();
+    Ok(())
+}
+
+/// Figure 2: input size vs execution time for three functions at several
+/// vCPU allocations — positive but *non-linear* correlation; variability
+/// grows with size for multi-threaded functions.
+pub fn fig2(ctx: &Ctx) -> Result<()> {
+    for fname in ["imageprocess", "speech2text", "compress"] {
+        let fi = index_of(fname).unwrap();
+        let mut rng = Rng::new(ctx.seed);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let mut t = Table::new(
+            &format!("Fig 2 — {fname}: input size vs execution time"),
+            &["size (MB)", "t@4vcpu (s)", "t@8vcpu (s)", "t@16vcpu (s)", "spread %@16"],
+        );
+        for input in &pool {
+            let mut cols = vec![fnum(input.size_mb(), 2)];
+            let mut spread = 0.0;
+            for vcpus in [4u32, 8, 16] {
+                let times: Vec<f64> = (0..10)
+                    .map(|_| {
+                        CATALOG[fi]
+                            .noisy_demand(input, &mut rng)
+                            .ideal_exec_s(vcpus as f64, 10.0)
+                    })
+                    .collect();
+                let s = stats::summarize(&times);
+                if vcpus == 16 {
+                    spread = 100.0 * (s.max - s.min) / s.p50.max(1e-9);
+                }
+                cols.push(fnum(s.p50, 2));
+            }
+            cols.push(fpct(spread));
+            t.row(cols);
+        }
+        t.note("positive but non-linear growth; spread grows with size for multi-threaded");
+        t.print();
+    }
+    Ok(())
+}
+
+/// Figure 3: videoprocess vCPU / memory utilization vs video size for
+/// set-1 (varying resolution) vs set-2 (constant 1280x720).
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let fi = index_of("videoprocess").unwrap();
+    let mut rng = Rng::new(ctx.seed);
+    let set1 = inputs::video_pool_set1(&mut rng, 5);
+    let set2 = inputs::video_pool_set2(&mut rng, 5);
+    for (label, set) in [("set-1 (varying resolution)", &set1), ("set-2 (1280x720)", &set2)] {
+        let mut t = Table::new(
+            &format!("Fig 3 — videoprocess {label}"),
+            &["size (MB)", "resolution", "vCPUs used (48 alloc)", "mem used (GB)"],
+        );
+        for input in set.iter() {
+            let d = (CATALOG[fi].demand)(input);
+            t.row(vec![
+                fnum(input.size_mb(), 2),
+                format!("{}x{}", input.width as u32, input.height as u32),
+                fnum(d.avg_vcpus_used(48.0, 10.0), 1),
+                fnum(d.mem_gb, 2),
+            ]);
+        }
+        t.note("same-sized inputs differ ~70% in vCPUs when resolution varies");
+        t.print();
+    }
+    Ok(())
+}
+
+/// Figure 4: execution time (top) and vCPU utilization (bottom) vs vCPU
+/// allocation for compress, resnet-50, imageprocess — bounded parallelism.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    for fname in ["compress", "resnet50", "imageprocess"] {
+        let fi = index_of(fname).unwrap();
+        let mut rng = Rng::new(ctx.seed);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let small = &pool[1];
+        let large = &pool[pool.len() - 1];
+        let mut t = Table::new(
+            &format!("Fig 4 — {fname}: exec time & vCPU utilization vs allocation"),
+            &["vcpus", "t small (s)", "t large (s)", "used small", "used large"],
+        );
+        for vcpus in [1u32, 2, 4, 8, 16, 24, 32] {
+            let ds = (CATALOG[fi].demand)(small);
+            let dl = (CATALOG[fi].demand)(large);
+            t.row(vec![
+                vcpus.to_string(),
+                fnum(ds.ideal_exec_s(vcpus as f64, 10.0), 2),
+                fnum(dl.ideal_exec_s(vcpus as f64, 10.0), 2),
+                fnum(ds.avg_vcpus_used(vcpus as f64, 10.0), 1),
+                fnum(dl.avg_vcpus_used(vcpus as f64, 10.0), 1),
+            ]);
+        }
+        t.note("gains saturate at bounded parallelism; imageprocess pinned at ~1 vCPU");
+        t.print();
+    }
+    Ok(())
+}
+
+/// Sanity helper used by integration tests: the Fig-3 resolution effect
+/// as numbers (set-1 vCPU spread at same size vs set-2).
+pub fn fig3_vcpu_spread(seed: u64) -> (f64, f64) {
+    let fi = index_of("videoprocess").unwrap();
+    let mut rng = Rng::new(seed);
+    let spread = |set: &[crate::featurizer::InputSpec]| {
+        let used: Vec<f64> =
+            set.iter().map(|i| (CATALOG[fi].demand)(i).avg_vcpus_used(48.0, 10.0)).collect();
+        let s = stats::summarize(&used);
+        (s.max - s.min) / s.max.max(1e-9)
+    };
+    let s1 = inputs::video_pool_set1(&mut rng, 5);
+    let s2 = inputs::video_pool_set2(&mut rng, 5);
+    (spread(&s1), spread(&s2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figures_run_without_error() {
+        let ctx = Ctx::default();
+        fig1(&ctx).unwrap();
+        fig3(&ctx).unwrap();
+        fig4(&ctx).unwrap();
+    }
+
+    #[test]
+    fn resolution_effect_shape_holds() {
+        let (s1, s2) = fig3_vcpu_spread(1);
+        assert!(s1 > 0.5, "set-1 spans a wide vCPU range: {s1}");
+        assert!(s2 < 0.2, "set-2 nearly constant: {s2}");
+    }
+
+    #[test]
+    fn fig4_imageprocess_flat() {
+        let fi = index_of("imageprocess").unwrap();
+        let mut rng = Rng::new(1);
+        let pool = inputs::pool(&CATALOG[fi], &mut rng);
+        let d = (CATALOG[fi].demand)(&pool[5]);
+        let t1 = d.ideal_exec_s(1.0, 10.0);
+        let t32 = d.ideal_exec_s(32.0, 10.0);
+        assert!((t1 - t32).abs() < 1e-9, "single-threaded is allocation-flat");
+    }
+
+    #[test]
+    fn input_kind_unused_guard() {
+        // compile-time usage of InputKind in this module's imports
+        let _ = InputKind::Video;
+        let _ = profiling::representative_inputs;
+    }
+}

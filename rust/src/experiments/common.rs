@@ -1,0 +1,167 @@
+//! Shared experiment harness: build policies by name, run traces, and
+//! collect paper-style metrics.
+
+use anyhow::{bail, Result};
+
+use crate::baselines::{AquatopePolicy, CypressPolicy, ParrotfishPolicy, StaticPolicy};
+use crate::coordinator::allocator::cost::SlackPolicy;
+use crate::coordinator::allocator::formulation::Formulation;
+use crate::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
+use crate::coordinator::scheduler::hermod::HermodScheduler;
+use crate::coordinator::scheduler::openwhisk::OpenWhiskScheduler;
+use crate::coordinator::scheduler::shabari::ShabariScheduler;
+use crate::coordinator::ShabariPolicy;
+use crate::learner::xla::Backend;
+use crate::metrics::{from_result, RunMetrics};
+use crate::simulator::engine::{simulate, SimResult};
+use crate::simulator::{Policy, SimConfig};
+use crate::workload::Workload;
+
+/// Experiment context, filled from CLI flags.
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    pub seed: u64,
+    /// Learner backend for Shabari variants (XLA = production path).
+    pub backend: Backend,
+    /// Simulated trace length, seconds (paper: a 10-minute window).
+    pub duration_s: f64,
+    pub slo_multiplier: f64,
+    pub artifacts_dir: String,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            seed: 42,
+            backend: Backend::Native,
+            duration_s: 600.0,
+            slo_multiplier: 1.4,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Ctx {
+    pub fn allocator_cfg(&self) -> AllocatorConfig {
+        AllocatorConfig {
+            learner_backend: self.backend,
+            artifacts_dir: self.artifacts_dir.clone(),
+            ..Default::default()
+        }
+    }
+
+    pub fn workload(&self) -> Workload {
+        Workload::build(self.seed, self.slo_multiplier)
+    }
+}
+
+/// All policy names `make_policy` accepts (fig8's six systems + ablations).
+pub const POLICIES: &[&str] = &[
+    "shabari",
+    "shabari-ow-sched", // Shabari allocator + OpenWhisk scheduler (fig10)
+    "shabari-hermod",   // Shabari allocator + Hermod packing (fig7b)
+    "static-medium",
+    "static-large",
+    "parrotfish",
+    "aquatope",
+    "cypress",
+];
+
+/// Build a policy by name.
+pub fn make_policy(name: &str, ctx: &Ctx, workload: &Workload) -> Result<Box<dyn Policy>> {
+    let seed = ctx.seed;
+    Ok(match name {
+        "shabari" => {
+            let alloc = ResourceAllocator::new(ctx.allocator_cfg())?;
+            Box::new(ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(seed))))
+        }
+        "shabari-ow-sched" => {
+            let alloc = ResourceAllocator::new(ctx.allocator_cfg())?;
+            Box::new(ShabariPolicy::new(alloc, Box::new(OpenWhiskScheduler::new(seed))))
+        }
+        "shabari-hermod" => {
+            let alloc = ResourceAllocator::new(ctx.allocator_cfg())?;
+            Box::new(ShabariPolicy::new(alloc, Box::new(HermodScheduler::new(seed))))
+        }
+        "shabari-proportional" => {
+            let mut cfg = ctx.allocator_cfg();
+            cfg.slack = SlackPolicy::Proportional;
+            let alloc = ResourceAllocator::new(cfg)?;
+            Box::new(ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(seed))))
+        }
+        "shabari-onehot" => {
+            let mut cfg = ctx.allocator_cfg();
+            cfg.formulation = Formulation::OneHot;
+            cfg.learner_backend = Backend::Native; // wide model is native-only
+            let alloc = ResourceAllocator::new(cfg)?;
+            Box::new(ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(seed))))
+        }
+        "shabari-per-input-type" => {
+            let mut cfg = ctx.allocator_cfg();
+            cfg.formulation = Formulation::PerInputType;
+            let alloc = ResourceAllocator::new(cfg)?;
+            Box::new(ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(seed))))
+        }
+        "static-medium" => Box::new(StaticPolicy::medium(seed)),
+        "static-large" => Box::new(StaticPolicy::large(seed)),
+        "parrotfish" => Box::new(ParrotfishPolicy::offline(seed)),
+        "aquatope" => {
+            let slos = workload.slos.clone();
+            Box::new(AquatopePolicy::offline(seed, move |f, i| slos[f][i]))
+        }
+        "cypress" => Box::new(CypressPolicy::new(seed)),
+        other => bail!("unknown policy '{other}' (known: {POLICIES:?})"),
+    })
+}
+
+/// Run one policy over a trace at `rps`; returns raw result + metrics.
+pub fn run_one(
+    name: &str,
+    ctx: &Ctx,
+    workload: &Workload,
+    rps: f64,
+    sim_cfg: &SimConfig,
+) -> Result<(SimResult, RunMetrics)> {
+    let mut policy = make_policy(name, ctx, workload)?;
+    let trace = workload.trace(rps, ctx.duration_s, ctx.seed.wrapping_add(rps as u64));
+    let res = simulate(sim_cfg.clone(), &mut policy, trace);
+    let metrics = from_result(name, &res);
+    Ok((res, metrics))
+}
+
+/// Default testbed config with the experiment seed applied.
+pub fn sim_config(ctx: &Ctx) -> SimConfig {
+    SimConfig { seed: ctx.seed ^ 0x51AB, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_policies_constructible() {
+        let ctx = Ctx { duration_s: 60.0, ..Default::default() };
+        let w = ctx.workload();
+        for name in POLICIES {
+            let p = make_policy(name, &ctx, &w).unwrap();
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        let ctx = Ctx::default();
+        let w = Workload::build(1, 1.4);
+        assert!(make_policy("nope", &ctx, &w).is_err());
+    }
+
+    #[test]
+    fn run_one_produces_metrics() {
+        let ctx = Ctx { duration_s: 60.0, ..Default::default() };
+        let w = ctx.workload();
+        let cfg = sim_config(&ctx);
+        let (res, m) = run_one("static-medium", &ctx, &w, 2.0, &cfg).unwrap();
+        assert!(m.invocations > 50, "2 rps over 60 s");
+        assert_eq!(res.records.len(), m.invocations);
+    }
+}

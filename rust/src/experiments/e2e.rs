@@ -1,0 +1,175 @@
+//! Figure 8 — the headline end-to-end comparison: SLO violations, wasted
+//! vCPUs/memory, and utilization for Shabari vs all baselines across
+//! RPS 2–6.
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{run_one, sim_config, Ctx};
+
+/// The six systems of Fig 8, in the paper's order.
+pub const FIG8_POLICIES: &[&str] = &[
+    "static-medium",
+    "static-large",
+    "parrotfish",
+    "cypress",
+    "aquatope",
+    "shabari",
+];
+
+/// Run the full sweep; returns metrics[policy][rps_idx].
+pub fn run_sweep(ctx: &Ctx, rps_list: &[f64]) -> Result<Vec<Vec<RunMetrics>>> {
+    let workload = ctx.workload();
+    let cfg = sim_config(ctx);
+    let mut all = Vec::new();
+    for name in FIG8_POLICIES {
+        let mut per_rps = Vec::new();
+        for &rps in rps_list {
+            let (_, m) = run_one(name, ctx, &workload, rps, &cfg)?;
+            per_rps.push(m);
+        }
+        all.push(per_rps);
+    }
+    Ok(all)
+}
+
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    let rps_list = [2.0, 3.0, 4.0, 5.0, 6.0];
+    let all = run_sweep(ctx, &rps_list)?;
+
+    let mut t = Table::new(
+        "Fig 8a — % SLO violations",
+        &["system", "rps2", "rps3", "rps4", "rps5", "rps6"],
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(all[pi].iter().map(|m| fpct(m.slo_violation_pct)));
+        t.row(row);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Fig 8b — wasted vCPUs per invocation (p50 / p95)",
+        &["system", "rps2", "rps3", "rps4", "rps5", "rps6"],
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(
+            all[pi]
+                .iter()
+                .map(|m| format!("{}/{}", fnum(m.wasted_vcpus.p50, 1), fnum(m.wasted_vcpus.p95, 1))),
+        );
+        t.row(row);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Fig 8c — wasted memory GB per invocation (p50 / p95)",
+        &["system", "rps2", "rps3", "rps4", "rps5", "rps6"],
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(all[pi].iter().map(|m| {
+            format!("{}/{}", fnum(m.wasted_mem_gb.p50, 2), fnum(m.wasted_mem_gb.p95, 2))
+        }));
+        t.row(row);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Fig 8d — vCPU utilization per invocation (p50)",
+        &["system", "rps2", "rps3", "rps4", "rps5", "rps6"],
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(all[pi].iter().map(|m| fpct(100.0 * m.vcpu_utilization.p50)));
+        t.row(row);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Fig 8e — memory utilization per invocation (p50)",
+        &["system", "rps2", "rps3", "rps4", "rps5", "rps6"],
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        row.extend(all[pi].iter().map(|m| fpct(100.0 * m.mem_utilization.p50)));
+        t.row(row);
+    }
+    t.print();
+
+    // machine-readable dump for EXPERIMENTS.md bookkeeping
+    let dump = Json::Arr(
+        FIG8_POLICIES
+            .iter()
+            .enumerate()
+            .map(|(pi, name)| {
+                Json::obj(vec![
+                    ("policy", Json::Str(name.to_string())),
+                    (
+                        "slo_violation_pct",
+                        Json::arr_f64(
+                            &all[pi].iter().map(|m| m.slo_violation_pct).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "wasted_vcpus_p50",
+                        Json::arr_f64(&all[pi].iter().map(|m| m.wasted_vcpus.p50).collect::<Vec<_>>()),
+                    ),
+                    (
+                        "wasted_mem_p50",
+                        Json::arr_f64(
+                            &all[pi].iter().map(|m| m.wasted_mem_gb.p50).collect::<Vec<_>>(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::create_dir_all("out").ok();
+    std::fs::write("out/fig8.json", dump.to_pretty()).ok();
+    println!("(dumped out/fig8.json)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline shapes on a scaled-down sweep (one RPS, shorter trace).
+    #[test]
+    fn fig8_shapes_hold_at_high_load() {
+        let ctx = Ctx { duration_s: 300.0, ..Default::default() };
+        let all = run_sweep(&ctx, &[6.0]).unwrap();
+        let get = |name: &str| {
+            &all[FIG8_POLICIES.iter().position(|p| *p == name).unwrap()][0]
+        };
+        let shabari = get("shabari");
+        let cypress = get("cypress");
+        let parrotfish = get("parrotfish");
+
+        // Shabari beats the input-agnostic/size-only systems at high load
+        assert!(
+            shabari.slo_violation_pct < cypress.slo_violation_pct,
+            "shabari {} vs cypress {}",
+            shabari.slo_violation_pct,
+            cypress.slo_violation_pct
+        );
+        // Shabari wastes less memory than Parrotfish (median)
+        assert!(
+            shabari.wasted_mem_gb.p50 < parrotfish.wasted_mem_gb.p50 + 0.1,
+            "shabari {} vs parrotfish {}",
+            shabari.wasted_mem_gb.p50,
+            parrotfish.wasted_mem_gb.p50
+        );
+        // Shabari's median wasted vCPUs ~0 (headline claim)
+        assert!(
+            shabari.wasted_vcpus.p50 <= 1.0,
+            "median wasted vCPUs ~0, got {}",
+            shabari.wasted_vcpus.p50
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Experiment registry: one runner per paper figure/table (DESIGN.md §4).
+//! `shabari experiment <id>` regenerates the corresponding rows/series.
+
+pub mod ablations;
+pub mod analysis;
+pub mod characterize;
+pub mod common;
+pub mod e2e;
+pub mod overheads;
+pub mod sensitivity;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+pub use common::Ctx;
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    match id {
+        "fig1" => characterize::fig1(ctx),
+        "fig2" => characterize::fig2(ctx),
+        "fig3" => characterize::fig3(ctx),
+        "fig4" => characterize::fig4(ctx),
+        "fig6" => ablations::fig6(ctx),
+        "fig7a" => ablations::fig7a(ctx),
+        "fig7b" => ablations::fig7b(ctx),
+        "fig8" => e2e::fig8(ctx),
+        "fig9" => analysis::fig9(ctx),
+        "fig10" => analysis::fig10(ctx),
+        "fig11" => sensitivity::fig11(ctx),
+        "fig12" => sensitivity::fig12(ctx),
+        "fig13" => sensitivity::fig13(ctx),
+        "fig14" => overheads::fig14(ctx),
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "all" => {
+            for id in EXPERIMENTS {
+                println!("\n================ {id} ================\n");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (known: {EXPERIMENTS:?} or 'all')"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        // the paper's evaluation: figures 1-4, 6-14 and tables 1-3
+        for id in super::EXPERIMENTS {
+            assert!(id.starts_with("fig") || id.starts_with("table"));
+        }
+        assert_eq!(super::EXPERIMENTS.len(), 17);
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        let ctx = super::Ctx::default();
+        assert!(super::run("fig99", &ctx).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Sensitivity analyses (§7.5): Figure 11 (vCPU oversubscription limit),
+//! Figure 12 (confidence thresholds), Figure 13 (SLO multiplier).
+
+use anyhow::Result;
+
+use crate::coordinator::allocator::ResourceAllocator;
+use crate::coordinator::scheduler::shabari::ShabariScheduler;
+use crate::coordinator::ShabariPolicy;
+use crate::metrics::from_result;
+use crate::simulator::engine::simulate;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{sim_config, Ctx};
+
+/// Figure 11: vCPU oversubscription limit (`userCpu`) sweep at RPS 6.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    let workload = ctx.workload();
+    let mut t = Table::new(
+        "Fig 11 — vCPU oversubscription limit per worker (RPS 6)",
+        &["userCpu", "SLO viol %", "timeout %", "p50 util %"],
+    );
+    for limit in [70.0, 80.0, 90.0, 100.0, 110.0, 120.0, 130.0] {
+        let mut cfg = sim_config(ctx);
+        cfg.sched_vcpu_limit = limit;
+        let alloc = ResourceAllocator::new(ctx.allocator_cfg())?;
+        let mut policy =
+            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(ctx.seed)));
+        let trace = workload.trace(6.0, ctx.duration_s, ctx.seed + 6);
+        let res = simulate(cfg, &mut policy, trace);
+        let m = from_result("shabari", &res);
+        t.row(vec![
+            fnum(limit, 0),
+            fpct(m.slo_violation_pct),
+            fpct(m.timeout_pct),
+            fpct(100.0 * m.vcpu_utilization.p50),
+        ]);
+    }
+    t.note("paper: raising above ~#cores stops helping; 130 causes ~5% timeouts");
+    t.print();
+    Ok(())
+}
+
+/// Figure 12: confidence-threshold sweeps — (a) vCPU threshold vs SLO
+/// violations, (b) memory threshold vs OOM-kill %.
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let workload = ctx.workload();
+    let mut t = Table::new(
+        "Fig 12a — vCPU confidence threshold (RPS 4)",
+        &["threshold", "SLO viol %", "p95 wasted vCPUs"],
+    );
+    for threshold in [2u64, 5, 10, 16, 24] {
+        let mut acfg = ctx.allocator_cfg();
+        acfg.vcpu_confidence = threshold;
+        let alloc = ResourceAllocator::new(acfg)?;
+        let mut policy =
+            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(ctx.seed)));
+        let trace = workload.trace(4.0, ctx.duration_s, ctx.seed + 4);
+        let res = simulate(sim_config(ctx), &mut policy, trace);
+        let m = from_result("shabari", &res);
+        t.row(vec![
+            threshold.to_string(),
+            fpct(m.slo_violation_pct),
+            fnum(m.wasted_vcpus.p95, 1),
+        ]);
+    }
+    t.note("larger thresholds keep more invocations on the 16-vCPU default (interference)");
+    t.print();
+
+    let mut t = Table::new(
+        "Fig 12b — memory confidence threshold (RPS 4)",
+        &["threshold", "OOM-killed %", "p50 wasted mem (GB)"],
+    );
+    for threshold in [5u64, 10, 20, 30] {
+        let mut acfg = ctx.allocator_cfg();
+        acfg.mem_confidence = threshold;
+        let alloc = ResourceAllocator::new(acfg)?;
+        let mut policy =
+            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(ctx.seed)));
+        let trace = workload.trace(4.0, ctx.duration_s, ctx.seed + 4);
+        let res = simulate(sim_config(ctx), &mut policy, trace);
+        let m = from_result("shabari", &res);
+        t.row(vec![
+            threshold.to_string(),
+            fpct(m.oom_pct),
+            fnum(m.wasted_mem_gb.p50, 2),
+        ]);
+    }
+    t.note("paper: <1% kills at threshold >= 20");
+    t.print();
+    Ok(())
+}
+
+/// Figure 13: SLO-multiplier sweep (1.2x–1.8x) — violations + idle vCPUs.
+pub fn fig13(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 13 — SLO multiplier sensitivity (RPS 4)",
+        &["multiplier", "SLO viol %", "idle vCPUs p50", "idle vCPUs p95"],
+    );
+    for mult in [1.2, 1.4, 1.6, 1.8] {
+        let mut mctx = ctx.clone();
+        mctx.slo_multiplier = mult;
+        let workload = mctx.workload();
+        let alloc = ResourceAllocator::new(mctx.allocator_cfg())?;
+        let mut policy =
+            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(mctx.seed)));
+        let trace = workload.trace(4.0, mctx.duration_s, mctx.seed + 4);
+        let res = simulate(sim_config(&mctx), &mut policy, trace);
+        let m = from_result("shabari", &res);
+        t.row(vec![
+            format!("{mult:.1}x"),
+            fpct(m.slo_violation_pct),
+            fnum(m.wasted_vcpus.p50, 1),
+            fnum(m.wasted_vcpus.p95, 1),
+        ]);
+    }
+    t.note("stricter SLOs violate more; median idle vCPUs stays flat (§7.5)");
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allocator::AllocatorConfig;
+    use crate::learner::xla::Backend;
+
+    fn quick_ctx() -> Ctx {
+        Ctx { duration_s: 240.0, backend: Backend::Native, ..Default::default() }
+    }
+
+    #[test]
+    fn oversubscription_extremes() {
+        // 130 userCpu must produce at least as many timeouts as 90
+        let ctx = quick_ctx();
+        let workload = ctx.workload();
+        let run = |limit: f64| {
+            let mut cfg = sim_config(&ctx);
+            cfg.sched_vcpu_limit = limit;
+            let alloc = ResourceAllocator::new(AllocatorConfig::default()).unwrap();
+            let mut policy =
+                ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(1)));
+            let trace = workload.trace(6.0, ctx.duration_s, 99);
+            let res = simulate(cfg, &mut policy, trace);
+            from_result("s", &res)
+        };
+        let m90 = run(90.0);
+        let m130 = run(130.0);
+        assert!(m130.timeout_pct >= m90.timeout_pct);
+    }
+
+    #[test]
+    fn stricter_slo_more_violations() {
+        let base = quick_ctx();
+        let run = |mult: f64| {
+            let mut ctx = base.clone();
+            ctx.slo_multiplier = mult;
+            let w = ctx.workload();
+            let alloc = ResourceAllocator::new(ctx.allocator_cfg()).unwrap();
+            let mut p = ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(1)));
+            let trace = w.trace(4.0, ctx.duration_s, 77);
+            let res = simulate(sim_config(&ctx), &mut p, trace);
+            from_result("s", &res).slo_violation_pct
+        };
+        let strict = run(1.2);
+        let relaxed = run(1.8);
+        assert!(
+            strict >= relaxed,
+            "stricter SLOs must violate at least as much: 1.2x {strict} vs 1.8x {relaxed}"
+        );
+    }
+}

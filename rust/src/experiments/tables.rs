@@ -1,0 +1,116 @@
+//! Tables 1–3: the function/input catalog, the per-type feature lists,
+//! and the number of unique container sizes Shabari creates per function.
+
+use anyhow::Result;
+
+use crate::functions::catalog::CATALOG;
+use crate::functions::inputs;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+use super::common::{run_one, sim_config, Ctx};
+
+/// Table 1: the function catalog (encoded in `functions::catalog`).
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let mut rng = Rng::new(ctx.seed);
+    let mut t = Table::new(
+        "Table 1 — serverless functions studied",
+        &["function", "input type", "#sizes", "size range", "threading", "db fetch"],
+    );
+    for spec in CATALOG {
+        let pool = inputs::pool(spec, &mut rng);
+        let lo = pool.iter().map(|i| i.size_bytes).fold(f64::INFINITY, f64::min);
+        let hi = pool.iter().map(|i| i.size_bytes).fold(0.0f64, f64::max);
+        t.row(vec![
+            spec.name.to_string(),
+            spec.input_kind.name().to_string(),
+            pool.len().to_string(),
+            format!("{} - {}", human_bytes(lo), human_bytes(hi)),
+            if spec.multi_threaded { "multi".into() } else { "single".into() },
+            if spec.fetches_from_db { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 2: features extracted per input type (Appendix A).
+pub fn table2(_ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new("Table 2 — features per input type", &["input type", "features"]);
+    let rows: &[(&str, &str)] = &[
+        ("image", "width, height, channels, x-dpi, y-dpi, filesize, raw-px"),
+        ("matrix", "rows, cols, density, filesize, raw-elems"),
+        ("video", "width, height, duration, bitrate, fps, encoding, filesize, raw-px"),
+        ("csv", "rows, cols, filesize, raw-size"),
+        ("json", "outer-object length, filesize, raw-size"),
+        ("audio", "channels, sample rate, duration, bitrate, FLAC flag, filesize, raw-dur"),
+        ("payload", "length, size, raw-length"),
+        ("file", "filesize, raw-size"),
+    ];
+    for (k, f) in rows {
+        t.row(vec![k.to_string(), f.to_string()]);
+    }
+    t.note("raw-* features are normalized linear terms added for the linear CSOAA basis");
+    t.print();
+    Ok(())
+}
+
+/// Table 3: number of unique container sizes Shabari creates per function
+/// across RPS 2–6.
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    let workload = ctx.workload();
+    let cfg = sim_config(ctx);
+    let rps_list = [2.0, 3.0, 4.0, 5.0, 6.0];
+    // run shabari per RPS, count unique sizes per function
+    let mut per_rps = Vec::new();
+    for &rps in &rps_list {
+        let (res, _) = run_one("shabari", ctx, &workload, rps, &cfg)?;
+        per_rps.push(res);
+    }
+    let mut t = Table::new(
+        "Table 3 — unique container sizes per function",
+        &["function", "rps2", "rps3", "rps4", "rps5", "rps6"],
+    );
+    for (fi, spec) in CATALOG.iter().enumerate() {
+        let mut row = vec![spec.name.to_string()];
+        for res in &per_rps {
+            row.push(res.unique_container_sizes(fi).to_string());
+        }
+        t.row(row);
+    }
+    t.note("multi-threaded functions explore more sizes as load grows (§7.3)");
+    t.print();
+    Ok(())
+}
+
+fn human_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.1}G", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1}M", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.0}K", b / 1e3)
+    } else {
+        format!("{b:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_print() {
+        let ctx = Ctx::default();
+        table1(&ctx).unwrap();
+        table2(&ctx).unwrap();
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(500.0), "500");
+        assert_eq!(human_bytes(12_000.0), "12K");
+        assert_eq!(human_bytes(4.6e6), "4.6M");
+        assert_eq!(human_bytes(2e9), "2.0G");
+    }
+}

@@ -1,0 +1,198 @@
+//! Per-input-type feature extraction (Table 2) + extraction-cost model
+//! (§7.6, Figure 14).
+//!
+//! Feature values are log-scaled where they span orders of magnitude so
+//! the linear CSMC regressors see well-conditioned inputs.
+//!
+//! Extraction-cost model, calibrated to Figure 14:
+//! * `matrix`, `csv`, `json` — the featurizer must *open and scan* the
+//!   file (row/col counts): 20–35 ms, growing mildly with size.
+//! * `image`, `video`, `audio` — metadata read without decoding the
+//!   payload (imagemagick/ffprobe header reads): ~0.1–2 ms.
+//! * `payload` — the invocation payload *is* the feature: ~0 (linpack).
+//! * `file` (opaque) — size comes from the object store listing: ~0.05 ms.
+
+use super::InputSpec;
+
+/// Log-scale + normalize to ~[0, 2]: raw `ln` values reach ~31 for
+/// multi-GB sizes, which would make the CSOAA LMS step `lr * |x|^2`
+/// unstable (needs < 2). Dividing by 16 keeps every feature O(1).
+pub const LOG_NORM: f64 = 16.0;
+
+#[inline]
+fn log1p(x: f64) -> f32 {
+    ((x.max(0.0)).ln_1p() / LOG_NORM) as f32
+}
+
+/// image: width, height, channels, x-dpi, y-dpi, filesize (Table 2).
+pub fn image(s: &InputSpec) -> (Vec<f32>, f64) {
+    let feats = vec![
+        log1p(s.width),
+        log1p(s.height),
+        s.channels as f32,
+        log1p(s.dpi),
+        log1p(s.dpi),
+        log1p(s.size_bytes),
+        // raw-scale pixels: memory footprint is linear in the bitmap size,
+        // which a log-only basis cannot express for a linear model
+        (s.width * s.height / 2.0e6) as f32,
+    ];
+    // header metadata read; no decode
+    (feats, 0.000_13)
+}
+
+/// matrix: rows, cols, density. Requires opening the file (§7.6).
+pub fn matrix(s: &InputSpec) -> (Vec<f32>, f64) {
+    let feats = vec![
+        log1p(s.rows),
+        log1p(s.cols),
+        s.density as f32,
+        log1p(s.size_bytes),
+        // raw-scale elements: footprint is linear in rows*cols
+        (s.rows * s.cols / 6.4e7) as f32,
+    ];
+    // 20–35 ms depending on size (file open + header scan)
+    let latency = 0.020 + 0.015 * (s.size_mb() / 100.0).min(1.0);
+    (feats, latency)
+}
+
+/// video: width, height, duration, bitrate, fps, encoding (Table 2).
+pub fn video(s: &InputSpec) -> (Vec<f32>, f64) {
+    let feats = vec![
+        log1p(s.width),
+        log1p(s.height),
+        log1p(s.duration_s),
+        log1p(s.bitrate),
+        log1p(s.fps),
+        s.encoding as f32,
+        log1p(s.size_bytes),
+        // raw-scale frame pixels (frame-buffer memory is linear in these)
+        (s.width * s.height / 2.0e6) as f32,
+    ];
+    // ffprobe header read
+    (feats, 0.000_8)
+}
+
+/// csv: rows, cols, filesize. Requires file scan.
+pub fn csv(s: &InputSpec) -> (Vec<f32>, f64) {
+    let feats = vec![
+        log1p(s.rows),
+        log1p(s.cols),
+        log1p(s.size_bytes),
+        (s.size_mb() / 200.0) as f32, // raw-scale size
+    ];
+    let latency = 0.018 + 0.017 * (s.size_mb() / 100.0).min(1.0);
+    (feats, latency)
+}
+
+/// json: length of outermost object, filesize.
+pub fn json_doc(s: &InputSpec) -> (Vec<f32>, f64) {
+    let feats = vec![
+        log1p(s.length),
+        log1p(s.size_bytes),
+        (s.size_mb() / 100.0) as f32, // raw-scale size
+    ];
+    let latency = 0.010 + 0.010 * (s.size_mb() / 50.0).min(1.0);
+    (feats, latency)
+}
+
+/// audio: channels, sample rate, duration, bitrate, FLAC flag.
+pub fn audio(s: &InputSpec) -> (Vec<f32>, f64) {
+    let feats = vec![
+        s.channels as f32,
+        log1p(s.sample_rate),
+        log1p(s.duration_s),
+        log1p(s.bitrate),
+        if s.flac { 1.0 } else { 0.0 },
+        log1p(s.size_bytes),
+        (s.duration_s / 900.0) as f32, // raw-scale duration
+    ];
+    (feats, 0.000_6)
+}
+
+/// payload: the invocation payload is the feature vector (linpack, qr,
+/// encrypt, sentiment): logical length + raw size. Free.
+pub fn payload(s: &InputSpec) -> (Vec<f32>, f64) {
+    (
+        vec![
+            log1p(s.length),
+            log1p(s.size_bytes),
+            (s.length / 1.0e3) as f32, // raw-scale length (batch sizes etc.)
+        ],
+        0.0,
+    )
+}
+
+/// opaque file: size only (compress).
+pub fn file(s: &InputSpec) -> (Vec<f32>, f64) {
+    (
+        vec![log1p(s.size_bytes), (s.size_bytes / 2.0e9) as f32],
+        0.000_05,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurizer::InputKind;
+
+    #[test]
+    fn matrix_slower_than_image() {
+        let mut m = InputSpec::new(InputKind::Matrix);
+        m.size_bytes = 50e6;
+        m.rows = 4000.0;
+        m.cols = 4000.0;
+        let mut i = InputSpec::new(InputKind::Image);
+        i.size_bytes = 1e6;
+        i.width = 800.0;
+        i.height = 600.0;
+        let (_, lm) = matrix(&m);
+        let (_, li) = image(&i);
+        assert!(lm > 10.0 * li, "matrix {lm} vs image {li}");
+        assert!((0.020..=0.035).contains(&lm), "fig14 range: {lm}");
+    }
+
+    #[test]
+    fn payload_is_free() {
+        let mut p = InputSpec::new(InputKind::Payload);
+        p.length = 1000.0;
+        let (_, lat) = payload(&p);
+        assert_eq!(lat, 0.0);
+    }
+
+    #[test]
+    fn log_scaling_monotone() {
+        let mut a = InputSpec::new(InputKind::File);
+        a.size_bytes = 64e6;
+        let mut b = a.clone();
+        b.size_bytes = 2e9;
+        let (fa, _) = file(&a);
+        let (fb, _) = file(&b);
+        assert!(fb[0] > fa[0]);
+    }
+
+    #[test]
+    fn video_encodes_resolution() {
+        let mut v = InputSpec::new(InputKind::Video);
+        v.width = 1280.0;
+        v.height = 720.0;
+        v.duration_s = 30.0;
+        v.bitrate = 2e6;
+        let (f, _) = video(&v);
+        assert!(f[0] > 0.0 && f[1] > 0.0);
+        let mut lo = v.clone();
+        lo.width = 320.0;
+        lo.height = 240.0;
+        let (flo, _) = video(&lo);
+        assert!(f[0] > flo[0] && f[1] > flo[1]);
+    }
+
+    #[test]
+    fn audio_flac_flag() {
+        let mut a = InputSpec::new(InputKind::Audio);
+        a.flac = true;
+        a.duration_s = 12.0;
+        let (f, _) = audio(&a);
+        assert_eq!(f[4], 1.0);
+    }
+}

@@ -1,0 +1,338 @@
+//! Input Featurizer (paper §4.3.1, Appendix A / Table 2).
+//!
+//! Extracts descriptive, performance-relevant features from each function
+//! input: *not* content understanding, just the metadata that drives
+//! execution time and resource utilization (size, resolution, rows/cols,
+//! duration, ...). Features land in a fixed-dimension padded
+//! [`FeatureVector`] (F = 16, shared with the AOT artifacts).
+//!
+//! Featurization runs in the background when an object is persisted to the
+//! datastore; it is on the critical path only for storage-triggered
+//! invocations (§7.6, Figure 14). [`FeatureCache`] models exactly that —
+//! the in-memory metadata store on the allocator node.
+
+pub mod extract;
+
+use std::collections::HashMap;
+
+use crate::runtime::FEAT_DIM;
+
+/// Input types studied in the paper (Tables 1 & 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InputKind {
+    Image,
+    Matrix,
+    Video,
+    Csv,
+    JsonDoc,
+    Audio,
+    /// Inline payloads (strings, urls, numeric parameters) — featurized
+    /// from the invocation payload itself, zero extraction cost (§7.6).
+    Payload,
+    /// Opaque binary file (compress): only size is known without reading.
+    File,
+}
+
+impl InputKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InputKind::Image => "image",
+            InputKind::Matrix => "matrix",
+            InputKind::Video => "video",
+            InputKind::Csv => "csv",
+            InputKind::JsonDoc => "json",
+            InputKind::Audio => "audio",
+            InputKind::Payload => "payload",
+            InputKind::File => "file",
+        }
+    }
+
+    /// All kinds, in a stable order (used by the per-input-type model
+    /// formulation of Figure 6).
+    pub fn all() -> &'static [InputKind] {
+        &[
+            InputKind::Image,
+            InputKind::Matrix,
+            InputKind::Video,
+            InputKind::Csv,
+            InputKind::JsonDoc,
+            InputKind::Audio,
+            InputKind::Payload,
+            InputKind::File,
+        ]
+    }
+
+    pub fn index(&self) -> usize {
+        Self::all().iter().position(|k| k == self).unwrap()
+    }
+}
+
+/// A synthetic input object. Stands in for the real blobs the paper's
+/// datastore holds; carries the metadata the real featurizer would read
+/// with ffprobe/imagemagick/file-opens (DESIGN.md §2 substitution table).
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    /// Object id in the datastore (feature-cache key). 0 = inline payload.
+    pub id: u64,
+    pub kind: InputKind,
+    pub size_bytes: f64,
+    /// matrix/csv: rows, cols; matrix: density.
+    pub rows: f64,
+    pub cols: f64,
+    pub density: f64,
+    /// image/video: pixel dimensions; image: channels + dpi.
+    pub width: f64,
+    pub height: f64,
+    pub channels: f64,
+    pub dpi: f64,
+    /// video/audio: duration, bitrate; video: fps + encoding enum;
+    /// audio: sample rate + FLAC flag.
+    pub duration_s: f64,
+    pub bitrate: f64,
+    pub fps: f64,
+    pub encoding: f64,
+    pub sample_rate: f64,
+    pub flac: bool,
+    /// payload: logical length (string len, url len, batch count).
+    pub length: f64,
+    /// Whether the object lives in the datastore (background featurization)
+    /// or arrives inline with the invocation.
+    pub in_datastore: bool,
+}
+
+impl InputSpec {
+    /// An empty spec of a given kind; builders in `functions::inputs` fill
+    /// in the relevant fields.
+    pub fn new(kind: InputKind) -> Self {
+        InputSpec {
+            id: 0,
+            kind,
+            size_bytes: 0.0,
+            rows: 0.0,
+            cols: 0.0,
+            density: 1.0,
+            width: 0.0,
+            height: 0.0,
+            channels: 3.0,
+            dpi: 72.0,
+            duration_s: 0.0,
+            bitrate: 0.0,
+            fps: 30.0,
+            encoding: 0.0,
+            sample_rate: 44_100.0,
+            flac: false,
+            length: 0.0,
+            in_datastore: true,
+        }
+    }
+
+    pub fn size_mb(&self) -> f64 {
+        self.size_bytes / (1024.0 * 1024.0)
+    }
+}
+
+/// Fixed-dimension padded feature vector fed to the CSMC learner.
+///
+/// Layout: `[bias, kind-specific features (Table 2)..., 0-padding, slo]`.
+/// The SLO occupies the last slot for vCPU models and is zeroed for memory
+/// models (§4.3.2: memory allocation does not affect performance, so the
+/// SLO is not a memory feature).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureVector(pub [f32; FEAT_DIM]);
+
+impl FeatureVector {
+    pub const SLO_SLOT: usize = FEAT_DIM - 1;
+
+    pub fn zeros() -> Self {
+        FeatureVector([0.0; FEAT_DIM])
+    }
+
+    /// Build from raw features (bias is added automatically at slot 0).
+    pub fn from_features(feats: &[f32]) -> Self {
+        assert!(
+            feats.len() <= FEAT_DIM - 2,
+            "too many features: {} > {}",
+            feats.len(),
+            FEAT_DIM - 2
+        );
+        let mut v = [0.0f32; FEAT_DIM];
+        v[0] = 1.0; // bias
+        v[1..1 + feats.len()].copy_from_slice(feats);
+        FeatureVector(v)
+    }
+
+    /// Attach a (log-scaled, normalized) SLO to the reserved slot.
+    pub fn with_slo(mut self, slo_s: f64) -> Self {
+        self.0[Self::SLO_SLOT] = ((slo_s.max(1e-3)).ln() / extract::LOG_NORM) as f32;
+        self
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+/// Result of featurization: the vector plus the extraction latency that
+/// the invocation pays *if* the features were not already cached (§7.6).
+#[derive(Debug, Clone)]
+pub struct Featurized {
+    pub vector: FeatureVector,
+    /// Seconds of extraction work (file-open types are slow, metadata-only
+    /// types are fast, payload types are free).
+    pub extract_latency_s: f64,
+}
+
+/// Extract Table-2 features for an input. Dispatches on the input kind.
+pub fn featurize(input: &InputSpec) -> Featurized {
+    let (feats, latency) = match input.kind {
+        InputKind::Image => extract::image(input),
+        InputKind::Matrix => extract::matrix(input),
+        InputKind::Video => extract::video(input),
+        InputKind::Csv => extract::csv(input),
+        InputKind::JsonDoc => extract::json_doc(input),
+        InputKind::Audio => extract::audio(input),
+        InputKind::Payload => extract::payload(input),
+        InputKind::File => extract::file(input),
+    };
+    Featurized { vector: FeatureVector::from_features(&feats), extract_latency_s: latency }
+}
+
+/// The in-memory metadata store holding featurized objects. Objects
+/// persisted to the datastore are featurized in the background; a cache
+/// hit means zero critical-path extraction latency.
+#[derive(Debug, Default)]
+pub struct FeatureCache {
+    cache: HashMap<u64, FeatureVector>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl FeatureCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Called when an object is persisted (background, off critical path).
+    pub fn persist(&mut self, input: &InputSpec) {
+        if input.id != 0 {
+            self.cache.insert(input.id, featurize(input).vector);
+        }
+    }
+
+    /// Featurize on the invocation path. Returns the vector and the
+    /// critical-path latency actually paid:
+    /// * cache hit → 0
+    /// * datastore object, storage-triggered (not yet persisted) → full
+    ///   extraction latency
+    /// * inline payload → payload conversion cost (~0)
+    pub fn featurize_invocation(&mut self, input: &InputSpec) -> (FeatureVector, f64) {
+        if input.id != 0 {
+            if let Some(v) = self.cache.get(&input.id) {
+                self.hits += 1;
+                return (v.clone(), 0.0);
+            }
+        }
+        self.misses += 1;
+        let f = featurize(input);
+        if input.id != 0 {
+            self.cache.insert(input.id, f.vector.clone());
+        }
+        (f.vector, f.extract_latency_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image_spec() -> InputSpec {
+        let mut s = InputSpec::new(InputKind::Image);
+        s.id = 42;
+        s.size_bytes = 1024.0 * 1024.0;
+        s.width = 1920.0;
+        s.height = 1080.0;
+        s
+    }
+
+    #[test]
+    fn feature_vector_layout() {
+        let v = FeatureVector::from_features(&[2.0, 3.0]);
+        assert_eq!(v.0[0], 1.0, "bias");
+        assert_eq!(v.0[1], 2.0);
+        assert_eq!(v.0[2], 3.0);
+        assert_eq!(v.0[3], 0.0, "padding");
+        assert_eq!(v.0[FeatureVector::SLO_SLOT], 0.0);
+    }
+
+    #[test]
+    fn slo_slot_set() {
+        let v = FeatureVector::from_features(&[1.0]).with_slo(2.0);
+        let expect = (2.0f64.ln() / extract::LOG_NORM) as f32;
+        assert!((v.0[FeatureVector::SLO_SLOT] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many features")]
+    fn overfull_features_panic() {
+        FeatureVector::from_features(&[0.0; FEAT_DIM]);
+    }
+
+    #[test]
+    fn featurize_all_kinds_produces_nonzero() {
+        for kind in InputKind::all() {
+            let mut s = InputSpec::new(*kind);
+            s.size_bytes = 1e6;
+            s.width = 640.0;
+            s.height = 480.0;
+            s.rows = 100.0;
+            s.cols = 100.0;
+            s.duration_s = 10.0;
+            s.bitrate = 1e6;
+            s.length = 500.0;
+            let f = featurize(&s);
+            let nonzero = f.vector.0.iter().filter(|x| **x != 0.0).count();
+            assert!(nonzero >= 2, "{kind:?} produced a near-empty vector");
+            assert!(f.extract_latency_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn cache_hit_is_free() {
+        let mut cache = FeatureCache::new();
+        let spec = image_spec();
+        cache.persist(&spec);
+        let (_, lat) = cache.featurize_invocation(&spec);
+        assert_eq!(lat, 0.0);
+        assert_eq!(cache.hits, 1);
+    }
+
+    #[test]
+    fn storage_trigger_pays_extraction() {
+        let mut cache = FeatureCache::new();
+        let spec = image_spec();
+        let (_, lat) = cache.featurize_invocation(&spec);
+        assert!(lat >= 0.0);
+        assert_eq!(cache.misses, 1);
+        // second invocation on the same object hits
+        let (_, lat2) = cache.featurize_invocation(&spec);
+        assert_eq!(lat2, 0.0);
+    }
+
+    #[test]
+    fn inline_payloads_not_cached() {
+        let mut cache = FeatureCache::new();
+        let mut s = InputSpec::new(InputKind::Payload);
+        s.length = 100.0;
+        s.id = 0;
+        cache.featurize_invocation(&s);
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,480 @@
+//! The 12 functions of Table 1 with calibrated ground-truth models.
+//!
+//! Calibration targets (paper §2, §7.1): execution times from 100s of ms
+//! to a few minutes; single-threaded set {imageprocess, sentiment,
+//! encrypt, speech2text, qr}; multi-threaded set {matmult, linpack,
+//! videoprocess, mobilenet, lrtrain, compress, resnet-50} with bounded,
+//! input-dependent parallelism; `videoprocess` resolution effect (Fig 3);
+//! `sentiment` memory-bound, `videoprocess`/`matmult`/`linpack`/`lrtrain`
+//! compute-bound (§2.3); `matmult`/`lrtrain`/`imageprocess` (and the other
+//! image functions) fetch inputs from an external database (§5).
+
+use super::{Demand, FunctionSpec};
+use crate::featurizer::{InputKind, InputSpec};
+
+/// Effective per-vCPU compute throughput used by the analytic models.
+const GFLOPS_PER_VCPU: f64 = 0.3e9;
+
+fn pixels(s: &InputSpec) -> f64 {
+    (s.width * s.height).max(1.0)
+}
+
+// ---------------------------------------------------------------------------
+// demand models
+// ---------------------------------------------------------------------------
+
+fn matmult_demand(s: &InputSpec) -> Demand {
+    let n = s.rows.max(2.0);
+    let flops = 2.0 * n * n * n;
+    Demand {
+        net_bytes: 2.0 * n * n * 8.0, // two operand matrices from the DB
+        serial_s: 0.15 + n * n * 8.0 / 2.0e9,
+        parallel_cpu_s: flops / GFLOPS_PER_VCPU,
+        maxpar: (n / 250.0).clamp(1.0, 48.0).floor(),
+        mem_gb: 0.2 + 3.0 * n * n * 8.0 / 1e9,
+    }
+}
+
+fn linpack_demand(s: &InputSpec) -> Demand {
+    // LU solve: 2n^3/3 flops. Input arrives as payload (problem size);
+    // the function generates the system locally — no featurization, no
+    // network fetch (§7.6: "linpack does not require any featurization").
+    let n = s.length.max(2.0);
+    let flops = 2.0 * n * n * n / 3.0;
+    Demand {
+        net_bytes: 0.0,
+        serial_s: 0.1 + n * n * 8.0 / 4.0e9,
+        parallel_cpu_s: flops / GFLOPS_PER_VCPU,
+        maxpar: (n / 500.0).clamp(1.0, 32.0).floor(),
+        mem_gb: 0.15 + n * n * 8.0 / 1e9,
+    }
+}
+
+fn imageprocess_demand(s: &InputSpec) -> Demand {
+    // Single-threaded filter chain over the decoded bitmap (Fig 4e: util
+    // pinned at ~1 vCPU regardless of allocation).
+    let px = pixels(s);
+    Demand {
+        net_bytes: s.size_bytes,
+        serial_s: 0.25 + px / 6.0e6 + s.size_mb() * 0.03,
+        parallel_cpu_s: 0.0,
+        maxpar: 1.0,
+        mem_gb: 0.12 + px * 3.0 * 8.0 / 1e9,
+    }
+}
+
+fn videoprocess_demand(s: &InputSpec) -> Demand {
+    // Transcode: work ∝ frames × pixels. Parallelism is inversely related
+    // to per-frame resolution (Fig 3: 1280x720 inputs use *fewer* vCPUs
+    // and *more* memory than low-res inputs; low-res streams split into
+    // many more independent GOP chunks).
+    let px = pixels(s);
+    let frames = (s.duration_s * s.fps).max(1.0);
+    Demand {
+        net_bytes: s.size_bytes,
+        serial_s: 0.3 + s.duration_s * 0.012,
+        parallel_cpu_s: frames * px / 0.12e8,
+        maxpar: (48.0 * (480.0 * 360.0) / px).clamp(6.0, 48.0).floor(),
+        mem_gb: 0.18 + px / 1.5e6,
+    }
+}
+
+fn encrypt_demand(s: &InputSpec) -> Demand {
+    // Single-threaded AES over an inline string payload.
+    let len = s.length.max(1.0);
+    Demand {
+        net_bytes: 0.0,
+        serial_s: 0.1 + len * 3.0e-5,
+        parallel_cpu_s: 0.0,
+        maxpar: 1.0,
+        mem_gb: 0.12 + len * 2.0e-9,
+    }
+}
+
+fn mobilenet_demand(s: &InputSpec) -> Demand {
+    // Lightweight CNN inference: intra-op parallelism saturates early.
+    let px = pixels(s);
+    Demand {
+        net_bytes: s.size_bytes,
+        serial_s: 0.18 + s.size_mb() * 0.01,
+        parallel_cpu_s: 1.8 + px / 0.6e6,
+        maxpar: 4.0,
+        mem_gb: 0.9 + px * 12.0 / 1e9,
+    }
+}
+
+fn sentiment_demand(s: &InputSpec) -> Demand {
+    // Single-threaded, memory-bound (§2.3): the embedding tables + batch
+    // dominate memory while compute stays on one core.
+    let batch = s.length.max(1.0);
+    Demand {
+        net_bytes: 0.0,
+        serial_s: 0.25 + batch * 1.6e-3,
+        parallel_cpu_s: 0.0,
+        maxpar: 1.0,
+        mem_gb: 0.45 + batch * 1.1e-3,
+    }
+}
+
+fn speech2text_demand(s: &InputSpec) -> Demand {
+    // Single-threaded decode: runtime scales with audio duration, not
+    // directly with file size (FLAC inputs are smaller but same length).
+    let dur = s.duration_s.max(0.5);
+    Demand {
+        net_bytes: s.size_bytes,
+        serial_s: 0.6 + dur * 0.35,
+        parallel_cpu_s: 0.0,
+        maxpar: 1.0,
+        mem_gb: 0.7 + dur * 1.2e-3,
+    }
+}
+
+fn qr_demand(s: &InputSpec) -> Demand {
+    // QR-code render for a short url payload: fastest function (100s of ms).
+    let len = s.length.max(1.0);
+    Demand {
+        net_bytes: 0.0,
+        serial_s: 0.08 + len * 2.5e-4,
+        parallel_cpu_s: 0.0,
+        maxpar: 1.0,
+        mem_gb: 0.1 + len * 1.0e-6,
+    }
+}
+
+fn lrtrain_demand(s: &InputSpec) -> Demand {
+    // Logistic-regression training epochs over a CSV training set pulled
+    // from the datastore; data-parallel across cores, saturating at 16.
+    let mb = s.size_mb().max(1.0);
+    Demand {
+        net_bytes: s.size_bytes,
+        serial_s: 0.5 + mb * 0.012,
+        parallel_cpu_s: mb * 14.0,
+        maxpar: 16.0,
+        mem_gb: 0.3 + mb / 380.0,
+    }
+}
+
+fn compress_demand(s: &InputSpec) -> Demand {
+    // Block-parallel compressor (zstd-like): parallelism grows with the
+    // number of input blocks (Fig 4a/4c: large files scale further and
+    // show higher utilization).
+    let mb = s.size_mb().max(1.0);
+    Demand {
+        net_bytes: 0.0,
+        serial_s: 0.2 + mb * 0.002,
+        parallel_cpu_s: mb * 1.1,
+        maxpar: (mb / 64.0).clamp(2.0, 32.0).floor(),
+        mem_gb: 0.25 + mb / 1900.0,
+    }
+}
+
+fn resnet50_demand(s: &InputSpec) -> Demand {
+    // Heavier CNN inference than mobilenet; scales to ~8 cores (Fig 4b/4d).
+    let px = pixels(s);
+    Demand {
+        net_bytes: s.size_bytes,
+        serial_s: 0.22 + s.size_mb() * 0.012,
+        parallel_cpu_s: 9.0 + px / 0.1e6,
+        maxpar: 8.0,
+        mem_gb: 2.1 + px * 16.0 / 1e9,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// noise models — multi-threaded functions get size-growing variability
+// (Fig 2c: compress shows ~50% spread at 2 GB); single-threaded stay tight.
+// ---------------------------------------------------------------------------
+
+fn noise_small(_s: &InputSpec) -> f64 {
+    0.04
+}
+
+fn noise_medium(_s: &InputSpec) -> f64 {
+    0.08
+}
+
+fn noise_compress(s: &InputSpec) -> f64 {
+    0.05 + 0.13 * (s.size_mb() / 2048.0).min(1.0)
+}
+
+fn noise_matrix(s: &InputSpec) -> f64 {
+    0.05 + 0.08 * (s.rows / 8000.0).min(1.0)
+}
+
+fn noise_linpack(s: &InputSpec) -> f64 {
+    0.05 + 0.08 * (s.length / 8000.0).min(1.0)
+}
+
+fn noise_video(s: &InputSpec) -> f64 {
+    0.06 + 0.06 * (s.size_mb() / 6.0).min(1.0)
+}
+
+// ---------------------------------------------------------------------------
+// catalog
+// ---------------------------------------------------------------------------
+
+/// The full Table-1 catalog.
+pub static CATALOG: &[FunctionSpec] = &[
+    FunctionSpec {
+        name: "matmult",
+        input_kind: InputKind::Matrix,
+        multi_threaded: true,
+        fetches_from_db: true,
+        demand: matmult_demand,
+        noise_sigma: noise_matrix,
+    },
+    FunctionSpec {
+        name: "linpack",
+        input_kind: InputKind::Payload,
+        multi_threaded: true,
+        fetches_from_db: false,
+        demand: linpack_demand,
+        noise_sigma: noise_linpack,
+    },
+    FunctionSpec {
+        name: "imageprocess",
+        input_kind: InputKind::Image,
+        multi_threaded: false,
+        fetches_from_db: true,
+        demand: imageprocess_demand,
+        noise_sigma: noise_small,
+    },
+    FunctionSpec {
+        name: "videoprocess",
+        input_kind: InputKind::Video,
+        multi_threaded: true,
+        fetches_from_db: true,
+        demand: videoprocess_demand,
+        noise_sigma: noise_video,
+    },
+    FunctionSpec {
+        name: "encrypt",
+        input_kind: InputKind::Payload,
+        multi_threaded: false,
+        fetches_from_db: false,
+        demand: encrypt_demand,
+        noise_sigma: noise_small,
+    },
+    FunctionSpec {
+        name: "mobilenet",
+        input_kind: InputKind::Image,
+        multi_threaded: true,
+        fetches_from_db: true,
+        demand: mobilenet_demand,
+        noise_sigma: noise_medium,
+    },
+    FunctionSpec {
+        name: "sentiment",
+        input_kind: InputKind::Payload,
+        multi_threaded: false,
+        fetches_from_db: false,
+        demand: sentiment_demand,
+        noise_sigma: noise_small,
+    },
+    FunctionSpec {
+        name: "speech2text",
+        input_kind: InputKind::Audio,
+        multi_threaded: false,
+        fetches_from_db: true,
+        demand: speech2text_demand,
+        noise_sigma: noise_small,
+    },
+    FunctionSpec {
+        name: "qr",
+        input_kind: InputKind::Payload,
+        multi_threaded: false,
+        fetches_from_db: false,
+        demand: qr_demand,
+        noise_sigma: noise_small,
+    },
+    FunctionSpec {
+        name: "lrtrain",
+        input_kind: InputKind::Csv,
+        multi_threaded: true,
+        fetches_from_db: true,
+        demand: lrtrain_demand,
+        noise_sigma: noise_medium,
+    },
+    FunctionSpec {
+        name: "compress",
+        input_kind: InputKind::File,
+        multi_threaded: true,
+        fetches_from_db: false,
+        demand: compress_demand,
+        noise_sigma: noise_compress,
+    },
+    FunctionSpec {
+        name: "resnet50",
+        input_kind: InputKind::Image,
+        multi_threaded: true,
+        fetches_from_db: true,
+        demand: resnet50_demand,
+        noise_sigma: noise_medium,
+    },
+];
+
+/// Look a function up by name.
+pub fn by_name(name: &str) -> Option<&'static FunctionSpec> {
+    CATALOG.iter().find(|f| f.name == name)
+}
+
+/// Index of a function in the catalog (stable across runs).
+pub fn index_of(name: &str) -> Option<usize> {
+    CATALOG.iter().position(|f| f.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::inputs;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn twelve_functions() {
+        assert_eq!(CATALOG.len(), 12);
+        assert!(by_name("matmult").is_some());
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn single_threaded_set_matches_paper() {
+        let st: Vec<&str> = CATALOG
+            .iter()
+            .filter(|f| !f.multi_threaded)
+            .map(|f| f.name)
+            .collect();
+        assert_eq!(st, vec!["imageprocess", "encrypt", "sentiment", "speech2text", "qr"]);
+    }
+
+    #[test]
+    fn single_threaded_have_maxpar_one() {
+        let mut rng = Rng::new(1);
+        for f in CATALOG.iter().filter(|f| !f.multi_threaded) {
+            for input in inputs::pool(f, &mut rng) {
+                let d = (f.demand)(&input);
+                assert_eq!(d.maxpar, 1.0, "{}", f.name);
+                assert_eq!(d.parallel_cpu_s, 0.0, "{}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn runtimes_in_paper_range() {
+        // §7.1: execution times span 100s of ms to a few minutes.
+        let mut rng = Rng::new(2);
+        let mut global_min = f64::INFINITY;
+        let mut global_max = 0.0f64;
+        for f in CATALOG {
+            for input in inputs::pool(f, &mut rng) {
+                let d = (f.demand)(&input);
+                // best case: 32 vCPUs, idle 10 Gb/s network
+                let t = d.ideal_exec_s(32.0, 10.0);
+                assert!(t > 0.02, "{} too fast: {t}", f.name);
+                assert!(t < 600.0, "{} too slow even at 32 vCPUs: {t}", f.name);
+                global_min = global_min.min(t);
+                global_max = global_max.max(t);
+            }
+        }
+        assert!(global_min < 0.5, "no sub-second functions: {global_min}");
+        assert!(global_max > 30.0, "no multi-ten-second functions: {global_max}");
+    }
+
+    #[test]
+    fn memory_footprints_reasonable() {
+        let mut rng = Rng::new(3);
+        for f in CATALOG {
+            for input in inputs::pool(f, &mut rng) {
+                let d = (f.demand)(&input);
+                assert!(d.mem_gb > 0.05, "{}: {}", f.name, d.mem_gb);
+                assert!(d.mem_gb < 8.0, "{}: {} GB exceeds class range", f.name, d.mem_gb);
+            }
+        }
+    }
+
+    #[test]
+    fn videoprocess_resolution_effect() {
+        // Fig 3: same-size videos — high resolution => fewer vCPUs, more
+        // memory; low resolution => more vCPUs, less memory.
+        let f = by_name("videoprocess").unwrap();
+        let mut hi = crate::featurizer::InputSpec::new(InputKind::Video);
+        hi.size_bytes = 3.8e6;
+        hi.width = 1280.0;
+        hi.height = 720.0;
+        hi.duration_s = 20.0;
+        hi.fps = 30.0;
+        hi.bitrate = 8.0 * hi.size_bytes / hi.duration_s;
+        let mut lo = hi.clone();
+        lo.width = 320.0;
+        lo.height = 240.0;
+        let dh = (f.demand)(&hi);
+        let dl = (f.demand)(&lo);
+        assert!(dl.maxpar > 2.0 * dh.maxpar, "low-res must parallelize more: {} vs {}", dl.maxpar, dh.maxpar);
+        assert!(dh.mem_gb > 1.5 * dl.mem_gb, "high-res must use more memory");
+    }
+
+    #[test]
+    fn compress_parallelism_grows_with_size() {
+        let f = by_name("compress").unwrap();
+        let mut small = crate::featurizer::InputSpec::new(InputKind::File);
+        small.size_bytes = 64e6;
+        let mut large = small.clone();
+        large.size_bytes = 2e9;
+        let ds = (f.demand)(&small);
+        let dl = (f.demand)(&large);
+        assert!(dl.maxpar > ds.maxpar);
+        // Fig 4a: more vCPUs keep helping the large input longer
+        let t8 = dl.ideal_exec_s(8.0, 10.0);
+        let t32 = dl.ideal_exec_s(32.0, 10.0);
+        assert!(t32 < 0.6 * t8);
+    }
+
+    #[test]
+    fn nonlinear_size_runtime_relationship() {
+        // Fig 2: matmult runtime grows superlinearly in matrix dim.
+        let f = by_name("matmult").unwrap();
+        let mk = |n: f64| {
+            let mut s = crate::featurizer::InputSpec::new(InputKind::Matrix);
+            s.rows = n;
+            s.cols = n;
+            s.size_bytes = n * n * 8.0;
+            (f.demand)(&s).ideal_exec_s(16.0, 10.0)
+        };
+        let t1 = mk(4000.0);
+        let t2 = mk(8000.0);
+        // 2x dimension => 8x flops; with allocation capped at 16 vCPUs the
+        // runtime must grow far faster than the 2x a linear model predicts.
+        assert!(t2 > 3.0 * t1, "superlinear expected: {t1} vs {t2}");
+    }
+
+    #[test]
+    fn sentiment_memory_bound() {
+        // §2.3: sentiment uses ~all memory but only 1 vCPU.
+        let f = by_name("sentiment").unwrap();
+        let mut s = crate::featurizer::InputSpec::new(InputKind::Payload);
+        s.length = 3000.0;
+        let d = (f.demand)(&s);
+        assert_eq!(d.maxpar, 1.0);
+        assert!(d.mem_gb > 3.0, "large batches must be memory-heavy: {}", d.mem_gb);
+    }
+
+    #[test]
+    fn noise_grows_with_size_for_compress() {
+        let f = by_name("compress").unwrap();
+        let mut small = crate::featurizer::InputSpec::new(InputKind::File);
+        small.size_bytes = 64e6;
+        let mut large = small.clone();
+        large.size_bytes = 2e9;
+        assert!((f.noise_sigma)(&large) > 2.0 * (f.noise_sigma)(&small));
+    }
+
+    #[test]
+    fn noisy_demand_deterministic_per_seed() {
+        let f = by_name("compress").unwrap();
+        let mut s = crate::featurizer::InputSpec::new(InputKind::File);
+        s.size_bytes = 5e8;
+        let d1 = f.noisy_demand(&s, &mut Rng::new(7));
+        let d2 = f.noisy_demand(&s, &mut Rng::new(7));
+        assert_eq!(d1, d2);
+    }
+}

@@ -1,0 +1,274 @@
+//! Synthetic input pools per function, mirroring Table 1 (#sizes and size
+//! ranges) and the Fig-3 `videoprocess` set-1 / set-2 resolution split.
+//!
+//! Pools are deterministic given an [`Rng`]: experiments fork a stream per
+//! function so the same `--seed` regenerates identical inputs.
+
+use crate::featurizer::{InputKind, InputSpec};
+use crate::functions::FunctionSpec;
+use crate::util::rng::Rng;
+
+/// Fresh unique datastore object ids.
+fn next_id(rng: &mut Rng) -> u64 {
+    // non-zero: 0 means "inline payload"
+    rng.next_u64() | 1
+}
+
+/// Geometric interpolation between lo and hi with `n` points.
+fn geom_steps(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 1 && hi >= lo && lo > 0.0);
+    if n == 1 {
+        return vec![lo];
+    }
+    let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+    (0..n).map(|i| lo * ratio.powi(i as i32)).collect()
+}
+
+/// Standard video resolutions used by the set-1 pool (varying) — Fig 3.
+const RESOLUTIONS: &[(f64, f64)] = &[
+    (320.0, 240.0),
+    (480.0, 360.0),
+    (640.0, 480.0),
+    (960.0, 540.0),
+    (1280.0, 720.0),
+];
+
+/// Build the input pool for a function per Table 1.
+pub fn pool(func: &FunctionSpec, rng: &mut Rng) -> Vec<InputSpec> {
+    match func.name {
+        "matmult" => matrix_pool(rng, 9, 500.0, 8000.0),
+        "linpack" => payload_pool(rng, 11, 500.0, 8000.0),
+        "imageprocess" => image_pool(rng, 14, 12.0e3, 4.6e6),
+        "videoprocess" => video_pool_set1(rng, 5),
+        "encrypt" => payload_pool(rng, 7, 500.0, 50_000.0),
+        "mobilenet" => image_pool(rng, 14, 12.0e3, 4.6e6),
+        "sentiment" => payload_pool(rng, 12, 50.0, 3000.0),
+        "speech2text" => audio_pool(rng, 8, 48.0e3, 12.0e6),
+        "qr" => payload_pool(rng, 11, 25.0, 480.0),
+        "lrtrain" => csv_pool(rng, 4, 10.0e6, 100.0e6),
+        "compress" => file_pool(rng, 7, 64.0e6, 2.0e9),
+        "resnet50" => image_pool(rng, 9, 184.0e3, 4.6e6),
+        other => panic!("unknown function '{other}'"),
+    }
+}
+
+pub fn matrix_pool(rng: &mut Rng, n: usize, lo_dim: f64, hi_dim: f64) -> Vec<InputSpec> {
+    geom_steps(lo_dim, hi_dim, n)
+        .into_iter()
+        .map(|dim| {
+            let dim = dim.round();
+            let mut s = InputSpec::new(InputKind::Matrix);
+            s.id = next_id(rng);
+            s.rows = dim;
+            s.cols = dim;
+            s.density = rng.range_f64(0.6, 1.0);
+            s.size_bytes = dim * dim * 8.0;
+            s
+        })
+        .collect()
+}
+
+pub fn payload_pool(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<InputSpec> {
+    geom_steps(lo, hi, n)
+        .into_iter()
+        .map(|len| {
+            let mut s = InputSpec::new(InputKind::Payload);
+            s.id = 0; // inline — no datastore object
+            s.length = len.round();
+            s.size_bytes = len.round();
+            s.in_datastore = false;
+            let _ = rng.next_u64(); // keep stream alignment with other pools
+            s
+        })
+        .collect()
+}
+
+pub fn image_pool(rng: &mut Rng, n: usize, lo_bytes: f64, hi_bytes: f64) -> Vec<InputSpec> {
+    geom_steps(lo_bytes, hi_bytes, n)
+        .into_iter()
+        .map(|bytes| {
+            let mut s = InputSpec::new(InputKind::Image);
+            s.id = next_id(rng);
+            s.size_bytes = bytes;
+            // JPEG-ish: ~0.5–2.5 bytes per pixel depending on quality
+            let bpp = rng.range_f64(0.5, 2.5);
+            let px = (bytes / bpp).max(64.0 * 64.0);
+            let aspect = rng.range_f64(0.6, 1.8);
+            s.width = (px * aspect).sqrt().round();
+            s.height = (px / aspect).sqrt().round();
+            s.channels = 3.0;
+            s.dpi = *rng.choose(&[72.0, 96.0, 300.0]);
+            s
+        })
+        .collect()
+}
+
+/// Fig-3 set-1: sizes span Table 1's 2.2–6.1 MB with *varying* resolution
+/// (the property Cypress's size-only view misses).
+pub fn video_pool_set1(rng: &mut Rng, n: usize) -> Vec<InputSpec> {
+    geom_steps(2.2e6, 6.1e6, n)
+        .into_iter()
+        .enumerate()
+        .map(|(i, bytes)| {
+            // deliberately decorrelate resolution from size
+            let (w, h) = RESOLUTIONS[(i * 3 + 1) % RESOLUTIONS.len()];
+            make_video(rng, bytes, w, h)
+        })
+        .collect()
+}
+
+/// Fig-3 set-2: same size range, *constant* 1280x720 resolution.
+pub fn video_pool_set2(rng: &mut Rng, n: usize) -> Vec<InputSpec> {
+    geom_steps(2.2e6, 6.1e6, n)
+        .into_iter()
+        .map(|bytes| make_video(rng, bytes, 1280.0, 720.0))
+        .collect()
+}
+
+fn make_video(rng: &mut Rng, bytes: f64, w: f64, h: f64) -> InputSpec {
+    let mut s = InputSpec::new(InputKind::Video);
+    s.id = next_id(rng);
+    s.size_bytes = bytes;
+    s.width = w;
+    s.height = h;
+    s.fps = *rng.choose(&[24.0, 30.0]);
+    // bitrate scales with resolution; duration follows from size
+    s.bitrate = 0.07 * w * h * 1.5; // bits/s, H.264-ish rule of thumb
+    s.duration_s = (bytes * 8.0 / s.bitrate).clamp(5.0, 180.0);
+    s.encoding = *rng.choose(&[0.0, 1.0]); // mp4 / mpeg4
+    s
+}
+
+pub fn audio_pool(rng: &mut Rng, n: usize, lo_bytes: f64, hi_bytes: f64) -> Vec<InputSpec> {
+    geom_steps(lo_bytes, hi_bytes, n)
+        .into_iter()
+        .map(|bytes| {
+            let mut s = InputSpec::new(InputKind::Audio);
+            s.id = next_id(rng);
+            s.size_bytes = bytes;
+            s.flac = rng.chance(0.3);
+            s.channels = *rng.choose(&[1.0, 2.0]);
+            s.sample_rate = *rng.choose(&[16_000.0, 44_100.0]);
+            // FLAC ~4x denser than wav-ish PCM at same duration
+            let bits_per_s = if s.flac { 320_000.0 } else { 128_000.0 };
+            s.bitrate = bits_per_s;
+            s.duration_s = (bytes * 8.0 / bits_per_s).clamp(1.0, 900.0);
+            s
+        })
+        .collect()
+}
+
+pub fn csv_pool(rng: &mut Rng, n: usize, lo_bytes: f64, hi_bytes: f64) -> Vec<InputSpec> {
+    geom_steps(lo_bytes, hi_bytes, n)
+        .into_iter()
+        .map(|bytes| {
+            let mut s = InputSpec::new(InputKind::Csv);
+            s.id = next_id(rng);
+            s.size_bytes = bytes;
+            s.cols = rng.range_f64(8.0, 64.0).round();
+            // ~10 bytes per numeric cell
+            s.rows = (bytes / (s.cols * 10.0)).round();
+            s
+        })
+        .collect()
+}
+
+pub fn file_pool(rng: &mut Rng, n: usize, lo_bytes: f64, hi_bytes: f64) -> Vec<InputSpec> {
+    geom_steps(lo_bytes, hi_bytes, n)
+        .into_iter()
+        .map(|bytes| {
+            let mut s = InputSpec::new(InputKind::File);
+            s.id = next_id(rng);
+            s.size_bytes = bytes;
+            s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::catalog::CATALOG;
+
+    #[test]
+    fn pool_sizes_match_table1() {
+        let expect: &[(&str, usize)] = &[
+            ("matmult", 9),
+            ("linpack", 11),
+            ("imageprocess", 14),
+            ("videoprocess", 5),
+            ("encrypt", 7),
+            ("mobilenet", 14),
+            ("sentiment", 12),
+            ("speech2text", 8),
+            ("qr", 11),
+            ("lrtrain", 4),
+            ("compress", 7),
+            ("resnet50", 9),
+        ];
+        for (name, n) in expect {
+            let f = crate::functions::catalog::by_name(name).unwrap();
+            let mut rng = Rng::new(1);
+            assert_eq!(pool(f, &mut rng).len(), *n, "{name}");
+        }
+    }
+
+    #[test]
+    fn pools_deterministic() {
+        for f in CATALOG {
+            let a = pool(f, &mut Rng::new(9));
+            let b = pool(f, &mut Rng::new(9));
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id, "{}", f.name);
+                assert_eq!(x.size_bytes, y.size_bytes, "{}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_within_table1_ranges() {
+        let f = crate::functions::catalog::by_name("compress").unwrap();
+        let p = pool(f, &mut Rng::new(3));
+        assert!(p.iter().all(|s| (64.0e6..=2.01e9).contains(&s.size_bytes)));
+        let f = crate::functions::catalog::by_name("speech2text").unwrap();
+        let p = pool(f, &mut Rng::new(3));
+        assert!(p.iter().all(|s| (48.0e3..=12.1e6).contains(&s.size_bytes)));
+    }
+
+    #[test]
+    fn geom_steps_cover_range() {
+        let v = geom_steps(1.0, 100.0, 3);
+        assert!((v[0] - 1.0).abs() < 1e-9);
+        assert!((v[1] - 10.0).abs() < 1e-6);
+        assert!((v[2] - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn set1_resolutions_vary_set2_constant() {
+        let mut rng = Rng::new(4);
+        let s1 = video_pool_set1(&mut rng, 5);
+        let s2 = video_pool_set2(&mut rng, 5);
+        let distinct1: std::collections::BTreeSet<u64> =
+            s1.iter().map(|v| (v.width * v.height) as u64).collect();
+        assert!(distinct1.len() >= 3, "set-1 must vary resolution");
+        assert!(s2.iter().all(|v| v.width == 1280.0 && v.height == 720.0));
+    }
+
+    #[test]
+    fn payload_inputs_are_inline() {
+        let f = crate::functions::catalog::by_name("qr").unwrap();
+        for s in pool(f, &mut Rng::new(5)) {
+            assert_eq!(s.id, 0);
+            assert!(!s.in_datastore);
+        }
+    }
+
+    #[test]
+    fn datastore_inputs_have_ids() {
+        let f = crate::functions::catalog::by_name("imageprocess").unwrap();
+        let p = pool(f, &mut Rng::new(6));
+        assert!(p.iter().all(|s| s.id != 0));
+        let ids: std::collections::BTreeSet<u64> = p.iter().map(|s| s.id).collect();
+        assert_eq!(ids.len(), p.len(), "ids must be unique");
+    }
+}

@@ -1,0 +1,189 @@
+//! The serverless function catalog (paper Table 1) and the ground-truth
+//! performance models the simulator executes against.
+//!
+//! The paper measures 12 real functions (~8K profiling runs); we encode
+//! the *structure* those measurements revealed (§2, DESIGN.md §2):
+//!
+//! * positive but **non-linear** runtime growth with input size (Fig 2);
+//! * input properties beyond size matter — `videoprocess` resolution
+//!   drives vCPU *down* and memory *up* (Fig 3);
+//! * single- vs multi-threaded split with **bounded parallelism** —
+//!   extra vCPUs help `compress`/`resnet-50` until a plateau, never help
+//!   `imageprocess`/`sentiment`/`encrypt`/`speech2text`/`qr` (Fig 4);
+//! * decoupled resource natures: `videoprocess` compute-heavy,
+//!   `sentiment` memory-bound (§2.3).
+
+pub mod catalog;
+pub mod inputs;
+
+use crate::featurizer::{InputKind, InputSpec};
+use crate::util::rng::Rng;
+
+/// The resource demand of one invocation, before runtime noise.
+///
+/// Execution proceeds in phases (see `simulator::engine`):
+/// network fetch (bandwidth-shared) → serial compute (1 vCPU) →
+/// parallel compute (`min(alloc, maxpar)` vCPUs, processor-shared).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Demand {
+    /// Bytes fetched from the external datastore before compute starts.
+    pub net_bytes: f64,
+    /// Serial compute, CPU-seconds on one vCPU.
+    pub serial_s: f64,
+    /// Parallelizable compute, total CPU-seconds.
+    pub parallel_cpu_s: f64,
+    /// Maximum exploitable parallelism (bounded; ≥ 1).
+    pub maxpar: f64,
+    /// Peak memory footprint, GB (allocation-independent, §4.3.2).
+    pub mem_gb: f64,
+}
+
+impl Demand {
+    /// Ideal (contention-free) execution time with `alloc` vCPUs on a
+    /// worker with `net_gbps` of free network bandwidth.
+    pub fn ideal_exec_s(&self, alloc_vcpus: f64, net_gbps: f64) -> f64 {
+        let net_s = if self.net_bytes > 0.0 {
+            self.net_bytes * 8.0 / (net_gbps * 1e9)
+        } else {
+            0.0
+        };
+        let par = self.effective_parallelism(alloc_vcpus);
+        net_s + self.serial_s + self.parallel_cpu_s / par
+    }
+
+    /// vCPUs actually exploited during the parallel phase.
+    pub fn effective_parallelism(&self, alloc_vcpus: f64) -> f64 {
+        alloc_vcpus.max(1.0).min(self.maxpar.max(1.0))
+    }
+
+    /// Total CPU-seconds consumed (serial + parallel work).
+    pub fn total_cpu_s(&self) -> f64 {
+        self.serial_s + self.parallel_cpu_s
+    }
+
+    /// Average vCPUs used over an ideal run (the cgroup-style number the
+    /// worker daemon reports).
+    pub fn avg_vcpus_used(&self, alloc_vcpus: f64, net_gbps: f64) -> f64 {
+        let t = self.ideal_exec_s(alloc_vcpus, net_gbps);
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.total_cpu_s() / t
+        }
+    }
+
+    /// Peak vCPUs used (parallel-phase draw).
+    pub fn peak_vcpus_used(&self, alloc_vcpus: f64) -> f64 {
+        if self.parallel_cpu_s > 0.0 {
+            self.effective_parallelism(alloc_vcpus)
+        } else {
+            1.0f64.min(alloc_vcpus.max(1.0))
+        }
+    }
+}
+
+/// Static description of one catalog function.
+pub struct FunctionSpec {
+    pub name: &'static str,
+    pub input_kind: InputKind,
+    /// Whether the function can exploit > 1 vCPU (paper §2.2 split).
+    pub multi_threaded: bool,
+    /// Whether inputs are fetched from an external database (network
+    /// bandwidth matters — the Hermod-packing failure mode, §5).
+    pub fetches_from_db: bool,
+    /// Ground-truth demand model.
+    pub demand: fn(&InputSpec) -> Demand,
+    /// Multiplicative lognormal runtime-noise σ (grows with input size
+    /// for multi-threaded functions — Fig 2c).
+    pub noise_sigma: fn(&InputSpec) -> f64,
+}
+
+impl std::fmt::Debug for FunctionSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FunctionSpec")
+            .field("name", &self.name)
+            .field("input_kind", &self.input_kind)
+            .field("multi_threaded", &self.multi_threaded)
+            .finish()
+    }
+}
+
+impl FunctionSpec {
+    /// Demand with runtime noise applied (deterministic given the rng).
+    pub fn noisy_demand(&self, input: &InputSpec, rng: &mut Rng) -> Demand {
+        let base = (self.demand)(input);
+        let sigma = (self.noise_sigma)(input);
+        if sigma <= 0.0 {
+            return base;
+        }
+        // One multiplicative factor for compute phases (system-level
+        // variability affects the whole run), a smaller one for memory.
+        let f = rng.lognormal(0.0, sigma);
+        let fm = rng.lognormal(0.0, sigma * 0.25);
+        Demand {
+            net_bytes: base.net_bytes,
+            serial_s: base.serial_s * f,
+            parallel_cpu_s: base.parallel_cpu_s * f,
+            maxpar: base.maxpar,
+            mem_gb: base.mem_gb * fm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand() -> Demand {
+        Demand {
+            net_bytes: 1e9, // 1 GB
+            serial_s: 1.0,
+            parallel_cpu_s: 30.0,
+            maxpar: 10.0,
+            mem_gb: 1.0,
+        }
+    }
+
+    #[test]
+    fn ideal_exec_components() {
+        let d = demand();
+        // 1 GB over 10 Gb/s = 0.8 s; serial 1 s; parallel 30/10 = 3 s
+        let t = d.ideal_exec_s(16.0, 10.0);
+        assert!((t - (0.8 + 1.0 + 3.0)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn parallelism_bounded() {
+        let d = demand();
+        assert_eq!(d.effective_parallelism(4.0), 4.0);
+        assert_eq!(d.effective_parallelism(64.0), 10.0);
+        assert_eq!(d.effective_parallelism(0.0), 1.0);
+    }
+
+    #[test]
+    fn more_vcpus_never_slower() {
+        let d = demand();
+        let mut prev = f64::INFINITY;
+        for k in 1..=32 {
+            let t = d.ideal_exec_s(k as f64, 10.0);
+            assert!(t <= prev + 1e-12);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn avg_usage_below_alloc() {
+        let d = demand();
+        for k in [1.0, 4.0, 16.0] {
+            let used = d.avg_vcpus_used(k, 10.0);
+            assert!(used <= k + 1e-9, "used {used} alloc {k}");
+            assert!(used > 0.0);
+        }
+    }
+
+    #[test]
+    fn single_threaded_peak_is_one() {
+        let d = Demand { net_bytes: 0.0, serial_s: 2.0, parallel_cpu_s: 0.0, maxpar: 1.0, mem_gb: 0.3 };
+        assert_eq!(d.peak_vcpus_used(8.0), 1.0);
+    }
+}

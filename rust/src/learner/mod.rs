@@ -1,0 +1,109 @@
+//! The online cost-sensitive multi-class (CSMC / VW-CSOAA) learner.
+//!
+//! One linear regressor per class predicts the *cost* of choosing that
+//! class; prediction = argmin of the per-class scores. The allocator keeps
+//! one vCPU model and one memory model per function (§4.2's winning
+//! formulation), each over the padded F=16 feature vector.
+//!
+//! Two interchangeable backends implement the same math:
+//! * [`NativeCsmc`] — pure rust mirror (oracle for tests, fast path for
+//!   large experiment sweeps);
+//! * [`xla::XlaCsmc`] — the production path: executes the AOT-compiled
+//!   Pallas/JAX HLO artifacts through PJRT (`runtime::XlaEngine`).
+//!
+//! Parity between the two is asserted by `rust/tests/test_parity.rs`.
+
+pub mod native;
+pub mod xla;
+
+use crate::runtime::{FEAT_DIM, NUM_CLASSES};
+
+/// Default CSOAA learning rate (mirrors python/compile/model.py).
+pub const DEFAULT_LR: f32 = 0.05;
+
+/// A cost-sensitive multi-class model: predict per-class costs for a
+/// feature vector; update from an observed cost vector.
+pub trait CsmcModel {
+    /// Per-class predicted costs (length [`NUM_CLASSES`]).
+    fn scores(&mut self, x: &[f32; FEAT_DIM]) -> [f32; NUM_CLASSES];
+
+    /// One online update toward the observed `costs`.
+    fn update(&mut self, x: &[f32; FEAT_DIM], costs: &[f32; NUM_CLASSES]);
+
+    /// Number of updates absorbed so far (confidence gating input).
+    fn updates(&self) -> u64;
+
+    /// Predicted best class = argmin of scores.
+    fn predict(&mut self, x: &[f32; FEAT_DIM]) -> usize {
+        let s = self.scores(x);
+        argmin(&s)
+    }
+}
+
+/// Index of the minimum value (first on ties).
+pub fn argmin(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Build a CSOAA cost vector with minimum cost 1 at `target` and linearly
+/// growing costs away from it; classes *below* the target (underprediction
+/// of resources) are penalized `under_penalty`× more steeply than classes
+/// above (§4.3.1: "underpredictions being penalized further").
+pub fn cost_vector(target: usize, under_penalty: f32) -> [f32; NUM_CLASSES] {
+    let mut c = [0f32; NUM_CLASSES];
+    for (i, ci) in c.iter_mut().enumerate() {
+        let d = i as f32 - target as f32;
+        *ci = if d >= 0.0 {
+            1.0 + d
+        } else {
+            1.0 + under_penalty * (-d)
+        };
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmin_basics() {
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), 1);
+        assert_eq!(argmin(&[1.0, 1.0]), 0, "first wins ties");
+        assert_eq!(argmin(&[5.0]), 0);
+    }
+
+    #[test]
+    fn cost_vector_shape() {
+        let c = cost_vector(10, 2.0);
+        assert_eq!(c[10], 1.0, "target has minimum cost 1");
+        assert_eq!(c[11], 2.0, "overprediction grows by 1/class");
+        assert_eq!(c[12], 3.0);
+        assert_eq!(c[9], 3.0, "underprediction grows 2x steeper");
+        assert_eq!(c[8], 5.0);
+        // argmin recovers the target
+        assert_eq!(argmin(&c), 10);
+    }
+
+    #[test]
+    fn cost_vector_edges() {
+        let c0 = cost_vector(0, 2.0);
+        assert_eq!(argmin(&c0), 0);
+        let clast = cost_vector(NUM_CLASSES - 1, 2.0);
+        assert_eq!(argmin(&clast), NUM_CLASSES - 1);
+    }
+
+    #[test]
+    fn costs_all_at_least_one() {
+        for t in [0, 7, 47] {
+            let c = cost_vector(t, 3.0);
+            assert!(c.iter().all(|v| *v >= 1.0));
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Pure-rust CSOAA backend — a bit-faithful mirror of the L1 Pallas
+//! kernels (`python/compile/kernels/csmc.py`): per-class linear scoring
+//! and the rank-1 SGD update, in the same operation order and f32
+//! precision. Serves as the oracle for XLA parity tests and as the fast
+//! path for large experiment sweeps (`--native`).
+
+use super::CsmcModel;
+use crate::runtime::{FEAT_DIM, NUM_CLASSES};
+
+/// Weights `W[C][F]` + update counter.
+#[derive(Debug, Clone)]
+pub struct NativeCsmc {
+    pub w: Vec<f32>, // row-major [NUM_CLASSES * FEAT_DIM]
+    pub lr: f32,
+    updates: u64,
+}
+
+/// Normalized-LMS step: `lr / max(1, |x|^2)` (shared by every backend so
+/// the XLA and native paths stay bit-comparable).
+pub fn effective_lr(lr: f32, x: &[f32]) -> f32 {
+    let norm_sq: f32 = x.iter().map(|v| v * v).sum();
+    lr / norm_sq.max(1.0)
+}
+
+impl NativeCsmc {
+    pub fn new(lr: f32) -> Self {
+        NativeCsmc { w: vec![0.0; NUM_CLASSES * FEAT_DIM], lr, updates: 0 }
+    }
+
+    /// Raw weight row for a class (tests/inspection).
+    pub fn row(&self, class: usize) -> &[f32] {
+        &self.w[class * FEAT_DIM..(class + 1) * FEAT_DIM]
+    }
+}
+
+impl CsmcModel for NativeCsmc {
+    fn scores(&mut self, x: &[f32; FEAT_DIM]) -> [f32; NUM_CLASSES] {
+        let mut out = [0f32; NUM_CLASSES];
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &self.w[i * FEAT_DIM..(i + 1) * FEAT_DIM];
+            // same left-to-right accumulation order as the jnp matvec
+            let mut acc = 0f32;
+            for j in 0..FEAT_DIM {
+                acc += row[j] * x[j];
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    fn update(&mut self, x: &[f32; FEAT_DIM], costs: &[f32; NUM_CLASSES]) {
+        // W' = W - lr_eff * outer(W@x - costs, x), with the VW-style
+        // normalized step lr_eff = lr / max(1, |x|^2) so convergence is
+        // unconditionally stable for any feature scaling.
+        let lr_eff = effective_lr(self.lr, x);
+        let scores = self.scores(x);
+        for i in 0..NUM_CLASSES {
+            let err = scores[i] - costs[i];
+            let g = lr_eff * err;
+            let row = &mut self.w[i * FEAT_DIM..(i + 1) * FEAT_DIM];
+            for j in 0..FEAT_DIM {
+                row[j] -= g * x[j];
+            }
+        }
+        self.updates += 1;
+    }
+
+    fn updates(&self) -> u64 {
+        self.updates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::{argmin, cost_vector};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_x(rng: &mut Rng) -> [f32; FEAT_DIM] {
+        let mut x = [0f32; FEAT_DIM];
+        for v in x.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0) as f32;
+        }
+        x[0] = 1.0; // bias
+        x
+    }
+
+    #[test]
+    fn zero_weights_score_zero() {
+        let mut m = NativeCsmc::new(0.05);
+        let x = [0.5f32; FEAT_DIM];
+        assert!(m.scores(&x).iter().all(|s| *s == 0.0));
+    }
+
+    #[test]
+    fn learns_fixed_target() {
+        // Repeatedly presenting cost vectors for class 12 must make the
+        // model predict 12 for that input.
+        let mut m = NativeCsmc::new(0.1);
+        let mut rng = Rng::new(5);
+        let x = rand_x(&mut rng);
+        let costs = cost_vector(12, 2.0);
+        for _ in 0..200 {
+            m.update(&x, &costs);
+        }
+        assert_eq!(m.predict(&x), 12);
+        assert_eq!(m.updates(), 200);
+    }
+
+    #[test]
+    fn learns_input_dependent_targets() {
+        // Two distinguishable inputs with different target classes.
+        let mut m = NativeCsmc::new(0.08);
+        let mut a = [0f32; FEAT_DIM];
+        a[0] = 1.0;
+        a[1] = 1.0;
+        let mut b = [0f32; FEAT_DIM];
+        b[0] = 1.0;
+        b[2] = 1.0;
+        let ca = cost_vector(4, 2.0);
+        let cb = cost_vector(30, 2.0);
+        for _ in 0..400 {
+            m.update(&a, &ca);
+            m.update(&b, &cb);
+        }
+        assert_eq!(m.predict(&a), 4);
+        assert_eq!(m.predict(&b), 30);
+    }
+
+    #[test]
+    fn update_moves_scores_toward_costs() {
+        prop::check(11, 30, |rng| {
+            let mut m = NativeCsmc::new(0.05);
+            // random warm-up so weights are nonzero
+            for _ in 0..5 {
+                let x = rand_x(rng);
+                let c = cost_vector(rng.below(NUM_CLASSES), 2.0);
+                m.update(&x, &c);
+            }
+            let x = rand_x(rng);
+            let costs = cost_vector(rng.below(NUM_CLASSES), 2.0);
+            let before = m.scores(&x);
+            m.update(&x, &costs);
+            let after = m.scores(&x);
+            let err = |s: &[f32; NUM_CLASSES]| -> f64 {
+                s.iter()
+                    .zip(costs.iter())
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum()
+            };
+            assert!(
+                err(&after) <= err(&before) + 1e-6,
+                "SGD step must not increase squared error"
+            );
+        });
+    }
+
+    #[test]
+    fn argmin_stable_under_scaling() {
+        let mut m = NativeCsmc::new(0.1);
+        let mut rng = Rng::new(77);
+        let x = rand_x(&mut rng);
+        for _ in 0..100 {
+            m.update(&x, &cost_vector(20, 2.0));
+        }
+        let s = m.scores(&x);
+        assert_eq!(argmin(&s), 20);
+    }
+
+    #[test]
+    fn weights_finite_under_stress() {
+        let mut m = NativeCsmc::new(0.05);
+        let mut rng = Rng::new(13);
+        for _ in 0..5000 {
+            let x = rand_x(&mut rng);
+            let c = cost_vector(rng.below(NUM_CLASSES), 3.0);
+            m.update(&x, &c);
+        }
+        assert!(m.w.iter().all(|v| v.is_finite()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic-shape variant (used by the Fig-6 formulation ablation, where the
+// one-hot design needs a wide feature vector that exceeds the AOT F=16).
+// ---------------------------------------------------------------------------
+
+/// CSOAA with runtime-chosen (classes, features) dimensions. Same math as
+/// [`NativeCsmc`] but Vec-based; exists only for design-exploration
+/// experiments — the production path is the fixed-shape AOT artifact.
+#[derive(Debug, Clone)]
+pub struct DynCsmc {
+    pub c: usize,
+    pub f: usize,
+    pub w: Vec<f32>,
+    pub lr: f32,
+    updates: u64,
+}
+
+impl DynCsmc {
+    pub fn new(c: usize, f: usize, lr: f32) -> Self {
+        DynCsmc { c, f, w: vec![0.0; c * f], lr, updates: 0 }
+    }
+
+    pub fn scores_dyn(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.f);
+        let mut out = vec![0f32; self.c];
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &self.w[i * self.f..(i + 1) * self.f];
+            let mut acc = 0f32;
+            for j in 0..self.f {
+                acc += row[j] * x[j];
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    pub fn update_dyn(&mut self, x: &[f32], costs: &[f32]) {
+        assert_eq!(costs.len(), self.c);
+        let lr_eff = effective_lr(self.lr, x);
+        let scores = self.scores_dyn(x);
+        for i in 0..self.c {
+            let g = lr_eff * (scores[i] - costs[i]);
+            let row = &mut self.w[i * self.f..(i + 1) * self.f];
+            for j in 0..self.f {
+                row[j] -= g * x[j];
+            }
+        }
+        self.updates += 1;
+    }
+
+    pub fn predict_dyn(&self, x: &[f32]) -> usize {
+        super::argmin(&self.scores_dyn(x))
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+}
+
+#[cfg(test)]
+mod dyn_tests {
+    use super::*;
+    use crate::learner::cost_vector;
+
+    #[test]
+    fn dyn_matches_fixed_shape_math() {
+        use crate::learner::CsmcModel;
+        use crate::runtime::{FEAT_DIM, NUM_CLASSES};
+        let mut fixed = NativeCsmc::new(0.07);
+        let mut dynm = DynCsmc::new(NUM_CLASSES, FEAT_DIM, 0.07);
+        let mut x = [0f32; FEAT_DIM];
+        for (j, v) in x.iter_mut().enumerate() {
+            *v = (j as f32 * 0.1).sin();
+        }
+        let costs = cost_vector(17, 2.0);
+        for _ in 0..50 {
+            fixed.update(&x, &costs);
+            dynm.update_dyn(&x, &costs);
+        }
+        for (a, b) in fixed.w.iter().zip(dynm.w.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(fixed.predict(&x), dynm.predict_dyn(&x));
+    }
+
+    #[test]
+    fn dyn_wide_learns() {
+        let f = 16 * 12 + 1;
+        let mut m = DynCsmc::new(48, f, 0.1);
+        let mut x = vec![0f32; f];
+        x[0] = 1.0;
+        x[5 * 16 + 3] = 0.7; // "function 5" block
+        let costs: Vec<f32> = cost_vector(9, 2.0).to_vec();
+        for _ in 0..300 {
+            m.update_dyn(&x, &costs);
+        }
+        assert_eq!(m.predict_dyn(&x), 9);
+    }
+}

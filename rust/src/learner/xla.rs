@@ -1,0 +1,162 @@
+//! XLA/PJRT-backed CSOAA backend — the production path.
+//!
+//! Each model owns its weight buffer on the host (tiny: 48x16 f32) and
+//! executes the AOT-compiled `csmc_predict` / `csmc_update` HLO through a
+//! shared [`XlaEngine`]. The engine is reference-counted: the allocator
+//! creates one per process and hands clones of the `Rc` to every
+//! per-function model (the coordinator is single-threaded on the decision
+//! path, matching the paper's single shim-layer process).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::CsmcModel;
+use crate::runtime::{XlaEngine, FEAT_DIM, NUM_CLASSES};
+
+/// A CSOAA model whose math runs in XLA.
+///
+/// §Perf: input literals (weights, features, costs, lr) are cached and
+/// mutated in place via `copy_raw_from`, avoiding four literal
+/// allocations per call on the request path.
+pub struct XlaCsmc {
+    engine: Rc<XlaEngine>,
+    w: Vec<f32>,
+    lr: f32,
+    updates: u64,
+    w_lit: xla::Literal,
+    w_dirty: bool,
+    x_lit: xla::Literal,
+    c_lit: xla::Literal,
+    lr_lit: xla::Literal,
+}
+
+impl XlaCsmc {
+    pub fn new(engine: Rc<XlaEngine>, lr: f32) -> Self {
+        let w = vec![0.0; NUM_CLASSES * FEAT_DIM];
+        let w_lit = XlaEngine::make_literal(&w, &Self::dims_w()).expect("w literal");
+        let x_lit = XlaEngine::make_literal(&[0.0; FEAT_DIM], &[FEAT_DIM as i64]).expect("x literal");
+        let c_lit =
+            XlaEngine::make_literal(&[0.0; NUM_CLASSES], &[NUM_CLASSES as i64]).expect("c literal");
+        let lr_lit = XlaEngine::make_literal(&[0.0], &[]).expect("lr literal");
+        XlaCsmc { engine, w, lr, updates: 0, w_lit, w_dirty: false, x_lit, c_lit, lr_lit }
+    }
+
+    fn sync_w(&mut self) {
+        if self.w_dirty {
+            self.w_lit.copy_raw_from(&self.w).expect("w copy");
+            self.w_dirty = false;
+        }
+    }
+
+    fn dims_w() -> [i64; 2] {
+        [NUM_CLASSES as i64, FEAT_DIM as i64]
+    }
+
+    fn exec_scores(&mut self, x: &[f32; FEAT_DIM]) -> Result<Vec<f32>> {
+        self.sync_w();
+        self.x_lit.copy_raw_from(x)?;
+        let out = self
+            .engine
+            .execute_lits("csmc_predict", &[&self.w_lit, &self.x_lit])?;
+        Ok(out.into_iter().next().expect("tuple element"))
+    }
+
+    fn exec_update(&mut self, x: &[f32; FEAT_DIM], costs: &[f32; NUM_CLASSES]) -> Result<()> {
+        // Same normalized-LMS step as the native mirror; the AOT kernel
+        // takes lr as a runtime scalar, so no recompilation is needed.
+        let lr_eff = super::native::effective_lr(self.lr, x);
+        self.sync_w();
+        self.x_lit.copy_raw_from(x)?;
+        self.c_lit.copy_raw_from(costs)?;
+        self.lr_lit.copy_raw_from(&[lr_eff])?;
+        let out = self.engine.execute_lits(
+            "csmc_update",
+            &[&self.w_lit, &self.x_lit, &self.c_lit, &self.lr_lit],
+        )?;
+        self.w = out.into_iter().next().expect("tuple element");
+        self.w_dirty = true;
+        Ok(())
+    }
+
+    /// Batched scoring through `csmc_predict_batch` (bench/replay path).
+    pub fn scores_batch(&mut self, xs: &[f32]) -> Result<Vec<f32>> {
+        self.sync_w();
+        let b = xs.len() / FEAT_DIM;
+        let out = self.engine.execute_f32(
+            "csmc_predict_batch",
+            &[
+                (&self.w, &Self::dims_w()),
+                (xs, &[b as i64, FEAT_DIM as i64]),
+            ],
+        )?;
+        Ok(out.into_iter().next().expect("tuple element"))
+    }
+
+    /// Direct weight access (parity tests).
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+}
+
+impl CsmcModel for XlaCsmc {
+    fn scores(&mut self, x: &[f32; FEAT_DIM]) -> [f32; NUM_CLASSES] {
+        let v = self
+            .exec_scores(x)
+            .expect("XLA predict failed (artifacts missing? run `make artifacts`)");
+        let mut out = [0f32; NUM_CLASSES];
+        out.copy_from_slice(&v);
+        out
+    }
+
+    fn update(&mut self, x: &[f32; FEAT_DIM], costs: &[f32; NUM_CLASSES]) {
+        self.exec_update(x, costs)
+            .expect("XLA update failed (artifacts missing? run `make artifacts`)");
+        self.updates += 1;
+    }
+
+    fn updates(&self) -> u64 {
+        self.updates
+    }
+}
+
+/// Backend selector used by the allocator & CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT Pallas/JAX artifacts through PJRT (production path).
+    Xla,
+    /// Pure-rust mirror (oracle / fast sweeps).
+    Native,
+}
+
+/// Factory for CSMC models of the chosen backend.
+pub enum ModelFactory {
+    Xla(Rc<XlaEngine>, f32),
+    Native(f32),
+}
+
+impl ModelFactory {
+    pub fn new(backend: Backend, artifacts_dir: &str, lr: f32) -> Result<Self> {
+        match backend {
+            Backend::Xla => {
+                let engine = Rc::new(XlaEngine::load_dir(artifacts_dir)?);
+                Ok(ModelFactory::Xla(engine, lr))
+            }
+            Backend::Native => Ok(ModelFactory::Native(lr)),
+        }
+    }
+
+    pub fn make(&self) -> Box<dyn CsmcModel> {
+        match self {
+            ModelFactory::Xla(engine, lr) => Box::new(XlaCsmc::new(engine.clone(), *lr)),
+            ModelFactory::Native(lr) => Box::new(super::native::NativeCsmc::new(*lr)),
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        match self {
+            ModelFactory::Xla(..) => Backend::Xla,
+            ModelFactory::Native(..) => Backend::Native,
+        }
+    }
+}

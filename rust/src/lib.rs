@@ -1,0 +1,29 @@
+//! Shabari: delayed decision-making for faster and efficient serverless functions.
+//!
+//! Reproduction of Sinha, Kaffes, Yadwadkar (2024) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (rust, this crate)** — the serverless coordinator: request
+//!   router, input featurizer, online resource allocator, cold-start-aware
+//!   scheduler, plus the entire cluster substrate (a discrete-event
+//!   simulator standing in for the paper's 17-node OpenWhisk testbed).
+//! * **Layer 2 (JAX, `python/compile/model.py`)** — the cost-sensitive
+//!   multi-class learner's predict/update graphs, AOT-lowered to HLO text.
+//! * **Layer 1 (Pallas, `python/compile/kernels/`)** — the per-class linear
+//!   scoring / SGD-update kernels called from the L2 graphs.
+//!
+//! Python never runs on the request path: `rust/src/runtime` loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) once at startup.
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod featurizer;
+pub mod learner;
+pub mod metrics;
+pub mod functions;
+pub mod util;
+pub mod runtime;
+pub mod simulator;
+pub mod workload;

@@ -1,0 +1,12 @@
+//! `shabari` CLI — leader entrypoint.
+//!
+//! Subcommands (see `shabari help`):
+//!   run         — run a trace through a chosen allocator + scheduler
+//!   experiment  — regenerate a paper figure/table (fig1..fig14, table3)
+//!   profile     — isolated profiling runs used to derive SLOs
+//!   selfcheck   — verify artifacts load and the XLA learner matches native
+
+fn main() {
+    let code = shabari::cli::main();
+    std::process::exit(code);
+}

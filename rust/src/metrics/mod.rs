@@ -1,0 +1,174 @@
+//! Metrics aggregation: the three evaluation lenses of §7.1 (SLO
+//! violations, allocated-but-idle resources, per-invocation utilization)
+//! plus cold-start and failure accounting, computed from
+//! `InvocationRecord`s.
+
+use crate::simulator::engine::SimResult;
+use crate::simulator::{InvocationRecord, Verdict};
+use crate::util::stats::{self, Summary};
+
+/// Aggregated metrics for one run (one policy at one load).
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub policy: String,
+    pub invocations: usize,
+    /// % of invocations violating their SLO (failures count as violations).
+    pub slo_violation_pct: f64,
+    /// Distribution of wasted (allocated-idle) vCPUs per invocation.
+    pub wasted_vcpus: Summary,
+    /// Distribution of wasted memory (GB) per invocation.
+    pub wasted_mem_gb: Summary,
+    /// Distribution of per-invocation vCPU utilization (0..1).
+    pub vcpu_utilization: Summary,
+    /// Distribution of per-invocation memory utilization (0..1).
+    pub mem_utilization: Summary,
+    /// % of invocations that paid a cold start.
+    pub cold_start_pct: f64,
+    /// % of SLO-violating invocations whose run had a cold start.
+    pub violations_with_cold_start_pct: f64,
+    /// % killed by the OOM killer.
+    pub oom_pct: f64,
+    /// % timed out (no response).
+    pub timeout_pct: f64,
+    /// Mean end-to-end latency (s).
+    pub mean_e2e_s: f64,
+    /// Throughput over the simulated window (completed/s).
+    pub throughput: f64,
+    pub containers_created: u64,
+    pub background_launches: u64,
+}
+
+/// Compute metrics from raw records.
+pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
+    let n = records.len().max(1);
+    let violations: Vec<&InvocationRecord> =
+        records.iter().filter(|r| r.slo_violated()).collect();
+    let span = records
+        .iter()
+        .map(|r| r.end)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    RunMetrics {
+        policy: policy.to_string(),
+        invocations: records.len(),
+        slo_violation_pct: 100.0 * violations.len() as f64 / n as f64,
+        wasted_vcpus: stats::summarize(
+            &records.iter().map(|r| r.wasted_vcpus()).collect::<Vec<_>>(),
+        ),
+        wasted_mem_gb: stats::summarize(
+            &records.iter().map(|r| r.wasted_mem_gb()).collect::<Vec<_>>(),
+        ),
+        vcpu_utilization: stats::summarize(
+            &records.iter().map(|r| r.vcpu_utilization()).collect::<Vec<_>>(),
+        ),
+        mem_utilization: stats::summarize(
+            &records.iter().map(|r| r.mem_utilization()).collect::<Vec<_>>(),
+        ),
+        cold_start_pct: stats::percent_where(records, |r| r.had_cold_start),
+        violations_with_cold_start_pct: if violations.is_empty() {
+            0.0
+        } else {
+            100.0 * violations.iter().filter(|r| r.had_cold_start).count() as f64
+                / violations.len() as f64
+        },
+        oom_pct: stats::percent_where(records, |r| r.verdict == Verdict::OomKilled),
+        timeout_pct: stats::percent_where(records, |r| r.verdict == Verdict::TimedOut),
+        mean_e2e_s: stats::mean(&records.iter().map(|r| r.e2e_s).collect::<Vec<_>>()),
+        throughput: records
+            .iter()
+            .filter(|r| r.verdict == Verdict::Completed)
+            .count() as f64
+            / span,
+        containers_created: 0,
+        background_launches: 0,
+    }
+}
+
+/// Aggregate straight from a `SimResult` (fills container counters too).
+pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
+    let mut m = aggregate(policy, &res.records);
+    m.containers_created = res.containers_created;
+    m.background_launches = res.background_launches;
+    m
+}
+
+/// Records after a warm-up cutoff (learning-phase exclusion used by some
+/// sensitivity analyses; the headline E2E numbers include everything,
+/// like the paper's).
+pub fn after_warmup(records: &[InvocationRecord], cutoff_s: f64) -> Vec<InvocationRecord> {
+    records.iter().filter(|r| r.arrival >= cutoff_s).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurizer::{InputKind, InputSpec};
+
+    fn rec(exec: f64, slo: f64, cold: bool, verdict: Verdict) -> InvocationRecord {
+        InvocationRecord {
+            id: 1,
+            func: 0,
+            input: InputSpec::new(InputKind::Payload),
+            worker: 0,
+            vcpus: 8,
+            mem_mb: 2048,
+            requested_vcpus: 8,
+            requested_mem_mb: 2048,
+            arrival: 0.0,
+            cold_start_s: if cold { 0.5 } else { 0.0 },
+            had_cold_start: cold,
+            overhead_s: 0.0,
+            exec_s: exec,
+            e2e_s: exec,
+            end: exec,
+            slo_s: slo,
+            verdict,
+            avg_vcpus_used: 4.0,
+            peak_vcpus_used: 8.0,
+            mem_used_gb: 1.0,
+        }
+    }
+
+    #[test]
+    fn violation_percentage() {
+        let recs = vec![
+            rec(1.0, 2.0, false, Verdict::Completed),
+            rec(3.0, 2.0, true, Verdict::Completed),
+            rec(1.0, 2.0, false, Verdict::OomKilled),
+            rec(1.0, 2.0, false, Verdict::Completed),
+        ];
+        let m = aggregate("x", &recs);
+        assert!((m.slo_violation_pct - 50.0).abs() < 1e-9);
+        assert!((m.oom_pct - 25.0).abs() < 1e-9);
+        assert!((m.cold_start_pct - 25.0).abs() < 1e-9);
+        // 1 of the 2 violations had a cold start
+        assert!((m.violations_with_cold_start_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waste_distributions() {
+        let recs = vec![rec(1.0, 2.0, false, Verdict::Completed)];
+        let m = aggregate("x", &recs);
+        // peak-based: 8 allocated, peak 8 used -> 0 wasted
+        assert!((m.wasted_vcpus.p50 - 0.0).abs() < 1e-9);
+        assert!((m.wasted_mem_gb.p50 - 1.0).abs() < 1e-9);
+        assert!((m.vcpu_utilization.p50 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_records_safe() {
+        let m = aggregate("x", &[]);
+        assert_eq!(m.invocations, 0);
+        assert_eq!(m.slo_violation_pct, 0.0);
+    }
+
+    #[test]
+    fn warmup_filter() {
+        let mut a = rec(1.0, 2.0, false, Verdict::Completed);
+        a.arrival = 10.0;
+        let mut b = rec(1.0, 2.0, false, Verdict::Completed);
+        b.arrival = 200.0;
+        let filtered = after_warmup(&[a, b], 100.0);
+        assert_eq!(filtered.len(), 1);
+    }
+}

@@ -1,0 +1,258 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the only place where the crate talks to XLA. The interchange
+//! format is HLO *text* (not serialized `HloModuleProto`): jax >= 0.5 emits
+//! protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids and round-trips cleanly.
+//!
+//! The coordinator keeps one [`XlaEngine`] per process. Model weights are
+//! kept as host `Vec<f32>` owned by the learner (they are small:
+//! `C x F = 48 x 16` f32 per model) and uploaded per call; see
+//! EXPERIMENTS.md §Perf for the measured cost and the batching strategy.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape constants shared with `python/compile/model.py`. `aot.py` bakes the
+/// same values into the artifacts; [`XlaEngine::load_dir`] cross-checks them
+/// against `artifacts/manifest.json`.
+pub const NUM_CLASSES: usize = 48;
+/// Feature-vector dimension (padded; see `featurizer::FeatureVector`).
+pub const FEAT_DIM: usize = 16;
+/// Batch size of the batched predictor artifact.
+pub const BATCH: usize = 64;
+
+/// Names of the artifacts the engine expects under `artifacts/`.
+pub const ARTIFACTS: &[&str] = &["csmc_predict", "csmc_update", "csmc_predict_batch"];
+
+/// A loaded, compiled HLO executable plus metadata.
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of parameters the HLO module expects (sanity checking).
+    arity: usize,
+}
+
+/// Engine owning the PJRT CPU client and the compiled executables.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, LoadedExe>,
+    dir: PathBuf,
+}
+
+impl XlaEngine {
+    /// Create an engine backed by the PJRT CPU client, loading all standard
+    /// artifacts from `dir` (typically `artifacts/`).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut engine = Self { client, exes: HashMap::new(), dir: dir.clone() };
+        for name in ARTIFACTS {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            engine
+                .load_hlo(name, &path)
+                .with_context(|| format!("loading artifact {}", path.display()))?;
+        }
+        engine.check_manifest()?;
+        Ok(engine)
+    }
+
+    /// Create an engine with no artifacts loaded (tests load ad-hoc HLO).
+    pub fn empty() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, exes: HashMap::new(), dir: PathBuf::from("artifacts") })
+    }
+
+    /// Load and compile one HLO-text file under `name`.
+    pub fn load_hlo(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let arity = count_parameters(&text);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        self.exes.insert(name.to_string(), LoadedExe { exe, arity });
+        Ok(())
+    }
+
+    /// Whether an executable with this name has been loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute `name` with pre-built literals (hot path: callers cache
+    /// and mutate their input literals in place to avoid per-call
+    /// allocation — see EXPERIMENTS.md §Perf).
+    pub fn execute_lits(&self, name: &str, lits: &[&xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let loaded = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not loaded"))?;
+        if loaded.arity != 0 && loaded.arity != lits.len() {
+            bail!("executable '{name}' expects {} parameters, got {}", loaded.arity, lits.len());
+        }
+        let result = loaded
+            .exe
+            .execute::<&xla::Literal>(lits)
+            .map_err(|e| anyhow!("execute '{name}': {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of '{name}': {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of '{name}': {e}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
+        }
+        Ok(vecs)
+    }
+
+    /// Build a reusable literal of the given shape (for `execute_lits`).
+    pub fn make_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+    }
+
+    /// Execute `name` with f32 tensor inputs `(data, dims)`; returns the
+    /// flattened f32 contents of each tuple element of the result.
+    ///
+    /// All our L2 graphs are lowered with `return_tuple=True`, so the single
+    /// output literal is always a tuple.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let loaded = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not loaded"))?;
+        if loaded.arity != 0 && loaded.arity != inputs.len() {
+            bail!(
+                "executable '{name}' expects {} parameters, got {}",
+                loaded.arity,
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let n: i64 = dims.iter().product();
+            if n as usize != data.len() {
+                bail!("input shape {:?} does not match data len {}", dims, data.len());
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))?;
+            lits.push(lit);
+        }
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute '{name}': {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of '{name}': {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of '{name}': {e}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
+        }
+        Ok(vecs)
+    }
+
+    /// Cross-check artifact shapes against `manifest.json` written by aot.py.
+    fn check_manifest(&self) -> Result<()> {
+        let path = self.dir.join("manifest.json");
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return Ok(()); // manifest optional (older artifact dirs)
+        };
+        for (key, want) in
+            [("num_classes", NUM_CLASSES), ("feat_dim", FEAT_DIM), ("batch", BATCH)]
+        {
+            if let Some(got) = json_usize(&text, key) {
+                if got != want {
+                    bail!(
+                        "artifact manifest {key}={got} does not match crate constant {want} — \
+                         re-run `make artifacts`"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Platform description, for logging.
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+}
+
+/// Count `parameter(i)` declarations in the entry computation of HLO text.
+/// Cheap sanity check so arity mismatches fail with a clear message instead
+/// of an opaque XLA error.
+fn count_parameters(hlo: &str) -> usize {
+    let mut entry = false;
+    let mut count = 0usize;
+    for line in hlo.lines() {
+        let t = line.trim_start();
+        if t.starts_with("ENTRY ") {
+            entry = true;
+            continue;
+        }
+        if entry {
+            if t.starts_with('}') {
+                break;
+            }
+            if t.contains("= parameter(") || (t.contains(" parameter(") && t.contains('=')) {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+/// Extract `"key": <int>` from a flat JSON object without a JSON dependency.
+fn json_usize(text: &str, key: &str) -> Option<usize> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat)?;
+    let rest = &text[at + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counting() {
+        let hlo = r#"
+HloModule m
+
+ENTRY main {
+  p0 = f32[48,16]{1,0} parameter(0)
+  p1 = f32[16]{0} parameter(1)
+  ROOT t = (f32[48]{0}) tuple(p0)
+}
+"#;
+        assert_eq!(count_parameters(hlo), 2);
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let t = r#"{ "num_classes": 48, "feat_dim": 16, "batch": 64 }"#;
+        assert_eq!(json_usize(t, "num_classes"), Some(48));
+        assert_eq!(json_usize(t, "feat_dim"), Some(16));
+        assert_eq!(json_usize(t, "missing"), None);
+    }
+}

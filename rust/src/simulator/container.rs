@@ -1,0 +1,115 @@
+//! Container lifecycle: cold-starting → idle (warm) → busy → evicted.
+
+use super::SimTime;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    /// Being created (cold start in progress).
+    Starting,
+    /// Warm and free — a routing target.
+    Idle,
+    /// Running an invocation.
+    Busy,
+}
+
+/// A function container on a worker. Sized independently in vCPUs and
+/// memory (the paper's decoupled `CPULimit()` extension to OpenWhisk).
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: u64,
+    /// Index into the function catalog — containers are per-function
+    /// (image + runtime state), like OpenWhisk action containers.
+    pub func: usize,
+    pub vcpus: u32,
+    pub mem_mb: u32,
+    pub state: ContainerState,
+    /// When the container becomes usable (end of cold start).
+    pub ready_at: SimTime,
+    /// Start of the current idle period (keep-alive accounting).
+    pub idle_since: SimTime,
+    /// Bumped every time the container goes idle; lets stale eviction
+    /// events detect that the container was reused in between.
+    pub idle_epoch: u64,
+}
+
+impl Container {
+    pub fn new(id: u64, func: usize, vcpus: u32, mem_mb: u32, ready_at: SimTime) -> Self {
+        Container {
+            id,
+            func,
+            vcpus,
+            mem_mb,
+            state: ContainerState::Starting,
+            ready_at,
+            idle_since: ready_at,
+            idle_epoch: 0,
+        }
+    }
+
+    /// Whether this container can serve a request asking for
+    /// (`vcpus`, `mem_mb`): same function, at-least-as-large size.
+    pub fn fits(&self, func: usize, vcpus: u32, mem_mb: u32) -> bool {
+        self.func == func && self.vcpus >= vcpus && self.mem_mb >= mem_mb
+    }
+
+    /// Exact-size match.
+    pub fn exact(&self, func: usize, vcpus: u32, mem_mb: u32) -> bool {
+        self.func == func && self.vcpus == vcpus && self.mem_mb == mem_mb
+    }
+
+    pub fn is_warm_idle(&self) -> bool {
+        self.state == ContainerState::Idle
+    }
+
+    /// Mark busy (serving an invocation).
+    pub fn acquire(&mut self) {
+        debug_assert_ne!(self.state, ContainerState::Busy, "double acquire");
+        self.state = ContainerState::Busy;
+    }
+
+    /// Return to the warm pool.
+    pub fn release(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Busy);
+        self.state = ContainerState::Idle;
+        self.idle_since = now;
+        self.idle_epoch += 1;
+    }
+
+    /// Cold start finished.
+    pub fn mark_ready(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Starting);
+        self.state = ContainerState::Idle;
+        self.idle_since = now;
+        self.idle_epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut c = Container::new(1, 0, 8, 2048, 0.5);
+        assert_eq!(c.state, ContainerState::Starting);
+        c.mark_ready(0.5);
+        assert!(c.is_warm_idle());
+        c.acquire();
+        assert_eq!(c.state, ContainerState::Busy);
+        c.release(3.0);
+        assert!(c.is_warm_idle());
+        assert_eq!(c.idle_since, 3.0);
+        assert_eq!(c.idle_epoch, 2);
+    }
+
+    #[test]
+    fn fits_semantics() {
+        let c = Container::new(1, 2, 8, 2048, 0.0);
+        assert!(c.fits(2, 8, 2048));
+        assert!(c.fits(2, 4, 1024));
+        assert!(!c.fits(2, 9, 2048), "smaller container cannot serve");
+        assert!(!c.fits(3, 4, 1024), "different function");
+        assert!(c.exact(2, 8, 2048));
+        assert!(!c.exact(2, 4, 2048));
+    }
+}

@@ -1,0 +1,308 @@
+//! Discrete-event cluster simulator — the substrate standing in for the
+//! paper's 17-node OpenWhisk testbed (DESIGN.md §2, §5).
+//!
+//! Mechanics modeled:
+//! * workers with physical cores, scheduler admission limits (`userCpu`),
+//!   memory capacity, and a shared NIC;
+//! * container lifecycle: cold start (lognormal latency), warm pools,
+//!   keep-alive eviction, proactive background launches;
+//! * execution in phases — network fetch (bandwidth-shared), serial
+//!   compute (1 vCPU), parallel compute (`min(alloc, maxpar)` vCPUs) —
+//!   under processor sharing when a worker's demand exceeds its cores;
+//! * OOM kills when an invocation's footprint exceeds its container's
+//!   memory, invocation timeouts, per-invocation utilization sampling
+//!   (the paper's per-worker daemon).
+//!
+//! The *policy* (Shabari or a baseline) plugs in through [`Policy`]: it
+//! sees each request plus a read-only cluster view and returns a routing
+//! [`Decision`]; the engine executes the mechanics.
+
+pub mod container;
+pub mod engine;
+pub mod worker;
+
+use crate::featurizer::InputSpec;
+
+/// Simulated seconds since experiment start.
+pub type SimTime = f64;
+
+/// One incoming invocation request (produced by `workload::trace`).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Index into `functions::catalog::CATALOG`.
+    pub func: usize,
+    pub input: InputSpec,
+    pub arrival: SimTime,
+    /// Target execution time (the Shabari interface's SLO). Baselines that
+    /// ignore SLOs still have it recorded for violation accounting.
+    pub slo_s: f64,
+}
+
+/// How the policy wants the invocation to get a container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerChoice {
+    /// Run in an existing idle warm container (id on the chosen worker).
+    Warm(u64),
+    /// Create a new container of the decision's size (pays cold start).
+    Cold,
+}
+
+/// A proactive background container launch (§5: off the critical path).
+#[derive(Debug, Clone, Copy)]
+pub struct BackgroundLaunch {
+    pub worker: usize,
+    pub vcpus: u32,
+    pub mem_mb: u32,
+}
+
+/// The policy's routing decision for one request.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub worker: usize,
+    /// vCPU hard limit for the invocation (the paper's `CPULimit()`).
+    pub vcpus: u32,
+    /// Memory limit in MB (128 MB granularity upstream).
+    pub mem_mb: u32,
+    pub container: ContainerChoice,
+    pub background: Option<BackgroundLaunch>,
+    /// Critical-path decision latency (featurize + predict + schedule).
+    pub overhead_s: f64,
+}
+
+/// Terminal state of an invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Completed,
+    /// Killed by the host OOM killer: footprint exceeded container memory.
+    OomKilled,
+    /// Exceeded the platform's max execution walltime; no response sent.
+    TimedOut,
+}
+
+/// Everything recorded about a finished invocation — the input to both
+/// the metrics layer and the online learner's feedback loop.
+#[derive(Debug, Clone)]
+pub struct InvocationRecord {
+    pub id: u64,
+    pub func: usize,
+    pub input: InputSpec,
+    pub worker: usize,
+    /// Container size the invocation actually ran in.
+    pub vcpus: u32,
+    pub mem_mb: u32,
+    /// Size the policy *asked* for (differs when routed to a larger warm
+    /// container).
+    pub requested_vcpus: u32,
+    pub requested_mem_mb: u32,
+    pub arrival: SimTime,
+    /// Cold-start latency paid on the critical path (0 for warm hits).
+    pub cold_start_s: f64,
+    pub had_cold_start: bool,
+    /// Decision latency paid on the critical path.
+    pub overhead_s: f64,
+    /// Execution time (start-of-exec to finish) — what the SLO governs.
+    pub exec_s: f64,
+    /// End-to-end latency including overheads + cold start.
+    pub e2e_s: f64,
+    pub end: SimTime,
+    pub slo_s: f64,
+    pub verdict: Verdict,
+    /// Daemon-sampled usage.
+    pub avg_vcpus_used: f64,
+    pub peak_vcpus_used: f64,
+    pub mem_used_gb: f64,
+}
+
+impl InvocationRecord {
+    /// SLO violation per the paper: execution time above target, or a
+    /// failed invocation (OOM/timeout).
+    pub fn slo_violated(&self) -> bool {
+        self.verdict != Verdict::Completed || self.exec_s > self.slo_s
+    }
+
+    /// Allocated-but-idle vCPUs (Fig 8b's "wasted vCPUs per invocation"):
+    /// cores the invocation never touched even at its parallel peak —
+    /// the cgroup-style "idle allocated" number the paper reports.
+    pub fn wasted_vcpus(&self) -> f64 {
+        (self.vcpus as f64 - self.peak_vcpus_used).max(0.0)
+    }
+
+    /// Allocated-but-idle memory in GB (Fig 8c).
+    pub fn wasted_mem_gb(&self) -> f64 {
+        (self.mem_mb as f64 / 1024.0 - self.mem_used_gb).max(0.0)
+    }
+
+    /// vCPU utilization fraction (Fig 8d).
+    pub fn vcpu_utilization(&self) -> f64 {
+        if self.vcpus == 0 {
+            0.0
+        } else {
+            (self.avg_vcpus_used / self.vcpus as f64).min(1.0)
+        }
+    }
+
+    /// Memory utilization fraction (Fig 8e).
+    pub fn mem_utilization(&self) -> f64 {
+        let alloc = self.mem_mb as f64 / 1024.0;
+        if alloc <= 0.0 {
+            0.0
+        } else {
+            (self.mem_used_gb / alloc).min(1.0)
+        }
+    }
+}
+
+/// Cluster/testbed parameters (§7.1 defaults).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub workers: usize,
+    /// Physical cores per worker (contention threshold).
+    pub physical_cores: f64,
+    /// Scheduler admission limit per worker (`userCpu`, Fig 11).
+    pub sched_vcpu_limit: f64,
+    /// Memory per worker, GB.
+    pub mem_gb: f64,
+    /// NIC bandwidth, Gb/s.
+    pub net_gbps: f64,
+    /// Mean cold-start latency, seconds (lognormal).
+    pub cold_start_mean_s: f64,
+    pub cold_start_sigma: f64,
+    /// Idle container keep-alive before eviction, seconds.
+    pub keep_alive_s: f64,
+    /// Platform max invocation walltime.
+    pub timeout_s: f64,
+    /// RNG seed for execution noise / cold-start draws.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            workers: 16,
+            physical_cores: 96.0,
+            sched_vcpu_limit: 90.0,
+            mem_gb: 125.0,
+            net_gbps: 10.0,
+            cold_start_mean_s: 0.55,
+            cold_start_sigma: 0.35,
+            keep_alive_s: 600.0,
+            timeout_s: 300.0,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl SimConfig {
+    /// A small cluster for unit/integration tests.
+    pub fn small() -> Self {
+        SimConfig { workers: 4, ..Default::default() }
+    }
+}
+
+/// A policy: the coordinator (Shabari) or a baseline system.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    /// Route one request. The engine trusts the worker/container choice
+    /// but enforces mechanics (cold start if the warm id is gone, etc.).
+    fn on_request(
+        &mut self,
+        now: SimTime,
+        req: &Request,
+        cluster: &worker::Cluster,
+    ) -> Decision;
+
+    /// Feedback after an invocation finishes (drives online learning).
+    fn on_complete(
+        &mut self,
+        _now: SimTime,
+        _rec: &InvocationRecord,
+        _cluster: &worker::Cluster,
+    ) {
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featurizer::{InputKind, InputSpec};
+
+    fn rec() -> InvocationRecord {
+        InvocationRecord {
+            id: 1,
+            func: 0,
+            input: InputSpec::new(InputKind::Payload),
+            worker: 0,
+            vcpus: 8,
+            mem_mb: 2048,
+            requested_vcpus: 8,
+            requested_mem_mb: 2048,
+            arrival: 0.0,
+            cold_start_s: 0.0,
+            had_cold_start: false,
+            overhead_s: 0.0,
+            exec_s: 2.0,
+            e2e_s: 2.0,
+            end: 2.0,
+            slo_s: 3.0,
+            verdict: Verdict::Completed,
+            avg_vcpus_used: 5.0,
+            peak_vcpus_used: 8.0,
+            mem_used_gb: 1.0,
+        }
+    }
+
+    #[test]
+    fn violation_logic() {
+        let mut r = rec();
+        assert!(!r.slo_violated());
+        r.exec_s = 4.0;
+        assert!(r.slo_violated());
+        r.exec_s = 1.0;
+        r.verdict = Verdict::OomKilled;
+        assert!(r.slo_violated());
+    }
+
+    #[test]
+    fn waste_and_utilization() {
+        let mut r = rec();
+        r.peak_vcpus_used = 5.0; // 3 cores never touched
+        assert!((r.wasted_vcpus() - 3.0).abs() < 1e-12);
+        assert!((r.wasted_mem_gb() - 1.0).abs() < 1e-12);
+        assert!((r.vcpu_utilization() - 5.0 / 8.0).abs() < 1e-12);
+        assert!((r.mem_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_config_matches_testbed() {
+        let c = SimConfig::default();
+        assert_eq!(c.workers, 16);
+        assert_eq!(c.sched_vcpu_limit, 90.0);
+        assert_eq!(c.mem_gb, 125.0);
+    }
+}
+
+impl Policy for Box<dyn Policy> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn on_request(
+        &mut self,
+        now: SimTime,
+        req: &Request,
+        cluster: &worker::Cluster,
+    ) -> Decision {
+        (**self).on_request(now, req, cluster)
+    }
+
+    fn on_complete(
+        &mut self,
+        now: SimTime,
+        rec: &InvocationRecord,
+        cluster: &worker::Cluster,
+    ) {
+        (**self).on_complete(now, rec, cluster)
+    }
+}

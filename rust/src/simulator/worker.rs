@@ -1,0 +1,541 @@
+//! Worker (invoker) model: container pools, allocation accounting, and
+//! processor-sharing execution of invocation phases.
+//!
+//! Execution model: each active invocation is in one phase —
+//! `Net` (NIC fair-sharing), `Serial` (1 vCPU), or `Parallel`
+//! (`min(alloc, maxpar)` vCPUs). When the sum of vCPU demands exceeds the
+//! worker's *physical* cores, every compute phase is slowed by the same
+//! factor (Linux CFS-style fair sharing weighted by demand). The per-
+//! worker daemon numbers (avg/peak vCPUs used) fall out of the exact work
+//! accounting.
+
+use std::collections::HashMap;
+
+use super::container::Container;
+use super::SimTime;
+
+/// Execution phase of an active invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Fetching input bytes from the external datastore.
+    Net,
+    /// Serial compute on one vCPU.
+    Serial,
+    /// Parallel compute on `demand` vCPUs.
+    Parallel,
+}
+
+/// One queued phase: (phase, work, demand).
+/// Work is bytes for Net, CPU-seconds for Serial/Parallel.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSpec {
+    pub phase: Phase,
+    pub work: f64,
+    pub demand: f64,
+}
+
+/// An invocation currently executing on this worker.
+#[derive(Debug, Clone)]
+pub struct ActiveInv {
+    pub inv_id: u64,
+    pub container_id: u64,
+    /// vCPU allocation of the container (cgroup share weight).
+    pub alloc_vcpus: f64,
+    /// Remaining work in the current phase.
+    pub remaining: f64,
+    pub current: PhaseSpec,
+    /// Later phases, in order.
+    pub pending: Vec<PhaseSpec>,
+    /// Total CPU-seconds consumed so far (daemon accounting).
+    pub cpu_seconds_done: f64,
+    pub exec_started: SimTime,
+    pub peak_vcpus: f64,
+    /// Memory footprint of the invocation (GB).
+    pub mem_used_gb: f64,
+}
+
+impl ActiveInv {
+    /// Move to the next phase; returns false when all phases are done.
+    pub fn next_phase(&mut self) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        self.current = self.pending.remove(0);
+        self.remaining = self.current.work;
+        if matches!(self.current.phase, Phase::Serial | Phase::Parallel) {
+            self.peak_vcpus = self.peak_vcpus.max(self.current.demand);
+        }
+        // zero-work phases are skipped by the caller loop
+        true
+    }
+}
+
+/// A worker node (OpenWhisk invoker).
+#[derive(Debug)]
+pub struct Worker {
+    pub id: usize,
+    pub physical_cores: f64,
+    /// Scheduler admission limit (`userCpu` hyperparameter).
+    pub sched_vcpu_limit: f64,
+    pub mem_gb: f64,
+    pub net_gbps: f64,
+    pub containers: HashMap<u64, Container>,
+    pub active: HashMap<u64, ActiveInv>,
+    /// Allocated resources of *busy* containers (idle containers consume
+    /// nothing — §5 "Creating Idle Containers in the Background").
+    pub allocated_vcpus: f64,
+    pub allocated_mem_mb: f64,
+    /// Last time `advance` ran (work progressed up to here).
+    pub last_advance: SimTime,
+    /// Bumped on every change to the active set; stale completion events
+    /// carry an old epoch and are ignored.
+    pub epoch: u64,
+    /// Lifetime counters.
+    pub total_cold_starts: u64,
+    pub total_invocations: u64,
+}
+
+impl Worker {
+    pub fn new(id: usize, cfg: &super::SimConfig) -> Self {
+        Worker {
+            id,
+            physical_cores: cfg.physical_cores,
+            sched_vcpu_limit: cfg.sched_vcpu_limit,
+            mem_gb: cfg.mem_gb,
+            net_gbps: cfg.net_gbps,
+            containers: HashMap::new(),
+            active: HashMap::new(),
+            allocated_vcpus: 0.0,
+            allocated_mem_mb: 0.0,
+            last_advance: 0.0,
+            epoch: 0,
+            total_cold_starts: 0,
+            total_invocations: 0,
+        }
+    }
+
+    // -- scheduler-facing load view ------------------------------------
+
+    /// Free vCPUs under the admission limit.
+    pub fn free_sched_vcpus(&self) -> f64 {
+        (self.sched_vcpu_limit - self.allocated_vcpus).max(0.0)
+    }
+
+    /// Free memory (MB) under the admission limit.
+    pub fn free_mem_mb(&self) -> f64 {
+        (self.mem_gb * 1024.0 - self.allocated_mem_mb).max(0.0)
+    }
+
+    /// Whether an invocation of this size can be admitted.
+    pub fn has_capacity(&self, vcpus: u32, mem_mb: u32) -> bool {
+        self.free_sched_vcpus() >= vcpus as f64 && self.free_mem_mb() >= mem_mb as f64
+    }
+
+    /// Idle warm containers for `func`, any size.
+    pub fn warm_containers(&self, func: usize) -> impl Iterator<Item = &Container> {
+        self.containers
+            .values()
+            .filter(move |c| c.func == func && c.is_warm_idle())
+    }
+
+    /// Idle warm container of the exact size.
+    pub fn find_warm_exact(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<&Container> {
+        self.warm_containers(func)
+            .find(|c| c.exact(func, vcpus, mem_mb))
+    }
+
+    /// Smallest idle warm container that is at least the requested size.
+    pub fn find_warm_larger(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<&Container> {
+        self.warm_containers(func)
+            .filter(|c| c.fits(func, vcpus, mem_mb))
+            .min_by_key(|c| (c.vcpus, c.mem_mb))
+    }
+
+    // -- processor sharing ----------------------------------------------
+
+    /// Total vCPU demand of active compute phases.
+    fn cpu_demand(&self) -> f64 {
+        self.active
+            .values()
+            .filter(|a| matches!(a.current.phase, Phase::Serial | Phase::Parallel))
+            .map(|a| a.current.demand)
+            .sum()
+    }
+
+    /// Number of active network phases.
+    fn net_active(&self) -> usize {
+        self.active
+            .values()
+            .filter(|a| a.current.phase == Phase::Net)
+            .count()
+    }
+
+    /// Contention slowdown for compute phases: 1.0 when demand fits the
+    /// physical cores, `cores / demand` when oversubscribed (aggregate
+    /// view; per-invocation rates come from [`Self::cpu_rates`]).
+    pub fn cpu_scale(&self) -> f64 {
+        let demand = self.cpu_demand();
+        if demand <= self.physical_cores {
+            1.0
+        } else {
+            self.physical_cores / demand
+        }
+    }
+
+    /// Per-invocation CPU rates (cpu-seconds per wall-second) under
+    /// cgroup-share semantics: when the worker's compute demand exceeds
+    /// its physical cores, capacity is distributed in proportion to each
+    /// invocation's *allocation* (its cpu share weight), capped at what
+    /// the phase can use (its demand), work-conservingly (water-filling).
+    ///
+    /// This is the mechanism behind the paper's "stealing" observation
+    /// (§7.2): over-allocated invocations squeeze right-sized ones under
+    /// contention even when they cannot use the extra cores themselves.
+    /// Interference slowdown from vCPU over-subscription of *allocations*
+    /// (cgroup shares): when the sum of busy containers' vCPU limits
+    /// exceeds the physical cores, the kernel timeslices more runnable
+    /// threads than cores (cache pollution, scheduler churn). This is the
+    /// §7.2 mechanism by which over-allocating systems degrade co-located
+    /// invocations even when *useful* demand still fits the machine.
+    pub fn interference_factor(&self) -> f64 {
+        let over = (self.allocated_vcpus - self.physical_cores) / self.physical_cores;
+        1.0 / (1.0 + 0.35 * over.max(0.0))
+    }
+
+    pub fn cpu_rates(&self) -> HashMap<u64, f64> {
+        let mut rates = HashMap::new();
+        let interference = self.interference_factor();
+        let compute: Vec<(&u64, &ActiveInv)> = self
+            .active
+            .iter()
+            .filter(|(_, a)| matches!(a.current.phase, Phase::Serial | Phase::Parallel))
+            .collect();
+        let total_demand: f64 = compute.iter().map(|(_, a)| a.current.demand).sum();
+        if total_demand <= self.physical_cores {
+            for (id, a) in compute {
+                rates.insert(*id, a.current.demand * interference);
+            }
+            return rates;
+        }
+        // water-filling by allocation weight
+        let mut remaining = self.physical_cores;
+        let mut unsat: Vec<(u64, f64, f64)> = compute
+            .iter()
+            .map(|(id, a)| (**id, a.current.demand, a.alloc_vcpus.max(1.0)))
+            .collect();
+        loop {
+            let total_w: f64 = unsat.iter().map(|(_, _, w)| *w).sum();
+            if total_w <= 0.0 || remaining <= 1e-12 {
+                for (id, _, _) in &unsat {
+                    rates.insert(*id, 0.0);
+                }
+                break;
+            }
+            let mut newly_sat = false;
+            let mut still = Vec::with_capacity(unsat.len());
+            for (id, demand, w) in unsat.drain(..) {
+                let share = remaining * w / total_w;
+                if share >= demand {
+                    rates.insert(id, demand);
+                    newly_sat = true;
+                } else {
+                    still.push((id, demand, w));
+                }
+            }
+            // subtract satisfied demands from capacity
+            let sat_sum: f64 = rates
+                .iter()
+                .filter(|(id, _)| !still.iter().any(|(sid, _, _)| sid == *id))
+                .map(|(_, r)| *r)
+                .sum();
+            remaining = (self.physical_cores - sat_sum).max(0.0);
+            if !newly_sat {
+                // no one newly satisfied: final proportional split
+                let total_w: f64 = still.iter().map(|(_, _, w)| *w).sum();
+                for (id, demand, w) in still {
+                    rates.insert(id, (remaining * w / total_w).min(demand));
+                }
+                break;
+            }
+            if still.is_empty() {
+                break;
+            }
+            unsat = still;
+        }
+        for r in rates.values_mut() {
+            *r *= interference;
+        }
+        rates
+    }
+
+    /// Bytes/s available to each concurrent network fetch (fair share).
+    fn net_rate(&self) -> f64 {
+        let n = self.net_active().max(1);
+        self.net_gbps * 1e9 / 8.0 / n as f64
+    }
+
+    /// Progress all active work up to `now`.
+    pub fn advance(&mut self, now: SimTime) {
+        let dt = now - self.last_advance;
+        if dt <= 0.0 {
+            self.last_advance = now.max(self.last_advance);
+            return;
+        }
+        let cpu_rates = self.cpu_rates();
+        let net_rate = self.net_rate();
+        for a in self.active.values_mut() {
+            let rate = match a.current.phase {
+                Phase::Net => net_rate,
+                Phase::Serial | Phase::Parallel => cpu_rates[&a.inv_id],
+            };
+            // The engine advances exactly to phase-completion events, so a
+            // phase never crosses zero mid-interval; clamp defensively and
+            // account only work actually done.
+            let done = (rate * dt).min(a.remaining);
+            a.remaining -= done;
+            // Snap float residue to zero so completion checks terminate
+            // (a sub-nanosecond work remainder can otherwise produce
+            // events whose dt underflows to the same timestamp forever).
+            if a.remaining < 1e-9 {
+                a.remaining = 0.0;
+            }
+            if matches!(a.current.phase, Phase::Serial | Phase::Parallel) {
+                // Work *is* CPU-seconds for compute phases.
+                a.cpu_seconds_done += done;
+            }
+        }
+        self.last_advance = now;
+    }
+
+    /// Earliest (dt-from-now, inv_id) at which some current phase
+    /// completes, given current rates. None if nothing is active.
+    pub fn next_phase_completion(&self) -> Option<(f64, u64)> {
+        let cpu_rates = self.cpu_rates();
+        let net_rate = self.net_rate();
+        let mut best: Option<(f64, u64)> = None;
+        for a in self.active.values() {
+            let rate = match a.current.phase {
+                Phase::Net => net_rate,
+                Phase::Serial | Phase::Parallel => cpu_rates[&a.inv_id],
+            };
+            let dt = if rate <= 0.0 {
+                f64::INFINITY
+            } else {
+                a.remaining / rate
+            };
+            match best {
+                None => best = Some((dt, a.inv_id)),
+                Some((bdt, _)) if dt < bdt => best = Some((dt, a.inv_id)),
+                _ => {}
+            }
+        }
+        best
+    }
+
+    /// Register a new active invocation (its container must be Busy).
+    pub fn start_invocation(&mut self, inv: ActiveInv, vcpus: u32, mem_mb: u32) {
+        self.allocated_vcpus += vcpus as f64;
+        self.allocated_mem_mb += mem_mb as f64;
+        self.total_invocations += 1;
+        self.active.insert(inv.inv_id, inv);
+        self.epoch += 1;
+    }
+
+    /// Remove a finished/killed invocation; returns it for accounting.
+    pub fn finish_invocation(&mut self, inv_id: u64, vcpus: u32, mem_mb: u32) -> Option<ActiveInv> {
+        let a = self.active.remove(&inv_id)?;
+        self.allocated_vcpus = (self.allocated_vcpus - vcpus as f64).max(0.0);
+        self.allocated_mem_mb = (self.allocated_mem_mb - mem_mb as f64).max(0.0);
+        self.epoch += 1;
+        Some(a)
+    }
+}
+
+/// The cluster: all workers plus global container-id assignment.
+#[derive(Debug)]
+pub struct Cluster {
+    pub workers: Vec<Worker>,
+}
+
+impl Cluster {
+    pub fn new(cfg: &super::SimConfig) -> Self {
+        Cluster {
+            workers: (0..cfg.workers).map(|i| Worker::new(i, cfg)).collect(),
+        }
+    }
+
+    pub fn worker(&self, id: usize) -> &Worker {
+        &self.workers[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Find an exact-size idle warm container anywhere (worker, container).
+    pub fn find_warm_exact(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<(usize, u64)> {
+        for w in &self.workers {
+            if let Some(c) = w.find_warm_exact(func, vcpus, mem_mb) {
+                return Some((w.id, c.id));
+            }
+        }
+        None
+    }
+
+    /// Find the smallest at-least-as-large idle warm container anywhere.
+    pub fn find_warm_larger(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<(usize, u64)> {
+        let mut best: Option<(u32, u32, usize, u64)> = None;
+        for w in &self.workers {
+            if let Some(c) = w.find_warm_larger(func, vcpus, mem_mb) {
+                let key = (c.vcpus, c.mem_mb, w.id, c.id);
+                if best.map_or(true, |b| (key.0, key.1) < (b.0, b.1)) {
+                    best = Some(key);
+                }
+            }
+        }
+        best.map(|(_, _, w, c)| (w, c))
+    }
+
+    /// Total allocated vCPUs across workers (cluster load).
+    pub fn total_allocated_vcpus(&self) -> f64 {
+        self.workers.iter().map(|w| w.allocated_vcpus).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SimConfig;
+
+    fn worker() -> Worker {
+        Worker::new(0, &SimConfig::default())
+    }
+
+    fn active(inv_id: u64, phase: Phase, work: f64, demand: f64) -> ActiveInv {
+        ActiveInv {
+            inv_id,
+            container_id: inv_id,
+            alloc_vcpus: demand.max(1.0),
+            remaining: work,
+            current: PhaseSpec { phase, work, demand },
+            pending: vec![],
+            cpu_seconds_done: 0.0,
+            exec_started: 0.0,
+            peak_vcpus: demand,
+            mem_used_gb: 0.5,
+        }
+    }
+
+    #[test]
+    fn no_contention_full_rate() {
+        let mut w = worker();
+        w.start_invocation(active(1, Phase::Parallel, 80.0, 8.0), 8, 1024);
+        assert_eq!(w.cpu_scale(), 1.0);
+        let (dt, id) = w.next_phase_completion().unwrap();
+        assert_eq!(id, 1);
+        assert!((dt - 10.0).abs() < 1e-9, "80 cpu-s at 8 vCPUs = 10 s");
+    }
+
+    #[test]
+    fn contention_slows_everyone() {
+        let mut w = worker();
+        // two invocations, each demanding 64 vCPUs on a 96-core box
+        w.start_invocation(active(1, Phase::Parallel, 64.0, 64.0), 64, 1024);
+        w.start_invocation(active(2, Phase::Parallel, 64.0, 64.0), 64, 1024);
+        let scale = w.cpu_scale();
+        assert!((scale - 96.0 / 128.0).abs() < 1e-12);
+        let (dt, _) = w.next_phase_completion().unwrap();
+        // equal weights: each gets 48 effective vCPUs, then the
+        // allocation-oversubscription interference factor applies
+        // (128 alloc on 96 cores -> 1/(1 + 0.35/3))
+        let interference = w.interference_factor();
+        assert!(interference < 1.0);
+        let expect = 64.0 / (48.0 * interference);
+        assert!((dt - expect).abs() < 1e-9, "dt {dt} expect {expect}");
+    }
+
+    #[test]
+    fn advance_consumes_work_and_accounts_cpu() {
+        let mut w = worker();
+        w.start_invocation(active(1, Phase::Serial, 5.0, 1.0), 4, 512);
+        w.advance(2.0);
+        let a = &w.active[&1];
+        assert!((a.remaining - 3.0).abs() < 1e-9);
+        assert!((a.cpu_seconds_done - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_fair_share() {
+        let mut w = worker();
+        // 10 Gb/s = 1.25 GB/s; two fetches share it
+        w.start_invocation(active(1, Phase::Net, 1.25e9, 1.0), 4, 512);
+        w.start_invocation(active(2, Phase::Net, 1.25e9, 1.0), 4, 512);
+        let (dt, _) = w.next_phase_completion().unwrap();
+        assert!((dt - 2.0).abs() < 1e-6, "two 1.25GB fetches over shared NIC: {dt}");
+    }
+
+    #[test]
+    fn net_phase_unaffected_by_cpu_storm() {
+        let mut w = worker();
+        w.start_invocation(active(1, Phase::Net, 1.25e9, 1.0), 4, 512);
+        w.start_invocation(active(2, Phase::Parallel, 1000.0, 200.0), 48, 512);
+        let cpu_scale = w.cpu_scale();
+        assert!(cpu_scale < 1.0);
+        // net fetch still completes in ~1 s
+        w.advance(1.0);
+        assert!(w.active[&1].remaining < 1.0);
+    }
+
+    #[test]
+    fn allocation_accounting() {
+        let mut w = worker();
+        w.start_invocation(active(1, Phase::Serial, 1.0, 1.0), 8, 2048);
+        assert_eq!(w.allocated_vcpus, 8.0);
+        assert_eq!(w.allocated_mem_mb, 2048.0);
+        assert!(w.has_capacity(82, 1024));
+        assert!(!w.has_capacity(83, 1024));
+        w.finish_invocation(1, 8, 2048).unwrap();
+        assert_eq!(w.allocated_vcpus, 0.0);
+        assert_eq!(w.allocated_mem_mb, 0.0);
+    }
+
+    #[test]
+    fn warm_lookup_prefers_smallest_fitting() {
+        let mut w = worker();
+        for (id, v) in [(1u64, 8u32), (2, 16), (3, 12)] {
+            let mut c = Container::new(id, 0, v, 2048, 0.0);
+            c.mark_ready(0.0);
+            w.containers.insert(id, c);
+        }
+        let c = w.find_warm_larger(0, 9, 1024).unwrap();
+        assert_eq!(c.vcpus, 12, "closest-larger should win");
+        assert!(w.find_warm_exact(0, 9, 1024).is_none());
+        assert!(w.find_warm_exact(0, 8, 2048).is_some());
+    }
+
+    #[test]
+    fn busy_containers_not_warm() {
+        let mut w = worker();
+        let mut c = Container::new(1, 0, 8, 1024, 0.0);
+        c.mark_ready(0.0);
+        c.acquire();
+        w.containers.insert(1, c);
+        assert!(w.find_warm_larger(0, 4, 512).is_none());
+    }
+
+    #[test]
+    fn cluster_warm_search() {
+        let cfg = SimConfig::small();
+        let mut cl = Cluster::new(&cfg);
+        let mut c = Container::new(7, 3, 10, 4096, 0.0);
+        c.mark_ready(0.0);
+        cl.workers[2].containers.insert(7, c);
+        assert_eq!(cl.find_warm_exact(3, 10, 4096), Some((2, 7)));
+        assert_eq!(cl.find_warm_larger(3, 6, 2048), Some((2, 7)));
+        assert_eq!(cl.find_warm_exact(3, 11, 4096), None);
+    }
+}

@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (no `criterion` in the offline build).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95/p99 per-iteration
+//! latency and a simple comparison printer. The `rust/benches/*.rs` targets
+//! (declared with `harness = false`) drive this directly; `cargo bench`
+//! runs them like normal binaries.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark: per-iteration latencies in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub total_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+/// Each iteration is timed individually (fine for >= ~1 µs bodies; for
+/// nanosecond bodies use [`run_batched`]).
+pub fn run(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut lat = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        lat.push(t0.elapsed().as_nanos() as f64);
+    }
+    let total_s = start.elapsed().as_secs_f64();
+    finish(name, lat, total_s)
+}
+
+/// Time `f` in batches of `batch` calls per clock read — for very short
+/// bodies where a per-call `Instant::now()` would dominate.
+pub fn run_batched(
+    name: &str,
+    warmup: usize,
+    batches: usize,
+    batch: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut lat = Vec::with_capacity(batches);
+    let start = Instant::now();
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        lat.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    let total_s = start.elapsed().as_secs_f64();
+    finish(name, lat, total_s)
+}
+
+fn finish(name: &str, mut lat: Vec<f64>, total_s: f64) -> BenchResult {
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: lat.len(),
+        mean_ns: stats::mean(&lat),
+        p50_ns: stats::percentile(&lat, 50.0),
+        p95_ns: stats::percentile(&lat, 95.0),
+        p99_ns: stats::percentile(&lat, 99.0),
+        total_s,
+    };
+    println!("{}", format_result(&r));
+    r
+}
+
+/// Human-readable one-liner: `name  mean±  p50  p95  p99  rate`.
+pub fn format_result(r: &BenchResult) -> String {
+    format!(
+        "{:<44} {:>12}/iter  p50 {:>10}  p95 {:>10}  p99 {:>10}  ({:.1}/s, n={})",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
+        fmt_ns(r.p99_ns),
+        r.throughput_per_s(),
+        r.iters
+    )
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn keep<T>(value: T) -> T {
+    black_box(value)
+}
+
+/// Print a section header so `cargo bench` output groups cleanly.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = run("noop-ish", 5, 50, || {
+            keep((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn batched_reports_per_call() {
+        let r = run_batched("batched", 2, 10, 100, || {
+            keep(1u64 + 1);
+        });
+        assert_eq!(r.iters, 10);
+        // per-call latency of an add must be far under 10µs
+        assert!(r.mean_ns < 10_000.0, "mean {}", r.mean_ns);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+    }
+}

@@ -1,0 +1,259 @@
+//! TOML-subset configuration parser (no `toml`/`serde` offline).
+//!
+//! Supports what the launcher's config files use: `[section]` headers,
+//! `key = value` with string/number/bool/array values, `#` comments.
+//! Typed getters return helpful errors naming the section and key.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: `section -> key -> value`. Keys outside any
+/// section land in the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct Conf {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Conf {
+    pub fn parse(text: &str) -> Result<Conf> {
+        let mut conf = Conf::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                conf.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value for '{}'", lineno + 1, key.trim()))?;
+            conf.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(conf)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Conf> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    pub fn f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow!("[{section}] {key} must be a number, got {v:?}")),
+        }
+    }
+
+    pub fn usize(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        let f = self.f64(section, key, default as f64)?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("[{section}] {key} must be a non-negative integer, got {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn string(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("[{section}] {key} must be a string, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("[{section}] {key} must be a bool, got {v:?}")),
+        }
+    }
+
+    pub fn f64_list(&self, section: &str, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(section, key) {
+            None => Ok(default.to_vec()),
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| anyhow!("[{section}] {key}: non-numeric array element"))
+                })
+                .collect(),
+            Some(v) => bail!("[{section}] {key} must be an array, got {v:?}"),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    let t = text.trim();
+    if t.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    t.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("cannot parse '{t}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster shape
+[cluster]
+workers = 16
+vcpus_per_worker = 90   # Borg-style limit
+mem_gb = 125.0
+name = "testbed"
+debug = false
+
+[workload]
+rps_sweep = [2, 3, 4, 5, 6]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Conf::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize("cluster", "workers", 0).unwrap(), 16);
+        assert_eq!(c.f64("cluster", "mem_gb", 0.0).unwrap(), 125.0);
+        assert_eq!(c.string("cluster", "name", "").unwrap(), "testbed");
+        assert!(!c.bool("cluster", "debug", true).unwrap());
+        assert_eq!(
+            c.f64_list("workload", "rps_sweep", &[]).unwrap(),
+            vec![2.0, 3.0, 4.0, 5.0, 6.0]
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Conf::parse("").unwrap();
+        assert_eq!(c.usize("cluster", "workers", 7).unwrap(), 7);
+        assert_eq!(c.string("a", "b", "x").unwrap(), "x");
+    }
+
+    #[test]
+    fn type_errors_name_the_key() {
+        let c = Conf::parse("[s]\nk = \"str\"").unwrap();
+        let err = c.f64("s", "k", 0.0).unwrap_err().to_string();
+        assert!(err.contains("[s] k"), "{err}");
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = Conf::parse("[s]\nk = \"a # b\"").unwrap();
+        assert_eq!(c.string("s", "k", "").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Conf::parse("[unterminated").is_err());
+        assert!(Conf::parse("keyonly").is_err());
+        assert!(Conf::parse("k = ").is_err());
+        assert!(Conf::parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn integer_validation() {
+        let c = Conf::parse("[s]\nk = 1.5\nn = -2").unwrap();
+        assert!(c.usize("s", "k", 0).is_err());
+        assert!(c.usize("s", "n", 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained substrates (no third-party deps available offline):
+//! PRNG + distributions, statistics, JSON, config parsing, tables,
+//! property testing, micro-benchmarking, logging.
+
+pub mod bench;
+pub mod conf;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,86 @@
+//! Mini property-testing harness (no `proptest` in the offline build).
+//!
+//! `check(seed_base, cases, |rng| ...)` runs a closure over `cases`
+//! independently-seeded RNGs and reports the failing seed so a failure is
+//! reproducible with `check_one(seed, ...)`. Generators live on [`Rng`]
+//! itself (uniform/exp/normal/...) plus the helpers here for common
+//! simulation inputs.
+
+use super::rng::Rng;
+
+/// Run `body` for `cases` deterministic seeds. Panics with the seed on the
+/// first failing case (the body panics to signal failure, like a test).
+pub fn check(seed_base: u64, cases: u64, body: impl Fn(&mut Rng)) {
+    for i in 0..cases {
+        let seed = seed_base.wrapping_add(i).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_one(seed: u64, body: impl Fn(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    body(&mut rng);
+}
+
+/// A random vector of f64 in [lo, hi).
+pub fn vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+/// A random vector of f32 in [lo, hi).
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| rng.range_f64(lo as f64, hi as f64) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u64);
+        check(1, 50, |_rng| {
+            counter.set(counter.get() + 1);
+        });
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(2, 100, |rng| {
+                // fails eventually
+                assert!(rng.f64() < 0.95, "drew a large value");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seed 0x"), "{msg}");
+    }
+
+    #[test]
+    fn vec_generators_in_range() {
+        check(3, 20, |rng| {
+            let v = vec_f64(rng, 32, -1.0, 1.0);
+            assert_eq!(v.len(), 32);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        });
+    }
+}

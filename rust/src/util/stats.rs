@@ -1,0 +1,273 @@
+//! Streaming-friendly statistics: percentiles, summaries, histograms, CDFs.
+//!
+//! Every figure in the paper reports distributions (p50/p75/p90/p95 wasted
+//! resources, SLO-violation fractions, utilization CDFs); this module is
+//! the single implementation the metrics and experiment layers share.
+
+/// Summary of a sample: count, mean, std, min/max and key percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn empty() -> Self {
+        Summary {
+            count: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p75: 0.0,
+            p90: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        }
+    }
+}
+
+/// Percentile with linear interpolation between closest ranks
+/// (NIST method R-7, matching numpy's default).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+    match sorted.len() {
+        0 => 0.0,
+        1 => sorted[0],
+        n => {
+            let rank = p / 100.0 * (n - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+        }
+    }
+}
+
+/// Compute a [`Summary`] of a sample (copies + sorts internally).
+pub fn summarize(values: &[f64]) -> Summary {
+    if values.is_empty() {
+        return Summary::empty();
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        count: n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        max: v[n - 1],
+        p50: percentile(&v, 50.0),
+        p75: percentile(&v, 75.0),
+        p90: percentile(&v, 90.0),
+        p95: percentile(&v, 95.0),
+        p99: percentile(&v, 99.0),
+    }
+}
+
+/// Median of a sample (convenience).
+pub fn median(values: &[f64]) -> f64 {
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    percentile(&v, 50.0)
+}
+
+/// Mean of a sample.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
+/// Fraction of values satisfying a predicate, as a percentage 0..100.
+pub fn percent_where<T>(values: &[T], pred: impl Fn(&T) -> bool) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    100.0 * values.iter().filter(|v| pred(v)).count() as f64 / values.len() as f64
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside clamp to edge bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = if x <= self.lo {
+            0
+        } else if x >= self.hi {
+            n - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize
+        };
+        self.bins[idx.min(n - 1)] += 1;
+        self.total += 1;
+    }
+
+    /// Fraction of mass at or below bin `i` (inclusive CDF).
+    pub fn cdf(&self) -> Vec<f64> {
+        let mut acc = 0u64;
+        self.bins
+            .iter()
+            .map(|&b| {
+                acc += b;
+                if self.total == 0 { 0.0 } else { acc as f64 / self.total as f64 }
+            })
+            .collect()
+    }
+}
+
+/// Empirical CDF points (x, F(x)) from a sample — used by figure dumps.
+pub fn ecdf(values: &[f64]) -> Vec<(f64, f64)> {
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    let n = v.len();
+    v.into_iter()
+        .enumerate()
+        .map(|(i, x)| (x, (i + 1) as f64 / n as f64))
+        .collect()
+}
+
+/// Online mean/variance (Welford). Used by the worker utilization daemon
+/// where we cannot afford to buffer every 10 ms sample.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if self.n == 1 || x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(summarize(&[]).count, 0);
+    }
+
+    #[test]
+    fn percent_where_counts() {
+        let v = [1, 2, 3, 4];
+        assert!((percent_where(&v, |x| *x > 2) - 50.0).abs() < 1e-12);
+        assert_eq!(percent_where::<i32>(&[], |_| true), 0.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(-5.0); // clamps to bin 0
+        h.add(0.5);
+        h.add(9.9);
+        h.add(50.0); // clamps to last
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.total, 4);
+        let cdf = h.cdf();
+        assert!((cdf[9] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let pts = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(pts[0].0, 1.0);
+        assert!((pts[2].1 - 1.0).abs() < 1e-12);
+        assert!(pts.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 4.0, 2.0, 8.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        let s = summarize(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.var().sqrt() - s.std).abs() < 1e-9);
+        assert_eq!(w.max(), 8.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((median(&[1.0, 2.0, 3.0, 4.0]) - 2.5).abs() < 1e-12);
+    }
+}

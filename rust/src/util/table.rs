@@ -1,0 +1,140 @@
+//! ASCII table rendering for experiment output — every `shabari experiment`
+//! runner prints its figure/table as rows the way the paper reports them.
+
+/// A simple column-aligned table with a title and optional footnote.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub note: Option<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            note: None,
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {} in table '{}'",
+            cells.len(),
+            self.headers.len(),
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, note: &str) -> &mut Self {
+        self.note = Some(note.to_string());
+        self
+    }
+
+    /// Render with column alignment: first column left, rest right.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * (ncols.saturating_sub(1));
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str(" | ");
+                }
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                if i == 0 {
+                    line.push_str(cell);
+                    line.push_str(&" ".repeat(pad));
+                } else {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(cell);
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        if let Some(note) = &self.note {
+            out.push_str(&format!("note: {note}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with `digits` decimals, trimming to an int when exact.
+pub fn fnum(x: f64, digits: usize) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e12 && digits <= 6 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.digits$}")
+    }
+}
+
+/// Format a percentage.
+pub fn fpct(x: f64) -> String {
+    format!("{x:.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Fig X", &["system", "slo viol", "waste"]);
+        t.row(vec!["shabari".into(), "4.2%".into(), "0".into()]);
+        t.row(vec!["static-large".into(), "12.9%".into(), "11".into()]);
+        let r = t.render();
+        assert!(r.contains("== Fig X =="));
+        let lines: Vec<&str> = r.lines().collect();
+        // all data lines have the same width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert!(r.contains("shabari"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fnum(3.0, 2), "3");
+        assert_eq!(fnum(3.14159, 2), "3.14");
+        assert_eq!(fpct(12.3456), "12.3%");
+    }
+
+    #[test]
+    fn note_rendered() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]).note("lower is better");
+        assert!(t.render().contains("note: lower is better"));
+    }
+}

@@ -1,0 +1,251 @@
+//! Property tests over coordinator invariants (util::prop harness —
+//! the offline build has no proptest crate; failures report their seed
+//! for reproduction with `prop::check_one`).
+
+use shabari::coordinator::allocator::cost::{
+    self, class_mem_mb, class_vcpus, mem_class, vcpu_class, SlackPolicy,
+};
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::scheduler::Scheduler;
+use shabari::featurizer::{FeatureVector, InputKind, InputSpec};
+use shabari::functions::catalog::CATALOG;
+use shabari::learner::{argmin, cost_vector};
+use shabari::runtime::NUM_CLASSES;
+use shabari::simulator::container::Container;
+use shabari::simulator::worker::Cluster;
+use shabari::simulator::{ContainerChoice, InvocationRecord, Request, SimConfig, Verdict};
+use shabari::util::prop;
+use shabari::util::rng::Rng;
+
+fn random_record(rng: &mut Rng) -> InvocationRecord {
+    let vcpus = rng.range_usize(1, 48) as u32;
+    let alloc_mem = (rng.range_usize(2, 48) as u32) * 128;
+    let exec = rng.range_f64(0.1, 120.0);
+    let slo = rng.range_f64(0.1, 120.0);
+    let peak = rng.range_f64(0.5, vcpus as f64);
+    InvocationRecord {
+        id: rng.next_u64(),
+        func: rng.below(CATALOG.len()),
+        input: InputSpec::new(InputKind::Payload),
+        worker: 0,
+        vcpus,
+        mem_mb: alloc_mem,
+        requested_vcpus: vcpus,
+        requested_mem_mb: alloc_mem,
+        arrival: 0.0,
+        cold_start_s: 0.0,
+        had_cold_start: rng.chance(0.3),
+        overhead_s: 0.0,
+        exec_s: exec,
+        e2e_s: exec,
+        end: exec,
+        slo_s: slo,
+        verdict: if rng.chance(0.9) { Verdict::Completed } else { Verdict::OomKilled },
+        avg_vcpus_used: peak * rng.range_f64(0.3, 1.0),
+        peak_vcpus_used: peak,
+        mem_used_gb: rng.range_f64(0.05, alloc_mem as f64 / 1024.0),
+    }
+}
+
+#[test]
+fn prop_cost_vector_valid() {
+    // minimum cost exactly 1 at the target; costs grow monotonically away
+    prop::check(0xC0, 200, |rng| {
+        let target = rng.below(NUM_CLASSES);
+        let penalty = rng.range_f64(1.0, 6.0) as f32;
+        let c = cost_vector(target, penalty);
+        assert_eq!(argmin(&c), target);
+        assert_eq!(c[target], 1.0);
+        for i in 1..NUM_CLASSES {
+            if i <= target {
+                assert!(c[i - 1] >= c[i], "left side decreasing toward target");
+            } else {
+                assert!(c[i] >= c[i - 1], "right side increasing from target");
+            }
+        }
+        assert!(c.iter().all(|v| *v >= 1.0));
+    });
+}
+
+#[test]
+fn prop_vcpu_target_in_range_and_sane() {
+    prop::check(0xC1, 500, |rng| {
+        let rec = random_record(rng);
+        for policy in [SlackPolicy::absolute_default(), SlackPolicy::Proportional] {
+            let t = cost::vcpu_target_class(&rec, policy);
+            assert!(t < NUM_CLASSES);
+            let target_vcpus = class_vcpus(t);
+            let met = rec.verdict == Verdict::Completed && rec.exec_s <= rec.slo_s;
+            if met {
+                // never grow on a met SLO
+                assert!(
+                    target_vcpus <= rec.vcpus,
+                    "met SLO must not grow: {} -> {}",
+                    rec.vcpus,
+                    target_vcpus
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mem_target_covers_footprint() {
+    prop::check(0xC2, 500, |rng| {
+        let rec = random_record(rng);
+        let t = cost::mem_target_class(&rec);
+        if rec.verdict == Verdict::Completed {
+            let target_mb = class_mem_mb(t) as f64;
+            let used_mb = rec.mem_used_gb * 1024.0;
+            assert!(
+                target_mb + 1e-6 >= used_mb.min(cost::MAX_MEM_MB as f64 - 128.0),
+                "target {target_mb} must cover footprint {used_mb}"
+            );
+        } else {
+            // OOM kill: target strictly above the failed allocation
+            assert!(class_mem_mb(t) > rec.mem_mb || rec.mem_mb >= cost::MAX_MEM_MB - 256);
+        }
+    });
+}
+
+#[test]
+fn prop_class_encodings_roundtrip() {
+    prop::check(0xC3, 200, |rng| {
+        let v = rng.range_usize(1, 48) as u32;
+        assert_eq!(class_vcpus(vcpu_class(v)), v);
+        let m = (rng.range_usize(1, 48) as u32) * 128;
+        assert_eq!(class_mem_mb(mem_class(m)), m);
+    });
+}
+
+#[test]
+fn prop_scheduler_never_routes_to_smaller_container() {
+    prop::check(0xC4, 200, |rng| {
+        let cfg = SimConfig::small();
+        let mut cluster = Cluster::new(&cfg);
+        // seed random warm containers
+        let func = rng.below(CATALOG.len());
+        for id in 1..=rng.range_usize(1, 8) as u64 {
+            let vc = rng.range_usize(1, 32) as u32;
+            let mem = (rng.range_usize(2, 32) as u32) * 128;
+            let w = rng.below(cluster.len());
+            let mut c = Container::new(id, func, vc, mem, 0.0);
+            c.mark_ready(0.0);
+            cluster.workers[w].containers.insert(id, c);
+        }
+        let vcpus = rng.range_usize(1, 32) as u32;
+        let mem_mb = (rng.range_usize(2, 32) as u32) * 128;
+        let req = Request {
+            id: 1,
+            func,
+            input: InputSpec::new(CATALOG[func].input_kind),
+            arrival: 0.0,
+            slo_s: 1.0,
+        };
+        let mut s = ShabariScheduler::new(rng.next_u64());
+        let d = s.schedule(&req, vcpus, mem_mb, &cluster);
+        if let ContainerChoice::Warm(cid) = d.container {
+            let c = cluster.workers[d.worker]
+                .containers
+                .get(&cid)
+                .expect("routed container");
+            assert!(c.vcpus >= vcpus && c.mem_mb >= mem_mb, "warm must be >= requested");
+            assert_eq!(c.func, func);
+            // background launch accompanies larger-warm routes only
+            if c.vcpus == vcpus && c.mem_mb == mem_mb {
+                assert!(d.background.is_none());
+            }
+        }
+        assert!(d.worker < cluster.len());
+    });
+}
+
+#[test]
+fn prop_worker_rates_work_conserving() {
+    use shabari::simulator::worker::{ActiveInv, Phase, PhaseSpec, Worker};
+    prop::check(0xC5, 200, |rng| {
+        let cfg = SimConfig::default();
+        let mut w = Worker::new(0, &cfg);
+        let n = rng.range_usize(1, 12);
+        for i in 0..n {
+            let demand = rng.range_f64(1.0, 48.0);
+            let alloc = demand + rng.range_f64(0.0, 16.0);
+            let inv = ActiveInv {
+                inv_id: i as u64 + 1,
+                container_id: i as u64 + 1,
+                alloc_vcpus: alloc,
+                remaining: 100.0,
+                current: PhaseSpec { phase: Phase::Parallel, work: 100.0, demand },
+                pending: vec![],
+                cpu_seconds_done: 0.0,
+                exec_started: 0.0,
+                peak_vcpus: demand,
+                mem_used_gb: 0.5,
+            };
+            w.start_invocation(inv, alloc.ceil() as u32, 512);
+        }
+        let rates = w.cpu_rates();
+        let total: f64 = rates.values().sum();
+        let demand_total: f64 = w.active.values().map(|a| a.current.demand).sum();
+        // no invocation exceeds its demand
+        for a in w.active.values() {
+            assert!(rates[&a.inv_id] <= a.current.demand + 1e-9);
+            assert!(rates[&a.inv_id] >= 0.0);
+        }
+        // work conserving up to the interference factor
+        let cap = w.physical_cores.min(demand_total) * w.interference_factor();
+        assert!(total <= cap + 1e-6, "total rate {total} exceeds capacity {cap}");
+        if demand_total > w.physical_cores {
+            assert!(
+                total >= 0.9 * cap,
+                "under contention capacity must be used: {total} vs {cap}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_featurizer_stable_and_padded() {
+    prop::check(0xC6, 300, |rng| {
+        let kind = *rng.choose(InputKind::all());
+        let mut s = InputSpec::new(kind);
+        s.id = rng.next_u64() | 1;
+        s.size_bytes = rng.range_f64(1.0, 3e9);
+        s.width = rng.range_f64(16.0, 4000.0);
+        s.height = rng.range_f64(16.0, 4000.0);
+        s.rows = rng.range_f64(1.0, 1e7);
+        s.cols = rng.range_f64(1.0, 64.0);
+        s.duration_s = rng.range_f64(0.1, 900.0);
+        s.bitrate = rng.range_f64(1e4, 1e7);
+        s.length = rng.range_f64(1.0, 5e4);
+        let a = shabari::featurizer::featurize(&s);
+        let b = shabari::featurizer::featurize(&s);
+        assert_eq!(a.vector, b.vector, "featurization deterministic");
+        assert_eq!(a.vector.0[0], 1.0, "bias slot");
+        assert_eq!(a.vector.0[FeatureVector::SLO_SLOT], 0.0, "slo slot empty");
+        assert!(a.vector.0.iter().all(|v| v.is_finite()));
+        assert!(a.extract_latency_s >= 0.0 && a.extract_latency_s < 0.1);
+    });
+}
+
+#[test]
+fn prop_demand_models_monotone_and_finite() {
+    prop::check(0xC7, 100, |rng| {
+        let func = &CATALOG[rng.below(CATALOG.len())];
+        let pool = shabari::functions::inputs::pool(func, rng);
+        for input in &pool {
+            let d = (func.demand)(input);
+            assert!(d.serial_s >= 0.0 && d.serial_s.is_finite());
+            assert!(d.parallel_cpu_s >= 0.0 && d.parallel_cpu_s.is_finite());
+            assert!(d.maxpar >= 1.0 && d.maxpar <= 48.0);
+            assert!(d.mem_gb > 0.0 && d.mem_gb < 8.0);
+            // more vCPUs never slower
+            let mut prev = f64::INFINITY;
+            for k in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 48.0] {
+                let t = d.ideal_exec_s(k, 10.0);
+                assert!(t <= prev + 1e-9);
+                prev = t;
+            }
+        }
+    });
+}

@@ -1,0 +1,125 @@
+//! Experiment smoke tests: every figure/table runner executes, and the
+//! paper's qualitative shapes (DESIGN.md §4) hold on scaled-down sweeps.
+
+use shabari::experiments::common::{run_one, sim_config, Ctx};
+use shabari::experiments::{self};
+
+fn quick_ctx() -> Ctx {
+    Ctx { duration_s: 180.0, ..Default::default() }
+}
+
+#[test]
+fn characterization_experiments_run() {
+    let ctx = quick_ctx();
+    for id in ["fig1", "fig3", "fig4", "table1", "table2"] {
+        experiments::run(id, &ctx).unwrap_or_else(|e| panic!("{id}: {e}"));
+    }
+}
+
+#[test]
+fn fig6_formulation_shapes() {
+    // per-function beats one-hot on idle vCPUs (paper: ~5x p90 gap)
+    let ctx = quick_ctx();
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let (_, per_func) = run_one("shabari", &ctx, &w, 4.0, &cfg).unwrap();
+    let (_, onehot) = run_one("shabari-onehot", &ctx, &w, 4.0, &cfg).unwrap();
+    assert!(
+        onehot.wasted_vcpus.p90 >= per_func.wasted_vcpus.p90,
+        "one-hot must waste at least as many p90 vCPUs: {} vs {}",
+        onehot.wasted_vcpus.p90,
+        per_func.wasted_vcpus.p90
+    );
+}
+
+#[test]
+fn fig8_headline_shapes() {
+    let ctx = quick_ctx();
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let names = ["shabari", "static-large", "parrotfish", "cypress"];
+    let mut m = std::collections::HashMap::new();
+    for n in names {
+        let (_, metrics) = run_one(n, &ctx, &w, 5.0, &cfg).unwrap();
+        m.insert(n, metrics);
+    }
+    // Shabari beats every baseline on violations at high load
+    for other in ["static-large", "parrotfish", "cypress"] {
+        assert!(
+            m["shabari"].slo_violation_pct < m[other].slo_violation_pct,
+            "shabari {} vs {other} {}",
+            m["shabari"].slo_violation_pct,
+            m[other].slo_violation_pct
+        );
+    }
+    // median wasted vCPUs ~0 (headline claim)
+    assert!(m["shabari"].wasted_vcpus.p50 <= 1.0);
+    // Parrotfish wastes several times Shabari's median memory
+    assert!(
+        m["parrotfish"].wasted_mem_gb.p50 > 0.0
+            || m["shabari"].wasted_mem_gb.p50 <= m["parrotfish"].wasted_mem_gb.p50 + 0.5
+    );
+}
+
+#[test]
+fn fig10_cold_start_shape() {
+    // Shabari's scheduler cuts cold-start fraction vs the OW scheduler
+    let ctx = quick_ctx();
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let (_, shabari) = run_one("shabari", &ctx, &w, 5.0, &cfg).unwrap();
+    let (_, ow) = run_one("shabari-ow-sched", &ctx, &w, 5.0, &cfg).unwrap();
+    assert!(
+        shabari.cold_start_pct < ow.cold_start_pct,
+        "{} vs {}",
+        shabari.cold_start_pct,
+        ow.cold_start_pct
+    );
+    assert!(shabari.background_launches > 0, "proactive launches must fire");
+}
+
+#[test]
+fn table3_multi_threaded_explore_more_sizes() {
+    let ctx = quick_ctx();
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let (res, _) = run_one("shabari", &ctx, &w, 5.0, &cfg).unwrap();
+    let idx = shabari::functions::catalog::index_of;
+    let matmult = res.unique_container_sizes(idx("matmult").unwrap());
+    let qr = res.unique_container_sizes(idx("qr").unwrap());
+    assert!(
+        matmult > qr,
+        "multi-threaded functions explore more container sizes: matmult {matmult} vs qr {qr}"
+    );
+}
+
+#[test]
+fn fig11_oversubscription_monotone_timeouts() {
+    use shabari::coordinator::allocator::ResourceAllocator;
+    use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+    use shabari::coordinator::ShabariPolicy;
+    use shabari::metrics::from_result;
+    use shabari::simulator::engine::simulate;
+
+    let ctx = quick_ctx();
+    let w = ctx.workload();
+    let run = |limit: f64| {
+        let mut cfg = sim_config(&ctx);
+        cfg.sched_vcpu_limit = limit;
+        let alloc = ResourceAllocator::new(ctx.allocator_cfg()).unwrap();
+        let mut p = ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(3)));
+        let trace = w.trace(6.0, ctx.duration_s, 44);
+        from_result("s", &simulate(cfg, &mut p, trace))
+    };
+    let m90 = run(90.0);
+    let m130 = run(130.0);
+    assert!(
+        m130.timeout_pct + m130.slo_violation_pct >= m90.timeout_pct,
+        "higher oversubscription cannot reduce timeouts to nothing"
+    );
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    assert!(experiments::run("fig999", &quick_ctx()).is_err());
+}

@@ -1,0 +1,128 @@
+//! Native-vs-XLA learner parity: both backends implement the same CSOAA
+//! math; after identical update sequences their weights and predictions
+//! must agree to f32 round-off. This pins the rust mirror to the
+//! Pallas/JAX ground truth end-to-end (through the real artifacts).
+
+use std::rc::Rc;
+
+use shabari::learner::native::NativeCsmc;
+use shabari::learner::xla::XlaCsmc;
+use shabari::learner::{cost_vector, CsmcModel};
+use shabari::runtime::{XlaEngine, FEAT_DIM, NUM_CLASSES};
+use shabari::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn rand_x(rng: &mut Rng) -> [f32; FEAT_DIM] {
+    let mut x = [0f32; FEAT_DIM];
+    for v in x.iter_mut() {
+        *v = rng.range_f64(-1.0, 1.0) as f32;
+    }
+    x[0] = 1.0;
+    x
+}
+
+#[test]
+fn weights_match_after_update_sequence() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Rc::new(XlaEngine::load_dir(artifacts_dir()).unwrap());
+    let mut xla = XlaCsmc::new(engine, 0.05);
+    let mut native = NativeCsmc::new(0.05);
+    let mut rng = Rng::new(42);
+
+    for step in 0..50 {
+        let x = rand_x(&mut rng);
+        let target = rng.below(NUM_CLASSES);
+        let costs = cost_vector(target, 2.0);
+        xla.update(&x, &costs);
+        native.update(&x, &costs);
+
+        if step % 10 == 9 {
+            for (i, (a, b)) in xla.weights().iter().zip(native.w.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                    "step {step}, w[{i}]: xla {a} vs native {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn predictions_match() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Rc::new(XlaEngine::load_dir(artifacts_dir()).unwrap());
+    let mut xla = XlaCsmc::new(engine, 0.05);
+    let mut native = NativeCsmc::new(0.05);
+    let mut rng = Rng::new(7);
+
+    // train both on the same stream
+    for _ in 0..60 {
+        let x = rand_x(&mut rng);
+        let costs = cost_vector(rng.below(NUM_CLASSES), 2.0);
+        xla.update(&x, &costs);
+        native.update(&x, &costs);
+    }
+    // predictions agree on fresh inputs
+    for _ in 0..20 {
+        let x = rand_x(&mut rng);
+        assert_eq!(xla.predict(&x), native.predict(&x));
+    }
+}
+
+#[test]
+fn batch_scores_match_singles() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Rc::new(XlaEngine::load_dir(artifacts_dir()).unwrap());
+    let mut xla = XlaCsmc::new(engine, 0.05);
+    let mut rng = Rng::new(9);
+    for _ in 0..20 {
+        let x = rand_x(&mut rng);
+        xla.update(&x, &cost_vector(rng.below(NUM_CLASSES), 2.0));
+    }
+    // batched artifact has fixed B=64
+    let xs: Vec<[f32; FEAT_DIM]> =
+        (0..shabari::runtime::BATCH).map(|_| rand_x(&mut rng)).collect();
+    let flat: Vec<f32> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+    let batch = xla.scores_batch(&flat).unwrap();
+    for (bi, x) in xs.iter().enumerate() {
+        let single = xla.scores(x);
+        for c in 0..NUM_CLASSES {
+            let a = batch[bi * NUM_CLASSES + c];
+            let b = single[c];
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "[{bi},{c}]: batch {a} vs single {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn learned_behaviour_matches_convergence() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Rc::new(XlaEngine::load_dir(artifacts_dir()).unwrap());
+    let mut xla = XlaCsmc::new(engine, 0.1);
+    let mut rng = Rng::new(21);
+    let x = rand_x(&mut rng);
+    let costs = cost_vector(33, 2.0);
+    for _ in 0..150 {
+        xla.update(&x, &costs);
+    }
+    assert_eq!(xla.predict(&x), 33, "XLA learner must converge to target class");
+}

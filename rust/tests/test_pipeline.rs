@@ -1,0 +1,138 @@
+//! Full-pipeline integration: trace generation → Shabari coordinator →
+//! DES cluster → metrics, including the XLA production path when
+//! artifacts are present.
+
+use shabari::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::ShabariPolicy;
+use shabari::experiments::common::{make_policy, run_one, sim_config, Ctx};
+use shabari::learner::xla::Backend;
+use shabari::metrics::from_result;
+use shabari::simulator::engine::simulate;
+use shabari::simulator::SimConfig;
+use shabari::workload::Workload;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn full_trace_all_policies_complete() {
+    let ctx = Ctx { duration_s: 120.0, ..Default::default() };
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    for name in shabari::experiments::common::POLICIES {
+        let (res, m) = run_one(name, &ctx, &w, 3.0, &cfg).unwrap();
+        assert_eq!(res.records.len(), m.invocations, "{name}");
+        assert!(m.invocations > 100, "{name}: {} invocations", m.invocations);
+        // every invocation reaches a terminal state and is accounted
+        assert!(m.slo_violation_pct <= 100.0);
+    }
+}
+
+#[test]
+fn shabari_beats_statics_on_waste_everywhere() {
+    let ctx = Ctx { duration_s: 300.0, ..Default::default() };
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let (_, shabari) = run_one("shabari", &ctx, &w, 4.0, &cfg).unwrap();
+    let (_, medium) = run_one("static-medium", &ctx, &w, 4.0, &cfg).unwrap();
+    assert!(shabari.wasted_vcpus.p50 < medium.wasted_vcpus.p50);
+    assert!(shabari.wasted_mem_gb.p50 < medium.wasted_mem_gb.p50);
+    assert!(shabari.vcpu_utilization.p50 > medium.vcpu_utilization.p50);
+    assert!(shabari.slo_violation_pct < medium.slo_violation_pct);
+}
+
+#[test]
+fn xla_production_path_runs_the_full_pipeline() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut cfg = AllocatorConfig::xla(artifacts.to_str().unwrap());
+    cfg.learner_backend = Backend::Xla;
+    let allocator = ResourceAllocator::new(cfg).unwrap();
+    let mut policy = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(7)));
+    let w = Workload::build(42, 1.4);
+    let trace = w.trace(2.0, 90.0, 13);
+    let n = trace.len();
+    let res = simulate(SimConfig::small(), &mut policy, trace);
+    assert_eq!(res.records.len(), n);
+    let m = from_result("shabari-xla", &res);
+    assert!(m.slo_violation_pct < 50.0, "XLA path must behave sanely");
+}
+
+#[test]
+fn xla_and_native_backends_agree_on_decisions() {
+    if !artifacts_present() {
+        return;
+    }
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let w = Workload::build(42, 1.4);
+    let trace = w.trace(2.0, 60.0, 5);
+
+    let run = |backend: Backend| {
+        let mut cfg = AllocatorConfig::default();
+        cfg.learner_backend = backend;
+        cfg.artifacts_dir = artifacts.to_str().unwrap().to_string();
+        let allocator = ResourceAllocator::new(cfg).unwrap();
+        let mut policy = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(9)));
+        let res = simulate(SimConfig::small(), &mut policy, trace.clone());
+        let mut rs = res.records;
+        rs.sort_by_key(|r| r.id);
+        rs.iter().map(|r| (r.requested_vcpus, r.requested_mem_mb)).collect::<Vec<_>>()
+    };
+    let native = run(Backend::Native);
+    let xla = run(Backend::Xla);
+    // identical math modulo f32 round-off: allocations may differ on an
+    // argmin tie, but the overwhelming majority must agree exactly
+    let agree = native.iter().zip(&xla).filter(|(a, b)| a == b).count();
+    assert!(
+        agree * 100 >= native.len() * 95,
+        "backends agree on {}/{} decisions",
+        agree,
+        native.len()
+    );
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let ctx = Ctx { duration_s: 120.0, ..Default::default() };
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let run = || {
+        let mut p = make_policy("shabari", &ctx, &w).unwrap();
+        let trace = w.trace(3.0, ctx.duration_s, 21);
+        let res = simulate(cfg.clone(), &mut p, trace);
+        let mut v: Vec<(u64, u32, u64)> = res
+            .records
+            .iter()
+            .map(|r| (r.id, r.requested_vcpus, (r.exec_s * 1e6) as u64))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn overheads_propagate_to_e2e_latency() {
+    let ctx = Ctx { duration_s: 120.0, ..Default::default() };
+    let w = ctx.workload();
+    let cfg = sim_config(&ctx);
+    let (res, _) = run_one("shabari", &ctx, &w, 2.0, &cfg).unwrap();
+    for r in &res.records {
+        assert!(
+            r.e2e_s + 1e-9 >= r.exec_s + r.cold_start_s + r.overhead_s,
+            "e2e {} must include exec {} + cold {} + overhead {}",
+            r.e2e_s,
+            r.exec_s,
+            r.cold_start_s,
+            r.overhead_s
+        );
+        assert!(r.overhead_s > 0.0, "decision overhead is never free");
+    }
+}

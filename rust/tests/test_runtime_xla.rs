@@ -1,0 +1,148 @@
+//! Integration: load the real AOT artifacts through PJRT and check numerics
+//! against hand-computed CSOAA math. This is the L3<->L2/L1 contract test.
+
+use shabari::runtime::{XlaEngine, BATCH, FEAT_DIM, NUM_CLASSES};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Deterministic pseudo-random fill (no rand crate needed here).
+fn fill(v: &mut [f32], mut seed: u64) {
+    for x in v.iter_mut() {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *x = ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+    }
+}
+
+#[test]
+fn predict_matches_host_matvec() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = XlaEngine::load_dir(artifacts_dir()).expect("load artifacts");
+    let (c, f) = (NUM_CLASSES, FEAT_DIM);
+    let mut w = vec![0f32; c * f];
+    let mut x = vec![0f32; f];
+    fill(&mut w, 1);
+    fill(&mut x, 2);
+
+    let out = eng
+        .execute_f32(
+            "csmc_predict",
+            &[(&w, &[c as i64, f as i64]), (&x, &[f as i64])],
+        )
+        .expect("execute predict");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), c);
+
+    for i in 0..c {
+        let expect: f32 = (0..f).map(|j| w[i * f + j] * x[j]).sum();
+        let got = out[0][i];
+        assert!(
+            (expect - got).abs() <= 1e-5 * (1.0 + expect.abs()),
+            "class {i}: host {expect} vs xla {got}"
+        );
+    }
+}
+
+#[test]
+fn update_matches_host_sgd() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = XlaEngine::load_dir(artifacts_dir()).expect("load artifacts");
+    let (c, f) = (NUM_CLASSES, FEAT_DIM);
+    let mut w = vec![0f32; c * f];
+    let mut x = vec![0f32; f];
+    let mut costs = vec![0f32; c];
+    fill(&mut w, 3);
+    fill(&mut x, 4);
+    fill(&mut costs, 5);
+    let lr = 0.05f32;
+
+    let out = eng
+        .execute_f32(
+            "csmc_update",
+            &[
+                (&w, &[c as i64, f as i64]),
+                (&x, &[f as i64]),
+                (&costs, &[c as i64]),
+                (&[lr], &[]),
+            ],
+        )
+        .expect("execute update");
+    assert_eq!(out[0].len(), c * f);
+
+    for i in 0..c {
+        let pred: f32 = (0..f).map(|j| w[i * f + j] * x[j]).sum();
+        let err = pred - costs[i];
+        for j in 0..f {
+            let expect = w[i * f + j] - lr * err * x[j];
+            let got = out[0][i * f + j];
+            assert!(
+                (expect - got).abs() <= 1e-5 * (1.0 + expect.abs()),
+                "w[{i},{j}]: host {expect} vs xla {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn predict_batch_matches_host() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let eng = XlaEngine::load_dir(artifacts_dir()).expect("load artifacts");
+    let (c, f, b) = (NUM_CLASSES, FEAT_DIM, BATCH);
+    let mut w = vec![0f32; c * f];
+    let mut xs = vec![0f32; b * f];
+    fill(&mut w, 6);
+    fill(&mut xs, 7);
+
+    let out = eng
+        .execute_f32(
+            "csmc_predict_batch",
+            &[(&w, &[c as i64, f as i64]), (&xs, &[b as i64, f as i64])],
+        )
+        .expect("execute batch predict");
+    assert_eq!(out[0].len(), b * c);
+
+    // Spot-check a grid of entries (full check is O(B*C*F), fine too).
+    for bi in (0..b).step_by(7) {
+        for ci in (0..c).step_by(5) {
+            let expect: f32 = (0..f).map(|j| xs[bi * f + j] * w[ci * f + j]).sum();
+            let got = out[0][bi * c + ci];
+            assert!(
+                (expect - got).abs() <= 1e-5 * (1.0 + expect.abs()),
+                "[{bi},{ci}]: host {expect} vs xla {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_arity() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = XlaEngine::load_dir(artifacts_dir()).expect("load artifacts");
+    let err = eng.execute_f32("csmc_predict", &[(&[0f32; 16], &[16])]);
+    assert!(err.is_err(), "arity mismatch must error");
+}
+
+#[test]
+fn engine_rejects_unknown_name() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = XlaEngine::load_dir(artifacts_dir()).expect("load artifacts");
+    assert!(eng.execute_f32("nope", &[]).is_err());
+}
