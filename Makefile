@@ -1,0 +1,21 @@
+# Convenience targets. `make artifacts` is referenced throughout the
+# rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
+# kernels) to the HLO text artifacts the PJRT runtime loads.
+
+.PHONY: artifacts build test bench clean
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -rf out

@@ -21,12 +21,16 @@ use shabari::simulator::SimConfig;
 use shabari::workload::Workload;
 
 fn main() -> anyhow::Result<()> {
-    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
-    let acfg = if have_artifacts {
+    let have_xla = cfg!(feature = "xla")
+        && std::path::Path::new("artifacts/manifest.json").exists();
+    let acfg = if have_xla {
         println!("learner backend: XLA/PJRT (AOT Pallas/JAX artifacts)");
         AllocatorConfig::xla("artifacts")
     } else {
-        println!("learner backend: native (run `make artifacts` for the XLA path)");
+        println!(
+            "learner backend: native (build with --features xla and run \
+             `make artifacts` for the XLA path)"
+        );
         AllocatorConfig::default()
     };
 

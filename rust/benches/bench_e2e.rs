@@ -37,7 +37,7 @@ fn main() {
         bench_policy(name, &ctx, 5.0);
     }
 
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\n### shabari with the XLA/PJRT learner (production path)");
         let ctx = Ctx {
             duration_s: 600.0,
@@ -46,6 +46,6 @@ fn main() {
         };
         bench_policy("shabari", &ctx, 5.0);
     } else {
-        println!("(skipping XLA e2e: run `make artifacts` first)");
+        println!("(skipping XLA e2e: needs a --features xla build and `make artifacts`)");
     }
 }

@@ -1,10 +1,10 @@
 //! Learner hot-path benchmarks (Fig 14's predict/update overheads):
 //! native mirror vs the AOT XLA/PJRT production path, single + batched.
+//! The XLA half needs a `--features xla` build plus `make artifacts`.
 
 use shabari::learner::native::NativeCsmc;
-use shabari::learner::xla::XlaCsmc;
 use shabari::learner::{cost_vector, CsmcModel};
-use shabari::runtime::{XlaEngine, BATCH, FEAT_DIM, NUM_CLASSES};
+use shabari::runtime::{FEAT_DIM, NUM_CLASSES};
 use shabari::util::bench;
 
 fn x_vec(seed: f32) -> [f32; FEAT_DIM] {
@@ -28,6 +28,19 @@ fn main() {
         native.update(&x, &costs);
     });
 
+    xla_benches(&x, &costs);
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_benches(_x: &[f32; FEAT_DIM], _costs: &[f32; NUM_CLASSES]) {
+    println!("(skipping XLA benches: built without the `xla` feature)");
+}
+
+#[cfg(feature = "xla")]
+fn xla_benches(x: &[f32; FEAT_DIM], costs: &[f32; NUM_CLASSES]) {
+    use shabari::learner::xla::XlaCsmc;
+    use shabari::runtime::{XlaEngine, BATCH};
+
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("(skipping XLA benches: run `make artifacts` first)");
@@ -38,13 +51,13 @@ fn main() {
     let mut xla = XlaCsmc::new(engine, 0.3);
     // warm the executable caches
     for _ in 0..50 {
-        bench::keep(xla.scores(&x));
+        bench::keep(xla.scores(x));
     }
     bench::run("xla predict", 50, 1000, || {
-        bench::keep(xla.scores(&x));
+        bench::keep(xla.scores(x));
     });
     bench::run("xla update", 50, 1000, || {
-        xla.update(&x, &costs);
+        xla.update(x, costs);
     });
 
     let xs: Vec<f32> = (0..BATCH).flat_map(|i| x_vec(i as f32)).collect();
@@ -56,5 +69,4 @@ fn main() {
         bench::fmt_ns(r.mean_ns / BATCH as f64)
     );
     println!("  (paper fig14: predict 2-4 ms, update 4-5 ms on their shim)");
-    let _ = NUM_CLASSES;
 }

@@ -11,6 +11,7 @@ pub mod args;
 
 use anyhow::{bail, Result};
 
+use crate::experiments::sweep;
 use crate::experiments::{self, Ctx};
 use crate::learner::xla::Backend;
 
@@ -30,12 +31,19 @@ const BOOL_FLAGS: &[&str] = &["xla", "native", "verbose"];
 
 fn ctx_from(a: &args::Args) -> Result<Ctx> {
     let backend = if a.get_bool("xla") { Backend::Xla } else { Backend::Native };
+    let seeds = a.get_usize("seeds", 5)?.max(1);
+    let jobs = match a.get_usize("jobs", 0)? {
+        0 => sweep::default_jobs(), // 0 = auto: all available cores
+        n => n,
+    };
     Ok(Ctx {
         seed: a.get_u64("seed", 42)?,
         backend,
         duration_s: a.get_f64("duration", 600.0)?,
         slo_multiplier: a.get_f64("slo-multiplier", 1.4)?,
         artifacts_dir: a.get_or("artifacts", "artifacts"),
+        seeds,
+        jobs,
     })
 }
 
@@ -75,17 +83,33 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     let ctx = ctx_from(a)?;
     let policy = a.get_or("policy", "shabari");
     let rps = a.get_f64("rps", 4.0)?;
-    let workload = ctx.workload();
-    let cfg = experiments::common::sim_config(&ctx);
     let t0 = std::time::Instant::now();
-    let (res, m) = experiments::common::run_one(&policy, &ctx, &workload, rps, &cfg)?;
+    // One sweep cell replicated across --seeds, executed on --jobs threads.
+    let cells = [sweep::Cell::new(&policy, rps)];
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        experiments::common::run_cell(&cell.policy, &ctx, cell.rps, seed)
+    })?;
     let wall = t0.elapsed().as_secs_f64();
+    let out = &outcomes[0];
+    let m = out.mean_metrics();
+    let viol = out.stat(|m| m.slo_violation_pct);
     let mut t = crate::util::table::Table::new(
-        &format!("run: {policy} @ {rps} rps, {}s trace", ctx.duration_s),
-        &["metric", "value"],
+        &format!(
+            "run: {policy} @ {rps} rps, {}s trace, {} seed(s) x {} job(s)",
+            ctx.duration_s, ctx.seeds, ctx.jobs
+        ),
+        &["metric", "value (cross-seed mean)"],
     );
     t.row(vec!["invocations".into(), m.invocations.to_string()]);
     t.row(vec!["SLO violations".into(), format!("{:.1}%", m.slo_violation_pct)]);
+    t.row(vec![
+        "SLO violations p50/p99 over seeds".into(),
+        format!("{:.1}% / {:.1}%", viol.p50, viol.p99),
+    ]);
+    t.row(vec![
+        "SLO violations 95% CI".into(),
+        format!("[{:.1}%, {:.1}%]", viol.ci95.0, viol.ci95.1),
+    ]);
     t.row(vec!["wasted vCPUs p50/p95".into(), format!("{:.1} / {:.1}", m.wasted_vcpus.p50, m.wasted_vcpus.p95)]);
     t.row(vec!["wasted mem GB p50/p95".into(), format!("{:.2} / {:.2}", m.wasted_mem_gb.p50, m.wasted_mem_gb.p95)]);
     t.row(vec!["vCPU util p50".into(), format!("{:.0}%", 100.0 * m.vcpu_utilization.p50)]);
@@ -94,9 +118,15 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     t.row(vec!["OOM / timeout".into(), format!("{:.1}% / {:.1}%", m.oom_pct, m.timeout_pct)]);
     t.row(vec!["mean e2e latency".into(), format!("{:.2}s", m.mean_e2e_s)]);
     t.row(vec!["throughput".into(), format!("{:.2}/s", m.throughput)]);
-    t.row(vec!["containers created".into(), res.containers_created.to_string()]);
-    t.row(vec!["background launches".into(), res.background_launches.to_string()]);
-    t.row(vec!["sim wall time".into(), format!("{wall:.2}s ({:.0} inv/s)", m.invocations as f64 / wall)]);
+    t.row(vec!["containers created".into(), m.containers_created.to_string()]);
+    t.row(vec!["background launches".into(), m.background_launches.to_string()]);
+    t.row(vec![
+        "sweep wall time".into(),
+        format!(
+            "{wall:.2}s ({:.0} inv/s)",
+            (m.invocations * ctx.seeds) as f64 / wall.max(1e-9)
+        ),
+    ]);
     t.print();
     Ok(())
 }
@@ -129,6 +159,15 @@ fn cmd_profile(a: &args::Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_selfcheck(_a: &args::Args) -> Result<()> {
+    bail!(
+        "selfcheck exercises the XLA/PJRT learner; rebuild with \
+         `cargo run --features xla -- selfcheck` (and run `make artifacts`)"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_selfcheck(a: &args::Args) -> Result<()> {
     let ctx = ctx_from(a)?;
     println!("checking artifacts in '{}' ...", ctx.artifacts_dir);
@@ -183,10 +222,15 @@ fn print_help() {
            help         this message\n\
          \n\
          COMMON FLAGS:\n\
-           --seed <u64>            deterministic seed (default 42)\n\
+           --seed <u64>            deterministic base seed (default 42)\n\
+           --seeds <n>             replicates per sweep cell; each replicate\n\
+                                   re-seeds workload + policy + cluster as\n\
+                                   base ^ hash(cell, replicate) (default 5)\n\
+           --jobs <n>              sweep worker threads (default 0 = all cores)\n\
            --duration <s>          trace length (default 600)\n\
            --slo-multiplier <f>    SLO = f x median isolated time (default 1.4)\n\
-           --xla                   use the AOT XLA learner (production path)\n\
+           --xla                   use the AOT XLA learner (production path;\n\
+                                   needs a `--features xla` build)\n\
            --artifacts <dir>       artifact directory (default artifacts/)"
     );
 }

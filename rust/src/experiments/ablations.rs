@@ -1,31 +1,41 @@
 //! Design-exploration ablations: Figure 6 (ML formulation), Figure 7a
-//! (cost function), Figure 7b (scheduler placement policy).
+//! (cost function), Figure 7b (scheduler placement policy) — each a small
+//! sweep grid replicated across `Ctx::seeds` (DESIGN.md §4).
 
 use anyhow::Result;
 
 use crate::util::table::{fnum, fpct, Table};
 
-use super::common::{run_one, sim_config, Ctx};
+use super::common::{run_cell, Ctx};
+use super::sweep::{self, Cell};
 
 /// Figure 6: per-function vs one-hot vs per-input-type formulations —
 /// SLO violations and idle (wasted) vCPU distribution.
 pub fn fig6(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
-    let cfg = sim_config(ctx);
+    const VARIANTS: &[(&str, &str)] = &[
+        ("shabari", "per-function"),
+        ("shabari-onehot", "one-hot"),
+        ("shabari-per-input-type", "per-input-type"),
+    ];
+    let cells: Vec<Cell> = VARIANTS.iter().map(|(p, _)| Cell::new(p, 4.0)).collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_cell(&cell.policy, ctx, cell.rps, seed)
+    })?;
     let mut t = Table::new(
-        "Fig 6 — ML formulations for the online allocator (RPS 4)",
-        &["formulation", "SLO viol %", "idle vCPUs p50", "idle vCPUs p90", "idle mem p50 (GB)"],
+        &format!("Fig 6 — ML formulations for the online allocator (RPS 4, {} seed(s))", ctx.seeds),
+        &[
+            "formulation",
+            "SLO viol % [95% CI]",
+            "idle vCPUs p50",
+            "idle vCPUs p90",
+            "idle mem p50 (GB)",
+        ],
     );
-    for name in ["shabari", "shabari-onehot", "shabari-per-input-type"] {
-        let (_, m) = run_one(name, ctx, &workload, 4.0, &cfg)?;
-        let label = match name {
-            "shabari" => "per-function",
-            "shabari-onehot" => "one-hot",
-            _ => "per-input-type",
-        };
+    for ((_, label), out) in VARIANTS.iter().zip(&outcomes) {
+        let m = out.mean_metrics();
         t.row(vec![
             label.to_string(),
-            fpct(m.slo_violation_pct),
+            out.stat(|m| m.slo_violation_pct).fmt_ci(1),
             fnum(m.wasted_vcpus.p50, 1),
             fnum(m.wasted_vcpus.p90, 1),
             fnum(m.wasted_mem_gb.p50, 2),
@@ -38,19 +48,27 @@ pub fn fig6(ctx: &Ctx) -> Result<()> {
 
 /// Figure 7a: Absolute vs Proportional cost function — SLO violations.
 pub fn fig7a(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
-    let cfg = sim_config(ctx);
+    let rps_list = [4.0, 5.0, 6.0];
+    let cells: Vec<Cell> = rps_list
+        .iter()
+        .flat_map(|&rps| {
+            ["shabari", "shabari-proportional"].into_iter().map(move |p| Cell::new(p, rps))
+        })
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_cell(&cell.policy, ctx, cell.rps, seed)
+    })?;
     let mut t = Table::new(
         "Fig 7a — cost function: Absolute (X=0.5s, Y=1.5s) vs Proportional",
         &["rps", "absolute viol %", "proportional viol %"],
     );
-    for rps in [4.0, 5.0, 6.0] {
-        let (_, ma) = run_one("shabari", ctx, &workload, rps, &cfg)?;
-        let (_, mp) = run_one("shabari-proportional", ctx, &workload, rps, &cfg)?;
+    for (ri, &rps) in rps_list.iter().enumerate() {
+        let abs = outcomes[ri * 2].mean_metrics();
+        let prop = outcomes[ri * 2 + 1].mean_metrics();
         t.row(vec![
             fnum(rps, 0),
-            fpct(ma.slo_violation_pct),
-            fpct(mp.slo_violation_pct),
+            fpct(abs.slo_violation_pct),
+            fpct(prop.slo_violation_pct),
         ]);
     }
     t.note("paper: absolute ~25% fewer violations (more aggressive on misses)");
@@ -60,19 +78,25 @@ pub fn fig7a(ctx: &Ctx) -> Result<()> {
 
 /// Figure 7b: hashing-based placement vs Hermod packing at high load.
 pub fn fig7b(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
-    let cfg = sim_config(ctx);
+    let rps_list = [5.0, 6.0];
+    let cells: Vec<Cell> = rps_list
+        .iter()
+        .flat_map(|&rps| ["shabari", "shabari-hermod"].into_iter().map(move |p| Cell::new(p, rps)))
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_cell(&cell.policy, ctx, cell.rps, seed)
+    })?;
     let mut t = Table::new(
         "Fig 7b — scheduler placement: hashing vs Hermod packing",
         &["rps", "hashing viol %", "hermod-packing viol %"],
     );
-    for rps in [5.0, 6.0] {
-        let (_, mh) = run_one("shabari", ctx, &workload, rps, &cfg)?;
-        let (_, mp) = run_one("shabari-hermod", ctx, &workload, rps, &cfg)?;
+    for (ri, &rps) in rps_list.iter().enumerate() {
+        let hash = outcomes[ri * 2].mean_metrics();
+        let pack = outcomes[ri * 2 + 1].mean_metrics();
         t.row(vec![
             fnum(rps, 0),
-            fpct(mh.slo_violation_pct),
-            fpct(mp.slo_violation_pct),
+            fpct(hash.slo_violation_pct),
+            fpct(pack.slo_violation_pct),
         ]);
     }
     t.note("packing makes NIC the bottleneck for DB-fetching functions (§5)");
@@ -82,6 +106,7 @@ pub fn fig7b(ctx: &Ctx) -> Result<()> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::common::{run_one, sim_config};
     use super::*;
 
     #[test]
@@ -99,5 +124,13 @@ mod tests {
             ma.slo_violation_pct,
             mp.slo_violation_pct
         );
+    }
+
+    #[test]
+    fn fig6_grid_runs_on_threads() {
+        // The formulation grid must produce one outcome per variant with
+        // the requested number of replicates, identically at any job count.
+        let ctx = Ctx { duration_s: 60.0, seeds: 2, jobs: 4, ..Default::default() };
+        fig6(&ctx).unwrap();
     }
 }

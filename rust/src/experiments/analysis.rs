@@ -1,5 +1,8 @@
 //! Behaviour analyses: Figure 9 (allocation timeline / response to SLO
-//! violations) and Figure 10 (cold-start mitigation).
+//! violations) and Figure 10 (cold-start mitigation). Fig 10 is a
+//! (system × rps) sweep grid; Fig 9 is inherently a single-seed zoom-in
+//! (it narrates one allocation timeline), so it runs one cell per
+//! function through the same harness and renders off-thread (DESIGN.md §4).
 
 use anyhow::Result;
 
@@ -13,12 +16,15 @@ use crate::simulator::Request;
 use crate::util::rng::Rng;
 use crate::util::table::{fnum, fpct, Table};
 
-use super::common::{run_one, sim_config, Ctx};
+use super::common::{run_cell, sim_config, Ctx};
+use super::sweep::{self, Cell};
 
 /// Figure 9: zoomed-in timeline of allocated vs utilized cores for one
 /// input of matmult (multi-threaded) and sentiment (single-threaded).
+/// Workers render their table to a string; printing stays in grid order.
 pub fn fig9(ctx: &Ctx) -> Result<()> {
-    for fname in ["matmult", "sentiment"] {
+    let fnames = ["matmult", "sentiment"];
+    let rendered = sweep::parallel_map(&fnames, ctx.jobs, |_, fname| -> Result<String> {
         let fi = index_of(fname).unwrap();
         let mut rng = Rng::new(ctx.seed);
         let pool = inputs::pool(&CATALOG[fi], &mut rng);
@@ -27,7 +33,7 @@ pub fn fig9(ctx: &Ctx) -> Result<()> {
         // enough cores); 1.05x the flat time for sentiment (often missed,
         // but more vCPUs can't help)
         let d = (CATALOG[fi].demand)(&input);
-        let slo = if fname == "matmult" {
+        let slo = if *fname == "matmult" {
             d.ideal_exec_s(16.0, 10.0) * 1.4
         } else {
             d.ideal_exec_s(1.0, 10.0) * 1.05
@@ -58,12 +64,15 @@ pub fn fig9(ctx: &Ctx) -> Result<()> {
                 if r.slo_violated() { "X".into() } else { "".into() },
             ]);
         }
-        t.note(if fname == "matmult" {
+        t.note(if *fname == "matmult" {
             "explores lower allocations, reverts on violations (multi-threaded)"
         } else {
             "does not grow on violations: function cannot use more vCPUs"
         });
-        t.print();
+        Ok(t.render())
+    });
+    for table in rendered {
+        print!("{}", table?);
     }
     Ok(())
 }
@@ -71,22 +80,28 @@ pub fn fig9(ctx: &Ctx) -> Result<()> {
 /// Figure 10: % invocations with cold starts and % of SLO violations that
 /// had cold starts — Shabari vs Shabari+OW-sched vs static/Parrotfish.
 pub fn fig10(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
-    let cfg = sim_config(ctx);
-    let systems = [
+    const SYSTEMS: &[&str] = &[
         "shabari",
         "shabari-ow-sched",
         "static-medium",
         "static-large",
         "parrotfish",
     ];
-    for rps in [4.0, 6.0] {
+    let rps_list = [4.0, 6.0];
+    let cells: Vec<Cell> = rps_list
+        .iter()
+        .flat_map(|&rps| SYSTEMS.iter().map(move |p| Cell::new(p, rps)))
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_cell(&cell.policy, ctx, cell.rps, seed)
+    })?;
+    for (ri, &rps) in rps_list.iter().enumerate() {
         let mut t = Table::new(
-            &format!("Fig 10 — cold starts at RPS {rps}"),
+            &format!("Fig 10 — cold starts at RPS {rps} ({} seed(s))", ctx.seeds),
             &["system", "% invocations w/ cold start", "% violations w/ cold start"],
         );
-        for name in systems {
-            let (_, m) = run_one(name, ctx, &workload, rps, &cfg)?;
+        for (si, name) in SYSTEMS.iter().enumerate() {
+            let m = outcomes[ri * SYSTEMS.len() + si].mean_metrics();
             t.row(vec![
                 name.to_string(),
                 fpct(m.cold_start_pct),
@@ -101,6 +116,7 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::common::run_one;
     use super::*;
     use crate::simulator::SimConfig;
 

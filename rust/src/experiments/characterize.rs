@@ -1,18 +1,31 @@
 //! Measurement-study experiments (paper §2): Figures 1–4.
 //! These probe the ground-truth function models in isolation, exactly as
-//! the paper's ~8K profiling runs do on the real testbed.
+//! the paper's ~8K profiling runs do on the real testbed. The probe
+//! grids run through `sweep::parallel_map` with a fresh RNG built inside
+//! each cell — forked as `seed ^ fnv1a(cell-id)` where cells of one grid
+//! need independent streams (fig1's per-memory-size cells), plain
+//! `Rng::new(seed)` where each cell intentionally replays the same pool
+//! draws (fig2/fig4's per-function cells) — so output is deterministic
+//! at any `--jobs` and the figures saturate the machine like every other
+//! experiment (DESIGN.md §4).
 
 use anyhow::Result;
 
 use crate::baselines::profiling;
 use crate::featurizer::InputKind;
-use crate::functions::catalog::{by_name, index_of, CATALOG};
+use crate::functions::catalog::{index_of, CATALOG};
 use crate::functions::inputs;
-use crate::util::rng::Rng;
+use crate::util::rng::{fnv1a, Rng};
 use crate::util::stats;
 use crate::util::table::{fnum, fpct, Table};
 
 use super::common::Ctx;
+use super::sweep;
+
+/// Deterministic per-cell RNG: independent of how cells are scheduled.
+fn cell_rng(seed: u64, tag: &str) -> Rng {
+    Rng::new(seed ^ fnv1a(tag.as_bytes()))
+}
 
 /// Figure 1: (a) slowdown w.r.t. best runtime across coupled memory
 /// sizes; (b) max memory utilized vs allocated — for `videoprocess`.
@@ -29,18 +42,19 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
         "Fig 1a — videoprocess slowdown vs best, per coupled memory size (100 invocations)",
         &["mem", "vcpus", "median exec (s)", "slowdown p50", "slowdown p95"],
     );
-    // 100 invocations spread over the pool per memory size
-    let mut per_mem: Vec<Vec<f64>> = Vec::new();
-    for &mem in mem_ladder_mb {
+    // 100 invocations spread over the pool per memory size; one sweep
+    // cell per size, each with its own forked RNG stream.
+    let per_mem: Vec<Vec<f64>> = sweep::parallel_map(mem_ladder_mb, ctx.jobs, |_, &mem| {
         let vcpus = coupled_vcpus(mem);
-        let mut times = Vec::new();
-        for i in 0..100 {
-            let input = &pool[i % pool.len()];
-            let d = CATALOG[fi].noisy_demand(input, &mut rng);
-            times.push(d.ideal_exec_s(vcpus as f64, 10.0));
-        }
-        per_mem.push(times);
-    }
+        let mut rng = cell_rng(ctx.seed, &format!("fig1a:{mem}"));
+        (0..100)
+            .map(|i| {
+                let input = &pool[i % pool.len()];
+                let d = CATALOG[fi].noisy_demand(input, &mut rng);
+                d.ideal_exec_s(vcpus as f64, 10.0)
+            })
+            .collect()
+    });
     // best runtime per invocation index across memory sizes
     let best: Vec<f64> = (0..100)
         .map(|i| per_mem.iter().map(|v| v[i]).fold(f64::INFINITY, f64::min))
@@ -65,11 +79,14 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
         "Fig 1b — videoprocess max memory utilized vs allocated",
         &["alloc", "max used (GB)", "p50 used (GB)", "util % (p50)"],
     );
-    for &mem in mem_ladder_mb {
-        let used: Vec<f64> = (0..100)
+    let used_per_mem: Vec<Vec<f64>> = sweep::parallel_map(mem_ladder_mb, ctx.jobs, |_, &mem| {
+        let mut rng = cell_rng(ctx.seed, &format!("fig1b:{mem}"));
+        (0..100)
             .map(|i| CATALOG[fi].noisy_demand(&pool[i % pool.len()], &mut rng).mem_gb)
-            .collect();
-        let s = stats::summarize(&used);
+            .collect()
+    });
+    for (&mem, used) in mem_ladder_mb.iter().zip(&used_per_mem) {
+        let s = stats::summarize(used);
         let alloc_gb = mem as f64 / 1024.0;
         t2.row(vec![
             format!("{alloc_gb:.1}GB"),
@@ -87,7 +104,9 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
 /// vCPU allocations — positive but *non-linear* correlation; variability
 /// grows with size for multi-threaded functions.
 pub fn fig2(ctx: &Ctx) -> Result<()> {
-    for fname in ["imageprocess", "speech2text", "compress"] {
+    let fnames = ["imageprocess", "speech2text", "compress"];
+    // One cell per function; workers render and the caller prints in order.
+    let rendered = sweep::parallel_map(&fnames, ctx.jobs, |_, fname| {
         let fi = index_of(fname).unwrap();
         let mut rng = Rng::new(ctx.seed);
         let pool = inputs::pool(&CATALOG[fi], &mut rng);
@@ -116,7 +135,10 @@ pub fn fig2(ctx: &Ctx) -> Result<()> {
             t.row(cols);
         }
         t.note("positive but non-linear growth; spread grows with size for multi-threaded");
-        t.print();
+        t.render()
+    });
+    for table in rendered {
+        print!("{table}");
     }
     Ok(())
 }
@@ -151,7 +173,8 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
 /// Figure 4: execution time (top) and vCPU utilization (bottom) vs vCPU
 /// allocation for compress, resnet-50, imageprocess — bounded parallelism.
 pub fn fig4(ctx: &Ctx) -> Result<()> {
-    for fname in ["compress", "resnet50", "imageprocess"] {
+    let fnames = ["compress", "resnet50", "imageprocess"];
+    let rendered = sweep::parallel_map(&fnames, ctx.jobs, |_, fname| {
         let fi = index_of(fname).unwrap();
         let mut rng = Rng::new(ctx.seed);
         let pool = inputs::pool(&CATALOG[fi], &mut rng);
@@ -173,7 +196,10 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
             ]);
         }
         t.note("gains saturate at bounded parallelism; imageprocess pinned at ~1 vCPU");
-        t.print();
+        t.render()
+    });
+    for table in rendered {
+        print!("{table}");
     }
     Ok(())
 }

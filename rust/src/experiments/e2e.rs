@@ -1,6 +1,7 @@
 //! Figure 8 — the headline end-to-end comparison: SLO violations, wasted
 //! vCPUs/memory, and utilization for Shabari vs all baselines across
-//! RPS 2–6.
+//! RPS 2–6, as a (policy × rps) sweep grid replicated over `Ctx::seeds`
+//! seeds on `Ctx::jobs` threads (DESIGN.md §4).
 
 use anyhow::Result;
 
@@ -8,7 +9,8 @@ use crate::metrics::RunMetrics;
 use crate::util::json::Json;
 use crate::util::table::{fnum, fpct, Table};
 
-use super::common::{run_one, sim_config, Ctx};
+use super::common::{run_cell, Ctx};
+use super::sweep::{self, Cell, CellOutcome};
 
 /// The six systems of Fig 8, in the paper's order.
 pub const FIG8_POLICIES: &[&str] = &[
@@ -20,25 +22,49 @@ pub const FIG8_POLICIES: &[&str] = &[
     "shabari",
 ];
 
-/// Run the full sweep; returns metrics[policy][rps_idx].
+/// Run the full grid; outcome `[pi * rps_list.len() + ri]` holds policy
+/// `FIG8_POLICIES[pi]` at `rps_list[ri]` with all per-seed metrics.
+pub fn run_sweep_outcomes(
+    ctx: &Ctx,
+    rps_list: &[f64],
+) -> Result<Vec<CellOutcome<RunMetrics>>> {
+    let cells: Vec<Cell> = FIG8_POLICIES
+        .iter()
+        .flat_map(|p| rps_list.iter().map(move |&rps| Cell::new(p, rps)))
+        .collect();
+    sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_cell(&cell.policy, ctx, cell.rps, seed)
+    })
+}
+
+/// Reduce the flat outcome grid to cross-seed means `[policy][rps_idx]`
+/// — the one reduction both `run_sweep` and `fig8`'s tables use.
+fn mean_matrix(outcomes: &[CellOutcome<RunMetrics>], rps_count: usize) -> Vec<Vec<RunMetrics>> {
+    outcomes
+        .chunks(rps_count)
+        .map(|per_policy| per_policy.iter().map(|o| o.mean_metrics()).collect())
+        .collect()
+}
+
+/// Run the full sweep; returns cross-seed mean metrics[policy][rps_idx]
+/// (with `Ctx::seeds == 1` this is exactly the single-run result).
 pub fn run_sweep(ctx: &Ctx, rps_list: &[f64]) -> Result<Vec<Vec<RunMetrics>>> {
-    let workload = ctx.workload();
-    let cfg = sim_config(ctx);
-    let mut all = Vec::new();
-    for name in FIG8_POLICIES {
-        let mut per_rps = Vec::new();
-        for &rps in rps_list {
-            let (_, m) = run_one(name, ctx, &workload, rps, &cfg)?;
-            per_rps.push(m);
-        }
-        all.push(per_rps);
-    }
-    Ok(all)
+    Ok(mean_matrix(&run_sweep_outcomes(ctx, rps_list)?, rps_list.len()))
 }
 
 pub fn fig8(ctx: &Ctx) -> Result<()> {
     let rps_list = [2.0, 3.0, 4.0, 5.0, 6.0];
-    let all = run_sweep(ctx, &rps_list)?;
+    let t0 = std::time::Instant::now();
+    let outcomes = run_sweep_outcomes(ctx, &rps_list)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let all = mean_matrix(&outcomes, rps_list.len());
+    println!(
+        "(sweep: {} cells x {} seed(s) on {} job(s), {:.1}s wall)",
+        outcomes.len(),
+        ctx.seeds,
+        ctx.jobs,
+        wall
+    );
 
     let mut t = Table::new(
         "Fig 8a — % SLO violations",
@@ -99,6 +125,38 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
         row.extend(all[pi].iter().map(|m| fpct(100.0 * m.mem_utilization.p50)));
         t.row(row);
     }
+    t.print();
+
+    // Cross-seed dispersion at the highest load: mean/p50/p99 + bootstrap
+    // 95% CI over the per-seed replicates (EXPERIMENTS.md describes the
+    // aggregation; degenerate at --seeds 1).
+    let hi = rps_list.len() - 1;
+    let mut t = Table::new(
+        &format!(
+            "Fig 8 — cross-seed statistics @ RPS {} ({} seeds)",
+            rps_list[hi], ctx.seeds
+        ),
+        &[
+            "system",
+            "viol% mean [95% CI]",
+            "viol% p50",
+            "viol% p99",
+            "waste mem p50 GB [95% CI]",
+        ],
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let out = &outcomes[pi * rps_list.len() + hi];
+        let viol = out.stat(|m| m.slo_violation_pct);
+        let mem = out.stat(|m| m.wasted_mem_gb.p50);
+        t.row(vec![
+            name.to_string(),
+            viol.fmt_ci(1),
+            fnum(viol.p50, 1),
+            fnum(viol.p99, 1),
+            mem.fmt_ci(2),
+        ]);
+    }
+    t.note("CI = percentile bootstrap over seeds; widen --seeds to tighten");
     t.print();
 
     // machine-readable dump for EXPERIMENTS.md bookkeeping

@@ -1,5 +1,11 @@
 //! Experiment registry: one runner per paper figure/table (DESIGN.md §4).
 //! `shabari experiment <id>` regenerates the corresponding rows/series.
+//!
+//! Every runner is built on the [`sweep`] harness: it declares a grid of
+//! (policy × load × config-override) cells, replicates each cell across
+//! `Ctx::seeds` deterministic seeds, and executes the grid on
+//! `Ctx::jobs` worker threads. Tables report cross-seed means; headline
+//! tables add p50/p99 and bootstrap CIs (EXPERIMENTS.md).
 
 pub mod ablations;
 pub mod analysis;
@@ -8,6 +14,7 @@ pub mod common;
 pub mod e2e;
 pub mod overheads;
 pub mod sensitivity;
+pub mod sweep;
 pub mod tables;
 
 use anyhow::{bail, Result};

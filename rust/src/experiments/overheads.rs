@@ -1,6 +1,12 @@
 //! Figure 14 — Shabari's overheads, measured on the real clock (not
 //! simulated): input featurization per function, model prediction and
 //! update (native + XLA paths), scheduler decision latency.
+//!
+//! This is the one experiment that deliberately runs its cells at
+//! `jobs = 1` through the sweep harness: concurrent cells would contend
+//! for cores and corrupt the wall-clock latencies being measured
+//! (EXPERIMENTS.md §Perf). Each featurization cell still forks its own
+//! deterministic RNG so the grid is order-independent.
 
 use anyhow::Result;
 
@@ -36,13 +42,15 @@ fn measure_ms(iters: usize, mut f: impl FnMut()) -> f64 {
 /// The *modeled* critical-path cost (file-open latencies on the paper's
 /// testbed) is reported alongside from `featurizer::extract`.
 pub fn fig14(ctx: &Ctx) -> Result<()> {
-    let mut rng = Rng::new(ctx.seed);
-
     let mut t = Table::new(
         "Fig 14 — featurization cost per function",
         &["function", "input type", "modeled latency (ms)", "measured compute (µs)"],
     );
-    for (fi, spec) in CATALOG.iter().enumerate() {
+    // jobs = 1: wall-clock micro-measurements must not share cores.
+    let func_indices: Vec<usize> = (0..CATALOG.len()).collect();
+    let rows = crate::experiments::sweep::parallel_map(&func_indices, 1, |_, &fi| {
+        let spec = &CATALOG[fi];
+        let mut rng = Rng::new(ctx.seed ^ crate::util::rng::fnv1a(spec.name.as_bytes()));
         let pool = inputs::pool(spec, &mut rng);
         let input: InputSpec = pool[pool.len() / 2].clone();
         let modeled = featurizer::featurize(&input).extract_latency_s * 1000.0;
@@ -50,13 +58,15 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
             measure_ms(2000, || {
                 bench::keep(featurizer::featurize(&input));
             }) * 1000.0;
-        t.row(vec![
+        vec![
             spec.name.to_string(),
             spec.input_kind.name().to_string(),
             format!("{modeled:.3}"),
             format!("{measured_us:.2}"),
-        ]);
-        let _ = fi;
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t.note("paper: matmult/lrtrain 20-35ms (file opens); images ~0.13ms; linpack ~0");
     t.print();
@@ -82,7 +92,9 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
     });
     t.row(vec!["native".into(), format!("{p_native:.4}"), format!("{u_native:.4}")]);
 
-    if std::path::Path::new(&ctx.artifacts_dir).join("manifest.json").exists() {
+    let have_xla = cfg!(feature = "xla")
+        && std::path::Path::new(&ctx.artifacts_dir).join("manifest.json").exists();
+    if have_xla {
         let xla_factory = ModelFactory::new(Backend::Xla, &ctx.artifacts_dir, 0.3)?;
         let mut xm = xla_factory.make();
         let p_xla = measure_ms(500, || {
@@ -93,7 +105,7 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
         });
         t.row(vec!["xla/pjrt".into(), format!("{p_xla:.4}"), format!("{u_xla:.4}")]);
     } else {
-        t.row(vec!["xla/pjrt".into(), "(no artifacts)".into(), "-".into()]);
+        t.row(vec!["xla/pjrt".into(), "(needs artifacts + xla feature)".into(), "-".into()]);
     }
     t.note("paper: prediction 2-4ms, update 4-5ms (updates off the critical path)");
     t.print();

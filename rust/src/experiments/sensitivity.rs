@@ -1,33 +1,70 @@
 //! Sensitivity analyses (§7.5): Figure 11 (vCPU oversubscription limit),
 //! Figure 12 (confidence thresholds), Figure 13 (SLO multiplier).
+//!
+//! These are the config-override grids of the sweep harness (DESIGN.md
+//! §4): each cell carries its override in `Cell::param`, the runner
+//! applies it to a fresh per-seed context, and the override value salts
+//! the derived seeds of replicates ≥ 1 (replicate 0 shares the base seed
+//! grid-wide for paired comparison — see `sweep::cell_seed`).
 
 use anyhow::Result;
 
-use crate::coordinator::allocator::ResourceAllocator;
+use crate::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
 use crate::coordinator::scheduler::shabari::ShabariScheduler;
 use crate::coordinator::ShabariPolicy;
-use crate::metrics::from_result;
+use crate::metrics::{from_result, RunMetrics};
 use crate::simulator::engine::simulate;
+use crate::simulator::SimConfig;
 use crate::util::table::{fnum, fpct, Table};
 
-use super::common::{sim_config, Ctx};
+use super::common::{sim_config, trace_seed, Ctx};
+use super::sweep::{self, Cell};
+
+/// One Shabari run with a per-cell override hook — the single runner
+/// behind all three sensitivity grids. The hook sees the derived
+/// context, the simulator config, and the allocator config, so any of
+/// the paper's §7.5 knobs can be swept without duplicating the
+/// build-workload → build-policy → trace → simulate sequence.
+fn run_shabari_cell(
+    ctx: &Ctx,
+    cell: &Cell,
+    seed: u64,
+    tweak: impl Fn(&mut Ctx, &mut SimConfig, &mut AllocatorConfig, f64),
+) -> Result<RunMetrics> {
+    // This runner hardcodes the Shabari policy; a cell naming any other
+    // policy would silently simulate the wrong system (use
+    // `common::run_cell`/`make_policy` for multi-policy grids).
+    anyhow::ensure!(
+        cell.policy == "shabari",
+        "run_shabari_cell only runs 'shabari' cells, got '{}'",
+        cell.policy
+    );
+    let mut cctx = ctx.with_seed(seed);
+    let mut cfg = sim_config(&cctx);
+    let mut acfg = cctx.allocator_cfg();
+    tweak(&mut cctx, &mut cfg, &mut acfg, cell.param);
+    let workload = cctx.workload();
+    let alloc = ResourceAllocator::new(acfg)?;
+    let mut policy = ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(cctx.seed)));
+    let trace = workload.trace(cell.rps, cctx.duration_s, trace_seed(&cctx, cell.rps));
+    let res = simulate(cfg, &mut policy, trace);
+    Ok(from_result("shabari", &res))
+}
 
 /// Figure 11: vCPU oversubscription limit (`userCpu`) sweep at RPS 6.
 pub fn fig11(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
+    let limits = [70.0, 80.0, 90.0, 100.0, 110.0, 120.0, 130.0];
+    let cells: Vec<Cell> =
+        limits.iter().map(|&l| Cell::labeled("shabari", 6.0, "userCpu", l)).collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_shabari_cell(ctx, cell, seed, |_, cfg, _, limit| cfg.sched_vcpu_limit = limit)
+    })?;
     let mut t = Table::new(
-        "Fig 11 — vCPU oversubscription limit per worker (RPS 6)",
+        &format!("Fig 11 — vCPU oversubscription limit per worker (RPS 6, {} seed(s))", ctx.seeds),
         &["userCpu", "SLO viol %", "timeout %", "p50 util %"],
     );
-    for limit in [70.0, 80.0, 90.0, 100.0, 110.0, 120.0, 130.0] {
-        let mut cfg = sim_config(ctx);
-        cfg.sched_vcpu_limit = limit;
-        let alloc = ResourceAllocator::new(ctx.allocator_cfg())?;
-        let mut policy =
-            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(ctx.seed)));
-        let trace = workload.trace(6.0, ctx.duration_s, ctx.seed + 6);
-        let res = simulate(cfg, &mut policy, trace);
-        let m = from_result("shabari", &res);
+    for (out, &limit) in outcomes.iter().zip(&limits) {
+        let m = out.mean_metrics();
         t.row(vec![
             fnum(limit, 0),
             fpct(m.slo_violation_pct),
@@ -43,22 +80,22 @@ pub fn fig11(ctx: &Ctx) -> Result<()> {
 /// Figure 12: confidence-threshold sweeps — (a) vCPU threshold vs SLO
 /// violations, (b) memory threshold vs OOM-kill %.
 pub fn fig12(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
+    let vcpu_thresholds = [2.0, 5.0, 10.0, 16.0, 24.0];
+    let cells: Vec<Cell> = vcpu_thresholds
+        .iter()
+        .map(|&th| Cell::labeled("shabari", 4.0, "vcpu-confidence", th))
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_shabari_cell(ctx, cell, seed, |_, _, acfg, th| acfg.vcpu_confidence = th as u64)
+    })?;
     let mut t = Table::new(
-        "Fig 12a — vCPU confidence threshold (RPS 4)",
+        &format!("Fig 12a — vCPU confidence threshold (RPS 4, {} seed(s))", ctx.seeds),
         &["threshold", "SLO viol %", "p95 wasted vCPUs"],
     );
-    for threshold in [2u64, 5, 10, 16, 24] {
-        let mut acfg = ctx.allocator_cfg();
-        acfg.vcpu_confidence = threshold;
-        let alloc = ResourceAllocator::new(acfg)?;
-        let mut policy =
-            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(ctx.seed)));
-        let trace = workload.trace(4.0, ctx.duration_s, ctx.seed + 4);
-        let res = simulate(sim_config(ctx), &mut policy, trace);
-        let m = from_result("shabari", &res);
+    for (out, &th) in outcomes.iter().zip(&vcpu_thresholds) {
+        let m = out.mean_metrics();
         t.row(vec![
-            threshold.to_string(),
+            fnum(th, 0),
             fpct(m.slo_violation_pct),
             fnum(m.wasted_vcpus.p95, 1),
         ]);
@@ -66,24 +103,21 @@ pub fn fig12(ctx: &Ctx) -> Result<()> {
     t.note("larger thresholds keep more invocations on the 16-vCPU default (interference)");
     t.print();
 
+    let mem_thresholds = [5.0, 10.0, 20.0, 30.0];
+    let cells: Vec<Cell> = mem_thresholds
+        .iter()
+        .map(|&th| Cell::labeled("shabari", 4.0, "mem-confidence", th))
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_shabari_cell(ctx, cell, seed, |_, _, acfg, th| acfg.mem_confidence = th as u64)
+    })?;
     let mut t = Table::new(
-        "Fig 12b — memory confidence threshold (RPS 4)",
+        &format!("Fig 12b — memory confidence threshold (RPS 4, {} seed(s))", ctx.seeds),
         &["threshold", "OOM-killed %", "p50 wasted mem (GB)"],
     );
-    for threshold in [5u64, 10, 20, 30] {
-        let mut acfg = ctx.allocator_cfg();
-        acfg.mem_confidence = threshold;
-        let alloc = ResourceAllocator::new(acfg)?;
-        let mut policy =
-            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(ctx.seed)));
-        let trace = workload.trace(4.0, ctx.duration_s, ctx.seed + 4);
-        let res = simulate(sim_config(ctx), &mut policy, trace);
-        let m = from_result("shabari", &res);
-        t.row(vec![
-            threshold.to_string(),
-            fpct(m.oom_pct),
-            fnum(m.wasted_mem_gb.p50, 2),
-        ]);
+    for (out, &th) in outcomes.iter().zip(&mem_thresholds) {
+        let m = out.mean_metrics();
+        t.row(vec![fnum(th, 0), fpct(m.oom_pct), fnum(m.wasted_mem_gb.p50, 2)]);
     }
     t.note("paper: <1% kills at threshold >= 20");
     t.print();
@@ -92,20 +126,20 @@ pub fn fig12(ctx: &Ctx) -> Result<()> {
 
 /// Figure 13: SLO-multiplier sweep (1.2x–1.8x) — violations + idle vCPUs.
 pub fn fig13(ctx: &Ctx) -> Result<()> {
+    let multipliers = [1.2, 1.4, 1.6, 1.8];
+    let cells: Vec<Cell> = multipliers
+        .iter()
+        .map(|&m| Cell::labeled("shabari", 4.0, "slo-multiplier", m))
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_shabari_cell(ctx, cell, seed, |cctx, _, _, mult| cctx.slo_multiplier = mult)
+    })?;
     let mut t = Table::new(
-        "Fig 13 — SLO multiplier sensitivity (RPS 4)",
+        &format!("Fig 13 — SLO multiplier sensitivity (RPS 4, {} seed(s))", ctx.seeds),
         &["multiplier", "SLO viol %", "idle vCPUs p50", "idle vCPUs p95"],
     );
-    for mult in [1.2, 1.4, 1.6, 1.8] {
-        let mut mctx = ctx.clone();
-        mctx.slo_multiplier = mult;
-        let workload = mctx.workload();
-        let alloc = ResourceAllocator::new(mctx.allocator_cfg())?;
-        let mut policy =
-            ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(mctx.seed)));
-        let trace = workload.trace(4.0, mctx.duration_s, mctx.seed + 4);
-        let res = simulate(sim_config(&mctx), &mut policy, trace);
-        let m = from_result("shabari", &res);
+    for (out, &mult) in outcomes.iter().zip(&multipliers) {
+        let m = out.mean_metrics();
         t.row(vec![
             format!("{mult:.1}x"),
             fpct(m.slo_violation_pct),
@@ -167,5 +201,36 @@ mod tests {
             strict >= relaxed,
             "stricter SLOs must violate at least as much: 1.2x {strict} vs 1.8x {relaxed}"
         );
+    }
+
+    #[test]
+    fn override_cells_apply_their_param() {
+        // A tiny two-point userCpu grid must run and stay deterministic
+        // across job counts.
+        let ctx = Ctx { duration_s: 60.0, seeds: 2, jobs: 4, ..Default::default() };
+        // userCpu = 8 cannot admit the 16-vCPU learning-phase default
+        // anywhere (every placement falls back), so its outcomes must
+        // diverge from an unconstrained 130-vCPU cluster.
+        let cells = vec![
+            Cell::labeled("shabari", 4.0, "userCpu", 8.0),
+            Cell::labeled("shabari", 4.0, "userCpu", 130.0),
+        ];
+        let run = |jobs: usize| {
+            sweep::run_cells(&cells, ctx.seed, ctx.seeds, jobs, |cell, seed| {
+                run_shabari_cell(&ctx, cell, seed, |_, cfg, _, l| cfg.sched_vcpu_limit = l)
+            })
+            .unwrap()
+            .iter()
+            .map(|o| {
+                let m = o.mean_metrics();
+                (m.slo_violation_pct.to_bits(), m.mean_e2e_s.to_bits())
+            })
+            .collect::<Vec<_>>()
+        };
+        let sequential = run(1);
+        assert_eq!(sequential, run(4), "aggregates identical at any job count");
+        // and the override must actually reach the simulator: an over- vs
+        // under-subscribed cluster cannot behave identically
+        assert_ne!(sequential[0], sequential[1], "userCpu override had no effect");
     }
 }

@@ -1,0 +1,277 @@
+//! Parallel multi-seed sweep harness (DESIGN.md §4).
+//!
+//! Shabari's headline numbers (SLO-violation and wasted-resource
+//! reductions) are statistical claims over stochastic workloads, so every
+//! experiment runner expresses its work as a *grid* of [`Cell`]s —
+//! (policy × load × config-override) points — replicated across `--seeds`
+//! independent seeds and executed on a bounded pool of `--jobs` worker
+//! threads ([`parallel_map`]).
+//!
+//! Determinism contract:
+//! * every (cell, replicate) derives its seed via [`cell_seed`]:
+//!   replicate 0 is the base seed itself (grid-wide paired comparison +
+//!   single-run compatibility), replicates ≥ 1 are
+//!   `base ^ fnv1a(cell-id ‖ replicate)` — stable across runs, machines,
+//!   and thread counts;
+//! * a cell's runner must build **all** mutable state (workload pools,
+//!   trace RNGs, learner models, scheduler counters, cluster RNGs) from
+//!   that derived seed *inside* the call — nothing mutable is shared
+//!   between cells, which is what makes the closure `Sync` and the
+//!   results independent of scheduling (`experiments::common::run_cell`
+//!   is the canonical runner);
+//! * results are reduced in grid order, and the cross-seed statistics
+//!   ([`stats::seed_stats`]: mean/p50/p99 + bootstrap 95% CI) use a
+//!   fixed-seed bootstrap — so aggregates are byte-identical at
+//!   `--jobs 1` and `--jobs 8` (pinned by `rust/tests/test_sweep.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::util::rng::fnv1a;
+use crate::util::stats::{self, SeedStats};
+
+/// One point of a sweep grid. `label`/`param` carry config overrides
+/// (e.g. `userCpu = 110` for Fig 11) so distinct cells never collide in
+/// seed space even when policy and load match.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub policy: String,
+    pub rps: f64,
+    /// Override name for sensitivity grids ("" when unused).
+    pub label: String,
+    /// Override value for sensitivity grids (0.0 when unused).
+    pub param: f64,
+}
+
+impl Cell {
+    pub fn new(policy: &str, rps: f64) -> Cell {
+        Cell { policy: policy.to_string(), rps, label: String::new(), param: 0.0 }
+    }
+
+    /// A cell carrying a named config override.
+    pub fn labeled(policy: &str, rps: f64, label: &str, param: f64) -> Cell {
+        Cell { policy: policy.to_string(), rps, label: label.to_string(), param }
+    }
+
+    /// Stable identity string (seed derivation + display).
+    pub fn id(&self) -> String {
+        if self.label.is_empty() {
+            format!("{}@{}", self.policy, self.rps)
+        } else {
+            format!("{}@{}|{}={}", self.policy, self.rps, self.label, self.param)
+        }
+    }
+}
+
+/// Deterministic seed for one (cell, replicate) pair.
+///
+/// Replicate 0 runs at the base seed for *every* cell: cells of one grid
+/// then share their replicate-0 stochastic world (common-random-numbers
+/// pairing, which tightens policy comparisons), and a `--seeds 1` sweep
+/// reproduces the pre-harness single-run outputs bit-for-bit. Replicates
+/// ≥ 1 get per-cell streams, `base ^ fnv1a(cell-id ‖ replicate)`.
+pub fn cell_seed(base: u64, cell: &Cell, replicate: usize) -> u64 {
+    if replicate == 0 {
+        return base;
+    }
+    let tag = format!("{}#{replicate}", cell.id());
+    base ^ fnv1a(tag.as_bytes())
+}
+
+/// Default worker count: every available core.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(index, item)` over `items` on up to `jobs` scoped worker
+/// threads and return the results **in input order** regardless of how
+/// the items were scheduled. `jobs <= 1` runs inline on the caller's
+/// thread (the two paths produce identical results for deterministic
+/// `f`). Workers pull indices from a shared atomic counter, so uneven
+/// cell runtimes still keep every core busy.
+pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    // One slot per item: each worker locks only the slot it fills, so
+    // there is no contention and no reordering.
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().expect("slot lock") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("slot lock").expect("worker filled every slot"))
+        .collect()
+}
+
+/// All per-seed results of one grid cell, in replicate order.
+#[derive(Debug, Clone)]
+pub struct CellOutcome<R> {
+    pub cell: Cell,
+    pub per_seed: Vec<R>,
+}
+
+impl<R> CellOutcome<R> {
+    /// Cross-seed statistics of any scalar projection of the result.
+    pub fn stat_by(&self, metric: impl Fn(&R) -> f64) -> SeedStats {
+        let values: Vec<f64> = self.per_seed.iter().map(metric).collect();
+        stats::seed_stats(&values)
+    }
+}
+
+impl CellOutcome<RunMetrics> {
+    /// Cross-seed statistics of one metric (mean/p50/p99 + 95% CI).
+    pub fn stat(&self, metric: impl Fn(&RunMetrics) -> f64) -> SeedStats {
+        self.stat_by(metric)
+    }
+
+    /// Field-wise cross-seed mean (drop-in for single-run table code).
+    pub fn mean_metrics(&self) -> RunMetrics {
+        RunMetrics::mean_of(&self.per_seed)
+    }
+}
+
+/// Execute a grid: every (cell, replicate) pair becomes one task on the
+/// thread pool — a 7-cell × 5-seed sweep exposes 35 units of parallelism,
+/// not 7. Results come back grouped per cell in grid order; the first
+/// cell error (if any) propagates after the sweep drains.
+pub fn run_cells<R, F>(
+    cells: &[Cell],
+    base_seed: u64,
+    seeds: usize,
+    jobs: usize,
+    run: F,
+) -> Result<Vec<CellOutcome<R>>>
+where
+    R: Send,
+    F: Fn(&Cell, u64) -> Result<R> + Sync,
+{
+    let seeds = seeds.max(1);
+    let tasks: Vec<(usize, usize)> = (0..cells.len())
+        .flat_map(|c| (0..seeds).map(move |r| (c, r)))
+        .collect();
+    let results = parallel_map(&tasks, jobs, |_, &(c, r)| {
+        run(&cells[c], cell_seed(base_seed, &cells[c], r))
+    });
+    let mut it = results.into_iter();
+    let mut out = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let mut per_seed = Vec::with_capacity(seeds);
+        for _ in 0..seeds {
+            per_seed.push(it.next().expect("one result per task")?);
+        }
+        out.push(CellOutcome { cell: cell.clone(), per_seed });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let seq = parallel_map(&items, 1, |i, x| i * 1000 + x * x);
+        let par = parallel_map(&items, 8, |i, x| i * 1000 + x * x);
+        assert_eq!(seq, par);
+        assert_eq!(seq[3], 3 * 1000 + 9);
+    }
+
+    #[test]
+    fn parallel_map_runs_every_item_once() {
+        use std::sync::atomic::AtomicU64;
+        let calls = AtomicU64::new(0);
+        let items: Vec<u64> = (0..57).collect();
+        let out = parallel_map(&items, 4, |_, x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            *x
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 57);
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn parallel_map_empty_and_oversubscribed() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, 8, |_, x| *x).is_empty());
+        let one = [7u32];
+        assert_eq!(parallel_map(&one, 64, |_, x| *x), vec![7]);
+    }
+
+    #[test]
+    fn cell_seeds_deterministic_and_distinct() {
+        let a = Cell::new("shabari", 4.0);
+        assert_eq!(cell_seed(42, &a, 1), cell_seed(42, &a, 1));
+        assert_ne!(cell_seed(42, &a, 1), cell_seed(42, &a, 2), "replicates differ");
+        let b = Cell::new("cypress", 4.0);
+        assert_ne!(cell_seed(42, &a, 1), cell_seed(42, &b, 1), "policies differ");
+        let c = Cell::labeled("shabari", 4.0, "userCpu", 110.0);
+        assert_ne!(cell_seed(42, &a, 1), cell_seed(42, &c, 1), "overrides differ");
+        assert_ne!(cell_seed(42, &a, 1), cell_seed(43, &a, 1), "base seed differs");
+        // replicate 0 = base seed for every cell (single-run compatibility
+        // + common-random-numbers pairing across a grid)
+        assert_eq!(cell_seed(42, &a, 0), 42);
+        assert_eq!(cell_seed(42, &b, 0), 42);
+        assert_ne!(cell_seed(42, &a, 1), 42, "derived replicates leave the base");
+    }
+
+    #[test]
+    fn run_cells_groups_by_cell_in_grid_order() {
+        let cells = vec![Cell::new("a", 1.0), Cell::new("b", 2.0)];
+        let out = run_cells(&cells, 7, 3, 4, |cell, seed| Ok((cell.policy.clone(), seed)))
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].per_seed.len(), 3);
+        assert!(out[0].per_seed.iter().all(|(p, _)| p == "a"));
+        assert!(out[1].per_seed.iter().all(|(p, _)| p == "b"));
+        // replicate order = seed derivation order
+        assert_eq!(out[0].per_seed[1].1, cell_seed(7, &cells[0], 1));
+    }
+
+    #[test]
+    fn run_cells_propagates_errors() {
+        let cells = vec![Cell::new("ok", 1.0), Cell::new("bad", 1.0)];
+        let res = run_cells(&cells, 1, 2, 2, |cell, _| {
+            if cell.policy == "bad" {
+                anyhow::bail!("cell failed")
+            }
+            Ok(0u32)
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn stat_by_aggregates_across_seeds() {
+        let outcome = CellOutcome { cell: Cell::new("x", 1.0), per_seed: vec![1.0, 2.0, 3.0] };
+        let s = outcome.stat_by(|v| *v);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!(s.ci95.0 <= 2.0 && 2.0 <= s.ci95.1);
+    }
+
+    #[test]
+    fn default_jobs_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

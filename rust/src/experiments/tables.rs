@@ -6,9 +6,10 @@ use anyhow::Result;
 use crate::functions::catalog::CATALOG;
 use crate::functions::inputs;
 use crate::util::rng::Rng;
-use crate::util::table::Table;
+use crate::util::table::{fnum, Table};
 
 use super::common::{run_one, sim_config, Ctx};
+use super::sweep::{self, Cell};
 
 /// Table 1: the function catalog (encoded in `functions::catalog`).
 pub fn table1(ctx: &Ctx) -> Result<()> {
@@ -56,25 +57,27 @@ pub fn table2(_ctx: &Ctx) -> Result<()> {
 }
 
 /// Table 3: number of unique container sizes Shabari creates per function
-/// across RPS 2–6.
+/// across RPS 2–6 — a five-cell sweep whose per-seed result is the
+/// per-function unique-size count (cross-seed mean when `--seeds > 1`).
 pub fn table3(ctx: &Ctx) -> Result<()> {
-    let workload = ctx.workload();
-    let cfg = sim_config(ctx);
     let rps_list = [2.0, 3.0, 4.0, 5.0, 6.0];
-    // run shabari per RPS, count unique sizes per function
-    let mut per_rps = Vec::new();
-    for &rps in &rps_list {
-        let (res, _) = run_one("shabari", ctx, &workload, rps, &cfg)?;
-        per_rps.push(res);
-    }
+    let cells: Vec<Cell> = rps_list.iter().map(|&rps| Cell::new("shabari", rps)).collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        let cctx = ctx.with_seed(seed);
+        let workload = cctx.workload();
+        let cfg = sim_config(&cctx);
+        let (res, _) = run_one(&cell.policy, &cctx, &workload, cell.rps, &cfg)?;
+        Ok((0..CATALOG.len()).map(|fi| res.unique_container_sizes(fi)).collect::<Vec<_>>())
+    })?;
     let mut t = Table::new(
-        "Table 3 — unique container sizes per function",
+        &format!("Table 3 — unique container sizes per function ({} seed(s))", ctx.seeds),
         &["function", "rps2", "rps3", "rps4", "rps5", "rps6"],
     );
     for (fi, spec) in CATALOG.iter().enumerate() {
         let mut row = vec![spec.name.to_string()];
-        for res in &per_rps {
-            row.push(res.unique_container_sizes(fi).to_string());
+        for out in &outcomes {
+            let mean = out.stat_by(|sizes| sizes[fi] as f64).mean;
+            row.push(fnum(mean, 1));
         }
         t.row(row);
     }

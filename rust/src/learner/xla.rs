@@ -7,18 +7,21 @@
 //! per-function model (the coordinator is single-threaded on the decision
 //! path, matching the paper's single shim-layer process).
 
+#[cfg(feature = "xla")]
 use std::rc::Rc;
 
 use anyhow::Result;
 
 use super::CsmcModel;
+#[cfg(feature = "xla")]
 use crate::runtime::{XlaEngine, FEAT_DIM, NUM_CLASSES};
 
-/// A CSOAA model whose math runs in XLA.
+/// A CSOAA model whose math runs in XLA (requires the `xla` feature).
 ///
-/// §Perf: input literals (weights, features, costs, lr) are cached and
-/// mutated in place via `copy_raw_from`, avoiding four literal
+/// EXPERIMENTS.md §Perf: input literals (weights, features, costs, lr) are
+/// cached and mutated in place via `copy_raw_from`, avoiding four literal
 /// allocations per call on the request path.
+#[cfg(feature = "xla")]
 pub struct XlaCsmc {
     engine: Rc<XlaEngine>,
     w: Vec<f32>,
@@ -31,6 +34,7 @@ pub struct XlaCsmc {
     lr_lit: xla::Literal,
 }
 
+#[cfg(feature = "xla")]
 impl XlaCsmc {
     pub fn new(engine: Rc<XlaEngine>, lr: f32) -> Self {
         let w = vec![0.0; NUM_CLASSES * FEAT_DIM];
@@ -99,6 +103,7 @@ impl XlaCsmc {
     }
 }
 
+#[cfg(feature = "xla")]
 impl CsmcModel for XlaCsmc {
     fn scores(&mut self, x: &[f32; FEAT_DIM]) -> [f32; NUM_CLASSES] {
         let v = self
@@ -131,6 +136,7 @@ pub enum Backend {
 
 /// Factory for CSMC models of the chosen backend.
 pub enum ModelFactory {
+    #[cfg(feature = "xla")]
     Xla(Rc<XlaEngine>, f32),
     Native(f32),
 }
@@ -138,16 +144,24 @@ pub enum ModelFactory {
 impl ModelFactory {
     pub fn new(backend: Backend, artifacts_dir: &str, lr: f32) -> Result<Self> {
         match backend {
+            #[cfg(feature = "xla")]
             Backend::Xla => {
                 let engine = Rc::new(XlaEngine::load_dir(artifacts_dir)?);
                 Ok(ModelFactory::Xla(engine, lr))
             }
+            #[cfg(not(feature = "xla"))]
+            Backend::Xla => anyhow::bail!(
+                "learner backend 'xla' needs a build with `--features xla` \
+                 (artifacts dir: {artifacts_dir}); this binary has only the \
+                 native mirror"
+            ),
             Backend::Native => Ok(ModelFactory::Native(lr)),
         }
     }
 
     pub fn make(&self) -> Box<dyn CsmcModel> {
         match self {
+            #[cfg(feature = "xla")]
             ModelFactory::Xla(engine, lr) => Box::new(XlaCsmc::new(engine.clone(), *lr)),
             ModelFactory::Native(lr) => Box::new(super::native::NativeCsmc::new(*lr)),
         }
@@ -155,6 +169,7 @@ impl ModelFactory {
 
     pub fn backend(&self) -> Backend {
         match self {
+            #[cfg(feature = "xla")]
             ModelFactory::Xla(..) => Backend::Xla,
             ModelFactory::Native(..) => Backend::Native,
         }

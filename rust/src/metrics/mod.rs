@@ -38,6 +38,43 @@ pub struct RunMetrics {
     pub background_launches: u64,
 }
 
+impl RunMetrics {
+    /// Field-wise mean across per-seed replicates of the same sweep cell
+    /// (`experiments::sweep`). Scalar metrics average directly; the
+    /// distribution [`Summary`]s average percentile-wise (see
+    /// `stats::average_summaries`); counters round to the nearest integer.
+    pub fn mean_of(runs: &[RunMetrics]) -> RunMetrics {
+        assert!(!runs.is_empty(), "mean_of needs at least one run");
+        let n = runs.len() as f64;
+        let avg = |f: fn(&RunMetrics) -> f64| runs.iter().map(f).sum::<f64>() / n;
+        let avg_summary = |f: fn(&RunMetrics) -> &Summary| {
+            stats::average_summaries(&runs.iter().map(f).collect::<Vec<_>>())
+        };
+        RunMetrics {
+            policy: runs[0].policy.clone(),
+            invocations: (runs.iter().map(|r| r.invocations).sum::<usize>() as f64 / n).round()
+                as usize,
+            slo_violation_pct: avg(|r| r.slo_violation_pct),
+            wasted_vcpus: avg_summary(|r| &r.wasted_vcpus),
+            wasted_mem_gb: avg_summary(|r| &r.wasted_mem_gb),
+            vcpu_utilization: avg_summary(|r| &r.vcpu_utilization),
+            mem_utilization: avg_summary(|r| &r.mem_utilization),
+            cold_start_pct: avg(|r| r.cold_start_pct),
+            violations_with_cold_start_pct: avg(|r| r.violations_with_cold_start_pct),
+            oom_pct: avg(|r| r.oom_pct),
+            timeout_pct: avg(|r| r.timeout_pct),
+            mean_e2e_s: avg(|r| r.mean_e2e_s),
+            throughput: avg(|r| r.throughput),
+            containers_created: (runs.iter().map(|r| r.containers_created).sum::<u64>() as f64
+                / n)
+                .round() as u64,
+            background_launches: (runs.iter().map(|r| r.background_launches).sum::<u64>() as f64
+                / n)
+                .round() as u64,
+        }
+    }
+}
+
 /// Compute metrics from raw records.
 pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
     let n = records.len().max(1);
@@ -160,6 +197,23 @@ mod tests {
         let m = aggregate("x", &[]);
         assert_eq!(m.invocations, 0);
         assert_eq!(m.slo_violation_pct, 0.0);
+    }
+
+    #[test]
+    fn mean_of_averages_fields() {
+        let a = aggregate("x", &[rec(1.0, 2.0, true, Verdict::Completed)]);
+        let b = aggregate("x", &[rec(3.0, 2.0, false, Verdict::Completed)]);
+        let m = RunMetrics::mean_of(&[a.clone(), b.clone()]);
+        assert_eq!(m.policy, "x");
+        assert!((m.slo_violation_pct - 50.0).abs() < 1e-9, "100% and 0% average to 50%");
+        assert!((m.cold_start_pct - 50.0).abs() < 1e-9);
+        assert!(
+            (m.wasted_mem_gb.p50 - (a.wasted_mem_gb.p50 + b.wasted_mem_gb.p50) / 2.0).abs()
+                < 1e-12
+        );
+        // single-run mean is the identity on scalar fields
+        let one = RunMetrics::mean_of(&[a.clone()]);
+        assert_eq!(one.slo_violation_pct.to_bits(), a.slo_violation_pct.to_bits());
     }
 
     #[test]

@@ -10,10 +10,18 @@
 //! kept as host `Vec<f32>` owned by the learner (they are small:
 //! `C x F = 48 x 16` f32 per model) and uploaded per call; see
 //! EXPERIMENTS.md §Perf for the measured cost and the batching strategy.
+//!
+//! The engine compiles only with the non-default `xla` cargo feature;
+//! without it this module still exports the shape constants shared with
+//! the Python layers, and `learner::xla::Backend::Native` is the only
+//! usable backend (DESIGN.md §1).
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::path::{Path, PathBuf};
 
+#[cfg(feature = "xla")]
 use anyhow::{anyhow, bail, Context, Result};
 
 /// Shape constants shared with `python/compile/model.py`. `aot.py` bakes the
@@ -29,6 +37,7 @@ pub const BATCH: usize = 64;
 pub const ARTIFACTS: &[&str] = &["csmc_predict", "csmc_update", "csmc_predict_batch"];
 
 /// A loaded, compiled HLO executable plus metadata.
+#[cfg(feature = "xla")]
 struct LoadedExe {
     exe: xla::PjRtLoadedExecutable,
     /// Number of parameters the HLO module expects (sanity checking).
@@ -36,12 +45,14 @@ struct LoadedExe {
 }
 
 /// Engine owning the PJRT CPU client and the compiled executables.
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     client: xla::PjRtClient,
     exes: HashMap<String, LoadedExe>,
     dir: PathBuf,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Create an engine backed by the PJRT CPU client, loading all standard
     /// artifacts from `dir` (typically `artifacts/`).
@@ -199,6 +210,7 @@ impl XlaEngine {
 /// Count `parameter(i)` declarations in the entry computation of HLO text.
 /// Cheap sanity check so arity mismatches fail with a clear message instead
 /// of an opaque XLA error.
+#[cfg(any(feature = "xla", test))]
 fn count_parameters(hlo: &str) -> usize {
     let mut entry = false;
     let mut count = 0usize;
@@ -221,6 +233,7 @@ fn count_parameters(hlo: &str) -> usize {
 }
 
 /// Extract `"key": <int>` from a flat JSON object without a JSON dependency.
+#[cfg(any(feature = "xla", test))]
 fn json_usize(text: &str, key: &str) -> Option<usize> {
     let pat = format!("\"{key}\"");
     let at = text.find(&pat)?;

@@ -43,7 +43,7 @@ struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.at.total_cmp(&other.at).is_eq() && self.seq == other.seq
     }
 }
 impl Eq for Event {}
@@ -54,12 +54,15 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // reversed: BinaryHeap is a max-heap, we want earliest first.
+        // total_cmp (not partial_cmp-or-Equal): a NaN timestamp must take a
+        // deterministic position instead of comparing Equal to everything,
+        // which would silently corrupt heap ordering. Under IEEE total
+        // order the position depends on the NaN's sign bit (positive NaN
+        // after +inf, negative NaN before -inf) — either way ordering
+        // stays transitive and the `time went backwards` debug assertion
+        // can actually catch the poisoned event (NaN >= now is false).
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
@@ -122,7 +125,7 @@ impl SimResult {
     /// Records of completed+failed invocations sorted by arrival.
     pub fn sorted_records(&self) -> Vec<&InvocationRecord> {
         let mut v: Vec<&InvocationRecord> = self.records.iter().collect();
-        v.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        v.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         v
     }
 }
@@ -149,7 +152,7 @@ pub struct Engine<'p, P: Policy> {
 
 impl<'p, P: Policy> Engine<'p, P> {
     pub fn new(cfg: SimConfig, policy: &'p mut P, mut requests: Vec<Request>) -> Self {
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let rng = Rng::new(cfg.seed ^ 0x5115_BA71);
         let cluster = Cluster::new(&cfg);
         Engine {
@@ -784,6 +787,33 @@ mod tests {
         assert_eq!(bg[0].mem_mb, 1024);
         let qr = index_of("qr").unwrap();
         assert_eq!(res.unique_container_sizes(qr), 2);
+    }
+
+    #[test]
+    fn event_ordering_is_total_even_with_nan() {
+        let e = |at: f64, seq: u64| Event { at, seq, kind: EventKind::BeginExec(0) };
+        let mut heap = BinaryHeap::new();
+        heap.push(e(2.0, 1));
+        heap.push(e(f64::NAN.copysign(1.0), 2));
+        heap.push(e(1.0, 3));
+        heap.push(e(3.0, 4));
+        heap.push(e(f64::NAN.copysign(-1.0), 5));
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop()).map(|ev| ev.seq).collect();
+        // finite timestamps ascend; NaN timestamps take deterministic
+        // sign-dependent positions (negative NaN before -inf, positive
+        // NaN after +inf) instead of collapsing to Equal mid-heap
+        assert_eq!(order, vec![5, 3, 1, 4, 2]);
+    }
+
+    #[test]
+    fn event_ties_break_fifo_by_seq() {
+        let e = |at: f64, seq: u64| Event { at, seq, kind: EventKind::BeginExec(0) };
+        let mut heap = BinaryHeap::new();
+        heap.push(e(1.0, 9));
+        heap.push(e(1.0, 2));
+        heap.push(e(1.0, 5));
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop()).map(|ev| ev.seq).collect();
+        assert_eq!(order, vec![2, 5, 9], "same-time events pop in push order");
     }
 
     #[test]

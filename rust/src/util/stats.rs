@@ -153,6 +153,93 @@ pub fn ecdf(values: &[f64]) -> Vec<(f64, f64)> {
         .collect()
 }
 
+/// Cross-replicate aggregate of one scalar metric: the sweep harness
+/// (`experiments::sweep`, DESIGN.md §4) reports every headline number as
+/// mean/p50/p99 over seeds plus a percentile-bootstrap 95% CI of the mean.
+#[derive(Debug, Clone)]
+pub struct SeedStats {
+    /// Number of replicates aggregated.
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    /// 95% bootstrap confidence interval of the mean (lo, hi).
+    pub ci95: (f64, f64),
+}
+
+impl SeedStats {
+    /// Render as `mean [lo, hi]` with the given decimal places.
+    pub fn fmt_ci(&self, digits: usize) -> String {
+        format!(
+            "{:.d$} [{:.d$}, {:.d$}]",
+            self.mean,
+            self.ci95.0,
+            self.ci95.1,
+            d = digits
+        )
+    }
+}
+
+/// Aggregate per-seed values into a [`SeedStats`]. Deterministic: the
+/// bootstrap RNG is seeded from a fixed constant, so the same value list
+/// yields byte-identical statistics regardless of thread count.
+pub fn seed_stats(values: &[f64]) -> SeedStats {
+    let s = summarize(values);
+    SeedStats {
+        n: s.count,
+        mean: s.mean,
+        p50: s.p50,
+        p99: s.p99,
+        ci95: bootstrap_ci_mean(values, 1000, 0x5EED_C1AA),
+    }
+}
+
+/// Percentile-bootstrap 95% confidence interval for the mean: resample
+/// `values` with replacement `resamples` times and take the 2.5/97.5
+/// percentiles of the resampled means. Deterministic for a given seed.
+pub fn bootstrap_ci_mean(values: &[f64], resamples: usize, seed: u64) -> (f64, f64) {
+    match values.len() {
+        0 => return (0.0, 0.0),
+        1 => return (values[0], values[0]),
+        _ => {}
+    }
+    let mut rng = super::rng::Rng::new(seed);
+    let n = values.len();
+    let mut means = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += values[rng.below(n)];
+        }
+        means.push(acc / n as f64);
+    }
+    means.sort_by(f64::total_cmp);
+    (percentile(&means, 2.5), percentile(&means, 97.5))
+}
+
+/// Field-wise mean of several [`Summary`]s (cross-seed reduction of a
+/// distribution summary; averaging percentiles over replicates is the
+/// standard way the paper-style tables are aggregated across trials).
+pub fn average_summaries(items: &[&Summary]) -> Summary {
+    if items.is_empty() {
+        return Summary::empty();
+    }
+    let n = items.len() as f64;
+    let avg = |f: fn(&Summary) -> f64| items.iter().map(|s| f(s)).sum::<f64>() / n;
+    Summary {
+        count: (items.iter().map(|s| s.count).sum::<usize>() as f64 / n).round() as usize,
+        mean: avg(|s| s.mean),
+        std: avg(|s| s.std),
+        min: items.iter().map(|s| s.min).fold(f64::INFINITY, f64::min),
+        max: items.iter().map(|s| s.max).fold(f64::NEG_INFINITY, f64::max),
+        p50: avg(|s| s.p50),
+        p75: avg(|s| s.p75),
+        p90: avg(|s| s.p90),
+        p95: avg(|s| s.p95),
+        p99: avg(|s| s.p99),
+    }
+}
+
 /// Online mean/variance (Welford). Used by the worker utilization daemon
 /// where we cannot afford to buffer every 10 ms sample.
 #[derive(Debug, Clone, Default)]
@@ -269,5 +356,50 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert!((median(&[1.0, 2.0, 3.0, 4.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_the_mean() {
+        let v = [4.0, 5.0, 6.0, 5.5, 4.5, 5.2, 4.8, 5.9];
+        let (lo, hi) = bootstrap_ci_mean(&v, 500, 7);
+        let m = mean(&v);
+        assert!(lo <= m && m <= hi, "CI [{lo}, {hi}] must bracket mean {m}");
+        assert!(lo >= 4.0 && hi <= 6.0, "CI stays within the sample range");
+    }
+
+    #[test]
+    fn bootstrap_ci_deterministic() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(bootstrap_ci_mean(&v, 200, 9), bootstrap_ci_mean(&v, 200, 9));
+    }
+
+    #[test]
+    fn bootstrap_ci_degenerate_cases() {
+        assert_eq!(bootstrap_ci_mean(&[], 100, 1), (0.0, 0.0));
+        assert_eq!(bootstrap_ci_mean(&[3.5], 100, 1), (3.5, 3.5));
+    }
+
+    #[test]
+    fn seed_stats_reports_all_views() {
+        let v = [2.0, 4.0, 6.0];
+        let s = seed_stats(&v);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 4.0).abs() < 1e-12);
+        assert_eq!(s.p50, 4.0);
+        assert!(s.ci95.0 <= s.mean && s.mean <= s.ci95.1);
+        assert!(s.fmt_ci(1).starts_with("4.0 ["));
+    }
+
+    #[test]
+    fn average_summaries_fieldwise() {
+        let a = summarize(&[1.0, 2.0, 3.0]);
+        let b = summarize(&[3.0, 4.0, 5.0]);
+        let m = average_summaries(&[&a, &b]);
+        assert_eq!(m.count, 3);
+        assert!((m.mean - 3.0).abs() < 1e-12);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 5.0);
+        assert!((m.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(average_summaries(&[]).count, 0);
     }
 }

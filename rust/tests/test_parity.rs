@@ -2,6 +2,10 @@
 //! math; after identical update sequences their weights and predictions
 //! must agree to f32 round-off. This pins the rust mirror to the
 //! Pallas/JAX ground truth end-to-end (through the real artifacts).
+//!
+//! Needs the `xla` feature (and `make artifacts`); the default build
+//! compiles this file to an empty test crate.
+#![cfg(feature = "xla")]
 
 use std::rc::Rc;
 

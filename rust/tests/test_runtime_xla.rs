@@ -1,5 +1,9 @@
 //! Integration: load the real AOT artifacts through PJRT and check numerics
 //! against hand-computed CSOAA math. This is the L3<->L2/L1 contract test.
+//!
+//! Needs the `xla` feature (and `make artifacts`); the default build
+//! compiles this file to an empty test crate.
+#![cfg(feature = "xla")]
 
 use shabari::runtime::{XlaEngine, BATCH, FEAT_DIM, NUM_CLASSES};
 

@@ -1,0 +1,132 @@
+//! Sweep-harness determinism contract (DESIGN.md §4):
+//! * the same (base seed, grid) must produce **byte-identical** per-seed
+//!   metrics and cross-seed aggregates at `--jobs 1` and `--jobs 8`;
+//! * distinct derived seeds must produce distinct `InvocationRecord`
+//!   streams (replication actually samples different stochastic worlds).
+
+use shabari::experiments::common::{make_policy, run_cell, sim_config, trace_seed, Ctx};
+use shabari::experiments::sweep::{self, Cell};
+use shabari::metrics::RunMetrics;
+use shabari::simulator::engine::simulate;
+
+fn quick_ctx() -> Ctx {
+    Ctx { duration_s: 60.0, ..Default::default() }
+}
+
+/// Every scalar we assert byte-equality on, as raw bits.
+fn metric_bits(m: &RunMetrics) -> Vec<u64> {
+    vec![
+        m.invocations as u64,
+        m.slo_violation_pct.to_bits(),
+        m.wasted_vcpus.p50.to_bits(),
+        m.wasted_vcpus.p95.to_bits(),
+        m.wasted_mem_gb.p50.to_bits(),
+        m.vcpu_utilization.p50.to_bits(),
+        m.cold_start_pct.to_bits(),
+        m.mean_e2e_s.to_bits(),
+        m.throughput.to_bits(),
+        m.containers_created,
+    ]
+}
+
+#[test]
+fn aggregates_byte_identical_across_job_counts() {
+    let ctx = quick_ctx();
+    let cells = vec![
+        Cell::new("static-medium", 2.0),
+        Cell::new("shabari", 2.0),
+        Cell::new("cypress", 3.0),
+    ];
+    let sweep_with = |jobs: usize| {
+        sweep::run_cells(&cells, ctx.seed, 3, jobs, |cell, seed| {
+            run_cell(&cell.policy, &ctx, cell.rps, seed)
+        })
+        .unwrap()
+    };
+    let sequential = sweep_with(1);
+    let parallel = sweep_with(8);
+    assert_eq!(sequential.len(), parallel.len());
+    for (a, b) in sequential.iter().zip(&parallel) {
+        assert_eq!(a.per_seed.len(), 3);
+        // per-seed metrics identical bit-for-bit
+        for (ma, mb) in a.per_seed.iter().zip(&b.per_seed) {
+            assert_eq!(
+                metric_bits(ma),
+                metric_bits(mb),
+                "cell {} diverged between --jobs 1 and --jobs 8",
+                a.cell.id()
+            );
+        }
+        // cross-seed aggregates identical bit-for-bit (mean metrics,
+        // seed stats incl. the fixed-seed bootstrap CI)
+        assert_eq!(metric_bits(&a.mean_metrics()), metric_bits(&b.mean_metrics()));
+        let sa = a.stat(|m| m.slo_violation_pct);
+        let sb = b.stat(|m| m.slo_violation_pct);
+        assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+        assert_eq!(sa.p50.to_bits(), sb.p50.to_bits());
+        assert_eq!(sa.p99.to_bits(), sb.p99.to_bits());
+        assert_eq!(sa.ci95.0.to_bits(), sb.ci95.0.to_bits());
+        assert_eq!(sa.ci95.1.to_bits(), sb.ci95.1.to_bits());
+    }
+}
+
+#[test]
+fn rerunning_a_sweep_is_deterministic() {
+    let ctx = quick_ctx();
+    let cells = vec![Cell::new("static-large", 2.0)];
+    let run = || {
+        sweep::run_cells(&cells, ctx.seed, 2, 4, |cell, seed| {
+            run_cell(&cell.policy, &ctx, cell.rps, seed)
+        })
+        .unwrap()[0]
+            .per_seed
+            .iter()
+            .map(metric_bits)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn distinct_seeds_produce_distinct_record_streams() {
+    let base = quick_ctx();
+    let cell = Cell::new("static-medium", 2.0);
+    let records_for = |replicate: usize| {
+        let seed = sweep::cell_seed(base.seed, &cell, replicate);
+        let ctx = base.with_seed(seed);
+        let workload = ctx.workload();
+        let mut policy = make_policy(&cell.policy, &ctx, &workload).unwrap();
+        let trace = workload.trace(cell.rps, ctx.duration_s, trace_seed(&ctx, cell.rps));
+        let res = simulate(sim_config(&ctx), &mut policy, trace);
+        let mut recs: Vec<(u64, u64, u64)> = res
+            .records
+            .iter()
+            .map(|r| (r.id, r.exec_s.to_bits(), r.e2e_s.to_bits()))
+            .collect();
+        recs.sort();
+        recs
+    };
+    let a = records_for(0);
+    let b = records_for(1);
+    assert!(!a.is_empty() && !b.is_empty());
+    assert_ne!(a, b, "different replicates must sample different worlds");
+    // and the same replicate reproduces its stream exactly
+    assert_eq!(a, records_for(0));
+}
+
+#[test]
+fn per_seed_replicates_differ_within_a_cell() {
+    // The harness end-to-end: one cell, three seeds; the three metric sets
+    // must not all coincide (the workload/trace/policy are re-seeded).
+    let ctx = quick_ctx();
+    let cells = vec![Cell::new("static-medium", 2.0)];
+    let outcomes = sweep::run_cells(&cells, ctx.seed, 3, 2, |cell, seed| {
+        run_cell(&cell.policy, &ctx, cell.rps, seed)
+    })
+    .unwrap();
+    let bits: Vec<Vec<u64>> = outcomes[0].per_seed.iter().map(metric_bits).collect();
+    assert!(
+        bits[0] != bits[1] || bits[1] != bits[2],
+        "replicates collapsed to one stochastic world"
+    );
+}

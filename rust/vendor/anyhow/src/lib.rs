@@ -1,0 +1,176 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no registry access, so the workspace vendors
+//! the slice of `anyhow` it actually uses: [`Error`], [`Result`], the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the [`Context`] extension
+//! trait. Semantics mirror the real crate where it matters here:
+//!
+//! * `{}` displays the outermost message, `{:#}` the full context chain
+//!   joined with `": "`;
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?` (which is also why [`Error`] itself does not
+//!   implement `std::error::Error` — exactly like the real `anyhow`);
+//! * `with_context`/`context` push an outer message onto the chain.
+//!
+//! Swapping back to the real crate is a one-line change in
+//! `rust/Cargo.toml`; no call site depends on anything beyond this subset.
+
+use std::fmt;
+
+/// A lightweight error: an ordered context chain, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (for tests/inspection).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias: the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a single message).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return an `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: boom 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn with_context_chains() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "writing table").unwrap_err();
+        assert_eq!(format!("{e}"), "writing table");
+        assert!(format!("{e:#}").starts_with("writing table: "));
+    }
+
+    #[test]
+    fn ensure_formats() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x > 3, "x too small: {x}");
+            Ok(())
+        }
+        assert!(check(5).is_ok());
+        assert_eq!(format!("{}", check(1).unwrap_err()), "x too small: 1");
+    }
+
+    #[test]
+    fn inline_captures_in_messages() {
+        let name = "qr";
+        let e = anyhow!("unknown function '{name}'");
+        assert_eq!(e.to_string(), "unknown function 'qr'");
+    }
+}

@@ -1,0 +1,191 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The shabari crate's `xla` feature compiles `runtime::XlaEngine` and
+//! `learner::xla::XlaCsmc` against this API surface. The stub keeps the
+//! types and signatures of the real bindings for every call site in the
+//! workspace, but any operation that would need libxla/PJRT returns a
+//! runtime [`Error`] — so `cargo build --features xla` succeeds on a
+//! machine without the PJRT shared libraries, and the failure mode is a
+//! clear error at engine-load time instead of a link error.
+//!
+//! To run the real production path, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual xla-rs checkout (xla_extension 0.5.x);
+//! host-side literal bookkeeping here matches its semantics.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring xla-rs's (stringly, Display + std::error::Error).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} needs the real PJRT runtime (this build vendors \
+         rust/vendor/xla; see rust/Cargo.toml to link the real xla-rs)"
+    ))
+}
+
+/// Element types a [`Literal`] can expose through [`Literal::to_vec`].
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+
+/// A host-side literal: flat f32 storage plus a shape.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret the literal with new dimensions (element count must
+    /// match, as in the real bindings).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Overwrite the literal's contents in place (hot-path upload).
+    pub fn copy_raw_from(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() != self.data.len() {
+            return Err(Error(format!(
+                "copy_raw_from: literal holds {} elements, got {}",
+                self.data.len(),
+                data.len()
+            )));
+        }
+        self.data.copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Flatten to a host vector of the given element type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// The literal's shape (stub-local helper, also present upstream).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments; result is per-device, per-output.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[0.0; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(l.reshape(&[3, 2]).unwrap().dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn copy_raw_checks_len() {
+        let mut l = Literal::vec1(&[0.0; 4]);
+        assert!(l.copy_raw_from(&[1.0, 2.0, 3.0, 4.0]).is_ok());
+        assert!(l.copy_raw_from(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
