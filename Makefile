@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench clean
+.PHONY: artifacts build test bench scenarios clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -12,6 +12,11 @@ build:
 
 test:
 	cargo test -q
+
+# Cross-scenario robustness matrix (every Fig-8 system x every workload
+# scenario, incl. the checked-in sample trace) — EXPERIMENTS.md.
+scenarios:
+	cargo run --release -- experiment scenarios
 
 bench:
 	cargo bench

@@ -36,6 +36,9 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         0 => sweep::default_jobs(), // 0 = auto: all available cores
         n => n,
     };
+    let scenario = a.get_or("scenario", "azure-synthetic");
+    // fail fast on typos (trace-file paths are checked here too)
+    crate::workload::scenario::by_name(&scenario)?;
     Ok(Ctx {
         seed: a.get_u64("seed", 42)?,
         backend,
@@ -44,6 +47,7 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         artifacts_dir: a.get_or("artifacts", "artifacts"),
         seeds,
         jobs,
+        scenario,
     })
 }
 
@@ -62,6 +66,10 @@ fn run(argv: &[String]) -> Result<()> {
         "list" => {
             println!("policies:    {}", experiments::common::POLICIES.join(", "));
             println!("experiments: {} (or 'all')", experiments::EXPERIMENTS.join(", "));
+            println!(
+                "scenarios:   {} (or trace-file:<path>)",
+                crate::workload::scenario::SCENARIOS.join(", ")
+            );
             Ok(())
         }
         "run" => cmd_run(&a),
@@ -95,8 +103,8 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     let viol = out.stat(|m| m.slo_violation_pct);
     let mut t = crate::util::table::Table::new(
         &format!(
-            "run: {policy} @ {rps} rps, {}s trace, {} seed(s) x {} job(s)",
-            ctx.duration_s, ctx.seeds, ctx.jobs
+            "run: {policy} @ {rps} rps, {}s {} trace, {} seed(s) x {} job(s)",
+            ctx.duration_s, ctx.scenario, ctx.seeds, ctx.jobs
         ),
         &["metric", "value (cross-seed mean)"],
     );
@@ -214,7 +222,7 @@ fn print_help() {
                           --policy <name>   (default shabari; see `list`)\n\
                           --rps <f>         (default 4)\n\
            experiment   regenerate a paper figure/table\n\
-                          <id>              fig1..fig14, table1-3, or 'all'\n\
+                          <id>              fig1..fig14, table1-3, scenarios, or 'all'\n\
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\
@@ -228,6 +236,9 @@ fn print_help() {
                                    base ^ hash(cell, replicate) (default 5)\n\
            --jobs <n>              sweep worker threads (default 0 = all cores)\n\
            --duration <s>          trace length (default 600)\n\
+           --scenario <name>       workload shape: azure-synthetic (default),\n\
+                                   diurnal, flash-crowd, zipf-skew, trace-file,\n\
+                                   or trace-file:<csv-path> (Azure trace schema)\n\
            --slo-multiplier <f>    SLO = f x median isolated time (default 1.4)\n\
            --xla                   use the AOT XLA learner (production path;\n\
                                    needs a `--features xla` build)\n\

@@ -15,6 +15,7 @@ use crate::learner::xla::Backend;
 use crate::metrics::{from_result, RunMetrics};
 use crate::simulator::engine::{simulate, SimResult};
 use crate::simulator::{Policy, SimConfig};
+use crate::workload::scenario::{self, Scenario};
 use crate::workload::Workload;
 
 /// Experiment context, filled from CLI flags.
@@ -33,6 +34,10 @@ pub struct Ctx {
     pub seeds: usize,
     /// Sweep worker threads (`--jobs`; CLI default = all cores).
     pub jobs: usize,
+    /// Workload scenario (`--scenario`; see `workload::scenario::by_name`).
+    /// The default, `azure-synthetic`, reproduces the pre-scenario traces
+    /// byte-for-byte.
+    pub scenario: String,
 }
 
 impl Default for Ctx {
@@ -45,6 +50,7 @@ impl Default for Ctx {
             artifacts_dir: "artifacts".to_string(),
             seeds: 1,
             jobs: 1,
+            scenario: "azure-synthetic".to_string(),
         }
     }
 }
@@ -67,6 +73,17 @@ impl Ctx {
     /// `seed`, so this is the only hook replication needs.
     pub fn with_seed(&self, seed: u64) -> Ctx {
         Ctx { seed, ..self.clone() }
+    }
+
+    /// The same context under a different workload scenario (the hook the
+    /// policy × scenario robustness grid uses per cell).
+    pub fn with_scenario(&self, scenario: &str) -> Ctx {
+        Ctx { scenario: scenario.to_string(), ..self.clone() }
+    }
+
+    /// Build this context's scenario from the registry.
+    pub fn build_scenario(&self) -> Result<Box<dyn Scenario>> {
+        scenario::by_name(&self.scenario)
     }
 }
 
@@ -135,7 +152,8 @@ pub fn trace_seed(ctx: &Ctx, rps: f64) -> u64 {
     ctx.seed.wrapping_add(rps as u64)
 }
 
-/// Run one policy over a trace at `rps`; returns raw result + metrics.
+/// Run one policy over a trace at `rps` under `Ctx::scenario`; returns
+/// raw result + metrics.
 pub fn run_one(
     name: &str,
     ctx: &Ctx,
@@ -144,7 +162,9 @@ pub fn run_one(
     sim_cfg: &SimConfig,
 ) -> Result<(SimResult, RunMetrics)> {
     let mut policy = make_policy(name, ctx, workload)?;
-    let trace = workload.trace(rps, ctx.duration_s, trace_seed(ctx, rps));
+    let scenario = ctx.build_scenario()?;
+    let trace =
+        workload.trace_with(scenario.as_ref(), rps, ctx.duration_s, trace_seed(ctx, rps));
     let res = simulate(sim_cfg.clone(), &mut policy, trace);
     let metrics = from_result(name, &res);
     Ok((res, metrics))
@@ -158,8 +178,10 @@ pub fn sim_config(ctx: &Ctx) -> SimConfig {
 /// Canonical sweep-cell runner: rebuild *everything* stochastic (workload
 /// pools, trace, policy with its learner models and scheduler RNGs,
 /// cluster RNG) from the derived `seed`, run once, and reduce to metrics.
-/// No state crosses cells, which is what lets `sweep::run_cells` execute
-/// cells on any thread in any order with byte-identical results.
+/// The trace is generated under `Ctx::scenario`, so any grid runs under
+/// any workload shape (`--scenario`, DESIGN.md §Scenarios). No state
+/// crosses cells, which is what lets `sweep::run_cells` execute cells on
+/// any thread in any order with byte-identical results.
 pub fn run_cell(name: &str, ctx: &Ctx, rps: f64, seed: u64) -> Result<RunMetrics> {
     let cctx = ctx.with_seed(seed);
     let workload = cctx.workload();
@@ -197,6 +219,28 @@ mod tests {
         let (res, m) = run_one("static-medium", &ctx, &w, 2.0, &cfg).unwrap();
         assert!(m.invocations > 50, "2 rps over 60 s");
         assert_eq!(res.records.len(), m.invocations);
+    }
+
+    #[test]
+    fn run_cell_honors_the_ctx_scenario() {
+        let base = Ctx { duration_s: 60.0, ..Default::default() };
+        let azure = run_cell("static-medium", &base, 2.0, 7).unwrap();
+        // flash-crowd adds burst load on top of the base rate, so the two
+        // scenarios cannot simulate the same number of invocations
+        let flash =
+            run_cell("static-medium", &base.with_scenario("flash-crowd"), 2.0, 7).unwrap();
+        assert_ne!(azure.invocations, flash.invocations, "scenario did not reach the trace");
+        // and naming the default explicitly is a no-op
+        let explicit =
+            run_cell("static-medium", &base.with_scenario("azure-synthetic"), 2.0, 7).unwrap();
+        assert_eq!(azure.invocations, explicit.invocations);
+        assert_eq!(azure.slo_violation_pct.to_bits(), explicit.slo_violation_pct.to_bits());
+    }
+
+    #[test]
+    fn unknown_scenario_surfaces_as_error() {
+        let ctx = Ctx { duration_s: 60.0, ..Default::default() };
+        assert!(run_cell("static-medium", &ctx.with_scenario("nope"), 2.0, 7).is_err());
     }
 
     #[test]

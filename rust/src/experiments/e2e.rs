@@ -188,8 +188,10 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
             .collect(),
     );
     std::fs::create_dir_all("out").ok();
-    std::fs::write("out/fig8.json", dump.to_pretty()).ok();
-    println!("(dumped out/fig8.json)");
+    match std::fs::write("out/fig8.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/fig8.json)"),
+        Err(e) => eprintln!("warning: could not write out/fig8.json: {e}"),
+    }
     Ok(())
 }
 

@@ -13,6 +13,7 @@ pub mod characterize;
 pub mod common;
 pub mod e2e;
 pub mod overheads;
+pub mod scenarios;
 pub mod sensitivity;
 pub mod sweep;
 pub mod tables;
@@ -21,10 +22,12 @@ use anyhow::{bail, Result};
 
 pub use common::Ctx;
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper's figures/tables in paper order, then
+/// this reproduction's own additions (`scenarios`, the cross-scenario
+/// robustness matrix — DESIGN.md §Scenarios).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
-    "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3",
+    "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios",
 ];
 
 /// Run one experiment by id.
@@ -47,6 +50,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "table1" => tables::table1(ctx),
         "table2" => tables::table2(ctx),
         "table3" => tables::table3(ctx),
+        "scenarios" => scenarios::scenarios(ctx),
         "all" => {
             for id in EXPERIMENTS {
                 println!("\n================ {id} ================\n");
@@ -62,11 +66,14 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
 mod tests {
     #[test]
     fn registry_covers_every_table_and_figure() {
-        // the paper's evaluation: figures 1-4, 6-14 and tables 1-3
+        // the paper's evaluation (figures 1-4, 6-14, tables 1-3) plus the
+        // repo's own cross-scenario robustness matrix
         for id in super::EXPERIMENTS {
-            assert!(id.starts_with("fig") || id.starts_with("table"));
+            assert!(
+                id.starts_with("fig") || id.starts_with("table") || *id == "scenarios"
+            );
         }
-        assert_eq!(super::EXPERIMENTS.len(), 17);
+        assert_eq!(super::EXPERIMENTS.len(), 18);
     }
 
     #[test]

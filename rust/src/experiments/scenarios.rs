@@ -1,0 +1,241 @@
+//! `experiment scenarios` — the cross-scenario robustness matrix
+//! (DESIGN.md §Scenarios): every Fig-8 system × every registered workload
+//! scenario at a fixed load, replicated across `Ctx::seeds` seeds on
+//! `Ctx::jobs` threads. Where Fig 8 asks "who wins under the Azure-like
+//! shape", this asks whether the ranking *survives* diurnal swing, flash
+//! crowds, Zipf-skewed popularity, and real-trace replay — the workload
+//! regimes where variance conclusions are known to flip (Wen et al.) and
+//! underutilization peaks (Fifer).
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+use crate::workload::scenario::SCENARIOS;
+
+use super::common::{run_cell, Ctx};
+use super::e2e::FIG8_POLICIES;
+use super::sweep::{self, Cell, CellOutcome};
+
+/// Load for the robustness matrix (mid-range: every system still admits
+/// the trace, but allocation quality separates them).
+pub const MATRIX_RPS: f64 = 4.0;
+
+/// Cell label carrying the scenario name (salts replicate seeds, so the
+/// same policy under two scenarios samples disjoint RNG streams at
+/// replicates ≥ 1 while replicate 0 stays grid-wide paired).
+fn cell_label(scenario: &str) -> String {
+    format!("scenario:{scenario}")
+}
+
+fn cell_scenario(cell: &Cell) -> &str {
+    cell.label.strip_prefix("scenario:").unwrap_or(&cell.label)
+}
+
+/// The matrix's scenario columns: the registered names, with the
+/// `trace-file` column honoring a user-supplied `trace-file:<path>` from
+/// `--scenario` (the only parameterizable scenario — the matrix spans
+/// *all* shapes by design, so any other `--scenario` value is already one
+/// of its columns).
+fn matrix_scenarios(ctx: &Ctx) -> Vec<String> {
+    SCENARIOS
+        .iter()
+        .map(|s| {
+            if *s == "trace-file" && ctx.scenario.starts_with("trace-file:") {
+                ctx.scenario.clone()
+            } else {
+                (*s).to_string()
+            }
+        })
+        .collect()
+}
+
+/// Run the full policy × scenario grid; outcome
+/// `[pi * SCENARIOS.len() + si]` holds `FIG8_POLICIES[pi]` under
+/// `SCENARIOS[si]` with all per-seed metrics.
+pub fn run_matrix(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>> {
+    let scenarios = matrix_scenarios(ctx);
+    let cells: Vec<Cell> = FIG8_POLICIES
+        .iter()
+        .flat_map(|p| {
+            scenarios.iter().map(move |s| Cell::labeled(p, rps, &cell_label(s), 0.0))
+        })
+        .collect();
+    sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_cell(&cell.policy, &ctx.with_scenario(cell_scenario(cell)), cell.rps, seed)
+    })
+}
+
+pub fn scenarios(ctx: &Ctx) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let outcomes = run_matrix(ctx, MATRIX_RPS)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "(robustness matrix: {} cells x {} seed(s) on {} job(s), {:.1}s wall)",
+        outcomes.len(),
+        ctx.seeds,
+        ctx.jobs,
+        wall
+    );
+    if ctx.scenario.starts_with("trace-file:") {
+        println!("(trace-file column replays --scenario {})", ctx.scenario);
+    } else if ctx.scenario != "azure-synthetic" {
+        println!(
+            "(note: the matrix always spans all scenarios — --scenario {} is \
+             already one of its columns)",
+            ctx.scenario
+        );
+    }
+
+    let ns = SCENARIOS.len();
+    // tables keep the short registry names for width; the JSON artifact
+    // records the substituted names (incl. a user trace-file path) so a
+    // saved dump stays self-describing
+    let scenario_names = matrix_scenarios(ctx);
+    let header: Vec<&str> =
+        std::iter::once("system").chain(SCENARIOS.iter().copied()).collect();
+
+    let mut t = Table::new(
+        &format!("Scenarios — % SLO violations, mean [95% CI] (RPS {MATRIX_RPS})"),
+        &header,
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for si in 0..ns {
+            row.push(outcomes[pi * ns + si].stat(|m| m.slo_violation_pct).fmt_ci(1));
+        }
+        t.row(row);
+    }
+    t.note("CI = percentile bootstrap over seeds; widen --seeds to tighten");
+    t.print();
+
+    let mut t = Table::new(
+        "Scenarios — wasted memory GB per invocation (p50, cross-seed mean)",
+        &header,
+    );
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for si in 0..ns {
+            row.push(fnum(outcomes[pi * ns + si].mean_metrics().wasted_mem_gb.p50, 2));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    let mut t = Table::new("Scenarios — cold starts % (cross-seed mean)", &header);
+    for (pi, name) in FIG8_POLICIES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for si in 0..ns {
+            row.push(fpct(outcomes[pi * ns + si].mean_metrics().cold_start_pct));
+        }
+        t.row(row);
+    }
+    t.note("flash-crowd exceeds the nominal RPS by design (step burst is extra load)");
+    t.print();
+
+    // machine-readable dump for cross-scenario plotting
+    let dump = Json::Arr(
+        FIG8_POLICIES
+            .iter()
+            .enumerate()
+            .map(|(pi, name)| {
+                Json::obj(vec![
+                    ("policy", Json::Str(name.to_string())),
+                    (
+                        "scenarios",
+                        Json::Arr(
+                            scenario_names
+                                .iter()
+                                .enumerate()
+                                .map(|(si, s)| {
+                                    let out = &outcomes[pi * ns + si];
+                                    let viol = out.stat(|m| m.slo_violation_pct);
+                                    let m = out.mean_metrics();
+                                    Json::obj(vec![
+                                        ("scenario", Json::Str(s.clone())),
+                                        ("slo_violation_pct_mean", Json::Num(viol.mean)),
+                                        ("slo_violation_pct_ci95_lo", Json::Num(viol.ci95.0)),
+                                        ("slo_violation_pct_ci95_hi", Json::Num(viol.ci95.1)),
+                                        ("wasted_mem_gb_p50", Json::Num(m.wasted_mem_gb.p50)),
+                                        ("wasted_vcpus_p50", Json::Num(m.wasted_vcpus.p50)),
+                                        ("cold_start_pct", Json::Num(m.cold_start_pct)),
+                                        ("invocations", Json::Num(m.invocations as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::create_dir_all("out").ok();
+    match std::fs::write("out/scenarios.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/scenarios.json)"),
+        Err(e) => eprintln!("warning: could not write out/scenarios.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_covers_every_policy_scenario_pair() {
+        let ctx = Ctx { duration_s: 60.0, ..Default::default() };
+        let outcomes = run_matrix(&ctx, 2.0).unwrap();
+        assert_eq!(outcomes.len(), FIG8_POLICIES.len() * SCENARIOS.len());
+        for (pi, policy) in FIG8_POLICIES.iter().enumerate() {
+            for (si, scenario) in SCENARIOS.iter().enumerate() {
+                let out = &outcomes[pi * SCENARIOS.len() + si];
+                assert_eq!(out.cell.policy, *policy);
+                assert_eq!(cell_scenario(&out.cell), *scenario);
+                assert!(out.per_seed.iter().all(|m| m.invocations > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_honors_a_user_trace_file_path() {
+        let ctx = Ctx {
+            scenario: "trace-file:data/azure_sample.csv".to_string(),
+            ..Default::default()
+        };
+        let names = matrix_scenarios(&ctx);
+        assert_eq!(names.len(), SCENARIOS.len());
+        assert!(names.contains(&"trace-file:data/azure_sample.csv".to_string()));
+        assert!(!names.contains(&"trace-file".to_string()), "column substituted");
+        // non-trace-file --scenario values are already matrix columns
+        let plain = matrix_scenarios(&Ctx::default());
+        assert_eq!(plain, SCENARIOS.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        let diurnal = matrix_scenarios(&Ctx::default().with_scenario("diurnal"));
+        assert_eq!(diurnal, plain);
+    }
+
+    #[test]
+    fn scenario_cells_occupy_distinct_seed_streams() {
+        let a = Cell::labeled("shabari", 4.0, &cell_label("diurnal"), 0.0);
+        let b = Cell::labeled("shabari", 4.0, &cell_label("flash-crowd"), 0.0);
+        assert_ne!(sweep::cell_seed(42, &a, 1), sweep::cell_seed(42, &b, 1));
+        // replicate 0 is the shared paired-comparison world
+        assert_eq!(sweep::cell_seed(42, &a, 0), sweep::cell_seed(42, &b, 0));
+    }
+
+    #[test]
+    fn scenarios_actually_change_outcomes() {
+        // the same policy under azure-synthetic vs flash-crowd must not
+        // collapse to identical runs (the matrix would be vacuous)
+        let ctx = Ctx { duration_s: 120.0, ..Default::default() };
+        let outcomes = run_matrix(&ctx, 3.0).unwrap();
+        let ns = SCENARIOS.len();
+        let azure = &outcomes[0]; // FIG8_POLICIES[0] under azure-synthetic
+        let flash = &outcomes[2]; // ... under flash-crowd
+        assert_ne!(
+            azure.per_seed[0].invocations, flash.per_seed[0].invocations,
+            "flash-crowd burst load must differ from the base process"
+        );
+        assert_eq!(ns, 5, "matrix must span all five registered scenarios");
+    }
+}

@@ -46,7 +46,13 @@ fn run_shabari_cell(
     let workload = cctx.workload();
     let alloc = ResourceAllocator::new(acfg)?;
     let mut policy = ShabariPolicy::new(alloc, Box::new(ShabariScheduler::new(cctx.seed)));
-    let trace = workload.trace(cell.rps, cctx.duration_s, trace_seed(&cctx, cell.rps));
+    let scenario = cctx.build_scenario()?;
+    let trace = workload.trace_with(
+        scenario.as_ref(),
+        cell.rps,
+        cctx.duration_s,
+        trace_seed(&cctx, cell.rps),
+    );
     let res = simulate(cfg, &mut policy, trace);
     Ok(from_result("shabari", &res))
 }

@@ -131,9 +131,15 @@ pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
 
 /// Records after a warm-up cutoff (learning-phase exclusion used by some
 /// sensitivity analyses; the headline E2E numbers include everything,
-/// like the paper's).
-pub fn after_warmup(records: &[InvocationRecord], cutoff_s: f64) -> Vec<InvocationRecord> {
-    records.iter().filter(|r| r.arrival >= cutoff_s).cloned().collect()
+/// like the paper's). Borrows instead of cloning: `InvocationRecord`
+/// carries an owned `InputSpec`, so cloning every record to drop a prefix
+/// was pure allocation overhead — filter lazily and collect references
+/// only where the caller actually needs a slice.
+pub fn after_warmup(
+    records: &[InvocationRecord],
+    cutoff_s: f64,
+) -> impl Iterator<Item = &InvocationRecord> {
+    records.iter().filter(move |r| r.arrival >= cutoff_s)
 }
 
 #[cfg(test)]
@@ -222,7 +228,12 @@ mod tests {
         a.arrival = 10.0;
         let mut b = rec(1.0, 2.0, false, Verdict::Completed);
         b.arrival = 200.0;
-        let filtered = after_warmup(&[a, b], 100.0);
+        let records = [a, b];
+        // borrowing iterator: no record is cloned to apply the cutoff
+        let filtered: Vec<&InvocationRecord> = after_warmup(&records, 100.0).collect();
         assert_eq!(filtered.len(), 1);
+        assert!(std::ptr::eq(filtered[0], &records[1]), "borrows, not clones");
+        assert_eq!(after_warmup(&records, 0.0).count(), 2);
+        assert_eq!(after_warmup(&records, 500.0).count(), 0);
     }
 }

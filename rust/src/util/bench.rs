@@ -76,7 +76,7 @@ pub fn run_batched(
 }
 
 fn finish(name: &str, mut lat: Vec<f64>, total_s: f64) -> BenchResult {
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(f64::total_cmp);
     let r = BenchResult {
         name: name.to_string(),
         iters: lat.len(),

@@ -59,7 +59,7 @@ pub fn summarize(values: &[f64]) -> Summary {
         return Summary::empty();
     }
     let mut v: Vec<f64> = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     let mean = v.iter().sum::<f64>() / n as f64;
     let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -80,7 +80,7 @@ pub fn summarize(values: &[f64]) -> Summary {
 /// Median of a sample (convenience).
 pub fn median(values: &[f64]) -> f64 {
     let mut v = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    v.sort_by(f64::total_cmp);
     percentile(&v, 50.0)
 }
 
@@ -145,7 +145,7 @@ impl Histogram {
 /// Empirical CDF points (x, F(x)) from a sample — used by figure dumps.
 pub fn ecdf(values: &[f64]) -> Vec<(f64, f64)> {
     let mut v = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     v.into_iter()
         .enumerate()

@@ -6,11 +6,80 @@
 //! the target RPS. We reproduce the same *process* over a synthetic
 //! per-minute profile with Azure-like burstiness (heavy-tailed per-minute
 //! counts: most minutes near the mean, occasional 2-3x bursts).
+//!
+//! This module is the *process*; `workload::scenario` wraps it (and four
+//! alternative processes) behind the [`Scenario`](super::scenario::Scenario)
+//! trait so every experiment can run under any arrival shape.
 
 use crate::util::rng::Rng;
 
+/// Round non-negative real per-minute intensities to integer counts whose
+/// total equals `round(sum)` exactly (largest-remainder method): floor
+/// every entry, then hand the rounding residue to the largest fractional
+/// parts (ties broken by index, so the result is deterministic).
+///
+/// Naive per-entry `round()` can drop *every* invocation at very low
+/// `rps × minutes` (all entries below 0.5 round to an all-zero window) or
+/// drift by several counts over long windows; this guarantees the window
+/// carries the expected total ±1 regardless of how the mass is spread.
+pub fn round_counts(raw: &[f64]) -> Vec<u64> {
+    let total: f64 = raw.iter().map(|r| r.max(0.0)).sum();
+    let target = total.round() as u64;
+    let mut counts: Vec<u64> = raw.iter().map(|r| r.max(0.0).floor() as u64).collect();
+    let floor_sum: u64 = counts.iter().sum();
+    let mut residue = target.saturating_sub(floor_sum);
+    if residue > 0 {
+        let mut by_frac: Vec<(usize, f64)> = raw
+            .iter()
+            .map(|r| {
+                let r = r.max(0.0);
+                r - r.floor()
+            })
+            .enumerate()
+            .collect();
+        by_frac.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (i, _) in by_frac {
+            if residue == 0 {
+                break;
+            }
+            counts[i] += 1;
+            residue -= 1;
+        }
+    }
+    counts
+}
+
+/// Rescale a per-minute intensity profile in place so the window mean is
+/// exactly `rps` (sum = `rps * 60 * len`). An all-zero profile cannot
+/// preserve its shape, so it falls back to a uniform profile at the
+/// target rate instead of dividing by zero (a trace-replay window can
+/// land entirely on zero-count minutes).
+pub fn rescale_to_rps(raw: &mut [f64], rps: f64) {
+    if raw.is_empty() {
+        return;
+    }
+    let target = rps * 60.0 * raw.len() as f64;
+    let sum: f64 = raw.iter().map(|r| r.max(0.0)).sum();
+    if sum <= 0.0 {
+        let uniform = target / raw.len() as f64;
+        raw.fill(uniform);
+    } else {
+        for r in raw.iter_mut() {
+            *r = r.max(0.0) * target / sum;
+        }
+    }
+}
+
+/// Arrivals from a raw per-minute intensity profile: residue-preserving
+/// rounding ([`round_counts`]) then uniform within-minute placement
+/// ([`minute_starts`]) — the shared tail of every per-minute scenario.
+pub fn profile_starts(raw: &[f64], duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+    minute_starts(&round_counts(raw), duration_s, rng)
+}
+
 /// Per-minute invocation counts with Azure-like burstiness, scaled so the
-/// whole window averages `rps`.
+/// whole window averages `rps`. The total over the window is exactly
+/// `round(rps * 60 * minutes)` (see [`round_counts`]).
 pub fn per_minute_counts(rps: f64, minutes: usize, rng: &mut Rng) -> Vec<u64> {
     // lognormal minute-to-minute variation plus a Pareto burst component
     // (the production trace shows frequent 2-4x minute-scale bursts).
@@ -21,12 +90,8 @@ pub fn per_minute_counts(rps: f64, minutes: usize, rng: &mut Rng) -> Vec<u64> {
             base * burst
         })
         .collect();
-    let mean: f64 = raw.iter().sum::<f64>() / minutes as f64;
-    let target_per_min = rps * 60.0;
-    for r in raw.iter_mut() {
-        *r = (*r / mean) * target_per_min;
-    }
-    raw.into_iter().map(|r| r.round().max(0.0) as u64).collect()
+    rescale_to_rps(&mut raw, rps);
+    round_counts(&raw)
 }
 
 /// Invocation start times over a `duration_s` window at `rps`:
@@ -35,6 +100,12 @@ pub fn per_minute_counts(rps: f64, minutes: usize, rng: &mut Rng) -> Vec<u64> {
 pub fn arrival_times(rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
     let minutes = (duration_s / 60.0).ceil() as usize;
     let counts = per_minute_counts(rps, minutes.max(1), rng);
+    minute_starts(&counts, duration_s, rng)
+}
+
+/// Shared tail of every per-minute arrival process: uniform-random start
+/// times within each minute, clipped to the window, sorted (NaN-safe).
+pub fn minute_starts(counts: &[u64], duration_s: f64, rng: &mut Rng) -> Vec<f64> {
     let mut times = Vec::new();
     for (m, count) in counts.iter().enumerate() {
         let lo = m as f64 * 60.0;
@@ -45,7 +116,7 @@ pub fn arrival_times(rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
             }
         }
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(f64::total_cmp);
     times
 }
 
@@ -60,6 +131,60 @@ mod tests {
         let total: u64 = counts.iter().sum();
         let rate = total as f64 / 600.0;
         assert!((rate - 4.0).abs() < 0.5, "rate {rate}");
+    }
+
+    #[test]
+    fn counts_total_exact() {
+        // largest-remainder rounding pins the window total, not just the mean
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let counts = per_minute_counts(3.7, 10, &mut rng);
+            let total: u64 = counts.iter().sum();
+            assert_eq!(total, (3.7f64 * 60.0 * 10.0).round() as u64, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn low_rate_window_not_all_zero() {
+        // rps * 60 * minutes = 1.8 expected invocations; naive rounding of
+        // per-minute values (~0.6 each, often < 0.5 after burst scaling)
+        // could zero the whole window. The residue guarantee forbids that.
+        for seed in 0..50 {
+            let mut rng = Rng::new(seed);
+            let counts = per_minute_counts(0.01, 3, &mut rng);
+            let total: u64 = counts.iter().sum();
+            assert!((1..=2).contains(&total), "seed {seed}: total {total} not within expected ±1");
+        }
+    }
+
+    #[test]
+    fn round_counts_preserves_total_and_handles_edges() {
+        assert_eq!(round_counts(&[]), Vec::<u64>::new());
+        assert_eq!(round_counts(&[0.0, 0.0]), vec![0, 0]);
+        // 0.4 + 0.4 + 0.4 = 1.2 -> one invocation, on the first (tie) minute
+        assert_eq!(round_counts(&[0.4, 0.4, 0.4]), vec![1, 0, 0]);
+        // residue goes to the largest fractional part
+        assert_eq!(round_counts(&[1.2, 0.7, 2.1]), vec![1, 1, 2]);
+        // negatives clamp to zero instead of corrupting the total
+        assert_eq!(round_counts(&[-3.0, 2.5, 0.5]), vec![0, 3, 0]);
+        let raw = [10.3, 0.9, 5.55, 7.77, 0.01];
+        let total: u64 = round_counts(&raw).iter().sum();
+        assert_eq!(total, raw.iter().sum::<f64>().round() as u64);
+    }
+
+    #[test]
+    fn rescale_hits_target_and_survives_zero_profiles() {
+        let mut raw = vec![1.0, 3.0, 2.0];
+        rescale_to_rps(&mut raw, 2.0);
+        assert!((raw.iter().sum::<f64>() - 2.0 * 60.0 * 3.0).abs() < 1e-9);
+        assert!(raw[1] > raw[0], "shape preserved");
+        // all-zero window: uniform fallback instead of 0/0 = NaN
+        let mut zeros = vec![0.0, 0.0];
+        rescale_to_rps(&mut zeros, 1.0);
+        assert!(zeros.iter().all(|r| (*r - 60.0).abs() < 1e-9), "{zeros:?}");
+        let mut empty: Vec<f64> = vec![];
+        rescale_to_rps(&mut empty, 1.0);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Workload generation: Azure-like invocation traces (§7.1) and the
+//! Workload generation: Azure-like invocation traces (§7.1), pluggable
+//! arrival/popularity scenarios (DESIGN.md §Scenarios), and the
 //! per-function/input SLO assignment the evaluation uses.
 
 pub mod azure;
+pub mod scenario;
 pub mod slo;
 
 use crate::featurizer::InputSpec;
@@ -61,14 +63,51 @@ impl Workload {
         duration_s: f64,
         seed: u64,
     ) -> Vec<Request> {
+        // `AzureSynthetic` + the trait's default picks consume the exact
+        // RNG draw sequence of the direct `azure::arrival_times` + uniform
+        // sampling recipe, so routing through the trait adds zero drift
+        // (pinned by `tests/test_scenarios.rs` against the inlined recipe).
+        self.trace_scenario(&scenario::AzureSynthetic, funcs, rps, duration_s, seed)
+    }
+
+    /// Trace over the full catalog under any [`scenario::Scenario`].
+    pub fn trace_with(
+        &self,
+        scenario: &dyn scenario::Scenario,
+        rps: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Vec<Request> {
+        self.trace_scenario(
+            scenario,
+            &(0..CATALOG.len()).collect::<Vec<_>>(),
+            rps,
+            duration_s,
+            seed,
+        )
+    }
+
+    /// The one trace generator every path shares: the scenario supplies
+    /// the arrival process and the (function, input) sampling; this
+    /// attaches pool inputs and SLOs. One `Rng` (salted exactly like the
+    /// historical generator) is threaded through arrivals and picks in a
+    /// fixed order, so traces are deterministic per (seed, scenario).
+    pub fn trace_scenario(
+        &self,
+        scenario: &dyn scenario::Scenario,
+        funcs: &[usize],
+        rps: f64,
+        duration_s: f64,
+        seed: u64,
+    ) -> Vec<Request> {
         let mut rng = Rng::new(seed ^ 0x7A3C_E000);
-        let starts = azure::arrival_times(rps, duration_s, &mut rng);
+        let starts = scenario.arrival_times(rps, duration_s, &mut rng);
         starts
             .into_iter()
             .enumerate()
             .map(|(i, at)| {
-                let func = *rng.choose(funcs);
-                let input_idx = rng.below(self.pools[func].len());
+                let func = scenario.pick_function(funcs, &mut rng);
+                let input_idx = scenario.pick_input(self.pools[func].len(), &mut rng);
                 Request {
                     id: i as u64 + 1,
                     func,
@@ -120,6 +159,21 @@ mod tests {
         let b = w.trace(3.0, 120.0, 9);
         assert_eq!(a.len(), b.len());
         assert!(a.iter().zip(&b).all(|(x, y)| x.arrival == y.arrival && x.func == y.func));
+    }
+
+    #[test]
+    fn trace_with_scenario_changes_the_mix() {
+        let w = Workload::build(1, 1.4);
+        let zipf = scenario::shapes::ZipfSkew::default();
+        let t = w.trace_with(&zipf, 5.0, 600.0, 7);
+        let mut counts = vec![0usize; CATALOG.len()];
+        for r in &t {
+            counts[r.func] += 1;
+        }
+        assert!(
+            counts[0] > 3 * counts[CATALOG.len() - 1].max(1),
+            "zipf mix must skew to the head: {counts:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Analytic arrival/popularity shapes: diurnal, flash-crowd, Zipf skew.
+//!
+//! All three reuse the §7.1 per-minute recipe (`azure::minute_starts`:
+//! integer counts per minute, uniform start times within the minute) but
+//! replace the *intensity profile* — deterministic given the scenario
+//! parameters, so the only randomness is the within-minute placement and
+//! the function/input picks.
+
+use crate::util::rng::Rng;
+use crate::workload::azure;
+
+use super::Scenario;
+
+/// Sinusoidal day/night rate: one full diurnal cycle compressed into the
+/// trace window, starting at the nightly trough, peaking mid-window. The
+/// window-average rate is the requested RPS (profile normalized before
+/// residue rounding), but instantaneous rate swings between
+/// `(1 - amplitude)` and `(1 + amplitude)` times the mean — the regime
+/// where static provisioning over- and under-shoots in turn.
+#[derive(Debug, Clone)]
+pub struct Diurnal {
+    /// Peak-to-mean swing, 0..1 (default 0.6: nights at 0.4x, peaks at 1.6x).
+    pub amplitude: f64,
+}
+
+impl Default for Diurnal {
+    fn default() -> Self {
+        Diurnal { amplitude: 0.6 }
+    }
+}
+
+impl Scenario for Diurnal {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn arrival_times(&self, rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let minutes = (duration_s / 60.0).ceil().max(1.0) as usize;
+        let period = duration_s.max(60.0);
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let mut raw: Vec<f64> = (0..minutes)
+            .map(|m| {
+                let mid = (m as f64 + 0.5) * 60.0;
+                // phase -π/2: the window opens at the trough
+                let mult = 1.0 + self.amplitude * (two_pi * mid / period - two_pi / 4.0).sin();
+                mult.max(0.0)
+            })
+            .collect();
+        // normalize the discrete profile so the window mean is exactly rps
+        azure::rescale_to_rps(&mut raw, rps);
+        azure::profile_starts(&raw, duration_s, rng)
+    }
+}
+
+/// Step burst: baseline RPS everywhere except a burst window where the
+/// rate jumps to `k ×` base — Fifer's worst-case regime for
+/// underutilization and cold-start pileups. The burst is *additional*
+/// load (the window mean exceeds the nominal RPS by design).
+#[derive(Debug, Clone)]
+pub struct FlashCrowd {
+    /// Burst rate multiplier (default 4x).
+    pub k: f64,
+    /// Burst onset as a fraction of the window (default 0.4).
+    pub onset_frac: f64,
+    /// Burst width as a fraction of the window (default 0.15).
+    pub width_frac: f64,
+}
+
+impl Default for FlashCrowd {
+    fn default() -> Self {
+        FlashCrowd { k: 4.0, onset_frac: 0.4, width_frac: 0.15 }
+    }
+}
+
+impl FlashCrowd {
+    /// Fraction of `[lo, hi)` covered by the burst interval.
+    fn overlap(&self, lo: f64, hi: f64, duration_s: f64) -> f64 {
+        let b_lo = self.onset_frac * duration_s;
+        let b_hi = (self.onset_frac + self.width_frac).min(1.0) * duration_s;
+        let covered = (hi.min(b_hi) - lo.max(b_lo)).max(0.0);
+        covered / (hi - lo).max(1e-9)
+    }
+}
+
+impl Scenario for FlashCrowd {
+    fn name(&self) -> &'static str {
+        "flash-crowd"
+    }
+
+    fn arrival_times(&self, rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let minutes = (duration_s / 60.0).ceil().max(1.0) as usize;
+        let raw: Vec<f64> = (0..minutes)
+            .map(|m| {
+                let lo = m as f64 * 60.0;
+                let hi = lo + 60.0;
+                let burst_frac = self.overlap(lo, hi.min(duration_s), duration_s);
+                rps * 60.0 * (1.0 + (self.k - 1.0) * burst_frac)
+            })
+            .collect();
+        // no rescale: the burst is additional load on top of the base rate
+        azure::profile_starts(&raw, duration_s, rng)
+    }
+}
+
+/// Azure-synthetic arrivals with **Zipf** function popularity in catalog
+/// order: function at rank `i` is hit with weight `1 / (i+1)^s`. Head
+/// functions accumulate observations (and converged models) quickly while
+/// tail functions starve below the allocator's per-function confidence
+/// gates — the skew regime the uniform mix never exercises.
+#[derive(Debug, Clone)]
+pub struct ZipfSkew {
+    exponent: f64,
+    /// Weights for the full catalog, precomputed once — `pick_function`
+    /// runs per invocation and must not re-derive `n` powf calls each time.
+    catalog_weights: Vec<f64>,
+}
+
+impl Default for ZipfSkew {
+    fn default() -> Self {
+        ZipfSkew::new(1.1)
+    }
+}
+
+impl ZipfSkew {
+    /// Zipf popularity with the given exponent (default 1.1; larger =
+    /// more skew).
+    pub fn new(exponent: f64) -> Self {
+        let catalog_weights = zipf_weights(crate::functions::catalog::CATALOG.len(), exponent);
+        ZipfSkew { exponent, catalog_weights }
+    }
+
+    /// Unnormalized popularity weights for `n` ranks.
+    pub fn weights(&self, n: usize) -> Vec<f64> {
+        zipf_weights(n, self.exponent)
+    }
+}
+
+/// `1 / rank^s` for ranks `1..=n`.
+fn zipf_weights(n: usize, exponent: f64) -> Vec<f64> {
+    (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(exponent)).collect()
+}
+
+impl Scenario for ZipfSkew {
+    fn name(&self) -> &'static str {
+        "zipf-skew"
+    }
+
+    fn arrival_times(&self, rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+        azure::arrival_times(rps, duration_s, rng)
+    }
+
+    fn pick_function(&self, funcs: &[usize], rng: &mut Rng) -> usize {
+        // `zipf_weights(n)` is a prefix of `zipf_weights(m)` for n <= m,
+        // so subset traces just slice the precomputed catalog weights
+        if funcs.len() <= self.catalog_weights.len() {
+            funcs[rng.categorical(&self.catalog_weights[..funcs.len()])]
+        } else {
+            funcs[rng.categorical(&self.weights(funcs.len()))]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_rate_averages_to_target_and_swings() {
+        let d = Diurnal::default();
+        let t = d.arrival_times(4.0, 600.0, &mut Rng::new(3));
+        let rate = t.len() as f64 / 600.0;
+        assert!((rate - 4.0).abs() < 0.2, "rate {rate}");
+        // first minute (trough) must be much quieter than minute 5 (peak)
+        let first = t.iter().filter(|x| **x < 60.0).count();
+        let peak = t.iter().filter(|x| (240.0..300.0).contains(*x)).count();
+        assert!(
+            peak as f64 > 1.5 * first as f64,
+            "peak minute {peak} vs trough minute {first}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_bursts_where_configured() {
+        let f = FlashCrowd::default();
+        let t = f.arrival_times(4.0, 600.0, &mut Rng::new(7));
+        // burst covers [240, 330): minute 5 (300..360) is 50% burst, minutes
+        // 4 (240..300) fully inside. Compare a burst minute to a calm one.
+        let calm = t.iter().filter(|x| **x < 60.0).count();
+        let burst = t.iter().filter(|x| (240.0..300.0).contains(*x)).count();
+        assert!(
+            burst as f64 > 2.5 * calm as f64,
+            "burst minute {burst} vs calm minute {calm}"
+        );
+        // total exceeds the base-rate window: the burst is additional load
+        assert!(t.len() as f64 > 4.0 * 600.0);
+    }
+
+    #[test]
+    fn flash_crowd_overlap_fractions() {
+        let f = FlashCrowd { k: 4.0, onset_frac: 0.4, width_frac: 0.15 };
+        // burst = [240, 330) of a 600 s window
+        assert!((f.overlap(240.0, 300.0, 600.0) - 1.0).abs() < 1e-12);
+        assert!((f.overlap(300.0, 360.0, 600.0) - 0.5).abs() < 1e-12);
+        assert_eq!(f.overlap(0.0, 60.0, 600.0), 0.0);
+    }
+
+    #[test]
+    fn zipf_weights_decay_at_requested_exponent() {
+        let z = ZipfSkew::new(1.1);
+        let w = z.weights(12);
+        assert_eq!(w.len(), 12);
+        assert!(w.windows(2).all(|p| p[0] > p[1]), "strictly decreasing");
+        // w[0]/w[k] = (k+1)^s exactly
+        assert!((w[0] / w[11] - 12f64.powf(1.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_pick_skews_toward_head() {
+        let z = ZipfSkew::default();
+        let funcs: Vec<usize> = (0..12).collect();
+        let mut rng = Rng::new(9);
+        let mut counts = [0usize; 12];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[z.pick_function(&funcs, &mut rng)] += 1;
+        }
+        let w = z.weights(12);
+        let total_w: f64 = w.iter().sum();
+        // head fraction within 10% relative of the theoretical mass
+        let head = counts[0] as f64 / n as f64;
+        let expect = w[0] / total_w;
+        assert!((head - expect).abs() < 0.1 * expect, "head {head} vs expected {expect}");
+        assert!(counts[0] > 5 * counts[11], "head must dominate tail: {counts:?}");
+    }
+}

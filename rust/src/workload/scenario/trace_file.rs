@@ -1,0 +1,211 @@
+//! Trace replay: per-minute invocation counts from a CSV in the Azure
+//! Functions production-trace schema (Shahrad et al.),
+//! `HashOwner,HashApp,HashFunction,Trigger,1,2,...,N` — one row per
+//! function, one numeric column per minute of the day. All rows are
+//! summed into a cluster-wide per-minute profile, the profile is rescaled
+//! so the replay window averages the requested RPS (residue-preserving
+//! rounding, `azure::round_counts`), and windows longer than the trace
+//! tile it. A 10-minute sample in this schema is checked in at
+//! `rust/data/azure_sample.csv` (embedded at compile time, so `trace-file`
+//! works regardless of the working directory).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+use crate::workload::azure;
+
+use super::Scenario;
+
+/// Parsed-profile cache keyed by path: sweep cells rebuild their scenario
+/// per (cell, replicate) for determinism, and a real Azure day trace is
+/// hundreds of MB — re-reading it once per cell would dominate the sweep.
+/// Profiles are immutable once parsed, so one read per process suffices.
+fn path_cache() -> &'static Mutex<HashMap<String, Vec<u64>>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, Vec<u64>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The checked-in sample trace (Azure Functions schema, 10 minutes,
+/// 8 function rows with a minute-5/6 burst).
+pub const SAMPLE_TRACE_CSV: &str = include_str!("../../../data/azure_sample.csv");
+
+/// Replay of real per-minute invocation counts, rescaled to a target RPS.
+#[derive(Debug, Clone)]
+pub struct TraceFile {
+    /// Cluster-wide invocations per trace minute (all rows summed).
+    per_minute: Vec<u64>,
+}
+
+impl TraceFile {
+    /// The embedded sample trace (what `--scenario trace-file` replays).
+    pub fn sample() -> Result<Self> {
+        Self::from_csv(SAMPLE_TRACE_CSV).context("embedded sample trace")
+    }
+
+    /// Load a CSV from disk (the `trace-file:<path>` registry form),
+    /// memoized per path for the life of the process.
+    pub fn from_path(path: &str) -> Result<Self> {
+        if let Some(per_minute) = path_cache().lock().expect("trace cache").get(path) {
+            return Ok(TraceFile { per_minute: per_minute.clone() });
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace file '{path}'"))?;
+        let parsed =
+            Self::from_csv(&text).with_context(|| format!("parsing trace file '{path}'"))?;
+        path_cache()
+            .lock()
+            .expect("trace cache")
+            .insert(path.to_string(), parsed.per_minute.clone());
+        Ok(parsed)
+    }
+
+    /// Parse the Azure Functions trace schema: minute columns are the
+    /// header fields that parse as integers; every other column
+    /// (hashes, trigger) is ignored. Rows sum into one profile.
+    pub fn from_csv(text: &str) -> Result<Self> {
+        // enumerate before filtering so error messages cite real file lines
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (_, header) = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace CSV"))?;
+        let minute_cols: Vec<usize> = header
+            .split(',')
+            .enumerate()
+            .filter(|(_, h)| h.trim().parse::<u64>().is_ok())
+            .map(|(i, _)| i)
+            .collect();
+        anyhow::ensure!(
+            !minute_cols.is_empty(),
+            "trace CSV header has no per-minute columns (expected Azure schema \
+             'HashOwner,HashApp,HashFunction,Trigger,1,2,...')"
+        );
+        let mut per_minute = vec![0u64; minute_cols.len()];
+        let mut rows = 0usize;
+        for (lineno, line) in lines {
+            let fields: Vec<&str> = line.split(',').collect();
+            for (slot, &col) in minute_cols.iter().enumerate() {
+                let field = fields.get(col).map(|f| f.trim()).unwrap_or("");
+                let count: u64 = field.parse().with_context(|| {
+                    format!("line {}: bad count '{field}' in minute column {col}", lineno + 1)
+                })?;
+                per_minute[slot] += count;
+            }
+            rows += 1;
+        }
+        anyhow::ensure!(rows > 0, "trace CSV has a header but no function rows");
+        anyhow::ensure!(
+            per_minute.iter().sum::<u64>() > 0,
+            "trace CSV carries zero invocations"
+        );
+        Ok(TraceFile { per_minute })
+    }
+
+    /// The parsed cluster-wide per-minute profile (before rescaling).
+    pub fn per_minute(&self) -> &[u64] {
+        &self.per_minute
+    }
+}
+
+impl Scenario for TraceFile {
+    fn name(&self) -> &'static str {
+        "trace-file"
+    }
+
+    fn arrival_times(&self, rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let minutes = (duration_s / 60.0).ceil().max(1.0) as usize;
+        // tile the trace across the window, then rescale to the target RPS
+        // (rescale handles a window landing entirely on zero-count minutes
+        // by falling back to a uniform profile — no 0/0)
+        let mut raw: Vec<f64> = (0..minutes)
+            .map(|m| self.per_minute[m % self.per_minute.len()] as f64)
+            .collect();
+        azure::rescale_to_rps(&mut raw, rps);
+        azure::profile_starts(&raw, duration_s, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-computed column sums of `rust/data/azure_sample.csv`.
+    pub const SAMPLE_PER_MINUTE: [u64; 10] = [33, 41, 28, 36, 95, 102, 30, 25, 38, 31];
+
+    #[test]
+    fn sample_parses_to_known_profile() {
+        let t = TraceFile::sample().unwrap();
+        assert_eq!(t.per_minute(), SAMPLE_PER_MINUTE);
+    }
+
+    #[test]
+    fn replay_rescales_to_target_rps() {
+        let t = TraceFile::sample().unwrap();
+        for rps in [0.5, 4.0, 20.0] {
+            let times = t.arrival_times(rps, 600.0, &mut Rng::new(1));
+            let rate = times.len() as f64 / 600.0;
+            assert!((rate - rps).abs() < 0.05 * rps + 0.01, "rps {rps}: rate {rate}");
+        }
+    }
+
+    #[test]
+    fn replay_preserves_trace_shape() {
+        let t = TraceFile::sample().unwrap();
+        let times = t.arrival_times(4.0, 600.0, &mut Rng::new(2));
+        // minute 6 carries 102/459 of the mass; minute 8 carries 25/459
+        let burst = times.iter().filter(|x| (300.0..360.0).contains(*x)).count();
+        let calm = times.iter().filter(|x| (420.0..480.0).contains(*x)).count();
+        assert!(
+            burst as f64 > 3.0 * calm as f64,
+            "trace burst must survive rescaling: {burst} vs {calm}"
+        );
+    }
+
+    #[test]
+    fn windows_longer_than_the_trace_tile_it() {
+        let t = TraceFile::sample().unwrap();
+        // 20-minute window over a 10-minute trace: both copies of minute 6
+        let times = t.arrival_times(2.0, 1200.0, &mut Rng::new(3));
+        let first = times.iter().filter(|x| (300.0..360.0).contains(*x)).count();
+        let second = times.iter().filter(|x| (900.0..960.0).contains(*x)).count();
+        assert!(first > 0 && second > 0, "burst must repeat: {first}, {second}");
+    }
+
+    #[test]
+    fn zero_count_window_falls_back_to_uniform() {
+        // minute 1 carries zero invocations trace-wide; a 60 s window
+        // tiles only that minute and must still deliver the target rate
+        // (shape is unrecoverable, so the profile degrades to uniform)
+        let t = TraceFile::from_csv("HashOwner,Trigger,1,2\nabc,http,0,5\n").unwrap();
+        let times = t.arrival_times(2.0, 60.0, &mut Rng::new(4));
+        assert_eq!(times.len(), 120, "uniform fallback at the target rate");
+        assert!(times.iter().all(|x| (0.0..=60.0).contains(x)));
+    }
+
+    #[test]
+    fn parse_errors_cite_real_file_lines() {
+        // the bad count sits on file line 4; the blank line 2 must not
+        // shift the reported position
+        let text = "HashOwner,Trigger,1,2\n\nabc,http,1,2\ndef,http,3,oops\n";
+        let err = TraceFile::from_csv(text).unwrap_err();
+        assert!(format!("{err:#}").contains("line 4"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_csvs_rejected() {
+        assert!(TraceFile::from_csv("").is_err());
+        assert!(TraceFile::from_csv("HashOwner,HashApp,Trigger\n").is_err(), "no minute cols");
+        assert!(
+            TraceFile::from_csv("HashOwner,Trigger,1,2\n").is_err(),
+            "header only, no rows"
+        );
+        assert!(
+            TraceFile::from_csv("HashOwner,Trigger,1,2\nabc,http,0,0\n").is_err(),
+            "all-zero trace"
+        );
+        assert!(
+            TraceFile::from_csv("HashOwner,Trigger,1,2\nabc,http,3,oops\n").is_err(),
+            "non-numeric count"
+        );
+    }
+}

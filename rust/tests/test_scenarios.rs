@@ -1,0 +1,209 @@
+//! Scenario-subsystem contract (DESIGN.md §Scenarios):
+//! * `azure-synthetic` behind the `Scenario` trait reproduces the direct
+//!   `azure::arrival_times` + uniform-sampling recipe **byte-for-byte**
+//!   (arrivals, function picks, input picks, SLOs) — the trait refactor
+//!   introduces zero drift, so replicate 0 of every sweep replays exactly
+//!   what a pre-trait single run of this build would produce;
+//! * every registered scenario produces sorted, bounded, seed-deterministic
+//!   arrivals at (approximately) the requested rate;
+//! * `trace-file` round-trips the checked-in sample CSV from disk;
+//! * the Zipf mix matches the requested skew;
+//! * the policy × scenario robustness grid is byte-identical across
+//!   `--jobs` values.
+
+use shabari::experiments::common::Ctx;
+use shabari::experiments::scenarios::run_matrix;
+use shabari::functions::catalog::CATALOG;
+use shabari::metrics::RunMetrics;
+use shabari::util::prop;
+use shabari::util::rng::Rng;
+use shabari::workload::scenario::{self, shapes::ZipfSkew, trace_file::TraceFile, Scenario};
+use shabari::workload::{azure, Workload};
+
+/// The pre-scenario trace recipe, inlined: this is the code shape
+/// `Workload::trace_over` had before the `Scenario` trait existed (same
+/// salt, `azure::arrival_times`, then uniform choose/below per arrival).
+/// The trait-routed path must reproduce it exactly — any extra RNG draw,
+/// reordering, or changed salt in the scenario plumbing shows up here.
+fn legacy_trace(
+    w: &Workload,
+    funcs: &[usize],
+    rps: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<(f64, usize, usize)> {
+    let mut rng = Rng::new(seed ^ 0x7A3C_E000);
+    let starts = azure::arrival_times(rps, duration_s, &mut rng);
+    starts
+        .into_iter()
+        .map(|at| {
+            let func = *rng.choose(funcs);
+            let input_idx = rng.below(w.pools[func].len());
+            (at, func, input_idx)
+        })
+        .collect()
+}
+
+#[test]
+fn azure_synthetic_reproduces_the_legacy_trace_byte_for_byte() {
+    let w = Workload::build(1, 1.4);
+    let funcs: Vec<usize> = (0..CATALOG.len()).collect();
+    for (rps, seed) in [(2.0, 7u64), (4.0, 42), (6.0, 1234)] {
+        let legacy = legacy_trace(&w, &funcs, rps, 300.0, seed);
+        let trace = w.trace(rps, 300.0, seed);
+        assert_eq!(trace.len(), legacy.len(), "rps {rps} seed {seed}: length");
+        for (req, (at, func, input_idx)) in trace.iter().zip(&legacy) {
+            assert_eq!(req.arrival.to_bits(), at.to_bits(), "arrival bits");
+            assert_eq!(req.func, *func, "function pick");
+            let pool_input = &w.pools[*func][*input_idx];
+            assert_eq!(req.input.id, pool_input.id, "input pick (id)");
+            assert_eq!(req.input.kind, pool_input.kind, "input pick (kind)");
+            assert_eq!(
+                req.input.size_bytes.to_bits(),
+                pool_input.size_bytes.to_bits(),
+                "input pick (size)"
+            );
+            assert_eq!(
+                req.slo_s.to_bits(),
+                w.slos[*func][*input_idx].to_bits(),
+                "slo bits"
+            );
+        }
+        // the named scenario is the same object as the default path
+        let via_name = scenario::by_name("azure-synthetic").unwrap();
+        let named = w.trace_with(via_name.as_ref(), rps, 300.0, seed);
+        assert_eq!(named.len(), trace.len());
+        assert!(named
+            .iter()
+            .zip(&trace)
+            .all(|(a, b)| a.arrival.to_bits() == b.arrival.to_bits() && a.func == b.func));
+    }
+}
+
+#[test]
+fn every_scenario_satisfies_the_arrival_properties() {
+    // property-check across seeds: sorted, bounded, deterministic, and
+    // (flash-crowd excepted, which adds burst load by design) near-target
+    for name in scenario::SCENARIOS {
+        let s = scenario::by_name(name).unwrap();
+        prop::check(0x5CE0 ^ shabari::util::rng::fnv1a(name.as_bytes()), 10, |rng| {
+            let seed = rng.next_u64();
+            let a = s.arrival_times(4.0, 600.0, &mut Rng::new(seed));
+            let b = s.arrival_times(4.0, 600.0, &mut Rng::new(seed));
+            assert_eq!(a, b, "{name}: deterministic per seed");
+            assert!(!a.is_empty(), "{name}: nonempty");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{name}: sorted");
+            assert!(a.iter().all(|t| (0.0..=600.0).contains(t)), "{name}: bounded");
+            let rate = a.len() as f64 / 600.0;
+            if *name == "flash-crowd" {
+                assert!(rate >= 4.0, "{name}: burst adds load, rate {rate}");
+                assert!(rate <= 4.0 * 4.0, "{name}: bounded by k x base, rate {rate}");
+            } else {
+                assert!((rate - 4.0).abs() < 0.8, "{name}: rate {rate}");
+            }
+        });
+    }
+}
+
+#[test]
+fn trace_file_round_trips_the_sample_csv() {
+    // integration tests run with cwd = the crate root (rust/)
+    let from_disk = TraceFile::from_path("data/azure_sample.csv").unwrap();
+    let embedded = TraceFile::sample().unwrap();
+    assert_eq!(from_disk.per_minute(), embedded.per_minute(), "disk vs embedded profile");
+    // identical profiles generate identical arrivals
+    let a = from_disk.arrival_times(4.0, 600.0, &mut Rng::new(3));
+    let b = embedded.arrival_times(4.0, 600.0, &mut Rng::new(3));
+    assert_eq!(a, b);
+    // and the registry's path form loads the same file
+    let via_registry = scenario::by_name("trace-file:data/azure_sample.csv").unwrap();
+    let c = via_registry.arrival_times(4.0, 600.0, &mut Rng::new(3));
+    assert_eq!(a, c);
+}
+
+#[test]
+fn zipf_mix_matches_the_requested_skew() {
+    let w = Workload::build(1, 1.4);
+    let z = ZipfSkew::new(1.1);
+    let trace = w.trace_with(&z, 20.0, 600.0, 9);
+    assert!(trace.len() > 10_000, "need mass for a tight histogram");
+    let mut counts = vec![0usize; CATALOG.len()];
+    for r in &trace {
+        counts[r.func] += 1;
+    }
+    let weights = z.weights(CATALOG.len());
+    let total_w: f64 = weights.iter().sum();
+    let n = trace.len() as f64;
+    // every rank's empirical share within 25% relative of its Zipf mass
+    // (ranks are catalog order; tail ranks carry ~2% each at s = 1.1)
+    for (i, (&c, &wgt)) in counts.iter().zip(&weights).enumerate() {
+        let got = c as f64 / n;
+        let expect = wgt / total_w;
+        assert!(
+            (got - expect).abs() < 0.25 * expect,
+            "rank {i}: got {got:.4}, expected {expect:.4} ({counts:?})"
+        );
+    }
+    // head function dominates the tail by the theoretical factor
+    assert!(counts[0] > 5 * counts[CATALOG.len() - 1], "{counts:?}");
+}
+
+/// Every scalar we assert byte-equality on, as raw bits.
+fn metric_bits(m: &RunMetrics) -> Vec<u64> {
+    vec![
+        m.invocations as u64,
+        m.slo_violation_pct.to_bits(),
+        m.wasted_vcpus.p50.to_bits(),
+        m.wasted_mem_gb.p50.to_bits(),
+        m.cold_start_pct.to_bits(),
+        m.mean_e2e_s.to_bits(),
+        m.throughput.to_bits(),
+    ]
+}
+
+#[test]
+fn scenario_grid_byte_identical_across_job_counts() {
+    let ctx = Ctx { duration_s: 60.0, ..Default::default() };
+    let matrix_with = |jobs: usize| {
+        let ctx = Ctx { jobs, seeds: 2, ..ctx.clone() };
+        run_matrix(&ctx, 2.0).unwrap()
+    };
+    let sequential = matrix_with(1);
+    let parallel = matrix_with(8);
+    assert_eq!(sequential.len(), parallel.len());
+    for (a, b) in sequential.iter().zip(&parallel) {
+        assert_eq!(a.cell.id(), b.cell.id());
+        for (ma, mb) in a.per_seed.iter().zip(&b.per_seed) {
+            assert_eq!(
+                metric_bits(ma),
+                metric_bits(mb),
+                "cell {} diverged between --jobs 1 and --jobs 8",
+                a.cell.id()
+            );
+        }
+        let sa = a.stat(|m| m.slo_violation_pct);
+        let sb = b.stat(|m| m.slo_violation_pct);
+        assert_eq!(sa.mean.to_bits(), sb.mean.to_bits());
+        assert_eq!(sa.ci95.0.to_bits(), sb.ci95.0.to_bits());
+        assert_eq!(sa.ci95.1.to_bits(), sb.ci95.1.to_bits());
+    }
+}
+
+#[test]
+fn scenarios_separate_policies_from_shapes() {
+    // the same seed under two scenarios must differ, and the same
+    // (seed, scenario) pair must reproduce — end-to-end through Ctx
+    let base = Ctx { duration_s: 120.0, ..Default::default() };
+    let run = |scenario: &str| {
+        let ctx = base.with_scenario(scenario);
+        shabari::experiments::common::run_cell("static-medium", &ctx, 3.0, 77).unwrap()
+    };
+    let diurnal = run("diurnal");
+    let zipf = run("zipf-skew");
+    assert_ne!(
+        metric_bits(&diurnal),
+        metric_bits(&zipf),
+        "different shapes must sample different worlds"
+    );
+    assert_eq!(metric_bits(&diurnal), metric_bits(&run("diurnal")), "reproducible");
+}
