@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench scenarios clean
+.PHONY: artifacts build test bench bench-scale scenarios clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -20,6 +20,14 @@ scenarios:
 
 bench:
 	cargo bench
+
+# Engine scale benchmark: 64 workers at 4x the fig8 request rate, one
+# timed cell per policy; dumps out/BENCH_scale.json (EXPERIMENTS.md §Perf).
+# seeds=1/jobs=1 on purpose: the checked-in BENCH_scale.json record and
+# its before/after speedup methodology compare single-replicate,
+# single-thread wall-clock on an identical grid + seed.
+bench-scale:
+	cargo run --release -- experiment scale --seeds 1 --jobs 1
 
 clean:
 	cargo clean

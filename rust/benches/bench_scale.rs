@@ -1,0 +1,31 @@
+//! Engine scale throughput: the `experiment scale` grid (64 workers at
+//! 4x the fig8 request rate) through the bench harness, so `cargo bench`
+//! exercises the indexed warm-pool + cached-rate hot path at size.
+//!
+//! §Perf target: ≥3x the pre-index engine's wall-clock on this grid
+//! (EXPERIMENTS.md §Perf records measured before/after numbers; the
+//! canonical JSON dump comes from `make bench-scale`).
+
+use shabari::experiments::common::Ctx;
+use shabari::experiments::scale::run_scale;
+
+fn main() {
+    // Shorter trace than the canonical `make bench-scale` run so the
+    // bench suite stays interactive; same cluster size and load.
+    let ctx = Ctx { duration_s: 120.0, ..Default::default() };
+    println!(
+        "### engine scale ({} workers @ {} rps, {}s trace)",
+        ctx.scale_workers, ctx.scale_rps, ctx.duration_s
+    );
+    let rows = run_scale(&ctx).expect("scale grid");
+    for r in &rows {
+        println!(
+            "{:<22} {:>6} invocations  {:>8.2}s wall  {:>10.0} sim-inv/s  ({} containers)",
+            r.policy,
+            r.invocations,
+            r.wall_s,
+            r.sim_inv_per_s,
+            r.metrics.containers_created
+        );
+    }
+}

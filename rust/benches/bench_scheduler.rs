@@ -33,7 +33,7 @@ fn warm_cluster(n_containers: usize) -> Cluster {
         let w = rng.below(cluster.len());
         let mut c = Container::new(id, func, vcpus, mem, 0.0);
         c.mark_ready(0.0);
-        cluster.workers[w].containers.insert(id, c);
+        cluster.insert_container(w, c);
     }
     cluster
 }

@@ -48,6 +48,8 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         seeds,
         jobs,
         scenario,
+        scale_workers: a.get_usize("scale-workers", 64)?.max(1),
+        scale_rps: a.get_f64("scale-rps", 24.0)?,
     })
 }
 
@@ -222,7 +224,10 @@ fn print_help() {
                           --policy <name>   (default shabari; see `list`)\n\
                           --rps <f>         (default 4)\n\
            experiment   regenerate a paper figure/table\n\
-                          <id>              fig1..fig14, table1-3, scenarios, or 'all'\n\
+                          <id>              fig1..fig14, table1-3, scenarios,\n\
+                                            scale, or 'all'\n\
+                          --scale-workers <n>  scale-grid cluster size (default 64)\n\
+                          --scale-rps <f>      scale-grid request rate (default 24)\n\
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\

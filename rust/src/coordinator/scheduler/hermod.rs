@@ -47,6 +47,7 @@ impl Scheduler for HermodScheduler {
             }
         }
         let worker = chosen.unwrap_or_else(|| self.rng.below(cluster.len()));
+        // Index-backed lookup: smallest fitting size, lowest id on ties.
         let container = match cluster.worker(worker).find_warm_larger(req.func, vcpus, mem_mb) {
             Some(c) => ContainerChoice::Warm(c.id),
             None => ContainerChoice::Cold,
@@ -82,6 +83,21 @@ mod tests {
         cl.workers[0].allocated_vcpus = 85.0;
         let d = s.schedule(&req(), 8, 1024, &cl);
         assert_eq!(d.worker, 1, "spill to next worker when full");
+    }
+
+    #[test]
+    fn warm_ties_resolve_to_lowest_container_id() {
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req();
+        for id in [9u64, 4, 7] {
+            let mut c = crate::simulator::container::Container::new(id, r.func, 4, 512, 0.0);
+            c.mark_ready(0.0);
+            cl.insert_container(0, c);
+        }
+        let mut s = HermodScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.worker, 0);
+        assert_eq!(d.container, ContainerChoice::Warm(4));
     }
 
     #[test]

@@ -118,7 +118,7 @@ mod tests {
         // warm container on a non-home worker: OW won't look there
         let mut c = crate::simulator::container::Container::new(5, r.func, 4, 512, 0.0);
         c.mark_ready(0.0);
-        cl.workers[other].containers.insert(5, c);
+        cl.insert_container(other, c);
         let mut s = OpenWhiskScheduler::new(1);
         let d = s.schedule(&r, 4, 512, &cl);
         assert_eq!(d.worker, home);

@@ -14,7 +14,7 @@
 //! Load tracking is dual-resource: a worker admits an invocation only if
 //! both its vCPU (`userCpu` limit) and memory loads fit (§6).
 
-use crate::simulator::worker::Cluster;
+use crate::simulator::worker::{Cluster, Worker};
 use crate::simulator::{BackgroundLaunch, ContainerChoice, Request};
 use crate::util::rng::Rng;
 
@@ -85,9 +85,11 @@ impl ShabariScheduler {
         (worker, ContainerChoice::Cold, None)
     }
 
-    /// Search all workers for a warm container; `exact` selects mode.
-    /// Only admissible placements count (the worker must fit the
-    /// *container's* size, since that is what gets allocated).
+    /// Cluster-wide warm lookup via the sorted warm index; `exact`
+    /// selects mode. Only admissible placements count (the worker must
+    /// fit the *container's* size, since that is what gets allocated).
+    /// Equal-size candidates resolve to the lowest (worker, container)
+    /// id — deterministic, unlike the old per-worker hash-order scan.
     fn find_warm(
         &self,
         cluster: &Cluster,
@@ -96,27 +98,12 @@ impl ShabariScheduler {
         mem_mb: u32,
         exact: bool,
     ) -> Option<(usize, u64)> {
-        let mut best: Option<(u32, u32, usize, u64)> = None;
-        for w in &cluster.workers {
-            let cand = if exact {
-                w.find_warm_exact(func, vcpus, mem_mb)
-            } else {
-                w.find_warm_larger(func, vcpus, mem_mb)
-            };
-            if let Some(c) = cand {
-                if !w.has_capacity(c.vcpus, c.mem_mb) {
-                    continue;
-                }
-                let key = (c.vcpus, c.mem_mb, w.id, c.id);
-                if best.map_or(true, |b| (key.0, key.1) < (b.0, b.1)) {
-                    best = Some(key);
-                    if exact {
-                        break; // any exact hit is equally good
-                    }
-                }
-            }
+        let admit = |w: &Worker, cv: u32, cm: u32| w.has_capacity(cv, cm);
+        if exact {
+            cluster.find_warm_exact_where(func, vcpus, mem_mb, admit)
+        } else {
+            cluster.find_warm_larger_where(func, vcpus, mem_mb, admit)
         }
-        best.map(|(_, _, w, c)| (w, c))
     }
 }
 
@@ -158,7 +145,7 @@ mod tests {
     fn warm(cl: &mut Cluster, worker: usize, id: u64, func: usize, vcpus: u32, mem: u32) {
         let mut c = Container::new(id, func, vcpus, mem, 0.0);
         c.mark_ready(0.0);
-        cl.workers[worker].containers.insert(id, c);
+        cl.insert_container(worker, c);
     }
 
     #[test]
@@ -187,6 +174,28 @@ mod tests {
         assert_eq!(bg.vcpus, 4);
         assert_eq!(bg.mem_mb, 512);
         assert_eq!(s.warm_larger_hits, 1);
+    }
+
+    #[test]
+    fn equal_size_larger_candidates_have_a_stable_winner() {
+        // several identically-sized larger-than-requested warm containers:
+        // the winner must be the lowest (worker, container) id, run after
+        // run, instead of whatever hash iteration yields first.
+        let build = || {
+            let mut cl = Cluster::new(&SimConfig::small());
+            let r = req("qr");
+            for (worker, id) in [(2usize, 71u64), (1, 58), (3, 12), (1, 33)] {
+                warm(&mut cl, worker, id, r.func, 8, 1024);
+            }
+            (cl, r)
+        };
+        for _ in 0..3 {
+            let (cl, r) = build();
+            let mut s = ShabariScheduler::new(1);
+            let d = s.schedule(&r, 4, 512, &cl);
+            assert_eq!(d.worker, 1);
+            assert_eq!(d.container, ContainerChoice::Warm(33), "lowest (worker, id) wins");
+        }
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct Ctx {
     /// The default, `azure-synthetic`, reproduces the pre-scenario traces
     /// byte-for-byte.
     pub scenario: String,
+    /// Cluster size of the `experiment scale` grid (`--scale-workers`).
+    pub scale_workers: usize,
+    /// Request rate of the `experiment scale` grid (`--scale-rps`;
+    /// default 24 = 4x the highest fig8 load).
+    pub scale_rps: f64,
 }
 
 impl Default for Ctx {
@@ -51,6 +56,8 @@ impl Default for Ctx {
             seeds: 1,
             jobs: 1,
             scenario: "azure-synthetic".to_string(),
+            scale_workers: 64,
+            scale_rps: 24.0,
         }
     }
 }

@@ -13,6 +13,7 @@ pub mod characterize;
 pub mod common;
 pub mod e2e;
 pub mod overheads;
+pub mod scale;
 pub mod scenarios;
 pub mod sensitivity;
 pub mod sweep;
@@ -24,10 +25,11 @@ pub use common::Ctx;
 
 /// All experiment ids: the paper's figures/tables in paper order, then
 /// this reproduction's own additions (`scenarios`, the cross-scenario
-/// robustness matrix — DESIGN.md §Scenarios).
+/// robustness matrix — DESIGN.md §Scenarios; `scale`, the 64-worker
+/// engine-throughput benchmark — DESIGN.md §Perf).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
-    "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios",
+    "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios", "scale",
 ];
 
 /// Run one experiment by id.
@@ -51,8 +53,18 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "table2" => tables::table2(ctx),
         "table3" => tables::table3(ctx),
         "scenarios" => scenarios::scenarios(ctx),
+        "scale" => scale::scale(ctx),
         "all" => {
             for id in EXPERIMENTS {
+                // `scale` is a wall-clock benchmark with its own pinned
+                // methodology (seeds=1/jobs=1 via `make bench-scale`);
+                // running it under `all`'s session defaults would both
+                // dominate the runtime and overwrite out/BENCH_scale.json
+                // with non-comparable numbers.
+                if *id == "scale" {
+                    println!("\n(skipping 'scale' under 'all': run `make bench-scale`)\n");
+                    continue;
+                }
                 println!("\n================ {id} ================\n");
                 run(id, ctx)?;
             }
@@ -67,13 +79,17 @@ mod tests {
     #[test]
     fn registry_covers_every_table_and_figure() {
         // the paper's evaluation (figures 1-4, 6-14, tables 1-3) plus the
-        // repo's own cross-scenario robustness matrix
+        // repo's own cross-scenario robustness matrix and the engine
+        // scale benchmark
         for id in super::EXPERIMENTS {
             assert!(
-                id.starts_with("fig") || id.starts_with("table") || *id == "scenarios"
+                id.starts_with("fig")
+                    || id.starts_with("table")
+                    || *id == "scenarios"
+                    || *id == "scale"
             );
         }
-        assert_eq!(super::EXPERIMENTS.len(), 18);
+        assert_eq!(super::EXPERIMENTS.len(), 19);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! `experiment scale` — the engine-throughput benchmark behind the
+//! indexed-simulator refactor (DESIGN.md §Perf): a 64-worker cluster
+//! driven at ≥4× the fig8 request rate, one cell per policy, measuring
+//! wall-clock and simulated-invocations-per-second for the full stack
+//! (trace → coordinator → DES cluster → metrics).
+//!
+//! Emits `out/BENCH_scale.json` so before/after engine comparisons are
+//! machine-readable (`make bench-scale`; EXPERIMENTS.md §Perf records the
+//! measured numbers). The grid runs through the sweep harness, so the
+//! usual `--seeds`/`--jobs` determinism contract applies; shrink it for
+//! smoke runs with `--scale-workers`/`--scale-rps`/`--duration`.
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::simulator::SimConfig;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{self, Ctx};
+use super::sweep::{self, Cell};
+
+/// Systems timed by the scale grid: the cheapest baseline, a mid-cost
+/// baseline, and the full Shabari stack (learner + scheduler feedback).
+pub const SCALE_POLICIES: &[&str] = &["static-large", "cypress", "shabari"];
+
+/// One timed row of the scale grid.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub policy: String,
+    /// Wall-clock for all `seeds` replicates of the cell.
+    pub wall_s: f64,
+    /// Simulated invocations across all replicates.
+    pub invocations: usize,
+    /// Simulated invocations per wall-second (the headline number).
+    pub sim_inv_per_s: f64,
+    /// Cross-seed mean metrics (sanity: the grid simulates real work).
+    pub metrics: RunMetrics,
+}
+
+/// One sweep cell at an explicit cluster size (the `workers` override
+/// rides in the cell label so seed derivation stays collision-free).
+fn run_scale_cell(
+    policy: &str,
+    ctx: &Ctx,
+    rps: f64,
+    workers: usize,
+    seed: u64,
+) -> Result<RunMetrics> {
+    let cctx = ctx.with_seed(seed);
+    let workload = cctx.workload();
+    let cfg = SimConfig { workers, ..common::sim_config(&cctx) };
+    let (_, metrics) = common::run_one(policy, &cctx, &workload, rps, &cfg)?;
+    Ok(metrics)
+}
+
+/// Run the scale grid, timing each policy's cell (all replicates).
+pub fn run_scale(ctx: &Ctx) -> Result<Vec<ScaleRow>> {
+    let workers = ctx.scale_workers;
+    let rps = ctx.scale_rps;
+    let mut rows = Vec::with_capacity(SCALE_POLICIES.len());
+    for policy in SCALE_POLICIES {
+        let cells = [Cell::labeled(policy, rps, "workers", workers as f64)];
+        let t0 = std::time::Instant::now();
+        let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+            run_scale_cell(&cell.policy, ctx, cell.rps, workers, seed)
+        })?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let out = &outcomes[0];
+        let invocations: usize = out.per_seed.iter().map(|m| m.invocations).sum();
+        rows.push(ScaleRow {
+            policy: policy.to_string(),
+            wall_s,
+            invocations,
+            sim_inv_per_s: invocations as f64 / wall_s.max(1e-9),
+            metrics: out.mean_metrics(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn scale(ctx: &Ctx) -> Result<()> {
+    let rows = run_scale(ctx)?;
+    let mut t = Table::new(
+        &format!(
+            "engine scale: {} workers @ {} rps, {}s trace, {} seed(s) x {} job(s)",
+            ctx.scale_workers, ctx.scale_rps, ctx.duration_s, ctx.seeds, ctx.jobs
+        ),
+        &["system", "invocations", "wall s", "sim inv/s", "SLO viol", "containers"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.policy.clone(),
+            r.invocations.to_string(),
+            fnum(r.wall_s, 2),
+            fnum(r.sim_inv_per_s, 0),
+            fpct(r.metrics.slo_violation_pct),
+            r.metrics.containers_created.to_string(),
+        ]);
+    }
+    t.note("wall-clock varies by machine; sim results are byte-deterministic per --seed");
+    t.print();
+
+    let dump = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("workers", Json::Num(ctx.scale_workers as f64)),
+                ("rps", Json::Num(ctx.scale_rps)),
+                ("duration_s", Json::Num(ctx.duration_s)),
+                ("seeds", Json::Num(ctx.seeds as f64)),
+                ("jobs", Json::Num(ctx.jobs as f64)),
+                ("seed", Json::Num(ctx.seed as f64)),
+            ]),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("policy", Json::Str(r.policy.clone())),
+                            ("invocations", Json::Num(r.invocations as f64)),
+                            ("wall_s", Json::Num(r.wall_s)),
+                            ("sim_inv_per_s", Json::Num(r.sim_inv_per_s)),
+                            ("slo_violation_pct", Json::Num(r.metrics.slo_violation_pct)),
+                            (
+                                "containers_created",
+                                Json::Num(r.metrics.containers_created as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::create_dir_all("out").ok();
+    match std::fs::write("out/BENCH_scale.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/BENCH_scale.json)"),
+        Err(e) => eprintln!("warning: could not write out/BENCH_scale.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny-parameter smoke: the scale path must simulate real work and
+    /// stay deterministic across thread counts (the CI smoke runs the
+    /// same grid through the CLI).
+    #[test]
+    fn scale_grid_runs_and_is_jobs_invariant() {
+        let ctx = Ctx {
+            duration_s: 30.0,
+            scale_workers: 8,
+            scale_rps: 4.0,
+            seeds: 2,
+            ..Default::default()
+        };
+        let seq = run_scale(&Ctx { jobs: 1, ..ctx.clone() }).unwrap();
+        let par = run_scale(&Ctx { jobs: 4, ..ctx }).unwrap();
+        assert_eq!(seq.len(), SCALE_POLICIES.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.policy, b.policy);
+            assert!(a.invocations > 50, "{}: {} invocations", a.policy, a.invocations);
+            assert_eq!(a.invocations, b.invocations);
+            assert_eq!(
+                a.metrics.slo_violation_pct.to_bits(),
+                b.metrics.slo_violation_pct.to_bits(),
+                "{} diverged across --jobs",
+                a.policy
+            );
+            assert_eq!(a.metrics.mean_e2e_s.to_bits(), b.metrics.mean_e2e_s.to_bits());
+        }
+    }
+}

@@ -148,6 +148,9 @@ pub struct Engine<'p, P: Policy> {
     containers_created: u64,
     background_launches: u64,
     launches: Vec<LaunchRecord>,
+    /// Reused completion buffers (no steady-state allocation).
+    done_scratch: Vec<u64>,
+    finished_scratch: Vec<u64>,
 }
 
 impl<'p, P: Policy> Engine<'p, P> {
@@ -171,6 +174,8 @@ impl<'p, P: Policy> Engine<'p, P> {
             containers_created: 0,
             background_launches: 0,
             launches: Vec::new(),
+            done_scratch: Vec::new(),
+            finished_scratch: Vec::new(),
         }
     }
 
@@ -316,7 +321,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             .clamp(0.1, 10.0);
         let ready = self.now + latency;
         let c = Container::new(cid, func, vcpus, mem_mb, ready);
-        self.cluster.workers[worker].containers.insert(cid, c);
+        self.cluster.insert_container(worker, c);
         if let Some(inv) = for_inv {
             self.waiting_on_container.insert(cid, inv);
         }
@@ -325,15 +330,13 @@ impl<'p, P: Policy> Engine<'p, P> {
     }
 
     fn on_container_ready(&mut self, worker: usize, container: u64) {
-        let Some(c) = self.cluster.workers[worker].containers.get_mut(&container) else {
+        let Some(idle_epoch) = self.cluster.container_ready(worker, container, self.now) else {
             return; // evicted before ready (shouldn't happen)
         };
-        c.mark_ready(self.now);
         if let Some(inv) = self.waiting_on_container.remove(&container) {
             self.bind_and_start(inv, worker, container);
         } else {
-            // background container goes idle; schedule keep-alive eviction
-            let idle_epoch = self.cluster.workers[worker].containers[&container].idle_epoch;
+            // background container stays idle; schedule keep-alive eviction
             self.push(
                 self.now + self.cfg.keep_alive_s,
                 EventKind::Evict { worker, container, idle_epoch },
@@ -344,19 +347,13 @@ impl<'p, P: Policy> Engine<'p, P> {
     /// Bind the invocation to a ready container and start its phases.
     fn bind_and_start(&mut self, inv_id: u64, worker_id: usize, cid: u64) {
         // Container size wins (may be larger than requested).
-        let (c_vcpus, c_mem) = {
-            let c = self.cluster.workers[worker_id]
-                .containers
-                .get_mut(&cid)
-                .expect("container exists");
-            c.acquire();
-            (c.vcpus, c.mem_mb)
-        };
+        let (c_vcpus, c_mem) = self.cluster.acquire_container(worker_id, cid);
         let p = self.pending.get_mut(&inv_id).expect("pending invocation");
         p.container = Some(cid);
         p.vcpus = c_vcpus;
         p.mem_mb = c_mem;
         p.exec_started = Some(self.now);
+        let arrival = p.req.arrival;
 
         // Build the phase list from the ground-truth demand.
         let d = p.demand.clone();
@@ -402,22 +399,26 @@ impl<'p, P: Policy> Engine<'p, P> {
         // OOM: footprint beyond the container's memory kills the
         // invocation partway through (when usage crosses the limit).
         let alloc_gb = c_mem as f64 / 1024.0;
-        if d.mem_gb > alloc_gb {
-            let ideal = d.ideal_exec_s(c_vcpus as f64, self.cfg.net_gbps);
-            let frac = (alloc_gb / d.mem_gb).clamp(0.05, 0.95);
-            self.push(self.now + ideal * frac, EventKind::OomKill { inv: inv_id });
+        let ideal = d.ideal_exec_s(c_vcpus as f64, self.cfg.net_gbps);
+        if let Some(crossing) = oom_crossing_s(d.mem_gb, alloc_gb, ideal) {
+            self.push(self.now + crossing, EventKind::OomKill { inv: inv_id });
         }
-        // Platform timeout.
-        self.push(self.now + self.cfg.timeout_s, EventKind::Timeout { inv: inv_id });
+        // Platform walltime limit, counted from *arrival* (OpenWhisk
+        // semantics): decision overhead and cold-start latency eat into
+        // the budget. A bind past the deadline times out immediately.
+        let deadline = (arrival + self.cfg.timeout_s).max(self.now);
+        self.push(deadline, EventKind::Timeout { inv: inv_id });
     }
 
     /// Re-derive the earliest phase completion for a worker and schedule
     /// a PhaseDone event tagged with the current epoch.
     fn reschedule_worker(&mut self, worker_id: usize) {
-        let w = &self.cluster.workers[worker_id];
-        if let Some((dt, _)) = w.next_phase_completion() {
+        let next = {
+            let w = &mut self.cluster.workers[worker_id];
+            w.next_phase_completion().map(|(dt, _)| (dt, w.epoch))
+        };
+        if let Some((dt, epoch)) = next {
             if dt.is_finite() {
-                let epoch = w.epoch;
                 // Lower-bound dt so the event strictly advances time even
                 // when float residue makes the nominal dt underflow.
                 let at = self.now + dt.max(1e-9);
@@ -431,21 +432,31 @@ impl<'p, P: Policy> Engine<'p, P> {
             return; // stale
         }
         self.cluster.workers[worker_id].advance(self.now);
-        // Find invocations whose current phase hit zero; transition them.
-        let done_ids: Vec<u64> = self.cluster.workers[worker_id]
-            .active
-            .values()
-            .filter(|a| a.remaining <= 0.0)
-            .map(|a| a.inv_id)
-            .collect();
-        let mut finished: Vec<u64> = Vec::new();
+        // Completions were collected by `advance` while it progressed the
+        // work — no second scan over the active set. Sort so phase
+        // transitions, completion records, and `policy.on_complete`
+        // feedback (which drives learner SGD state) always happen in
+        // invocation-id order regardless of how batches accumulated.
+        let mut done_ids = std::mem::take(&mut self.done_scratch);
+        let mut finished = std::mem::take(&mut self.finished_scratch);
+        self.cluster.workers[worker_id].drain_done(&mut done_ids);
+        done_ids.sort_unstable();
+        let mut changed = false;
         {
             let w = &mut self.cluster.workers[worker_id];
-            for id in &done_ids {
-                let a = w.active.get_mut(id).expect("active");
+            for &id in &done_ids {
+                // An id may have been OOM-killed or timed out between its
+                // phase hitting zero and this event; skip it then.
+                let Some(a) = w.active.get_mut(&id) else {
+                    continue;
+                };
+                if a.remaining > 0.0 {
+                    continue;
+                }
+                changed = true;
                 loop {
                     if !a.next_phase() {
-                        finished.push(*id);
+                        finished.push(id);
                         break;
                     }
                     if a.remaining > 1e-12 {
@@ -454,13 +465,17 @@ impl<'p, P: Policy> Engine<'p, P> {
                     // zero-work phase: skip through
                 }
             }
-            if !done_ids.is_empty() {
+            if changed {
                 w.epoch += 1;
             }
         }
-        for id in finished {
+        for &id in &finished {
             self.complete(id, Verdict::Completed);
         }
+        done_ids.clear();
+        finished.clear();
+        self.done_scratch = done_ids;
+        self.finished_scratch = finished;
         self.reschedule_worker(worker_id);
     }
 
@@ -491,24 +506,21 @@ impl<'p, P: Policy> Engine<'p, P> {
             .expect("active invocation");
         self.reschedule_worker(worker_id);
 
-        // Release or destroy the container.
-        let evict_at = {
-            let w = &mut self.cluster.workers[worker_id];
-            match verdict {
-                Verdict::Completed | Verdict::TimedOut => {
-                    let c = w.containers.get_mut(&cid).expect("container");
-                    c.release(self.now);
-                    Some((self.now + self.cfg.keep_alive_s, c.idle_epoch))
-                }
-                Verdict::OomKilled => {
-                    // OOM-killed containers are torn down by the platform.
-                    w.containers.remove(&cid);
-                    None
-                }
+        // Release or destroy the container. Failed invocations do not
+        // donate warm containers: OOM kills are torn down by the platform,
+        // and a function that just burned the full walltime limit gets its
+        // container reclaimed rather than parked warm.
+        match verdict {
+            Verdict::Completed => {
+                let idle_epoch = self.cluster.release_container(worker_id, cid, self.now);
+                self.push(
+                    self.now + self.cfg.keep_alive_s,
+                    EventKind::Evict { worker: worker_id, container: cid, idle_epoch },
+                );
             }
-        };
-        if let Some((at, idle_epoch)) = evict_at {
-            self.push(at, EventKind::Evict { worker: worker_id, container: cid, idle_epoch });
+            Verdict::OomKilled | Verdict::TimedOut => {
+                self.cluster.remove_container(worker_id, cid);
+            }
         }
 
         let exec_started = active.exec_started;
@@ -545,14 +557,26 @@ impl<'p, P: Policy> Engine<'p, P> {
     }
 
     fn on_evict(&mut self, worker: usize, container: u64, idle_epoch: u64) {
-        let w = &mut self.cluster.workers[worker];
-        let Some(c) = w.containers.get(&container) else {
-            return;
+        let expired = match self.cluster.workers[worker].containers.get(&container) {
+            None => false,
+            Some(c) => c.is_warm_idle() && c.idle_epoch == idle_epoch,
         };
-        if c.is_warm_idle() && c.idle_epoch == idle_epoch {
-            w.containers.remove(&container);
+        if expired {
+            self.cluster.remove_container(worker, container);
         }
     }
+}
+
+/// Time after exec start at which a footprint of `mem_gb` crosses an
+/// `alloc_gb` container limit, or None when it fits. The boundary is
+/// inclusive: a footprint exactly equal to the allocation runs to
+/// completion (cgroup limits kill on *exceeding* the limit).
+pub fn oom_crossing_s(mem_gb: f64, alloc_gb: f64, ideal_exec_s: f64) -> Option<f64> {
+    if mem_gb <= alloc_gb {
+        return None;
+    }
+    let frac = (alloc_gb / mem_gb).clamp(0.05, 0.95);
+    Some(ideal_exec_s * frac)
 }
 
 /// Convenience: run a request list under a policy on a config.
@@ -685,8 +709,75 @@ mod tests {
         cfg.timeout_s = 100.0;
         let mut p = FixedPolicy { vcpus: 1, mem_mb: 4096, next: 0, reuse_warm: false };
         let res = simulate(cfg, &mut p, vec![compress_request(1, 0.0, 2000.0)]);
-        assert_eq!(res.records[0].verdict, Verdict::TimedOut);
-        assert!(res.records[0].exec_s >= 99.0);
+        let r = &res.records[0];
+        assert_eq!(r.verdict, Verdict::TimedOut);
+        // The limit is walltime from *arrival*: e2e pins to the deadline,
+        // and the cold start ate part of the execution budget.
+        assert!((r.e2e_s - 100.0).abs() < 1e-6, "e2e {} must hit the deadline", r.e2e_s);
+        assert!(r.exec_s <= 100.0 - r.cold_start_s + 1e-6);
+        assert!(r.exec_s >= 85.0, "exec {} should still run most of the window", r.exec_s);
+    }
+
+    #[test]
+    fn timeout_counts_decision_overhead_and_teardown_blocks_warm_reuse() {
+        struct SlowDecision {
+            next: usize,
+        }
+        impl Policy for SlowDecision {
+            fn name(&self) -> String {
+                "slow-decision".into()
+            }
+            fn on_request(&mut self, _now: SimTime, req: &Request, cluster: &Cluster) -> Decision {
+                // route warm when possible so a donated container would show
+                let (worker, container) = match cluster.find_warm_exact(req.func, 1, 4096) {
+                    Some((w, cid)) => (w, ContainerChoice::Warm(cid)),
+                    None => {
+                        let w = self.next % cluster.len();
+                        self.next += 1;
+                        (w, ContainerChoice::Cold)
+                    }
+                };
+                Decision {
+                    worker,
+                    vcpus: 1,
+                    mem_mb: 4096,
+                    container,
+                    background: None,
+                    overhead_s: 30.0, // pathological decision latency
+                }
+            }
+        }
+        let mut cfg = SimConfig::small();
+        cfg.timeout_s = 100.0;
+        let reqs = vec![compress_request(1, 0.0, 2000.0), compress_request(2, 150.0, 2000.0)];
+        let res = simulate(cfg, &mut SlowDecision { next: 0 }, reqs);
+        let rs = res.sorted_records();
+        // 30 s decision overhead + cold start count against the 100 s
+        // budget: the run is cut at arrival + 100 s, not exec + 100 s.
+        assert_eq!(rs[0].verdict, Verdict::TimedOut);
+        assert!((rs[0].e2e_s - 100.0).abs() < 1e-6);
+        assert!(rs[0].exec_s < 70.0, "exec {} capped by overhead + cold start", rs[0].exec_s);
+        // the timed-out container was torn down, not parked warm
+        assert!(rs[1].had_cold_start, "timed-out run must not donate a warm container");
+        res.cluster.assert_warm_consistent();
+    }
+
+    #[test]
+    fn oom_boundary_footprint_equal_to_allocation_survives() {
+        // `oom_crossing_s` is the exact predicate `bind_and_start` uses to
+        // decide whether an OomKill event exists at all, so pinning it
+        // pins the engine: the boundary is inclusive — a footprint equal
+        // to the allocation schedules no kill.
+        assert_eq!(oom_crossing_s(4.0, 4.0, 10.0), None, "exact fit must not OOM");
+        assert_eq!(oom_crossing_s(3.99, 4.0, 10.0), None);
+        assert_eq!(oom_crossing_s(0.5, 0.5, 3.0), None, "boundary holds at any size");
+        let t = oom_crossing_s(4.0 + 1e-9, 4.0, 10.0).expect("above the limit OOMs");
+        assert!(t > 0.0 && t <= 10.0 * 0.95 + 1e-12);
+        // engine sanity on the fitting side: a footprint under the
+        // allocation runs to completion, never OomKilled.
+        let mut p = FixedPolicy { vcpus: 2, mem_mb: 4096, next: 0, reuse_warm: false };
+        let res = simulate(SimConfig::small(), &mut p, vec![qr_request(1, 0.0)]);
+        assert_eq!(res.records[0].verdict, Verdict::Completed);
     }
 
     #[test]

@@ -9,13 +9,21 @@
 //! * execution in phases — network fetch (bandwidth-shared), serial
 //!   compute (1 vCPU), parallel compute (`min(alloc, maxpar)` vCPUs) —
 //!   under processor sharing when a worker's demand exceeds its cores;
-//! * OOM kills when an invocation's footprint exceeds its container's
-//!   memory, invocation timeouts, per-invocation utilization sampling
-//!   (the paper's per-worker daemon).
+//! * OOM kills when an invocation's footprint *exceeds* its container's
+//!   memory (exact fits survive), walltime timeouts counted from request
+//!   arrival (OpenWhisk semantics — decision overhead and cold starts eat
+//!   into the budget; timed-out containers are torn down, not kept warm),
+//!   per-invocation utilization sampling (the paper's per-worker daemon).
 //!
 //! The *policy* (Shabari or a baseline) plugs in through [`Policy`]: it
 //! sees each request plus a read-only cluster view and returns a routing
 //! [`Decision`]; the engine executes the mechanics.
+//!
+//! Everything in here is bit-deterministic for a fixed seed (DESIGN.md
+//! §4): container pools and active sets are ordered maps, warm-pool
+//! lookups go through sorted indexes (ties → lowest container id), and
+//! completion/feedback batches are processed in invocation-id order — no
+//! hash-iteration order reaches results, learner updates, or records.
 
 pub mod container;
 pub mod engine;

@@ -8,11 +8,23 @@
 //! factor (Linux CFS-style fair sharing weighted by demand). The per-
 //! worker daemon numbers (avg/peak vCPUs used) fall out of the exact work
 //! accounting.
+//!
+//! Determinism contract (DESIGN.md §4): every container here is ordered.
+//! `containers`/`active` are `BTreeMap`s (id order), warm-pool lookups go
+//! through sorted indexes that tie-break by lowest container id, and the
+//! per-phase rate view is cached per worker epoch in invocation-id order
+//! — no `HashMap` iteration order leaks into results, and steady-state
+//! events reuse buffers instead of allocating.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::container::Container;
 use super::SimTime;
+
+/// Warm-index key: `(func, vcpus, mem_mb, container id)`. Sorted order
+/// makes "exact size" a range lookup and "smallest at-least-as-large"
+/// an in-order scan, with equal-size ties always won by the lowest id.
+pub type WarmKey = (usize, u32, u32, u64);
 
 /// Execution phase of an active invocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,8 +91,16 @@ pub struct Worker {
     pub sched_vcpu_limit: f64,
     pub mem_gb: f64,
     pub net_gbps: f64,
-    pub containers: HashMap<u64, Container>,
-    pub active: HashMap<u64, ActiveInv>,
+    /// All containers on this worker, in id order. Mutate only through
+    /// the container-lifecycle methods (`insert_container`,
+    /// `remove_container`, `container_ready`, `acquire_container`,
+    /// `release_container`) so the warm index stays consistent.
+    pub containers: BTreeMap<u64, Container>,
+    /// Active invocations, in invocation-id order (the order every scan,
+    /// rate computation, and completion batch uses).
+    pub active: BTreeMap<u64, ActiveInv>,
+    /// Sorted index of idle warm containers.
+    warm: BTreeSet<WarmKey>,
     /// Allocated resources of *busy* containers (idle containers consume
     /// nothing — §5 "Creating Idle Containers in the Background").
     pub allocated_vcpus: f64,
@@ -88,11 +108,22 @@ pub struct Worker {
     /// Last time `advance` ran (work progressed up to here).
     pub last_advance: SimTime,
     /// Bumped on every change to the active set; stale completion events
-    /// carry an old epoch and are ignored.
+    /// carry an old epoch and are ignored. Also versions the rate cache.
     pub epoch: u64,
     /// Lifetime counters.
     pub total_cold_starts: u64,
     pub total_invocations: u64,
+    /// Cached wall-clock rate of each active invocation's current phase,
+    /// parallel to `active`'s id-order iteration. Valid iff
+    /// `rates_epoch == epoch`.
+    rates: Vec<f64>,
+    rates_epoch: u64,
+    /// Invocations whose current phase hit zero during `advance`, pending
+    /// pickup by the engine (id order within each advance batch).
+    done_buf: Vec<u64>,
+    /// Water-filling scratch buffers (reused; no steady-state allocs).
+    wf_unsat: Vec<(usize, f64, f64)>,
+    wf_next: Vec<(usize, f64, f64)>,
 }
 
 impl Worker {
@@ -103,14 +134,20 @@ impl Worker {
             sched_vcpu_limit: cfg.sched_vcpu_limit,
             mem_gb: cfg.mem_gb,
             net_gbps: cfg.net_gbps,
-            containers: HashMap::new(),
-            active: HashMap::new(),
+            containers: BTreeMap::new(),
+            active: BTreeMap::new(),
+            warm: BTreeSet::new(),
             allocated_vcpus: 0.0,
             allocated_mem_mb: 0.0,
             last_advance: 0.0,
             epoch: 0,
             total_cold_starts: 0,
             total_invocations: 0,
+            rates: Vec::new(),
+            rates_epoch: u64::MAX,
+            done_buf: Vec::new(),
+            wf_unsat: Vec::new(),
+            wf_next: Vec::new(),
         }
     }
 
@@ -131,24 +168,82 @@ impl Worker {
         self.free_sched_vcpus() >= vcpus as f64 && self.free_mem_mb() >= mem_mb as f64
     }
 
-    /// Idle warm containers for `func`, any size.
-    pub fn warm_containers(&self, func: usize) -> impl Iterator<Item = &Container> {
-        self.containers
-            .values()
-            .filter(move |c| c.func == func && c.is_warm_idle())
+    // -- container lifecycle (warm-index maintenance) -------------------
+
+    fn warm_key(c: &Container) -> WarmKey {
+        (c.func, c.vcpus, c.mem_mb, c.id)
     }
 
-    /// Idle warm container of the exact size.
+    /// Adopt a container. `Starting` containers are unindexed; `Idle`
+    /// ones join the warm index immediately.
+    pub fn insert_container(&mut self, c: Container) {
+        if c.is_warm_idle() {
+            self.warm.insert(Self::warm_key(&c));
+        }
+        self.containers.insert(c.id, c);
+    }
+
+    /// Tear a container down (eviction, OOM, timeout).
+    pub fn remove_container(&mut self, cid: u64) -> Option<Container> {
+        let c = self.containers.remove(&cid)?;
+        self.warm.remove(&Self::warm_key(&c));
+        Some(c)
+    }
+
+    /// Cold start finished: the container joins the warm pool. Returns
+    /// its (new idle epoch, warm key), or None if torn down meanwhile.
+    /// The key lets [`Cluster`] update its index without a second probe.
+    pub fn container_ready(&mut self, cid: u64, now: SimTime) -> Option<(u64, WarmKey)> {
+        let c = self.containers.get_mut(&cid)?;
+        c.mark_ready(now);
+        let epoch = c.idle_epoch;
+        let key = Self::warm_key(c);
+        self.warm.insert(key);
+        Some((epoch, key))
+    }
+
+    /// Mark a warm container busy; returns its warm key
+    /// (`(func, vcpus, mem_mb, id)`).
+    pub fn acquire_container(&mut self, cid: u64) -> WarmKey {
+        let c = self.containers.get_mut(&cid).expect("acquire: container exists");
+        let key = Self::warm_key(c);
+        c.acquire();
+        self.warm.remove(&key);
+        key
+    }
+
+    /// Return a busy container to the warm pool; returns its
+    /// (idle epoch, warm key).
+    pub fn release_container(&mut self, cid: u64, now: SimTime) -> (u64, WarmKey) {
+        let c = self.containers.get_mut(&cid).expect("release: container exists");
+        c.release(now);
+        let epoch = c.idle_epoch;
+        let key = Self::warm_key(c);
+        self.warm.insert(key);
+        (epoch, key)
+    }
+
+    /// Idle warm container of the exact size (lowest id on ties).
     pub fn find_warm_exact(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<&Container> {
-        self.warm_containers(func)
-            .find(|c| c.exact(func, vcpus, mem_mb))
+        self.warm
+            .range((func, vcpus, mem_mb, 0)..=(func, vcpus, mem_mb, u64::MAX))
+            .next()
+            .map(|&(_, _, _, id)| &self.containers[&id])
     }
 
-    /// Smallest idle warm container that is at least the requested size.
+    /// Smallest idle warm container at least the requested size: minimal
+    /// `(vcpus, mem_mb)` lexicographically, then lowest container id.
     pub fn find_warm_larger(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<&Container> {
-        self.warm_containers(func)
-            .filter(|c| c.fits(func, vcpus, mem_mb))
-            .min_by_key(|c| (c.vcpus, c.mem_mb))
+        self.warm
+            .range((func, vcpus, 0, 0)..)
+            .take_while(|&&(f, _, _, _)| f == func)
+            .find(|&&(_, _, cm, _)| cm >= mem_mb)
+            .map(|&(_, _, _, id)| &self.containers[&id])
+    }
+
+    /// Warm-index view (consistency checks).
+    pub fn warm_index(&self) -> &BTreeSet<WarmKey> {
+        &self.warm
     }
 
     // -- processor sharing ----------------------------------------------
@@ -172,7 +267,7 @@ impl Worker {
 
     /// Contention slowdown for compute phases: 1.0 when demand fits the
     /// physical cores, `cores / demand` when oversubscribed (aggregate
-    /// view; per-invocation rates come from [`Self::cpu_rates`]).
+    /// view; per-invocation rates come from the cached rate view).
     pub fn cpu_scale(&self) -> f64 {
         let demand = self.cpu_demand();
         if demand <= self.physical_cores {
@@ -182,15 +277,6 @@ impl Worker {
         }
     }
 
-    /// Per-invocation CPU rates (cpu-seconds per wall-second) under
-    /// cgroup-share semantics: when the worker's compute demand exceeds
-    /// its physical cores, capacity is distributed in proportion to each
-    /// invocation's *allocation* (its cpu share weight), capped at what
-    /// the phase can use (its demand), work-conservingly (water-filling).
-    ///
-    /// This is the mechanism behind the paper's "stealing" observation
-    /// (§7.2): over-allocated invocations squeeze right-sized ones under
-    /// contention even when they cannot use the extra cores themselves.
     /// Interference slowdown from vCPU over-subscription of *allocations*
     /// (cgroup shares): when the sum of busy containers' vCPU limits
     /// exceeds the physical cores, the kernel timeslices more runnable
@@ -202,70 +288,110 @@ impl Worker {
         1.0 / (1.0 + 0.35 * over.max(0.0))
     }
 
-    pub fn cpu_rates(&self) -> HashMap<u64, f64> {
-        let mut rates = HashMap::new();
-        let interference = self.interference_factor();
-        let compute: Vec<(&u64, &ActiveInv)> = self
-            .active
-            .iter()
-            .filter(|(_, a)| matches!(a.current.phase, Phase::Serial | Phase::Parallel))
-            .collect();
-        let total_demand: f64 = compute.iter().map(|(_, a)| a.current.demand).sum();
-        if total_demand <= self.physical_cores {
-            for (id, a) in compute {
-                rates.insert(*id, a.current.demand * interference);
-            }
-            return rates;
+    /// Refresh the cached per-invocation rate view if the epoch moved.
+    ///
+    /// The view holds the wall-clock progress rate of every active
+    /// invocation's *current* phase, in invocation-id order: NIC fair
+    /// share for `Net`, cgroup-share water-filling (capped at demand,
+    /// scaled by [`Self::interference_factor`]) for compute. This is the
+    /// mechanism behind the paper's "stealing" observation (§7.2):
+    /// over-allocated invocations squeeze right-sized ones under
+    /// contention even when they cannot use the extra cores themselves.
+    fn ensure_rates(&mut self) {
+        if self.rates_epoch == self.epoch && self.rates.len() == self.active.len() {
+            return;
         }
-        // water-filling by allocation weight
-        let mut remaining = self.physical_cores;
-        let mut unsat: Vec<(u64, f64, f64)> = compute
-            .iter()
-            .map(|(id, a)| (**id, a.current.demand, a.alloc_vcpus.max(1.0)))
-            .collect();
+        self.recompute_rates();
+        self.rates_epoch = self.epoch;
+    }
+
+    fn recompute_rates(&mut self) {
+        let interference = self.interference_factor();
+        let net_rate = self.net_rate();
+        let cores = self.physical_cores;
+        self.rates.clear();
+        self.rates.resize(self.active.len(), 0.0);
+
+        // Pass 1: net rates + total compute demand.
+        let mut total_demand = 0.0;
+        for (i, a) in self.active.values().enumerate() {
+            match a.current.phase {
+                Phase::Net => self.rates[i] = net_rate,
+                Phase::Serial | Phase::Parallel => total_demand += a.current.demand,
+            }
+        }
+
+        if total_demand <= cores {
+            for (i, a) in self.active.values().enumerate() {
+                if matches!(a.current.phase, Phase::Serial | Phase::Parallel) {
+                    self.rates[i] = a.current.demand * interference;
+                }
+            }
+            return;
+        }
+
+        // Water-filling by allocation weight over compute phases, in
+        // invocation-id order (deterministic float accumulation).
+        self.wf_unsat.clear();
+        for (i, a) in self.active.values().enumerate() {
+            if matches!(a.current.phase, Phase::Serial | Phase::Parallel) {
+                self.wf_unsat.push((i, a.current.demand, a.alloc_vcpus.max(1.0)));
+            }
+        }
+        let mut remaining = cores;
+        let mut sat_sum = 0.0;
         loop {
-            let total_w: f64 = unsat.iter().map(|(_, _, w)| *w).sum();
+            let total_w: f64 = self.wf_unsat.iter().map(|&(_, _, w)| w).sum();
             if total_w <= 0.0 || remaining <= 1e-12 {
-                for (id, _, _) in &unsat {
-                    rates.insert(*id, 0.0);
+                for &(i, _, _) in &self.wf_unsat {
+                    self.rates[i] = 0.0;
                 }
                 break;
             }
             let mut newly_sat = false;
-            let mut still = Vec::with_capacity(unsat.len());
-            for (id, demand, w) in unsat.drain(..) {
+            self.wf_next.clear();
+            for &(i, demand, w) in &self.wf_unsat {
                 let share = remaining * w / total_w;
                 if share >= demand {
-                    rates.insert(id, demand);
+                    self.rates[i] = demand;
+                    sat_sum += demand;
                     newly_sat = true;
                 } else {
-                    still.push((id, demand, w));
+                    self.wf_next.push((i, demand, w));
                 }
             }
             // subtract satisfied demands from capacity
-            let sat_sum: f64 = rates
-                .iter()
-                .filter(|(id, _)| !still.iter().any(|(sid, _, _)| sid == *id))
-                .map(|(_, r)| *r)
-                .sum();
-            remaining = (self.physical_cores - sat_sum).max(0.0);
+            remaining = (cores - sat_sum).max(0.0);
             if !newly_sat {
                 // no one newly satisfied: final proportional split
-                let total_w: f64 = still.iter().map(|(_, _, w)| *w).sum();
-                for (id, demand, w) in still {
-                    rates.insert(id, (remaining * w / total_w).min(demand));
+                let total_w: f64 = self.wf_next.iter().map(|&(_, _, w)| w).sum();
+                for &(i, demand, w) in &self.wf_next {
+                    self.rates[i] = (remaining * w / total_w).min(demand);
                 }
                 break;
             }
-            if still.is_empty() {
+            if self.wf_next.is_empty() {
                 break;
             }
-            unsat = still;
+            std::mem::swap(&mut self.wf_unsat, &mut self.wf_next);
         }
-        for r in rates.values_mut() {
-            *r *= interference;
+        for (i, a) in self.active.values().enumerate() {
+            if matches!(a.current.phase, Phase::Serial | Phase::Parallel) {
+                self.rates[i] *= interference;
+            }
         }
-        rates
+    }
+
+    /// Compute-phase rates keyed by invocation id (tests/inspection; the
+    /// hot path uses the cached slice directly).
+    pub fn cpu_rates(&mut self) -> BTreeMap<u64, f64> {
+        self.ensure_rates();
+        self.active
+            .values()
+            .zip(self.rates.iter())
+            .filter(|(a, _)| matches!(a.current.phase, Phase::Serial | Phase::Parallel))
+            .map(|(a, &r)| (a.inv_id, r))
+            .collect()
     }
 
     /// Bytes/s available to each concurrent network fetch (fair share).
@@ -274,25 +400,26 @@ impl Worker {
         self.net_gbps * 1e9 / 8.0 / n as f64
     }
 
-    /// Progress all active work up to `now`.
+    /// Progress all active work up to `now`. Invocations whose current
+    /// phase hits zero are queued for the engine (see [`Self::drain_done`]).
     pub fn advance(&mut self, now: SimTime) {
         let dt = now - self.last_advance;
         if dt <= 0.0 {
             self.last_advance = now.max(self.last_advance);
             return;
         }
-        let cpu_rates = self.cpu_rates();
-        let net_rate = self.net_rate();
-        for a in self.active.values_mut() {
-            let rate = match a.current.phase {
-                Phase::Net => net_rate,
-                Phase::Serial | Phase::Parallel => cpu_rates[&a.inv_id],
-            };
+        self.ensure_rates();
+        debug_assert_eq!(self.rates.len(), self.active.len());
+        let mut done = std::mem::take(&mut self.done_buf);
+        for (a, &rate) in self.active.values_mut().zip(self.rates.iter()) {
+            if a.remaining <= 0.0 {
+                continue; // already queued for completion
+            }
             // The engine advances exactly to phase-completion events, so a
             // phase never crosses zero mid-interval; clamp defensively and
             // account only work actually done.
-            let done = (rate * dt).min(a.remaining);
-            a.remaining -= done;
+            let done_work = (rate * dt).min(a.remaining);
+            a.remaining -= done_work;
             // Snap float residue to zero so completion checks terminate
             // (a sub-nanosecond work remainder can otherwise produce
             // events whose dt underflows to the same timestamp forever).
@@ -301,24 +428,32 @@ impl Worker {
             }
             if matches!(a.current.phase, Phase::Serial | Phase::Parallel) {
                 // Work *is* CPU-seconds for compute phases.
-                a.cpu_seconds_done += done;
+                a.cpu_seconds_done += done_work;
+            }
+            if a.remaining <= 0.0 {
+                done.push(a.inv_id);
             }
         }
+        self.done_buf = done;
         self.last_advance = now;
     }
 
+    /// Move the completions queued by [`Self::advance`] into `out`
+    /// (append; caller owns ordering/clearing).
+    pub fn drain_done(&mut self, out: &mut Vec<u64>) {
+        out.append(&mut self.done_buf);
+    }
+
     /// Earliest (dt-from-now, inv_id) at which some current phase
-    /// completes, given current rates. None if nothing is active.
-    pub fn next_phase_completion(&self) -> Option<(f64, u64)> {
-        let cpu_rates = self.cpu_rates();
-        let net_rate = self.net_rate();
+    /// completes, given current rates. None if nothing is active. Ties
+    /// break toward the lowest invocation id.
+    pub fn next_phase_completion(&mut self) -> Option<(f64, u64)> {
+        self.ensure_rates();
         let mut best: Option<(f64, u64)> = None;
-        for a in self.active.values() {
-            let rate = match a.current.phase {
-                Phase::Net => net_rate,
-                Phase::Serial | Phase::Parallel => cpu_rates[&a.inv_id],
-            };
-            let dt = if rate <= 0.0 {
+        for (a, &rate) in self.active.values().zip(self.rates.iter()) {
+            let dt = if a.remaining <= 0.0 {
+                0.0
+            } else if rate <= 0.0 {
                 f64::INFINITY
             } else {
                 a.remaining / rate
@@ -351,16 +486,29 @@ impl Worker {
     }
 }
 
-/// The cluster: all workers plus global container-id assignment.
+/// The cluster: all workers plus a cluster-wide warm-container index
+/// (`(func, vcpus, mem_mb, worker, container)` in sorted order), kept in
+/// lockstep with the per-worker indexes by routing every container
+/// lifecycle change through the methods below.
+///
+/// `workers` (and `Worker::containers`/`active`) stay `pub` for read
+/// access — integration tests and schedulers inspect them freely — but
+/// mutating a cluster-owned worker's containers directly, or calling the
+/// worker-level lifecycle methods on one, desyncs the cluster index:
+/// always go through `Cluster::{insert,remove}_container`,
+/// `container_ready`, `acquire_container`, `release_container`
+/// (drift is caught by [`Cluster::assert_warm_consistent`] in tests).
 #[derive(Debug)]
 pub struct Cluster {
     pub workers: Vec<Worker>,
+    warm: BTreeSet<(usize, u32, u32, usize, u64)>,
 }
 
 impl Cluster {
     pub fn new(cfg: &super::SimConfig) -> Self {
         Cluster {
             workers: (0..cfg.workers).map(|i| Worker::new(i, cfg)).collect(),
+            warm: BTreeSet::new(),
         }
     }
 
@@ -376,33 +524,112 @@ impl Cluster {
         self.workers.is_empty()
     }
 
+    // -- container lifecycle --------------------------------------------
+
+    /// Adopt a container onto a worker (cold launch or test setup).
+    pub fn insert_container(&mut self, worker: usize, c: Container) {
+        if c.is_warm_idle() {
+            self.warm.insert((c.func, c.vcpus, c.mem_mb, worker, c.id));
+        }
+        self.workers[worker].insert_container(c);
+    }
+
+    /// Tear a container down everywhere (eviction, OOM, timeout).
+    pub fn remove_container(&mut self, worker: usize, cid: u64) -> Option<Container> {
+        let c = self.workers[worker].remove_container(cid)?;
+        self.warm.remove(&(c.func, c.vcpus, c.mem_mb, worker, cid));
+        Some(c)
+    }
+
+    /// Cold start finished; returns the container's idle epoch (None if
+    /// it was torn down before becoming ready).
+    pub fn container_ready(&mut self, worker: usize, cid: u64, now: SimTime) -> Option<u64> {
+        let (epoch, (func, vcpus, mem_mb, id)) = self.workers[worker].container_ready(cid, now)?;
+        self.warm.insert((func, vcpus, mem_mb, worker, id));
+        Some(epoch)
+    }
+
+    /// Mark a warm container busy; returns its (vcpus, mem_mb).
+    pub fn acquire_container(&mut self, worker: usize, cid: u64) -> (u32, u32) {
+        let (func, vcpus, mem_mb, id) = self.workers[worker].acquire_container(cid);
+        self.warm.remove(&(func, vcpus, mem_mb, worker, id));
+        (vcpus, mem_mb)
+    }
+
+    /// Return a busy container to the warm pool; returns its idle epoch.
+    pub fn release_container(&mut self, worker: usize, cid: u64, now: SimTime) -> u64 {
+        let (epoch, (func, vcpus, mem_mb, id)) = self.workers[worker].release_container(cid, now);
+        self.warm.insert((func, vcpus, mem_mb, worker, id));
+        epoch
+    }
+
+    // -- warm-pool queries ----------------------------------------------
+
+    /// Exact-size idle warm container on a worker passing `admit(worker,
+    /// container_vcpus, container_mem)`; lowest `(worker, container)` id
+    /// wins ties.
+    pub fn find_warm_exact_where(
+        &self,
+        func: usize,
+        vcpus: u32,
+        mem_mb: u32,
+        admit: impl Fn(&Worker, u32, u32) -> bool,
+    ) -> Option<(usize, u64)> {
+        self.warm
+            .range((func, vcpus, mem_mb, 0, 0)..=(func, vcpus, mem_mb, usize::MAX, u64::MAX))
+            .find(|&&(_, _, _, w, _)| admit(&self.workers[w], vcpus, mem_mb))
+            .map(|&(_, _, _, w, cid)| (w, cid))
+    }
+
+    /// Smallest admissible at-least-as-large idle warm container:
+    /// lexicographically minimal `(vcpus, mem_mb, worker, container)`.
+    pub fn find_warm_larger_where(
+        &self,
+        func: usize,
+        vcpus: u32,
+        mem_mb: u32,
+        admit: impl Fn(&Worker, u32, u32) -> bool,
+    ) -> Option<(usize, u64)> {
+        self.warm
+            .range((func, vcpus, 0, 0, 0)..)
+            .take_while(|&&(f, _, _, _, _)| f == func)
+            .find(|&&(_, cv, cm, w, _)| cm >= mem_mb && admit(&self.workers[w], cv, cm))
+            .map(|&(_, _, _, w, cid)| (w, cid))
+    }
+
     /// Find an exact-size idle warm container anywhere (worker, container).
     pub fn find_warm_exact(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<(usize, u64)> {
-        for w in &self.workers {
-            if let Some(c) = w.find_warm_exact(func, vcpus, mem_mb) {
-                return Some((w.id, c.id));
-            }
-        }
-        None
+        self.find_warm_exact_where(func, vcpus, mem_mb, |_, _, _| true)
     }
 
     /// Find the smallest at-least-as-large idle warm container anywhere.
     pub fn find_warm_larger(&self, func: usize, vcpus: u32, mem_mb: u32) -> Option<(usize, u64)> {
-        let mut best: Option<(u32, u32, usize, u64)> = None;
-        for w in &self.workers {
-            if let Some(c) = w.find_warm_larger(func, vcpus, mem_mb) {
-                let key = (c.vcpus, c.mem_mb, w.id, c.id);
-                if best.map_or(true, |b| (key.0, key.1) < (b.0, b.1)) {
-                    best = Some(key);
-                }
-            }
-        }
-        best.map(|(_, _, w, c)| (w, c))
+        self.find_warm_larger_where(func, vcpus, mem_mb, |_, _, _| true)
     }
 
     /// Total allocated vCPUs across workers (cluster load).
     pub fn total_allocated_vcpus(&self) -> f64 {
         self.workers.iter().map(|w| w.allocated_vcpus).sum()
+    }
+
+    /// Verify both warm indexes against container ground truth (tests).
+    pub fn assert_warm_consistent(&self) {
+        let mut expect_cluster: Vec<(usize, u32, u32, usize, u64)> = Vec::new();
+        for w in &self.workers {
+            let mut expect: Vec<WarmKey> = Vec::new();
+            for c in w.containers.values() {
+                if c.is_warm_idle() {
+                    expect.push((c.func, c.vcpus, c.mem_mb, c.id));
+                    expect_cluster.push((c.func, c.vcpus, c.mem_mb, w.id, c.id));
+                }
+            }
+            expect.sort_unstable();
+            let got: Vec<WarmKey> = w.warm_index().iter().copied().collect();
+            assert_eq!(got, expect, "worker {} warm index drifted", w.id);
+        }
+        expect_cluster.sort_unstable();
+        let got: Vec<_> = self.warm.iter().copied().collect();
+        assert_eq!(got, expect_cluster, "cluster warm index drifted");
     }
 }
 
@@ -430,6 +657,12 @@ mod tests {
         }
     }
 
+    fn warm(id: u64, func: usize, vcpus: u32, mem: u32) -> Container {
+        let mut c = Container::new(id, func, vcpus, mem, 0.0);
+        c.mark_ready(0.0);
+        c
+    }
+
     #[test]
     fn no_contention_full_rate() {
         let mut w = worker();
@@ -448,11 +681,11 @@ mod tests {
         w.start_invocation(active(2, Phase::Parallel, 64.0, 64.0), 64, 1024);
         let scale = w.cpu_scale();
         assert!((scale - 96.0 / 128.0).abs() < 1e-12);
+        let interference = w.interference_factor();
         let (dt, _) = w.next_phase_completion().unwrap();
         // equal weights: each gets 48 effective vCPUs, then the
         // allocation-oversubscription interference factor applies
         // (128 alloc on 96 cores -> 1/(1 + 0.35/3))
-        let interference = w.interference_factor();
         assert!(interference < 1.0);
         let expect = 64.0 / (48.0 * interference);
         assert!((dt - expect).abs() < 1e-9, "dt {dt} expect {expect}");
@@ -466,6 +699,35 @@ mod tests {
         let a = &w.active[&1];
         assert!((a.remaining - 3.0).abs() < 1e-9);
         assert!((a.cpu_seconds_done - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_queues_completions_in_id_order() {
+        let mut w = worker();
+        // insert out of id order; both finish within the window
+        w.start_invocation(active(9, Phase::Serial, 1.0, 1.0), 1, 128);
+        w.start_invocation(active(3, Phase::Serial, 1.0, 1.0), 1, 128);
+        w.advance(2.0);
+        let mut done = Vec::new();
+        w.drain_done(&mut done);
+        assert_eq!(done, vec![3, 9], "completions surface in invocation-id order");
+        // drained: a second drain is empty
+        let mut again = Vec::new();
+        w.drain_done(&mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn rate_cache_tracks_epoch() {
+        let mut w = worker();
+        w.start_invocation(active(1, Phase::Serial, 10.0, 1.0), 1, 128);
+        let r1 = w.cpu_rates();
+        assert!((r1[&1] - 1.0).abs() < 1e-12);
+        // adding load bumps the epoch and invalidates the cache
+        w.start_invocation(active(2, Phase::Parallel, 1000.0, 200.0), 48, 512);
+        let r2 = w.cpu_rates();
+        assert!(r2[&1] < 1.0, "contention must slow the serial phase");
+        assert_eq!(r2.len(), 2);
     }
 
     #[test]
@@ -507,9 +769,7 @@ mod tests {
     fn warm_lookup_prefers_smallest_fitting() {
         let mut w = worker();
         for (id, v) in [(1u64, 8u32), (2, 16), (3, 12)] {
-            let mut c = Container::new(id, 0, v, 2048, 0.0);
-            c.mark_ready(0.0);
-            w.containers.insert(id, c);
+            w.insert_container(warm(id, 0, v, 2048));
         }
         let c = w.find_warm_larger(0, 9, 1024).unwrap();
         assert_eq!(c.vcpus, 12, "closest-larger should win");
@@ -518,12 +778,43 @@ mod tests {
     }
 
     #[test]
+    fn equal_size_warm_ties_break_to_lowest_id() {
+        let mut w = worker();
+        // insert several identically-sized warm containers, high ids first
+        for id in [44u64, 17, 92, 23] {
+            w.insert_container(warm(id, 0, 8, 2048));
+        }
+        assert_eq!(w.find_warm_exact(0, 8, 2048).unwrap().id, 17);
+        assert_eq!(w.find_warm_larger(0, 4, 1024).unwrap().id, 17);
+        // removing the winner promotes the next-lowest id
+        w.remove_container(17).unwrap();
+        assert_eq!(w.find_warm_exact(0, 8, 2048).unwrap().id, 23);
+    }
+
+    #[test]
+    fn warm_index_follows_lifecycle() {
+        let mut w = worker();
+        let c = Container::new(5, 2, 8, 1024, 1.0); // Starting
+        w.insert_container(c);
+        assert!(w.find_warm_exact(2, 8, 1024).is_none(), "starting is not warm");
+        w.container_ready(5, 1.0).unwrap();
+        assert!(w.find_warm_exact(2, 8, 1024).is_some());
+        let (func, vc, mem, id) = w.acquire_container(5);
+        assert_eq!((func, vc, mem, id), (2, 8, 1024, 5));
+        assert!(w.find_warm_exact(2, 8, 1024).is_none(), "busy left the pool");
+        w.release_container(5, 3.0);
+        assert!(w.find_warm_exact(2, 8, 1024).is_some(), "released rejoins");
+        w.remove_container(5).unwrap();
+        assert!(w.find_warm_exact(2, 8, 1024).is_none());
+        assert!(w.warm_index().is_empty());
+    }
+
+    #[test]
     fn busy_containers_not_warm() {
         let mut w = worker();
-        let mut c = Container::new(1, 0, 8, 1024, 0.0);
-        c.mark_ready(0.0);
+        let mut c = warm(1, 0, 8, 1024);
         c.acquire();
-        w.containers.insert(1, c);
+        w.insert_container(c);
         assert!(w.find_warm_larger(0, 4, 512).is_none());
     }
 
@@ -531,11 +822,39 @@ mod tests {
     fn cluster_warm_search() {
         let cfg = SimConfig::small();
         let mut cl = Cluster::new(&cfg);
-        let mut c = Container::new(7, 3, 10, 4096, 0.0);
-        c.mark_ready(0.0);
-        cl.workers[2].containers.insert(7, c);
+        cl.insert_container(2, warm(7, 3, 10, 4096));
         assert_eq!(cl.find_warm_exact(3, 10, 4096), Some((2, 7)));
         assert_eq!(cl.find_warm_larger(3, 6, 2048), Some((2, 7)));
         assert_eq!(cl.find_warm_exact(3, 11, 4096), None);
+        cl.assert_warm_consistent();
+    }
+
+    #[test]
+    fn cluster_ties_break_to_lowest_worker_then_container() {
+        let cfg = SimConfig::small();
+        let mut cl = Cluster::new(&cfg);
+        // equal-size candidates scattered across workers, high ids first
+        cl.insert_container(3, warm(31, 0, 8, 1024));
+        cl.insert_container(1, warm(40, 0, 8, 1024));
+        cl.insert_container(1, warm(12, 0, 8, 1024));
+        assert_eq!(cl.find_warm_exact(0, 8, 1024), Some((1, 12)));
+        assert_eq!(cl.find_warm_larger(0, 2, 256), Some((1, 12)));
+        // a predicate can veto workers; the next (worker, id) wins
+        let skip_w1 = |w: &Worker, _: u32, _: u32| w.id != 1;
+        assert_eq!(cl.find_warm_exact_where(0, 8, 1024, skip_w1), Some((3, 31)));
+        cl.assert_warm_consistent();
+    }
+
+    #[test]
+    fn cluster_larger_prefers_smaller_size_over_lower_worker() {
+        let cfg = SimConfig::small();
+        let mut cl = Cluster::new(&cfg);
+        cl.insert_container(0, warm(1, 0, 16, 4096));
+        cl.insert_container(3, warm(2, 0, 6, 1024));
+        assert_eq!(
+            cl.find_warm_larger(0, 4, 512),
+            Some((3, 2)),
+            "smallest fitting size wins regardless of worker order"
+        );
     }
 }

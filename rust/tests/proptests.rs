@@ -131,7 +131,7 @@ fn prop_scheduler_never_routes_to_smaller_container() {
             let w = rng.below(cluster.len());
             let mut c = Container::new(id, func, vc, mem, 0.0);
             c.mark_ready(0.0);
-            cluster.workers[w].containers.insert(id, c);
+            cluster.insert_container(w, c);
         }
         let vcpus = rng.range_usize(1, 32) as u32;
         let mem_mb = (rng.range_usize(2, 32) as u32) * 128;

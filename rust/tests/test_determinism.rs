@@ -1,0 +1,113 @@
+//! Engine-core determinism under tie-heavy workloads (ISSUE 3 / DESIGN
+//! §4): many simultaneous invocations of one function on one worker
+//! produce a maximally tie-rich event schedule — every same-timestamp
+//! completion batch, warm-pool race, and processor-sharing recompute
+//! lands on the deterministic indexed structures. Two runs must agree
+//! byte-for-byte on the *ordered* record stream (completion order is
+//! `policy.on_complete` feedback order) **and** on the learner's model
+//! state (SGD is order-sensitive, so a hash-ordered feedback stream
+//! would silently diverge the models even when aggregate metrics agree).
+
+use shabari::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::ShabariPolicy;
+use shabari::featurizer::featurize;
+use shabari::functions::catalog::{index_of, CATALOG};
+use shabari::functions::inputs;
+use shabari::simulator::engine::simulate;
+use shabari::simulator::{Request, SimConfig, Verdict};
+use shabari::util::rng::Rng;
+
+/// 3 waves x 20 simultaneous qr invocations on a single worker.
+fn tie_heavy_requests() -> (usize, Vec<Request>) {
+    let fi = index_of("qr").unwrap();
+    let mut rng = Rng::new(11);
+    let pool = inputs::pool(&CATALOG[fi], &mut rng);
+    let mut reqs = Vec::new();
+    for wave in 0..3u64 {
+        for i in 0..20u64 {
+            let id = wave * 20 + i + 1;
+            reqs.push(Request {
+                id,
+                func: fi,
+                input: pool[(id as usize) % pool.len()].clone(),
+                arrival: wave as f64 * 15.0,
+                slo_s: 1.0,
+            });
+        }
+    }
+    (fi, reqs)
+}
+
+/// One full run: ordered record fingerprint + learner model state.
+fn run_once() -> (Vec<(u64, u64, u64, u32, u32, bool)>, Vec<u32>) {
+    let (fi, reqs) = tie_heavy_requests();
+    let allocator = ResourceAllocator::new(AllocatorConfig::default()).unwrap();
+    let mut policy = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(7)));
+    let cfg = SimConfig { workers: 1, ..SimConfig::default() };
+    let res = simulate(cfg, &mut policy, reqs);
+
+    // Completion order, not arrival order: this is the exact sequence the
+    // learner saw feedback in.
+    let stream: Vec<(u64, u64, u64, u32, u32, bool)> = res
+        .records
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.exec_s.to_bits(),
+                r.e2e_s.to_bits(),
+                r.vcpus,
+                r.mem_mb,
+                r.verdict == Verdict::Completed,
+            )
+        })
+        .collect();
+
+    // Model-state fingerprint: post-run vCPU scores on a fixed probe.
+    let probe = featurize(&res.records[0].input).vector.with_slo(1.0);
+    let scores = policy.allocator.vcpu_scores_for(fi, &probe);
+    let score_bits: Vec<u32> = scores.iter().map(|s| s.to_bits()).collect();
+
+    // The refactor's index bookkeeping must also survive a tie-heavy run.
+    res.cluster.assert_warm_consistent();
+    (stream, score_bits)
+}
+
+#[test]
+fn tie_heavy_run_is_byte_deterministic_including_learner_state() {
+    let (stream_a, scores_a) = run_once();
+    let (stream_b, scores_b) = run_once();
+    assert_eq!(stream_a.len(), 60, "all invocations must complete");
+    assert_eq!(
+        stream_a, stream_b,
+        "ordered record streams diverged across identical runs"
+    );
+    assert_eq!(
+        scores_a, scores_b,
+        "learner model state diverged: on_complete feedback order is not deterministic"
+    );
+}
+
+#[test]
+fn completion_feedback_arrives_in_invocation_id_order_within_a_batch() {
+    // All 20 wave-0 invocations share arrival, input sizes, and one
+    // worker; batches that complete at one timestamp must surface in
+    // ascending invocation id. Verify orderedness pairwise: whenever two
+    // adjacent records share a completion timestamp, ids must ascend.
+    let (_, reqs) = tie_heavy_requests();
+    let allocator = ResourceAllocator::new(AllocatorConfig::default()).unwrap();
+    let mut policy = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(7)));
+    let cfg = SimConfig { workers: 1, ..SimConfig::default() };
+    let res = simulate(cfg, &mut policy, reqs);
+    for pair in res.records.windows(2) {
+        if pair[0].end.to_bits() == pair[1].end.to_bits() {
+            assert!(
+                pair[0].id < pair[1].id,
+                "same-timestamp completions out of id order: {} then {}",
+                pair[0].id,
+                pair[1].id
+            );
+        }
+    }
+}
