@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench bench-scale scenarios clean
+.PHONY: artifacts build test bench bench-scale scenarios overload clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -17,6 +17,12 @@ test:
 # scenario, incl. the checked-in sample trace) — EXPERIMENTS.md.
 scenarios:
 	cargo run --release -- experiment scenarios
+
+# Past-saturation rps sweep (4-worker cluster, 4->64 rps): queue-wait /
+# shed distributions plus the engine admission invariant (fails if any
+# worker ever exceeded its limits); dumps out/overload.json — EXPERIMENTS.md.
+overload:
+	cargo run --release -- experiment overload
 
 bench:
 	cargo bench

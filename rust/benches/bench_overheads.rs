@@ -52,6 +52,7 @@ fn main() {
         cold_start_s: 0.0,
         had_cold_start: false,
         overhead_s: 0.0,
+        queue_s: 0.0,
         exec_s: 7.0,
         e2e_s: 7.0,
         end: 7.0,

@@ -50,6 +50,7 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         scenario,
         scale_workers: a.get_usize("scale-workers", 64)?.max(1),
         scale_rps: a.get_f64("scale-rps", 24.0)?,
+        overload_workers: a.get_usize("overload-workers", 4)?.max(1),
     })
 }
 
@@ -125,6 +126,10 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     t.row(vec!["vCPU util p50".into(), format!("{:.0}%", 100.0 * m.vcpu_utilization.p50)]);
     t.row(vec!["mem util p50".into(), format!("{:.0}%", 100.0 * m.mem_utilization.p50)]);
     t.row(vec!["cold starts".into(), format!("{:.1}%", m.cold_start_pct)]);
+    t.row(vec![
+        "admission queued / wait p99".into(),
+        format!("{:.1}% / {:.2}s", m.queued_pct, m.queue_wait.p99),
+    ]);
     t.row(vec!["OOM / timeout".into(), format!("{:.1}% / {:.1}%", m.oom_pct, m.timeout_pct)]);
     t.row(vec!["mean e2e latency".into(), format!("{:.2}s", m.mean_e2e_s)]);
     t.row(vec!["throughput".into(), format!("{:.2}/s", m.throughput)]);
@@ -225,9 +230,13 @@ fn print_help() {
                           --rps <f>         (default 4)\n\
            experiment   regenerate a paper figure/table\n\
                           <id>              fig1..fig14, table1-3, scenarios,\n\
-                                            scale, or 'all'\n\
+                                            scale, overload, or 'all'\n\
                           --scale-workers <n>  scale-grid cluster size (default 64)\n\
                           --scale-rps <f>      scale-grid request rate (default 24)\n\
+                          --overload-workers <n>  overload-sweep cluster size\n\
+                                            (default 4; the rps axis crosses\n\
+                                            saturation and proves the admission\n\
+                                            invariant, dumping out/overload.json)\n\
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\

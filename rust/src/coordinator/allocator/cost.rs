@@ -178,6 +178,7 @@ mod tests {
             cold_start_s: 0.0,
             had_cold_start: false,
             overhead_s: 0.0,
+            queue_s: 0.0,
             exec_s: exec,
             e2e_s: exec,
             end: exec,

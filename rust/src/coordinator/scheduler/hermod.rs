@@ -101,6 +101,18 @@ mod tests {
     }
 
     #[test]
+    fn queued_demand_spills_packing_to_next_worker() {
+        use crate::simulator::worker::QueuedAdmission;
+        let mut cl = Cluster::new(&SimConfig::small());
+        // worker 0 is nominally empty but has a backlog covering its
+        // whole limit: packing must spill to worker 1
+        cl.workers[0].push_admission(QueuedAdmission { inv_id: 1, vcpus: 90, mem_mb: 512 });
+        let mut s = HermodScheduler::new(1);
+        let d = s.schedule(&req(), 8, 1024, &cl);
+        assert_eq!(d.worker, 1, "queued demand counts against packing capacity");
+    }
+
+    #[test]
     fn random_when_everything_full() {
         let mut cl = Cluster::new(&SimConfig::small());
         for w in &mut cl.workers {

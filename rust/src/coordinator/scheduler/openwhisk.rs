@@ -21,9 +21,14 @@ impl OpenWhiskScheduler {
         OpenWhiskScheduler { rng: Rng::new(seed ^ 0x0111_5C4E), latency_s: 0.001 }
     }
 
-    /// Memory-only admission (ignores vCPU load entirely).
+    /// Memory-only admission (ignores vCPU load entirely). Queue-aware:
+    /// memory demand already parked on the worker's admission queue
+    /// counts as taken — OpenWhisk's loadbalancer tracks in-flight
+    /// activations the same way, so a backlogged invoker stops looking
+    /// free the moment a completion frees real memory.
     fn mem_fits(cluster: &Cluster, w: usize, mem_mb: u32) -> bool {
-        cluster.worker(w).free_mem_mb() >= mem_mb as f64
+        let w = cluster.worker(w);
+        w.free_mem_mb() - w.queued_mem_mb() >= mem_mb as f64
     }
 }
 
@@ -96,6 +101,26 @@ mod tests {
             d.worker, home,
             "memory-centric OW keeps packing a vCPU-saturated worker"
         );
+    }
+
+    #[test]
+    fn queued_memory_demand_counts_as_load() {
+        use crate::simulator::worker::QueuedAdmission;
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("matmult");
+        let home = home_server("matmult", cl.len());
+        // plenty of free memory, but a deep admission backlog: the
+        // queue-aware view must steer the probe off the home invoker
+        for i in 0..125 {
+            cl.workers[home].push_admission(QueuedAdmission {
+                inv_id: i,
+                vcpus: 1,
+                mem_mb: 1024,
+            });
+        }
+        let mut s = OpenWhiskScheduler::new(1);
+        let d = s.schedule(&r, 16, 1024, &cl);
+        assert_ne!(d.worker, home, "backlogged invoker must be skipped");
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //!    when every server is full.
 //!
 //! Load tracking is dual-resource: a worker admits an invocation only if
-//! both its vCPU (`userCpu` limit) and memory loads fit (§6).
+//! both its vCPU (`userCpu` limit) and memory loads fit (§6) — and
+//! queue-aware: `Worker::has_capacity` subtracts demand already parked
+//! on the worker's FIFO admission queue, so probing never piles onto a
+//! backlogged worker (the engine enforces the hard limit either way;
+//! DESIGN.md §Admission).
 
 use crate::simulator::worker::{Cluster, Worker};
 use crate::simulator::{BackgroundLaunch, ContainerChoice, Request};
@@ -230,6 +234,24 @@ mod tests {
         let mut s = ShabariScheduler::new(1);
         let d = s.schedule(&r, 8, 2048, &cl);
         assert_ne!(d.worker, home);
+    }
+
+    #[test]
+    fn queued_demand_steers_cold_route_away() {
+        use crate::simulator::worker::QueuedAdmission;
+        let mut cl = Cluster::new(&SimConfig::small());
+        let r = req("matmult");
+        let home = home_server("matmult", cl.len());
+        // nothing allocated, but 85 vCPUs of demand already waiting: the
+        // queue-aware view leaves no room for an 8-vCPU ask
+        cl.workers[home].push_admission(QueuedAdmission {
+            inv_id: 1,
+            vcpus: 85,
+            mem_mb: 1024,
+        });
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 8, 2048, &cl);
+        assert_ne!(d.worker, home, "backlogged home server must be probed past");
     }
 
     #[test]

@@ -43,6 +43,10 @@ pub struct Ctx {
     /// Request rate of the `experiment scale` grid (`--scale-rps`;
     /// default 24 = 4x the highest fig8 load).
     pub scale_rps: f64,
+    /// Cluster size of the `experiment overload` sweep
+    /// (`--overload-workers`; deliberately small so the fixed rps axis
+    /// crosses saturation).
+    pub overload_workers: usize,
 }
 
 impl Default for Ctx {
@@ -58,6 +62,7 @@ impl Default for Ctx {
             scenario: "azure-synthetic".to_string(),
             scale_workers: 64,
             scale_rps: 24.0,
+            overload_workers: 4,
         }
     }
 }

@@ -13,6 +13,7 @@ pub mod characterize;
 pub mod common;
 pub mod e2e;
 pub mod overheads;
+pub mod overload;
 pub mod scale;
 pub mod scenarios;
 pub mod sensitivity;
@@ -26,10 +27,13 @@ pub use common::Ctx;
 /// All experiment ids: the paper's figures/tables in paper order, then
 /// this reproduction's own additions (`scenarios`, the cross-scenario
 /// robustness matrix — DESIGN.md §Scenarios; `scale`, the 64-worker
-/// engine-throughput benchmark — DESIGN.md §Perf).
+/// engine-throughput benchmark — DESIGN.md §Perf; `overload`, the
+/// past-saturation sweep proving the admission invariant — DESIGN.md
+/// §Admission).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios", "scale",
+    "overload",
 ];
 
 /// Run one experiment by id.
@@ -54,15 +58,22 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "table3" => tables::table3(ctx),
         "scenarios" => scenarios::scenarios(ctx),
         "scale" => scale::scale(ctx),
+        "overload" => overload::overload(ctx),
         "all" => {
+            // Benchmark-style grids skipped under `all`: `scale` is a
+            // wall-clock benchmark with its own pinned methodology
+            // (seeds=1/jobs=1 via `make bench-scale` — session defaults
+            // would overwrite out/BENCH_scale.json with non-comparable
+            // numbers), and `overload` deliberately drives 64 rps past
+            // saturation — orders of magnitude more work than the
+            // figure grids.
+            const SKIPPED_UNDER_ALL: &[(&str, &str)] =
+                &[("scale", "make bench-scale"), ("overload", "make overload")];
             for id in EXPERIMENTS {
-                // `scale` is a wall-clock benchmark with its own pinned
-                // methodology (seeds=1/jobs=1 via `make bench-scale`);
-                // running it under `all`'s session defaults would both
-                // dominate the runtime and overwrite out/BENCH_scale.json
-                // with non-comparable numbers.
-                if *id == "scale" {
-                    println!("\n(skipping 'scale' under 'all': run `make bench-scale`)\n");
+                if let Some((_, how)) =
+                    SKIPPED_UNDER_ALL.iter().find(|(skip, _)| skip == id)
+                {
+                    println!("\n(skipping '{id}' under 'all': run `{how}`)\n");
                     continue;
                 }
                 println!("\n================ {id} ================\n");
@@ -79,17 +90,18 @@ mod tests {
     #[test]
     fn registry_covers_every_table_and_figure() {
         // the paper's evaluation (figures 1-4, 6-14, tables 1-3) plus the
-        // repo's own cross-scenario robustness matrix and the engine
-        // scale benchmark
+        // repo's own cross-scenario robustness matrix, the engine scale
+        // benchmark, and the past-saturation overload sweep
         for id in super::EXPERIMENTS {
             assert!(
                 id.starts_with("fig")
                     || id.starts_with("table")
                     || *id == "scenarios"
                     || *id == "scale"
+                    || *id == "overload"
             );
         }
-        assert_eq!(super::EXPERIMENTS.len(), 19);
+        assert_eq!(super::EXPERIMENTS.len(), 20);
     }
 
     #[test]

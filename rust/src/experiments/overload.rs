@@ -1,0 +1,240 @@
+//! `experiment overload` — drive the cluster past saturation and verify
+//! the engine's admission invariant end-to-end (DESIGN.md §Admission).
+//!
+//! An rps sweep from comfortable load to several times cluster capacity,
+//! on a deliberately small cluster (`--overload-workers`, default 4), for
+//! three systems with very different admission pressure: the full Shabari
+//! stack, Shabari's allocator under the memory-centric OpenWhisk
+//! scheduler (the §5 oversubscriber), and Static-Large (big fixed asks).
+//! Past saturation the expected shape is: throughput plateaus at cluster
+//! capacity, queue waits grow from zero through seconds to walltime
+//! scale, and the tail converts into `TimedOut` sheds — while
+//! `peak_alloc_vcpus` stays pinned at or under `sched_vcpu_limit` on
+//! every worker of every replicate (the run *fails* otherwise; before
+//! this invariant existed, the engine silently allocated past the limit
+//! on exactly these grids).
+//!
+//! Emits `out/overload.json` (`make overload`; CI runs a shrunk smoke).
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::RunMetrics;
+use crate::simulator::SimConfig;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{self, Ctx};
+use super::sweep::{self, Cell, CellOutcome};
+
+/// Systems swept past saturation (admission-pressure extremes).
+pub const OVERLOAD_POLICIES: &[&str] = &["shabari", "shabari-ow-sched", "static-large"];
+
+/// The load axis: from comfortably under capacity to far past it.
+pub const OVERLOAD_RPS: &[f64] = &[4.0, 8.0, 16.0, 32.0, 64.0];
+
+/// One sweep cell at the overload cluster size (the `workers` override
+/// rides in the cell label so seed derivation stays collision-free with
+/// other grids at the same policy × rps).
+fn run_overload_cell(
+    policy: &str,
+    ctx: &Ctx,
+    rps: f64,
+    workers: usize,
+    seed: u64,
+) -> Result<RunMetrics> {
+    let cctx = ctx.with_seed(seed);
+    let workload = cctx.workload();
+    let cfg = SimConfig { workers, ..common::sim_config(&cctx) };
+    let (_, metrics) = common::run_one(policy, &cctx, &workload, rps, &cfg)?;
+    Ok(metrics)
+}
+
+/// Run the policy × rps grid and enforce the admission invariant on
+/// every replicate of every cell: no worker's reservations ever exceeded
+/// `sched_vcpu_limit` vCPUs or its memory — checked against the
+/// per-worker lifetime peaks, which are maintained on every charge, so
+/// this witnesses "at every event" even in release builds (debug builds
+/// additionally assert the bound after each event inside the engine).
+pub fn run_overload(ctx: &Ctx, rps_list: &[f64]) -> Result<Vec<CellOutcome<RunMetrics>>> {
+    let workers = ctx.overload_workers;
+    let cells: Vec<Cell> = OVERLOAD_POLICIES
+        .iter()
+        .flat_map(|p| {
+            rps_list
+                .iter()
+                .map(move |&rps| Cell::labeled(p, rps, "overload-workers", workers as f64))
+        })
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        run_overload_cell(&cell.policy, ctx, cell.rps, workers, seed)
+    })?;
+    let limits = common::sim_config(ctx);
+    for out in &outcomes {
+        for (rep, m) in out.per_seed.iter().enumerate() {
+            ensure!(
+                m.peak_alloc_vcpus <= limits.sched_vcpu_limit + 1e-9,
+                "admission invariant violated: {} replicate {rep} peaked at {} vCPUs \
+                 (limit {})",
+                out.cell.id(),
+                m.peak_alloc_vcpus,
+                limits.sched_vcpu_limit
+            );
+            ensure!(
+                m.peak_alloc_mem_mb <= limits.mem_gb * 1024.0 + 1e-9,
+                "admission invariant violated: {} replicate {rep} peaked at {} MB \
+                 (limit {})",
+                out.cell.id(),
+                m.peak_alloc_mem_mb,
+                limits.mem_gb * 1024.0
+            );
+        }
+    }
+    Ok(outcomes)
+}
+
+pub fn overload(ctx: &Ctx) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let outcomes = run_overload(ctx, OVERLOAD_RPS)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let limits = common::sim_config(ctx);
+    println!(
+        "(overload sweep: {} cells x {} seed(s) on {} job(s), {wall:.1}s wall; \
+         invariant peak_alloc <= {} vCPUs held on every replicate)",
+        outcomes.len(),
+        ctx.seeds,
+        ctx.jobs,
+        limits.sched_vcpu_limit
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "overload: {} workers, {}s trace (queue waits are cross-seed means)",
+            ctx.overload_workers, ctx.duration_s
+        ),
+        &[
+            "system",
+            "rps",
+            "inv",
+            "queued",
+            "queue p50 s",
+            "queue p99 s",
+            "timeout",
+            "SLO viol",
+            "tput/s",
+            "peak vCPU",
+        ],
+    );
+    for out in &outcomes {
+        let m = out.mean_metrics();
+        t.row(vec![
+            out.cell.policy.clone(),
+            fnum(out.cell.rps, 0),
+            m.invocations.to_string(),
+            fpct(m.queued_pct),
+            fnum(m.queue_wait.p50, 2),
+            fnum(m.queue_wait.p99, 2),
+            fpct(m.timeout_pct),
+            fpct(m.slo_violation_pct),
+            fnum(m.throughput, 1),
+            fnum(m.peak_alloc_vcpus, 0),
+        ]);
+    }
+    t.note(
+        "past saturation: throughput plateaus, queue waits explode, the tail times \
+         out — and peak vCPU stays pinned at the admission limit",
+    );
+    t.print();
+
+    let dump = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("workers", Json::Num(ctx.overload_workers as f64)),
+                ("duration_s", Json::Num(ctx.duration_s)),
+                ("seeds", Json::Num(ctx.seeds as f64)),
+                ("jobs", Json::Num(ctx.jobs as f64)),
+                ("seed", Json::Num(ctx.seed as f64)),
+                ("sched_vcpu_limit", Json::Num(limits.sched_vcpu_limit)),
+                ("mem_limit_mb", Json::Num(limits.mem_gb * 1024.0)),
+            ]),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                outcomes
+                    .iter()
+                    .map(|out| {
+                        let m = out.mean_metrics();
+                        Json::obj(vec![
+                            ("policy", Json::Str(out.cell.policy.clone())),
+                            ("rps", Json::Num(out.cell.rps)),
+                            ("invocations", Json::Num(m.invocations as f64)),
+                            ("queued_pct", Json::Num(m.queued_pct)),
+                            ("queue_p50_s", Json::Num(m.queue_wait.p50)),
+                            ("queue_p99_s", Json::Num(m.queue_wait.p99)),
+                            ("timeout_pct", Json::Num(m.timeout_pct)),
+                            ("slo_violation_pct", Json::Num(m.slo_violation_pct)),
+                            ("throughput", Json::Num(m.throughput)),
+                            ("peak_alloc_vcpus", Json::Num(m.peak_alloc_vcpus)),
+                            ("peak_alloc_mem_mb", Json::Num(m.peak_alloc_mem_mb)),
+                            ("background_shed", Json::Num(m.background_shed as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::create_dir_all("out").ok();
+    match std::fs::write("out/overload.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/overload.json)"),
+        Err(e) => eprintln!("warning: could not write out/overload.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny-parameter smoke mirroring the CI job: one under-capacity and
+    /// one far-past-capacity load on a single worker. Pins the three
+    /// acceptance properties — the invariant holds (run_overload errors
+    /// otherwise), saturation produces real queue waits, and the grid is
+    /// deterministic across thread counts.
+    #[test]
+    fn overload_grid_saturates_and_is_jobs_invariant() {
+        let ctx = Ctx { duration_s: 30.0, overload_workers: 1, seeds: 2, ..Default::default() };
+        let rps = [2.0, 48.0];
+        let seq = run_overload(&Ctx { jobs: 1, ..ctx.clone() }, &rps).unwrap();
+        let par = run_overload(&Ctx { jobs: 4, ..ctx }, &rps).unwrap();
+        assert_eq!(seq.len(), OVERLOAD_POLICIES.len() * rps.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell.id(), b.cell.id());
+            let (ma, mb) = (a.mean_metrics(), b.mean_metrics());
+            assert_eq!(ma.invocations, mb.invocations);
+            assert_eq!(
+                ma.queue_wait.p99.to_bits(),
+                mb.queue_wait.p99.to_bits(),
+                "{} queue waits diverged across --jobs",
+                a.cell.id()
+            );
+            assert_eq!(ma.timeout_pct.to_bits(), mb.timeout_pct.to_bits());
+        }
+        // static-large at 48 rps on one worker is ~10x past capacity:
+        // queueing must be real, and some of the tail must die in queue
+        let sl = seq
+            .iter()
+            .find(|o| o.cell.policy == "static-large" && o.cell.rps == 48.0)
+            .unwrap()
+            .mean_metrics();
+        assert!(sl.queued_pct > 10.0, "saturation must queue: {}%", sl.queued_pct);
+        assert!(sl.queue_wait.p99 > 0.0);
+        // and the invariant witness is non-trivial: the worker really was
+        // driven to its limit
+        assert!(
+            sl.peak_alloc_vcpus >= 80.0,
+            "overload must push reservations near the 90-vCPU limit, got {}",
+            sl.peak_alloc_vcpus
+        );
+    }
+}

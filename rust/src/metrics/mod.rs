@@ -34,8 +34,23 @@ pub struct RunMetrics {
     pub mean_e2e_s: f64,
     /// Throughput over the simulated window (completed/s).
     pub throughput: f64,
+    /// Distribution of admission-queue wait per invocation (s). All-zero
+    /// until the cluster saturates; the overload experiment's headline.
+    pub queue_wait: Summary,
+    /// % of invocations that waited on an admission queue at all.
+    pub queued_pct: f64,
     pub containers_created: u64,
     pub background_launches: u64,
+    /// Background pre-warms shed because their target worker could not
+    /// admit them (see `SimResult::background_shed`).
+    pub background_shed: u64,
+    /// Highest per-worker vCPU reservation observed anywhere in the run —
+    /// the admission invariant's release-build witness
+    /// (`peak_alloc_vcpus <= sched_vcpu_limit` must hold; 0 when
+    /// aggregated from bare records).
+    pub peak_alloc_vcpus: f64,
+    /// Highest per-worker memory reservation (MB) observed.
+    pub peak_alloc_mem_mb: f64,
 }
 
 impl RunMetrics {
@@ -65,12 +80,20 @@ impl RunMetrics {
             timeout_pct: avg(|r| r.timeout_pct),
             mean_e2e_s: avg(|r| r.mean_e2e_s),
             throughput: avg(|r| r.throughput),
+            queue_wait: avg_summary(|r| &r.queue_wait),
+            queued_pct: avg(|r| r.queued_pct),
             containers_created: (runs.iter().map(|r| r.containers_created).sum::<u64>() as f64
                 / n)
                 .round() as u64,
             background_launches: (runs.iter().map(|r| r.background_launches).sum::<u64>() as f64
                 / n)
                 .round() as u64,
+            background_shed: (runs.iter().map(|r| r.background_shed).sum::<u64>() as f64 / n)
+                .round() as u64,
+            // Peaks take the max, not the mean: they witness that *no*
+            // replicate ever exceeded the admission limits.
+            peak_alloc_vcpus: runs.iter().map(|r| r.peak_alloc_vcpus).fold(0.0, f64::max),
+            peak_alloc_mem_mb: runs.iter().map(|r| r.peak_alloc_mem_mb).fold(0.0, f64::max),
         }
     }
 }
@@ -80,11 +103,13 @@ pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
     let n = records.len().max(1);
     let violations: Vec<&InvocationRecord> =
         records.iter().filter(|r| r.slo_violated()).collect();
-    let span = records
-        .iter()
-        .map(|r| r.end)
-        .fold(0.0f64, f64::max)
-        .max(1e-9);
+    // Throughput spans the *observed* window, `max(end) - min(arrival)`:
+    // measuring from t=0 deflated throughput for traces whose first
+    // arrival is late (`trace-file` replays, `flash-crowd` onsets). The
+    // 1e-9 floor guards the empty/degenerate cases.
+    let last_end = records.iter().map(|r| r.end).fold(0.0f64, f64::max);
+    let first_arrival = records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+    let span = (last_end - first_arrival).max(1e-9);
     RunMetrics {
         policy: policy.to_string(),
         invocations: records.len(),
@@ -116,16 +141,25 @@ pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
             .filter(|r| r.verdict == Verdict::Completed)
             .count() as f64
             / span,
+        queue_wait: stats::summarize(&records.iter().map(|r| r.queue_s).collect::<Vec<_>>()),
+        queued_pct: stats::percent_where(records, |r| r.queue_s > 0.0),
         containers_created: 0,
         background_launches: 0,
+        background_shed: 0,
+        peak_alloc_vcpus: 0.0,
+        peak_alloc_mem_mb: 0.0,
     }
 }
 
-/// Aggregate straight from a `SimResult` (fills container counters too).
+/// Aggregate straight from a `SimResult` (fills container counters and
+/// the admission-invariant peaks too).
 pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
     let mut m = aggregate(policy, &res.records);
     m.containers_created = res.containers_created;
     m.background_launches = res.background_launches;
+    m.background_shed = res.background_shed;
+    m.peak_alloc_vcpus = res.cluster.peak_allocated_vcpus();
+    m.peak_alloc_mem_mb = res.cluster.peak_allocated_mem_mb();
     m
 }
 
@@ -161,6 +195,7 @@ mod tests {
             cold_start_s: if cold { 0.5 } else { 0.0 },
             had_cold_start: cold,
             overhead_s: 0.0,
+            queue_s: 0.0,
             exec_s: exec,
             e2e_s: exec,
             end: exec,
@@ -203,6 +238,47 @@ mod tests {
         let m = aggregate("x", &[]);
         assert_eq!(m.invocations, 0);
         assert_eq!(m.slo_violation_pct, 0.0);
+        assert_eq!(m.throughput, 0.0);
+        assert_eq!(m.queued_pct, 0.0);
+    }
+
+    #[test]
+    fn throughput_spans_observed_window_not_t0() {
+        // Two completions one second apart. Unshifted: span 2 s from the
+        // first arrival. Shifted 1000 s later (a trace-file replay whose
+        // first arrival is late): the rate must be identical — the old
+        // `max(end)`-from-t=0 span deflated it ~500x.
+        let make = |offset: f64| {
+            let mut a = rec(1.0, 2.0, false, Verdict::Completed);
+            a.arrival = offset;
+            a.end = offset + 1.0;
+            let mut b = rec(1.0, 2.0, false, Verdict::Completed);
+            b.arrival = offset + 1.0;
+            b.end = offset + 2.0;
+            vec![a, b]
+        };
+        let base = aggregate("x", &make(0.0));
+        let shifted = aggregate("x", &make(1000.0));
+        assert!((base.throughput - 1.0).abs() < 1e-9, "2 completions / 2 s");
+        assert_eq!(
+            shifted.throughput.to_bits(),
+            base.throughput.to_bits(),
+            "late-starting traces must not deflate throughput: {} vs {}",
+            shifted.throughput,
+            base.throughput
+        );
+    }
+
+    #[test]
+    fn queue_metrics_aggregate() {
+        let mut a = rec(1.0, 2.0, false, Verdict::Completed);
+        a.queue_s = 3.0;
+        let b = rec(1.0, 2.0, false, Verdict::Completed);
+        let m = aggregate("x", &[a, b]);
+        assert!((m.queued_pct - 50.0).abs() < 1e-9);
+        assert!((m.queue_wait.max - 3.0).abs() < 1e-9);
+        // bare-record aggregation carries no cluster peaks
+        assert_eq!(m.peak_alloc_vcpus, 0.0);
     }
 
     #[test]

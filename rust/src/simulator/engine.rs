@@ -1,6 +1,17 @@
-//! The discrete-event engine: arrivals → policy decision → container
-//! acquisition (cold start if needed) → phased execution under processor
-//! sharing → completion, feedback, keep-alive eviction.
+//! The discrete-event engine: arrivals → policy decision → *enforced*
+//! admission (reserve-at-launch; FIFO queue when the bound worker is
+//! full) → container acquisition (cold start if needed) → phased
+//! execution under processor sharing → completion, feedback, keep-alive
+//! eviction.
+//!
+//! Admission is a hard engine invariant, not a scheduler courtesy
+//! (DESIGN.md §Admission): a container launch or warm bind only happens
+//! when the worker's reservations leave room under `sched_vcpu_limit`
+//! and memory; otherwise the invocation parks on the worker's FIFO
+//! admission queue and is popped in enqueue order on every capacity
+//! release (completion, eviction, teardown, background-ready). A request
+//! can die *in queue*: its walltime clock is scheduled at arrival, so
+//! timeout produces a `TimedOut` record whether or not it ever bound.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
@@ -10,7 +21,7 @@ use crate::functions::Demand;
 use crate::util::rng::Rng;
 
 use super::container::Container;
-use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec};
+use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec, QueuedAdmission};
 use super::{
     ContainerChoice, Decision, InvocationRecord, Policy, Request, SimConfig, SimTime, Verdict,
 };
@@ -81,6 +92,10 @@ struct Pending {
     /// Ground-truth demand (with noise) drawn at arrival.
     demand: Demand,
     exec_started: Option<SimTime>,
+    /// Set while parked on the bound worker's admission queue.
+    queued_since: Option<SimTime>,
+    /// Total time spent waiting for admission.
+    queue_s: f64,
 }
 
 /// One container creation (Table 3 derives unique sizes from this log).
@@ -103,6 +118,10 @@ pub struct SimResult {
     /// Containers created over the run (cold starts + background).
     pub containers_created: u64,
     pub background_launches: u64,
+    /// Background launches dropped because the target worker could not
+    /// admit them (shed, never queued — pre-warming must not jump ahead
+    /// of demand already waiting).
+    pub background_shed: u64,
     /// Every container creation, in order.
     pub launches: Vec<LaunchRecord>,
 }
@@ -147,6 +166,7 @@ pub struct Engine<'p, P: Policy> {
     next_container_id: u64,
     containers_created: u64,
     background_launches: u64,
+    background_shed: u64,
     launches: Vec<LaunchRecord>,
     /// Reused completion buffers (no steady-state allocation).
     done_scratch: Vec<u64>,
@@ -173,6 +193,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             next_container_id: 1,
             containers_created: 0,
             background_launches: 0,
+            background_shed: 0,
             launches: Vec::new(),
             done_scratch: Vec::new(),
             finished_scratch: Vec::new(),
@@ -206,13 +227,45 @@ impl<'p, P: Policy> Engine<'p, P> {
                     self.on_evict(worker, container, idle_epoch)
                 }
             }
+            // Admission is an invariant at *every* event, not just at the
+            // end of the run. Cheap (two float compares per worker); the
+            // full container-state cross-check lives in
+            // `Cluster::assert_admission_consistent` for tests, and the
+            // per-worker peaks witness the same bound in release builds.
+            #[cfg(debug_assertions)]
+            self.debug_assert_admission_bounds();
         }
         SimResult {
             records: self.records,
             cluster: self.cluster,
             containers_created: self.containers_created,
             background_launches: self.background_launches,
+            background_shed: self.background_shed,
             launches: self.launches,
+        }
+    }
+
+    /// Per-event admission bound check (debug builds): no worker's
+    /// reservations may exceed its scheduler limits.
+    #[cfg(debug_assertions)]
+    fn debug_assert_admission_bounds(&self) {
+        for w in &self.cluster.workers {
+            debug_assert!(
+                w.allocated_vcpus <= w.sched_vcpu_limit,
+                "worker {}: {} vCPUs allocated > limit {} at t={}",
+                w.id,
+                w.allocated_vcpus,
+                w.sched_vcpu_limit,
+                self.now
+            );
+            debug_assert!(
+                w.allocated_mem_mb <= w.mem_gb * 1024.0,
+                "worker {}: {} MB allocated > limit {} at t={}",
+                w.id,
+                w.allocated_mem_mb,
+                w.mem_gb * 1024.0,
+                self.now
+            );
         }
     }
 
@@ -228,14 +281,8 @@ impl<'p, P: Policy> Engine<'p, P> {
         let mut inv_rng = self.rng.fork(req.id);
         let demand = func.noisy_demand(&req.input, &mut inv_rng);
 
-        // Fire the proactive background launch immediately (off critical
-        // path — it does not delay this invocation).
-        if let Some(bg) = decision.background {
-            self.launch_container(bg.worker, req.func, bg.vcpus, bg.mem_mb, None);
-            self.background_launches += 1;
-        }
-
         let inv_id = req.id;
+        let arrival = req.arrival;
         let pend = Pending {
             vcpus: decision.vcpus,
             mem_mb: decision.mem_mb,
@@ -246,42 +293,117 @@ impl<'p, P: Policy> Engine<'p, P> {
             cold_start_s: 0.0,
             demand,
             exec_started: None,
+            queued_since: None,
+            queue_s: 0.0,
         };
         let overhead = pend.decision.overhead_s.max(0.0);
         self.pending.insert(inv_id, pend);
+        // The platform walltime clock starts at *arrival* (OpenWhisk
+        // semantics) — scheduled here, not at bind, so a request that
+        // never escapes the admission queue (or the decision overhead
+        // window) still dies with a TimedOut record.
+        self.push(arrival + self.cfg.timeout_s, EventKind::Timeout { inv: inv_id });
         // Decision overhead elapses before the container is bound.
         self.push(self.now + overhead, EventKind::BeginExec(inv_id));
     }
 
     fn on_begin_exec(&mut self, inv_id: u64) {
-        let (worker_id, choice, func, vcpus, mem_mb) = {
-            let p = &self.pending[&inv_id];
-            (
-                p.decision.worker,
-                p.decision.container,
-                p.req.func,
-                p.decision.vcpus,
-                p.decision.mem_mb,
-            )
-        };
-        match choice {
-            ContainerChoice::Warm(cid) => {
-                let ok = self.cluster.workers[worker_id]
-                    .containers
-                    .get(&cid)
-                    .map(|c| c.is_warm_idle() && c.func == func)
-                    .unwrap_or(false);
-                if ok {
-                    self.bind_and_start(inv_id, worker_id, cid);
-                } else {
-                    // Stale warm hit (raced with another invocation or an
-                    // eviction): fall back to a cold container.
-                    self.cold_start(inv_id, worker_id, func, vcpus, mem_mb);
+        // The invocation may have timed out during the decision overhead
+        // window; its record is already written then.
+        if !self.pending.contains_key(&inv_id) {
+            return;
+        }
+        self.try_admit(inv_id);
+        // Fire the proactive background launch the decision requested.
+        // It happens *here*, after the foreground admission — the
+        // decision that asked for it takes `overhead_s`, so pre-warming
+        // can never precede its own decision — and it must pass
+        // queue-aware admission: a pre-warm is shed (not queued) rather
+        // than jump ahead of demand already waiting.
+        if let Some(bg) = self.pending.get(&inv_id).and_then(|p| p.decision.background) {
+            let func = self.pending[&inv_id].req.func;
+            if self.cluster.workers[bg.worker].has_capacity(bg.vcpus, bg.mem_mb) {
+                self.launch_container(bg.worker, func, bg.vcpus, bg.mem_mb, None);
+                self.background_launches += 1;
+            } else {
+                self.background_shed += 1;
+            }
+        }
+    }
+
+    /// Resolve what admitting this invocation on its bound worker would
+    /// actually charge: the chosen warm container's size when the warm
+    /// hit is still valid, the decision's size for a cold launch.
+    fn resolve_route(&self, inv_id: u64) -> (usize, Option<u64>, u32, u32) {
+        let p = &self.pending[&inv_id];
+        let worker_id = p.decision.worker;
+        if let ContainerChoice::Warm(cid) = p.decision.container {
+            if let Some(c) = self.cluster.workers[worker_id].containers.get(&cid) {
+                if c.is_warm_idle() && c.func == p.req.func {
+                    return (worker_id, Some(cid), c.vcpus, c.mem_mb);
                 }
             }
-            ContainerChoice::Cold => {
+            // Stale warm hit (raced with another invocation or an
+            // eviction): fall back to a cold container of the decided
+            // size — through the same admission path, never around it.
+        }
+        (worker_id, None, p.decision.vcpus, p.decision.mem_mb)
+    }
+
+    /// Enforced admission at bind time: start the invocation if the
+    /// worker can reserve its effective size *and* nothing is already
+    /// waiting (FIFO — newcomers go behind the queue); park it otherwise.
+    fn try_admit(&mut self, inv_id: u64) {
+        let (worker_id, warm, ask_vcpus, ask_mem) = self.resolve_route(inv_id);
+        let w = &self.cluster.workers[worker_id];
+        if w.admission_queue_len() == 0 && w.can_admit(ask_vcpus, ask_mem) {
+            self.admit(inv_id, worker_id, warm);
+        } else {
+            let p = self.pending.get_mut(&inv_id).expect("pending invocation");
+            p.queued_since = Some(self.now);
+            self.cluster.workers[worker_id].push_admission(QueuedAdmission {
+                inv_id,
+                vcpus: p.decision.vcpus,
+                mem_mb: p.decision.mem_mb,
+            });
+        }
+    }
+
+    /// Start an admitted invocation on its resolved route.
+    fn admit(&mut self, inv_id: u64, worker_id: usize, warm: Option<u64>) {
+        match warm {
+            Some(cid) => self.bind_and_start(inv_id, worker_id, cid),
+            None => {
+                let (func, vcpus, mem_mb) = {
+                    let p = &self.pending[&inv_id];
+                    (p.req.func, p.decision.vcpus, p.decision.mem_mb)
+                };
                 self.cold_start(inv_id, worker_id, func, vcpus, mem_mb);
             }
+        }
+    }
+
+    /// Pop the worker's admission queue in enqueue order for as long as
+    /// the head fits — called on every capacity release (completion,
+    /// teardown, eviction, background-ready). Strict FIFO: a head that
+    /// does not fit blocks everything behind it (deterministic; no
+    /// backfilling).
+    fn drain_admission(&mut self, worker_id: usize) {
+        loop {
+            let Some(front) = self.cluster.workers[worker_id].front_admission() else {
+                break;
+            };
+            let inv_id = front.inv_id;
+            let (_, warm, ask_vcpus, ask_mem) = self.resolve_route(inv_id);
+            if !self.cluster.workers[worker_id].can_admit(ask_vcpus, ask_mem) {
+                break;
+            }
+            let popped = self.cluster.workers[worker_id].pop_admission();
+            debug_assert_eq!(popped.map(|q| q.inv_id), Some(inv_id));
+            let p = self.pending.get_mut(&inv_id).expect("queued invocation pending");
+            let since = p.queued_since.take().expect("queued invocation has queued_since");
+            p.queue_s += self.now - since;
+            self.admit(inv_id, worker_id, warm);
         }
     }
 
@@ -334,13 +456,25 @@ impl<'p, P: Policy> Engine<'p, P> {
             return; // evicted before ready (shouldn't happen)
         };
         if let Some(inv) = self.waiting_on_container.remove(&container) {
+            if !self.pending.contains_key(&inv) {
+                // The waiting invocation timed out mid-cold-start (its
+                // record is already written): tear the orphan down like
+                // any timed-out container and free its reservation.
+                self.cluster.remove_container(worker, container);
+                self.drain_admission(worker);
+                return;
+            }
+            // The launch reservation rolls over into the busy reservation
+            // inside `bind_and_start` — capacity-neutral, nothing to drain.
             self.bind_and_start(inv, worker, container);
         } else {
-            // background container stays idle; schedule keep-alive eviction
+            // Background container goes idle: its launch reservation is
+            // released, which may admit queued work.
             self.push(
                 self.now + self.cfg.keep_alive_s,
                 EventKind::Evict { worker, container, idle_epoch },
             );
+            self.drain_admission(worker);
         }
     }
 
@@ -353,7 +487,6 @@ impl<'p, P: Policy> Engine<'p, P> {
         p.vcpus = c_vcpus;
         p.mem_mb = c_mem;
         p.exec_started = Some(self.now);
-        let arrival = p.req.arrival;
 
         // Build the phase list from the ground-truth demand.
         let d = p.demand.clone();
@@ -403,11 +536,9 @@ impl<'p, P: Policy> Engine<'p, P> {
         if let Some(crossing) = oom_crossing_s(d.mem_gb, alloc_gb, ideal) {
             self.push(self.now + crossing, EventKind::OomKill { inv: inv_id });
         }
-        // Platform walltime limit, counted from *arrival* (OpenWhisk
-        // semantics): decision overhead and cold-start latency eat into
-        // the budget. A bind past the deadline times out immediately.
-        let deadline = (arrival + self.cfg.timeout_s).max(self.now);
-        self.push(deadline, EventKind::Timeout { inv: inv_id });
+        // The platform walltime limit was scheduled at *arrival*
+        // (`on_arrival`): decision overhead, admission queueing, and
+        // cold-start latency all eat into the budget.
     }
 
     /// Re-derive the earliest phase completion for a worker and schedule
@@ -481,15 +612,63 @@ impl<'p, P: Policy> Engine<'p, P> {
 
     fn kill(&mut self, inv_id: u64, verdict: Verdict) {
         // Timeout/OOM events may fire after completion; ignore then.
-        let still_running = self
-            .pending
-            .get(&inv_id)
-            .map(|p| p.exec_started.is_some())
-            .unwrap_or(false);
-        if !still_running {
+        let Some(p) = self.pending.get(&inv_id) else {
+            return;
+        };
+        if p.exec_started.is_some() {
+            self.complete(inv_id, verdict);
             return;
         }
-        self.complete(inv_id, verdict);
+        // Not bound yet: only the walltime clock (scheduled at arrival)
+        // reaches unbound invocations — OOM is scheduled at bind.
+        debug_assert_eq!(verdict, Verdict::TimedOut, "only timeouts kill unbound work");
+        self.fail_unbound(inv_id, verdict);
+    }
+
+    /// A request died before ever binding a container: waiting in the
+    /// admission queue, in the decision-overhead window, or on a cold
+    /// start still in flight. Removes it from its worker's queue (which
+    /// can unblock the head-of-line for everyone behind it) and records
+    /// the failure — previously this path panicked on
+    /// `p.container.expect("bound container")`.
+    fn fail_unbound(&mut self, inv_id: u64, verdict: Verdict) {
+        let Some(mut p) = self.pending.remove(&inv_id) else {
+            return;
+        };
+        let worker_id = p.decision.worker;
+        let was_queued = self.cluster.workers[worker_id].remove_admission(inv_id).is_some();
+        if let Some(since) = p.queued_since.take() {
+            p.queue_s += self.now - since;
+        }
+        let rec = InvocationRecord {
+            id: inv_id,
+            func: p.req.func,
+            input: p.req.input.clone(),
+            worker: worker_id,
+            vcpus: p.vcpus,
+            mem_mb: p.mem_mb,
+            requested_vcpus: p.decision.vcpus,
+            requested_mem_mb: p.decision.mem_mb,
+            arrival: p.req.arrival,
+            cold_start_s: p.cold_start_s,
+            had_cold_start: p.had_cold_start,
+            overhead_s: p.decision.overhead_s,
+            queue_s: p.queue_s,
+            exec_s: 0.0,
+            e2e_s: (self.now - p.req.arrival).max(0.0),
+            end: self.now,
+            slo_s: p.req.slo_s,
+            verdict,
+            avg_vcpus_used: 0.0,
+            peak_vcpus_used: 0.0,
+            mem_used_gb: 0.0,
+        };
+        self.policy.on_complete(self.now, &rec, &self.cluster);
+        self.records.push(rec);
+        if was_queued {
+            // Removing a queue entry can expose an admissible new head.
+            self.drain_admission(worker_id);
+        }
     }
 
     /// Tear down a finished invocation, record it, release the container,
@@ -509,7 +688,8 @@ impl<'p, P: Policy> Engine<'p, P> {
         // Release or destroy the container. Failed invocations do not
         // donate warm containers: OOM kills are torn down by the platform,
         // and a function that just burned the full walltime limit gets its
-        // container reclaimed rather than parked warm.
+        // container reclaimed rather than parked warm. Either way the
+        // container's reservation is released — pop the admission queue.
         match verdict {
             Verdict::Completed => {
                 let idle_epoch = self.cluster.release_container(worker_id, cid, self.now);
@@ -522,6 +702,7 @@ impl<'p, P: Policy> Engine<'p, P> {
                 self.cluster.remove_container(worker_id, cid);
             }
         }
+        self.drain_admission(worker_id);
 
         let exec_started = active.exec_started;
         let exec_s = (self.now - exec_started).max(0.0);
@@ -543,6 +724,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             cold_start_s: p.cold_start_s,
             had_cold_start: p.had_cold_start,
             overhead_s: p.decision.overhead_s,
+            queue_s: p.queue_s,
             exec_s,
             e2e_s: (self.now - p.req.arrival).max(0.0),
             end: self.now,
@@ -563,6 +745,11 @@ impl<'p, P: Policy> Engine<'p, P> {
         };
         if expired {
             self.cluster.remove_container(worker, container);
+            // Idle containers hold no reservation, so this drain is a
+            // no-op today; it keeps the "pop on every capacity release"
+            // contract literal (complete, evict, teardown) and covers a
+            // future demand-driven eviction path.
+            self.drain_admission(worker);
         }
     }
 }
@@ -796,25 +983,22 @@ mod tests {
     fn contention_stretches_execution() {
         // Many simultaneous compress jobs (2 GB inputs parallelize to ~31
         // vCPUs each) on one worker exceed 96 physical cores and slow each
-        // other down.
+        // other down. The admission limit is raised above the aggregate
+        // ask (6 x 32 = 192) so all six *run* concurrently — this test
+        // pins the processor-sharing model, not admission control (which
+        // would otherwise serialize them; see the admission tests).
+        let cfg =
+            || SimConfig { workers: 1, sched_vcpu_limit: 200.0, ..SimConfig::default() };
         let solo = {
             let mut p = FixedPolicy { vcpus: 32, mem_mb: 4096, next: 0, reuse_warm: false };
-            let res = simulate(
-                SimConfig { workers: 1, ..SimConfig::default() },
-                &mut p,
-                vec![compress_request(1, 0.0, 2000.0)],
-            );
+            let res = simulate(cfg(), &mut p, vec![compress_request(1, 0.0, 2000.0)]);
             res.records[0].exec_s
         };
         let crowded = {
             let mut p = FixedPolicy { vcpus: 32, mem_mb: 4096, next: 0, reuse_warm: false };
             let reqs: Vec<Request> =
                 (0..6).map(|i| compress_request(i + 1, 0.0, 2000.0)).collect();
-            let res = simulate(
-                SimConfig { workers: 1, ..SimConfig::default() },
-                &mut p,
-                reqs,
-            );
+            let res = simulate(cfg(), &mut p, reqs);
             res.records.iter().map(|r| r.exec_s).fold(0.0f64, f64::max)
         };
         assert!(
@@ -878,6 +1062,183 @@ mod tests {
         assert_eq!(bg[0].mem_mb, 1024);
         let qr = index_of("qr").unwrap();
         assert_eq!(res.unique_container_sizes(qr), 2);
+    }
+
+    #[test]
+    fn admission_queue_is_fifo_and_never_overcommits() {
+        // 12 identical invocations hit one worker whose limit fits two
+        // 8-vCPU containers: the engine must serialize admission through
+        // the FIFO queue instead of oversubscribing (which the per-event
+        // debug asserts would catch immediately).
+        let cfg = SimConfig { workers: 1, sched_vcpu_limit: 16.0, ..SimConfig::default() };
+        let mut p = FixedPolicy { vcpus: 8, mem_mb: 512, next: 0, reuse_warm: false };
+        let reqs: Vec<Request> = (0..12).map(|i| qr_request(i + 1, 0.0)).collect();
+        let res = simulate(cfg, &mut p, reqs);
+        assert_eq!(res.records.len(), 12);
+        assert!(res.records.iter().all(|r| r.verdict == Verdict::Completed));
+        // only the first two fit immediately; everyone else queued
+        let queued: Vec<&InvocationRecord> =
+            res.sorted_records().into_iter().filter(|r| r.queue_s > 0.0).collect();
+        assert_eq!(queued.len(), 10, "10 of 12 must wait for admission");
+        // FIFO: identical same-time requests leave the queue in id order,
+        // so queue waits are non-decreasing in id
+        let mut by_id: Vec<&InvocationRecord> = res.records.iter().collect();
+        by_id.sort_by_key(|r| r.id);
+        for pair in by_id.windows(2) {
+            assert!(
+                pair[1].queue_s >= pair[0].queue_s - 1e-12,
+                "FIFO violated: id {} waited {} but id {} waited {}",
+                pair[0].id,
+                pair[0].queue_s,
+                pair[1].id,
+                pair[1].queue_s
+            );
+        }
+        // the reservation peak is the release-build invariant witness
+        assert!(res.cluster.peak_allocated_vcpus() <= 16.0);
+        res.cluster.assert_admission_consistent();
+        res.cluster.assert_warm_consistent();
+    }
+
+    #[test]
+    fn request_dies_in_admission_queue_with_timeout_record() {
+        // Worker fits one 8-vCPU container; two long jobs arrive at once
+        // with a 5 s walltime limit. The second never binds — it must die
+        // *in queue* with a TimedOut record (this used to panic on
+        // `p.container.expect("bound container")`).
+        let cfg = SimConfig {
+            workers: 1,
+            sched_vcpu_limit: 8.0,
+            timeout_s: 5.0,
+            ..SimConfig::default()
+        };
+        let mut p = FixedPolicy { vcpus: 8, mem_mb: 4096, next: 0, reuse_warm: false };
+        let reqs = vec![compress_request(1, 0.0, 2000.0), compress_request(2, 0.0, 2000.0)];
+        let res = simulate(cfg, &mut p, reqs);
+        assert_eq!(res.records.len(), 2, "both requests must produce records");
+        let rs = res.sorted_records();
+        let r2 = rs.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.verdict, Verdict::TimedOut);
+        assert_eq!(r2.exec_s, 0.0, "never executed");
+        assert!(r2.queue_s > 0.0, "died waiting for admission: {}", r2.queue_s);
+        assert!((r2.e2e_s - 5.0).abs() < 1e-6, "walltime counted from arrival");
+        res.cluster.assert_admission_consistent();
+    }
+
+    #[test]
+    fn stale_warm_fallback_goes_through_admission() {
+        // A decision's warm container can vanish before BeginExec; the
+        // cold fallback must re-check admission instead of allocating
+        // unconditionally on the (full) decided worker.
+        struct StaleWarm {
+            calls: usize,
+        }
+        impl Policy for StaleWarm {
+            fn name(&self) -> String {
+                "stale-warm".into()
+            }
+            fn on_request(&mut self, _now: SimTime, _req: &Request, _cl: &Cluster) -> Decision {
+                self.calls += 1;
+                Decision {
+                    worker: 0,
+                    vcpus: 16,
+                    mem_mb: 2048,
+                    // second request claims a warm container that never
+                    // existed — the engine must fall back *through* the
+                    // admission path
+                    container: if self.calls == 1 {
+                        ContainerChoice::Cold
+                    } else {
+                        ContainerChoice::Warm(999)
+                    },
+                    background: None,
+                    overhead_s: 0.0,
+                }
+            }
+        }
+        let cfg = SimConfig { workers: 1, sched_vcpu_limit: 16.0, ..SimConfig::default() };
+        let mut p = StaleWarm { calls: 0 };
+        let reqs = vec![qr_request(1, 0.0), qr_request(2, 0.1)];
+        let res = simulate(cfg, &mut p, reqs);
+        let rs = res.sorted_records();
+        assert_eq!(rs[1].verdict, Verdict::Completed);
+        assert!(rs[1].had_cold_start, "stale warm hit falls back to cold");
+        assert!(
+            rs[1].queue_s > 0.0,
+            "fallback must wait for capacity, not bypass it: queue_s {}",
+            rs[1].queue_s
+        );
+        assert!(res.cluster.peak_allocated_vcpus() <= 16.0, "no overcommit via fallback");
+        res.cluster.assert_admission_consistent();
+    }
+
+    #[test]
+    fn background_launch_waits_for_its_decision() {
+        // The pre-warm rides the decision that requested it: with 5 s of
+        // decision overhead, the launch fires at BeginExec (t=5), never
+        // at arrival (t=0).
+        struct SlowBg;
+        impl Policy for SlowBg {
+            fn name(&self) -> String {
+                "slow-bg".into()
+            }
+            fn on_request(&mut self, _now: SimTime, _req: &Request, _cl: &Cluster) -> Decision {
+                Decision {
+                    worker: 0,
+                    vcpus: 2,
+                    mem_mb: 512,
+                    container: ContainerChoice::Cold,
+                    background: Some(super::super::BackgroundLaunch {
+                        worker: 1,
+                        vcpus: 4,
+                        mem_mb: 1024,
+                    }),
+                    overhead_s: 5.0,
+                }
+            }
+        }
+        let res = simulate(SimConfig::small(), &mut SlowBg, vec![qr_request(1, 0.0)]);
+        assert_eq!(res.background_launches, 1);
+        let bg: Vec<_> = res.launches.iter().filter(|l| l.background).collect();
+        assert_eq!(bg.len(), 1);
+        assert!(
+            (bg[0].at - 5.0).abs() < 1e-9,
+            "pre-warm at t={} must follow its decision (t=5), not precede it",
+            bg[0].at
+        );
+    }
+
+    #[test]
+    fn background_launch_shed_when_target_cannot_admit() {
+        // The foreground reservation leaves 10 free vCPUs; a 16-vCPU
+        // pre-warm on the same worker must be shed (never queued, never
+        // admitted over the limit).
+        struct GreedyBg;
+        impl Policy for GreedyBg {
+            fn name(&self) -> String {
+                "greedy-bg".into()
+            }
+            fn on_request(&mut self, _now: SimTime, _req: &Request, _cl: &Cluster) -> Decision {
+                Decision {
+                    worker: 0,
+                    vcpus: 80,
+                    mem_mb: 1024,
+                    container: ContainerChoice::Cold,
+                    background: Some(super::super::BackgroundLaunch {
+                        worker: 0,
+                        vcpus: 16,
+                        mem_mb: 1024,
+                    }),
+                    overhead_s: 0.0,
+                }
+            }
+        }
+        let cfg = SimConfig { workers: 1, ..SimConfig::default() };
+        let res = simulate(cfg, &mut GreedyBg, vec![qr_request(1, 0.0)]);
+        assert_eq!(res.background_shed, 1, "inadmissible pre-warm is shed");
+        assert_eq!(res.background_launches, 0);
+        assert!(res.cluster.peak_allocated_vcpus() <= 90.0);
+        res.cluster.assert_admission_consistent();
     }
 
     #[test]

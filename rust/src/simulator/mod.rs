@@ -11,9 +11,14 @@
 //!   under processor sharing when a worker's demand exceeds its cores;
 //! * OOM kills when an invocation's footprint *exceeds* its container's
 //!   memory (exact fits survive), walltime timeouts counted from request
-//!   arrival (OpenWhisk semantics — decision overhead and cold starts eat
-//!   into the budget; timed-out containers are torn down, not kept warm),
-//!   per-invocation utilization sampling (the paper's per-worker daemon).
+//!   arrival (OpenWhisk semantics — decision overhead, admission
+//!   queueing, and cold starts eat into the budget, and a request can
+//!   die while still queued; timed-out containers are torn down, not
+//!   kept warm), per-invocation utilization sampling (the paper's
+//!   per-worker daemon);
+//! * *enforced* admission: containers reserve vCPU/memory at launch and
+//!   while busy, binds that don't fit park on a per-worker FIFO queue,
+//!   and `allocated ≤ limit` holds at every event (DESIGN.md §Admission).
 //!
 //! The *policy* (Shabari or a baseline) plugs in through [`Policy`]: it
 //! sees each request plus a read-only cluster view and returns a routing
@@ -109,6 +114,9 @@ pub struct InvocationRecord {
     pub had_cold_start: bool,
     /// Decision latency paid on the critical path.
     pub overhead_s: f64,
+    /// Time parked on the bound worker's FIFO admission queue (0 when
+    /// the worker admitted the invocation immediately).
+    pub queue_s: f64,
     /// Execution time (start-of-exec to finish) — what the SLO governs.
     pub exec_s: f64,
     /// End-to-end latency including overheads + cold start.
@@ -250,6 +258,7 @@ mod tests {
             cold_start_s: 0.0,
             had_cold_start: false,
             overhead_s: 0.0,
+            queue_s: 0.0,
             exec_s: 2.0,
             e2e_s: 2.0,
             end: 2.0,

@@ -15,8 +15,19 @@
 //! per-phase rate view is cached per worker epoch in invocation-id order
 //! — no `HashMap` iteration order leaks into results, and steady-state
 //! events reuse buffers instead of allocating.
+//!
+//! Admission contract (DESIGN.md §Admission): capacity is reserved at
+//! container *launch* — a container holds its (vcpus, mem) reservation
+//! while `Starting` or `Busy`, and releases it while `Idle` (§5: idle
+//! containers consume no scheduler budget). The reservation view
+//! (`allocated_*`, maintained exclusively by the container-lifecycle
+//! methods) is what the engine's hard admission check reads; the
+//! queued-demand view ([`Worker::queued_vcpus`]/[`Worker::queued_mem_mb`],
+//! fed by the engine's per-worker FIFO admission queue) is added on top
+//! for scheduler probing so placement decisions see backlog, not just
+//! bound load.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::container::Container;
 use super::SimTime;
@@ -25,6 +36,16 @@ use super::SimTime;
 /// makes "exact size" a range lookup and "smallest at-least-as-large"
 /// an in-order scan, with equal-size ties always won by the lowest id.
 pub type WarmKey = (usize, u32, u32, u64);
+
+/// One invocation parked on a worker's FIFO admission queue, with the
+/// demand it asked for (the *decision* size; the effective size is
+/// re-resolved against the warm pool when the entry is popped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedAdmission {
+    pub inv_id: u64,
+    pub vcpus: u32,
+    pub mem_mb: u32,
+}
 
 /// Execution phase of an active invocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,10 +122,33 @@ pub struct Worker {
     pub active: BTreeMap<u64, ActiveInv>,
     /// Sorted index of idle warm containers.
     warm: BTreeSet<WarmKey>,
-    /// Allocated resources of *busy* containers (idle containers consume
-    /// nothing — §5 "Creating Idle Containers in the Background").
+    /// Reserved resources of `Starting` + `Busy` containers — the hard
+    /// admission view. Cold starts and background pre-warms reserve at
+    /// *launch* (closing the decision-to-bind race over their 0.1–10 s
+    /// startup window); idle containers consume nothing (§5 "Creating
+    /// Idle Containers in the Background"). Maintained exclusively by the
+    /// container-lifecycle methods; tests may still set it directly on
+    /// container-less workers to fake load.
     pub allocated_vcpus: f64,
     pub allocated_mem_mb: f64,
+    /// vCPU allocations of *running* invocations only — the cgroup-share
+    /// basis of [`Self::interference_factor`] (a reserved-but-starting
+    /// container has no runnable threads yet and interferes with no one).
+    pub busy_vcpus: f64,
+    /// Lifetime peaks of the reservation counters: the release-build
+    /// witness that admission was never exceeded (`experiment overload`
+    /// asserts `peak_allocated_vcpus <= sched_vcpu_limit`).
+    pub peak_allocated_vcpus: f64,
+    pub peak_allocated_mem_mb: f64,
+    /// FIFO admission queue: invocations the engine could not admit at
+    /// bind time, in enqueue order (popped front-first on every capacity
+    /// release; head-of-line blocking is deliberate — determinism beats
+    /// backfilling here).
+    admission_queue: VecDeque<QueuedAdmission>,
+    /// Exact aggregate demand parked on the queue (u64 so the sums never
+    /// accumulate float drift).
+    queued_vcpus_total: u64,
+    queued_mem_total: u64,
     /// Last time `advance` ran (work progressed up to here).
     pub last_advance: SimTime,
     /// Bumped on every change to the active set; stale completion events
@@ -139,6 +183,12 @@ impl Worker {
             warm: BTreeSet::new(),
             allocated_vcpus: 0.0,
             allocated_mem_mb: 0.0,
+            busy_vcpus: 0.0,
+            peak_allocated_vcpus: 0.0,
+            peak_allocated_mem_mb: 0.0,
+            admission_queue: VecDeque::new(),
+            queued_vcpus_total: 0,
+            queued_mem_total: 0,
             last_advance: 0.0,
             epoch: 0,
             total_cold_starts: 0,
@@ -153,19 +203,98 @@ impl Worker {
 
     // -- scheduler-facing load view ------------------------------------
 
-    /// Free vCPUs under the admission limit.
+    /// Free vCPUs under the admission limit (reservations only).
     pub fn free_sched_vcpus(&self) -> f64 {
         (self.sched_vcpu_limit - self.allocated_vcpus).max(0.0)
     }
 
-    /// Free memory (MB) under the admission limit.
+    /// Free memory (MB) under the admission limit (reservations only).
     pub fn free_mem_mb(&self) -> f64 {
         (self.mem_gb * 1024.0 - self.allocated_mem_mb).max(0.0)
     }
 
-    /// Whether an invocation of this size can be admitted.
-    pub fn has_capacity(&self, vcpus: u32, mem_mb: u32) -> bool {
+    /// Hard admission check the *engine* uses when binding or launching a
+    /// container: do the in-flight reservations leave room for this size?
+    /// Queued demand is deliberately excluded — FIFO fairness is enforced
+    /// by the engine popping the queue in order, not by this predicate.
+    pub fn can_admit(&self, vcpus: u32, mem_mb: u32) -> bool {
         self.free_sched_vcpus() >= vcpus as f64 && self.free_mem_mb() >= mem_mb as f64
+    }
+
+    /// Scheduler-facing capacity check: free resources *minus the demand
+    /// already parked on the admission queue*. A worker with a backlog
+    /// reports no capacity even if a completion just freed some — new
+    /// placements would only lengthen its queue (the queue-aware load
+    /// view of DESIGN.md §Admission).
+    pub fn has_capacity(&self, vcpus: u32, mem_mb: u32) -> bool {
+        self.free_sched_vcpus() - self.queued_vcpus() >= vcpus as f64
+            && self.free_mem_mb() - self.queued_mem_mb() >= mem_mb as f64
+    }
+
+    // -- admission queue (engine-driven FIFO) ---------------------------
+
+    /// Aggregate vCPU demand waiting on the admission queue.
+    pub fn queued_vcpus(&self) -> f64 {
+        self.queued_vcpus_total as f64
+    }
+
+    /// Aggregate memory demand (MB) waiting on the admission queue.
+    pub fn queued_mem_mb(&self) -> f64 {
+        self.queued_mem_total as f64
+    }
+
+    pub fn admission_queue_len(&self) -> usize {
+        self.admission_queue.len()
+    }
+
+    /// Park an invocation at the back of the admission queue.
+    pub fn push_admission(&mut self, q: QueuedAdmission) {
+        self.queued_vcpus_total += q.vcpus as u64;
+        self.queued_mem_total += q.mem_mb as u64;
+        self.admission_queue.push_back(q);
+    }
+
+    /// The entry that must be admitted next (FIFO head), if any.
+    pub fn front_admission(&self) -> Option<&QueuedAdmission> {
+        self.admission_queue.front()
+    }
+
+    /// Pop the FIFO head (the engine calls this only after `can_admit`
+    /// passed for the head's effective size).
+    pub fn pop_admission(&mut self) -> Option<QueuedAdmission> {
+        let q = self.admission_queue.pop_front()?;
+        self.queued_vcpus_total -= q.vcpus as u64;
+        self.queued_mem_total -= q.mem_mb as u64;
+        Some(q)
+    }
+
+    /// Remove a queued invocation by id (timeout while waiting). Returns
+    /// the removed entry; preserves the order of everything else.
+    pub fn remove_admission(&mut self, inv_id: u64) -> Option<QueuedAdmission> {
+        let pos = self.admission_queue.iter().position(|q| q.inv_id == inv_id)?;
+        let q = self.admission_queue.remove(pos)?;
+        self.queued_vcpus_total -= q.vcpus as u64;
+        self.queued_mem_total -= q.mem_mb as u64;
+        Some(q)
+    }
+
+    // -- reservation accounting (container-lifecycle internal) ----------
+
+    /// Charge a reservation (container entering `Starting` or `Busy`).
+    fn reserve(&mut self, vcpus: u32, mem_mb: u32) {
+        self.allocated_vcpus += vcpus as f64;
+        self.allocated_mem_mb += mem_mb as f64;
+        self.peak_allocated_vcpus = self.peak_allocated_vcpus.max(self.allocated_vcpus);
+        self.peak_allocated_mem_mb = self.peak_allocated_mem_mb.max(self.allocated_mem_mb);
+    }
+
+    /// Release a reservation (container leaving `Starting`/`Busy`). All
+    /// charges are integer-valued, so the sums stay exact and a correct
+    /// charge/release pairing can never drive them negative.
+    fn unreserve(&mut self, vcpus: u32, mem_mb: u32) {
+        self.allocated_vcpus -= vcpus as f64;
+        self.allocated_mem_mb -= mem_mb as f64;
+        debug_assert!(self.allocated_vcpus >= 0.0 && self.allocated_mem_mb >= 0.0);
     }
 
     // -- container lifecycle (warm-index maintenance) -------------------
@@ -174,52 +303,68 @@ impl Worker {
         (c.func, c.vcpus, c.mem_mb, c.id)
     }
 
-    /// Adopt a container. `Starting` containers are unindexed; `Idle`
-    /// ones join the warm index immediately.
+    /// Adopt a container. `Starting` containers are unindexed and
+    /// reserve capacity immediately (reserve-at-launch); `Idle` ones join
+    /// the warm index with no reservation; `Busy` inserts (test setups)
+    /// reserve like any running container.
     pub fn insert_container(&mut self, c: Container) {
         if c.is_warm_idle() {
             self.warm.insert(Self::warm_key(&c));
+        } else {
+            self.reserve(c.vcpus, c.mem_mb);
         }
         self.containers.insert(c.id, c);
     }
 
-    /// Tear a container down (eviction, OOM, timeout).
+    /// Tear a container down (eviction, OOM, timeout). Releases its
+    /// reservation when it was `Starting` or `Busy`.
     pub fn remove_container(&mut self, cid: u64) -> Option<Container> {
         let c = self.containers.remove(&cid)?;
         self.warm.remove(&Self::warm_key(&c));
+        if !c.is_warm_idle() {
+            self.unreserve(c.vcpus, c.mem_mb);
+        }
         Some(c)
     }
 
-    /// Cold start finished: the container joins the warm pool. Returns
-    /// its (new idle epoch, warm key), or None if torn down meanwhile.
+    /// Cold start finished: the container joins the warm pool and drops
+    /// its launch reservation (a binding invocation re-charges it via
+    /// [`Self::acquire_container`] in the same event). Returns its
+    /// (new idle epoch, warm key), or None if torn down meanwhile.
     /// The key lets [`Cluster`] update its index without a second probe.
     pub fn container_ready(&mut self, cid: u64, now: SimTime) -> Option<(u64, WarmKey)> {
         let c = self.containers.get_mut(&cid)?;
         c.mark_ready(now);
         let epoch = c.idle_epoch;
         let key = Self::warm_key(c);
+        let (vcpus, mem_mb) = (c.vcpus, c.mem_mb);
         self.warm.insert(key);
+        self.unreserve(vcpus, mem_mb);
         Some((epoch, key))
     }
 
-    /// Mark a warm container busy; returns its warm key
-    /// (`(func, vcpus, mem_mb, id)`).
+    /// Mark a warm container busy (re-charging its reservation); returns
+    /// its warm key (`(func, vcpus, mem_mb, id)`).
     pub fn acquire_container(&mut self, cid: u64) -> WarmKey {
         let c = self.containers.get_mut(&cid).expect("acquire: container exists");
         let key = Self::warm_key(c);
+        let (vcpus, mem_mb) = (c.vcpus, c.mem_mb);
         c.acquire();
         self.warm.remove(&key);
+        self.reserve(vcpus, mem_mb);
         key
     }
 
-    /// Return a busy container to the warm pool; returns its
-    /// (idle epoch, warm key).
+    /// Return a busy container to the warm pool, releasing its
+    /// reservation; returns its (idle epoch, warm key).
     pub fn release_container(&mut self, cid: u64, now: SimTime) -> (u64, WarmKey) {
         let c = self.containers.get_mut(&cid).expect("release: container exists");
         c.release(now);
         let epoch = c.idle_epoch;
         let key = Self::warm_key(c);
+        let (vcpus, mem_mb) = (c.vcpus, c.mem_mb);
         self.warm.insert(key);
+        self.unreserve(vcpus, mem_mb);
         (epoch, key)
     }
 
@@ -277,14 +422,16 @@ impl Worker {
         }
     }
 
-    /// Interference slowdown from vCPU over-subscription of *allocations*
-    /// (cgroup shares): when the sum of busy containers' vCPU limits
-    /// exceeds the physical cores, the kernel timeslices more runnable
-    /// threads than cores (cache pollution, scheduler churn). This is the
-    /// §7.2 mechanism by which over-allocating systems degrade co-located
-    /// invocations even when *useful* demand still fits the machine.
+    /// Interference slowdown from vCPU over-subscription of *running*
+    /// allocations (cgroup shares): when the sum of busy containers' vCPU
+    /// limits exceeds the physical cores, the kernel timeslices more
+    /// runnable threads than cores (cache pollution, scheduler churn).
+    /// This is the §7.2 mechanism by which over-allocating systems
+    /// degrade co-located invocations even when *useful* demand still
+    /// fits the machine. Reserved-but-`Starting` containers are excluded:
+    /// they hold admission budget but run nothing yet.
     pub fn interference_factor(&self) -> f64 {
-        let over = (self.allocated_vcpus - self.physical_cores) / self.physical_cores;
+        let over = (self.busy_vcpus - self.physical_cores) / self.physical_cores;
         1.0 / (1.0 + 0.35 * over.max(0.0))
     }
 
@@ -467,10 +614,12 @@ impl Worker {
         best
     }
 
-    /// Register a new active invocation (its container must be Busy).
+    /// Register a new active invocation (its container must be Busy —
+    /// the *container* carries the admission reservation; this only adds
+    /// the invocation's cgroup shares to the interference basis).
     pub fn start_invocation(&mut self, inv: ActiveInv, vcpus: u32, mem_mb: u32) {
-        self.allocated_vcpus += vcpus as f64;
-        self.allocated_mem_mb += mem_mb as f64;
+        let _ = mem_mb; // reservation charged by the container lifecycle
+        self.busy_vcpus += vcpus as f64;
         self.total_invocations += 1;
         self.active.insert(inv.inv_id, inv);
         self.epoch += 1;
@@ -478,11 +627,53 @@ impl Worker {
 
     /// Remove a finished/killed invocation; returns it for accounting.
     pub fn finish_invocation(&mut self, inv_id: u64, vcpus: u32, mem_mb: u32) -> Option<ActiveInv> {
+        let _ = mem_mb;
         let a = self.active.remove(&inv_id)?;
-        self.allocated_vcpus = (self.allocated_vcpus - vcpus as f64).max(0.0);
-        self.allocated_mem_mb = (self.allocated_mem_mb - mem_mb as f64).max(0.0);
+        self.busy_vcpus = (self.busy_vcpus - vcpus as f64).max(0.0);
         self.epoch += 1;
         Some(a)
+    }
+
+    /// Verify the reservation counters against container ground truth
+    /// and the admission limits (the engine's per-event invariant; also
+    /// called by tests). Panics on drift or overcommit.
+    pub fn assert_admission_consistent(&self) {
+        let mut vcpus = 0u64;
+        let mut mem = 0u64;
+        for c in self.containers.values() {
+            if !c.is_warm_idle() {
+                vcpus += c.vcpus as u64;
+                mem += c.mem_mb as u64;
+            }
+        }
+        assert_eq!(
+            self.allocated_vcpus, vcpus as f64,
+            "worker {}: vCPU reservations drifted from container state",
+            self.id
+        );
+        assert_eq!(
+            self.allocated_mem_mb, mem as f64,
+            "worker {}: memory reservations drifted from container state",
+            self.id
+        );
+        assert!(
+            self.allocated_vcpus <= self.sched_vcpu_limit,
+            "worker {}: admission invariant violated: {} vCPUs allocated > limit {}",
+            self.id,
+            self.allocated_vcpus,
+            self.sched_vcpu_limit
+        );
+        assert!(
+            self.allocated_mem_mb <= self.mem_gb * 1024.0,
+            "worker {}: admission invariant violated: {} MB allocated > {} MB",
+            self.id,
+            self.allocated_mem_mb,
+            self.mem_gb * 1024.0
+        );
+        let qv: u64 = self.admission_queue.iter().map(|q| q.vcpus as u64).sum();
+        let qm: u64 = self.admission_queue.iter().map(|q| q.mem_mb as u64).sum();
+        assert_eq!(qv, self.queued_vcpus_total, "worker {}: queued vCPU sum drifted", self.id);
+        assert_eq!(qm, self.queued_mem_total, "worker {}: queued mem sum drifted", self.id);
     }
 }
 
@@ -610,6 +801,30 @@ impl Cluster {
     /// Total allocated vCPUs across workers (cluster load).
     pub fn total_allocated_vcpus(&self) -> f64 {
         self.workers.iter().map(|w| w.allocated_vcpus).sum()
+    }
+
+    /// Total demand parked on admission queues across workers.
+    pub fn total_queued_vcpus(&self) -> f64 {
+        self.workers.iter().map(|w| w.queued_vcpus()).sum()
+    }
+
+    /// Highest per-worker vCPU reservation ever observed (the overload
+    /// experiment's release-build invariant witness).
+    pub fn peak_allocated_vcpus(&self) -> f64 {
+        self.workers.iter().map(|w| w.peak_allocated_vcpus).fold(0.0, f64::max)
+    }
+
+    /// Highest per-worker memory reservation (MB) ever observed.
+    pub fn peak_allocated_mem_mb(&self) -> f64 {
+        self.workers.iter().map(|w| w.peak_allocated_mem_mb).fold(0.0, f64::max)
+    }
+
+    /// Verify reservation accounting + admission limits on every worker
+    /// (see [`Worker::assert_admission_consistent`]).
+    pub fn assert_admission_consistent(&self) {
+        for w in &self.workers {
+            w.assert_admission_consistent();
+        }
     }
 
     /// Verify both warm indexes against container ground truth (tests).
@@ -753,16 +968,67 @@ mod tests {
     }
 
     #[test]
-    fn allocation_accounting() {
+    fn reservation_follows_container_lifecycle() {
         let mut w = worker();
-        w.start_invocation(active(1, Phase::Serial, 1.0, 1.0), 8, 2048);
+        // launch (Starting) reserves immediately — cold starts hold their
+        // capacity through the whole startup window
+        w.insert_container(Container::new(1, 0, 8, 2048, 1.0));
         assert_eq!(w.allocated_vcpus, 8.0);
         assert_eq!(w.allocated_mem_mb, 2048.0);
-        assert!(w.has_capacity(82, 1024));
-        assert!(!w.has_capacity(83, 1024));
-        w.finish_invocation(1, 8, 2048).unwrap();
+        assert!(w.can_admit(82, 1024));
+        assert!(!w.can_admit(83, 1024));
+        // ready -> idle releases (idle containers consume nothing)
+        w.container_ready(1, 1.0).unwrap();
         assert_eq!(w.allocated_vcpus, 0.0);
         assert_eq!(w.allocated_mem_mb, 0.0);
+        // busy re-charges; release frees again
+        w.acquire_container(1);
+        assert_eq!(w.allocated_vcpus, 8.0);
+        w.release_container(1, 2.0);
+        assert_eq!(w.allocated_vcpus, 0.0);
+        // teardown of a busy container releases its reservation too
+        w.acquire_container(1);
+        w.remove_container(1).unwrap();
+        assert_eq!(w.allocated_vcpus, 0.0);
+        assert_eq!(w.allocated_mem_mb, 0.0);
+        assert_eq!(w.peak_allocated_vcpus, 8.0, "peak witnesses the high-water mark");
+        w.assert_admission_consistent();
+    }
+
+    #[test]
+    fn busy_vcpus_track_running_invocations() {
+        let mut w = worker();
+        w.start_invocation(active(1, Phase::Serial, 1.0, 1.0), 8, 2048);
+        assert_eq!(w.busy_vcpus, 8.0);
+        assert_eq!(w.allocated_vcpus, 0.0, "invocations don't reserve; containers do");
+        w.finish_invocation(1, 8, 2048).unwrap();
+        assert_eq!(w.busy_vcpus, 0.0);
+    }
+
+    #[test]
+    fn admission_queue_fifo_and_queue_aware_capacity() {
+        let mut w = worker();
+        w.push_admission(QueuedAdmission { inv_id: 5, vcpus: 8, mem_mb: 1024 });
+        w.push_admission(QueuedAdmission { inv_id: 2, vcpus: 4, mem_mb: 512 });
+        w.push_admission(QueuedAdmission { inv_id: 9, vcpus: 2, mem_mb: 256 });
+        assert_eq!(w.admission_queue_len(), 3);
+        assert_eq!(w.queued_vcpus(), 14.0);
+        assert_eq!(w.queued_mem_mb(), 1792.0);
+        // the hard engine check ignores the queue; the scheduler view
+        // subtracts parked demand
+        assert!(w.can_admit(80, 4096));
+        assert!(!w.has_capacity(80, 4096), "90 limit - 14 queued leaves 76");
+        assert!(w.has_capacity(76, 4096));
+        // removal by id preserves FIFO order of the rest
+        assert_eq!(w.remove_admission(2).unwrap().vcpus, 4);
+        assert!(w.remove_admission(2).is_none());
+        assert_eq!(w.front_admission().unwrap().inv_id, 5);
+        assert_eq!(w.pop_admission().unwrap().inv_id, 5);
+        assert_eq!(w.pop_admission().unwrap().inv_id, 9);
+        assert!(w.pop_admission().is_none());
+        assert_eq!(w.queued_vcpus(), 0.0);
+        assert_eq!(w.queued_mem_mb(), 0.0);
+        w.assert_admission_consistent();
     }
 
     #[test]

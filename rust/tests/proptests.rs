@@ -36,6 +36,7 @@ fn random_record(rng: &mut Rng) -> InvocationRecord {
         cold_start_s: 0.0,
         had_cold_start: rng.chance(0.3),
         overhead_s: 0.0,
+        queue_s: 0.0,
         exec_s: exec,
         e2e_s: exec,
         end: exec,
