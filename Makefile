@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench bench-scale scenarios overload clean
+.PHONY: artifacts build test bench bench-scale scenarios overload keepalive clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -23,6 +23,13 @@ scenarios:
 # worker ever exceeded its limits); dumps out/overload.json — EXPERIMENTS.md.
 overload:
 	cargo run --release -- experiment overload
+
+# Keep-alive policy x workload matrix (fixed/histogram/pressure over
+# azure-synthetic + diurnal on a small cluster): idle-container-seconds
+# vs cold starts per eviction policy, re-verifies the admission
+# invariant per replicate; dumps out/keepalive.json — EXPERIMENTS.md.
+keepalive:
+	cargo run --release -- experiment keepalive
 
 bench:
 	cargo bench

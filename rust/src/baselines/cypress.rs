@@ -94,9 +94,12 @@ impl Policy for CypressPolicy {
         let mem_mb = (unit * batch).clamp(256, 6144);
         let vcpus = CYPRESS_VCPUS;
 
-        // pack into an existing (batch-sized) warm container when one fits
+        // pack into an existing (batch-sized) warm container when one
+        // fits — probed warm-bind-aware, so under reservation-holding
+        // keep-alive the candidate's own reservation cannot veto its
+        // capacity-neutral reuse (identical to has_capacity otherwise)
         let (worker, container) = match cluster.find_warm_larger(req.func, vcpus, mem_mb) {
-            Some((w, cid)) if cluster.worker(w).has_capacity(vcpus, mem_mb) => {
+            Some((w, cid)) if cluster.worker(w).has_capacity_for_warm(vcpus, mem_mb) => {
                 (w, ContainerChoice::Warm(cid))
             }
             _ => {

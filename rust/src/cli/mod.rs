@@ -39,6 +39,8 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
     let scenario = a.get_or("scenario", "azure-synthetic");
     // fail fast on typos (trace-file paths are checked here too)
     crate::workload::scenario::by_name(&scenario)?;
+    // same fail-fast contract for the keep-alive policy
+    let keepalive = crate::simulator::keepalive::parse(&a.get_or("keepalive", "fixed"))?;
     Ok(Ctx {
         seed: a.get_u64("seed", 42)?,
         backend,
@@ -51,6 +53,8 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         scale_workers: a.get_usize("scale-workers", 64)?.max(1),
         scale_rps: a.get_f64("scale-rps", 24.0)?,
         overload_workers: a.get_usize("overload-workers", 4)?.max(1),
+        keepalive,
+        keepalive_workers: a.get_usize("keepalive-workers", 4)?.max(1),
     })
 }
 
@@ -72,6 +76,10 @@ fn run(argv: &[String]) -> Result<()> {
             println!(
                 "scenarios:   {} (or trace-file:<path>)",
                 crate::workload::scenario::SCENARIOS.join(", ")
+            );
+            println!(
+                "keep-alive:  {} (each optionally ':<secs>')",
+                crate::simulator::keepalive::KEEPALIVES.join(", ")
             );
             Ok(())
         }
@@ -106,8 +114,12 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     let viol = out.stat(|m| m.slo_violation_pct);
     let mut t = crate::util::table::Table::new(
         &format!(
-            "run: {policy} @ {rps} rps, {}s {} trace, {} seed(s) x {} job(s)",
-            ctx.duration_s, ctx.scenario, ctx.seeds, ctx.jobs
+            "run: {policy} @ {rps} rps, {}s {} trace, keepalive {}, {} seed(s) x {} job(s)",
+            ctx.duration_s,
+            ctx.scenario,
+            ctx.keepalive.label(),
+            ctx.seeds,
+            ctx.jobs
         ),
         &["metric", "value (cross-seed mean)"],
     );
@@ -135,6 +147,14 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     t.row(vec!["throughput".into(), format!("{:.2}/s", m.throughput)]);
     t.row(vec!["containers created".into(), m.containers_created.to_string()]);
     t.row(vec!["background launches".into(), m.background_launches.to_string()]);
+    t.row(vec![
+        "evictions (ttl / pressure)".into(),
+        format!("{} / {}", m.evictions, m.pressure_evictions),
+    ]);
+    t.row(vec![
+        "idle container-s / prewarm hits".into(),
+        format!("{:.0} / {}", m.idle_container_s, m.prewarm_hits),
+    ]);
     t.row(vec![
         "sweep wall time".into(),
         format!(
@@ -230,13 +250,16 @@ fn print_help() {
                           --rps <f>         (default 4)\n\
            experiment   regenerate a paper figure/table\n\
                           <id>              fig1..fig14, table1-3, scenarios,\n\
-                                            scale, overload, or 'all'\n\
+                                            scale, overload, keepalive, or 'all'\n\
                           --scale-workers <n>  scale-grid cluster size (default 64)\n\
                           --scale-rps <f>      scale-grid request rate (default 24)\n\
                           --overload-workers <n>  overload-sweep cluster size\n\
                                             (default 4; the rps axis crosses\n\
                                             saturation and proves the admission\n\
                                             invariant, dumping out/overload.json)\n\
+                          --keepalive-workers <n>  keepalive-matrix cluster size\n\
+                                            (default 4; policy x keep-alive x\n\
+                                            scenario grid, dumps out/keepalive.json)\n\
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\
@@ -253,6 +276,12 @@ fn print_help() {
            --scenario <name>       workload shape: azure-synthetic (default),\n\
                                    diurnal, flash-crowd, zipf-skew, trace-file,\n\
                                    or trace-file:<csv-path> (Azure trace schema)\n\
+           --keepalive <name>      warm-container keep-alive policy: fixed\n\
+                                   (default; legacy 600 s TTL), fixed:<secs>,\n\
+                                   histogram (per-function idle histograms +\n\
+                                   pre-warm), or pressure (idle containers\n\
+                                   yield to queued demand, LRU eviction);\n\
+                                   each accepts ':<secs>' as TTL override\n\
            --slo-multiplier <f>    SLO = f x median isolated time (default 1.4)\n\
            --xla                   use the AOT XLA learner (production path;\n\
                                    needs a `--features xla` build)\n\

@@ -38,10 +38,18 @@ impl Scheduler for HermodScheduler {
         cluster: &Cluster,
     ) -> SchedDecision {
         // Prefer a warm container on the most-packed admissible worker;
-        // otherwise pack: first worker (ascending id) with capacity.
+        // otherwise pack: first worker (ascending id) with capacity. A
+        // worker with a fitting warm container is probed with the
+        // warm-bind-aware check (DESIGN.md §KeepAlive): under
+        // reservation-holding keep-alive the candidate's own reservation
+        // must not spill packing off the warmth it could reuse
+        // capacity-neutrally. With free idle containers the two checks
+        // coincide, so fixed-mode behavior is unchanged.
         let mut chosen = None;
         for w in &cluster.workers {
-            if w.has_capacity(vcpus, mem_mb) {
+            let warm_fits = w.has_capacity_for_warm(vcpus, mem_mb)
+                && w.find_warm_larger(req.func, vcpus, mem_mb).is_some();
+            if warm_fits || w.has_capacity(vcpus, mem_mb) {
                 chosen = Some(w.id);
                 break;
             }
@@ -110,6 +118,30 @@ mod tests {
         let mut s = HermodScheduler::new(1);
         let d = s.schedule(&req(), 8, 1024, &cl);
         assert_eq!(d.worker, 1, "queued demand counts against packing capacity");
+    }
+
+    #[test]
+    fn pressure_mode_packs_onto_its_own_warmth() {
+        use crate::simulator::keepalive::KeepAliveMode;
+        // under reservation-holding keep-alive, worker 0's idle warm
+        // container fills its whole limit; packing must still choose it
+        // (the warm bind is capacity-neutral) instead of spilling
+        let cfg = SimConfig {
+            workers: 4,
+            sched_vcpu_limit: 4.0,
+            keepalive: KeepAliveMode::Pressure,
+            ..SimConfig::default()
+        };
+        let mut cl = Cluster::new(&cfg);
+        let r = req();
+        let mut c = crate::simulator::container::Container::new(5, r.func, 4, 512, 0.0);
+        c.mark_ready(0.0);
+        cl.insert_container(0, c);
+        assert_eq!(cl.workers[0].allocated_vcpus, 4.0, "idle reserves under pressure");
+        let mut s = HermodScheduler::new(1);
+        let d = s.schedule(&r, 4, 512, &cl);
+        assert_eq!(d.worker, 0, "warmth beats spilling");
+        assert_eq!(d.container, ContainerChoice::Warm(5));
     }
 
     #[test]

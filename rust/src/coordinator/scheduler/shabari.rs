@@ -91,7 +91,10 @@ impl ShabariScheduler {
 
     /// Cluster-wide warm lookup via the sorted warm index; `exact`
     /// selects mode. Only admissible placements count (the worker must
-    /// fit the *container's* size, since that is what gets allocated).
+    /// fit the *container's* size, since that is what gets allocated) —
+    /// probed with the warm-bind-aware check: under reservation-holding
+    /// keep-alive the candidate's own reservation must not veto its own
+    /// reuse (`Worker::has_capacity_for_warm`, DESIGN.md §KeepAlive).
     /// Equal-size candidates resolve to the lowest (worker, container)
     /// id — deterministic, unlike the old per-worker hash-order scan.
     fn find_warm(
@@ -102,7 +105,7 @@ impl ShabariScheduler {
         mem_mb: u32,
         exact: bool,
     ) -> Option<(usize, u64)> {
-        let admit = |w: &Worker, cv: u32, cm: u32| w.has_capacity(cv, cm);
+        let admit = |w: &Worker, cv: u32, cm: u32| w.has_capacity_for_warm(cv, cm);
         if exact {
             cluster.find_warm_exact_where(func, vcpus, mem_mb, admit)
         } else {
@@ -273,6 +276,37 @@ mod tests {
         let mut s = ShabariScheduler::new(1);
         let d = s.schedule(&r, 4, 512, &cl);
         assert_ne!(d.worker, 0, "admission control must skip the full worker");
+    }
+
+    #[test]
+    fn pressure_mode_warm_candidate_not_vetoed_by_its_own_reservation() {
+        use crate::simulator::keepalive::KeepAliveMode;
+        // under reservation-holding keep-alive an idle container occupies
+        // capacity; the probe must not let it veto its own (capacity-
+        // neutral) reuse, or every loaded worker's warmth would be
+        // skipped and pressure-evicted for the resulting cold route
+        let cfg = SimConfig {
+            workers: 4,
+            sched_vcpu_limit: 8.0,
+            keepalive: KeepAliveMode::Pressure,
+            ..SimConfig::default()
+        };
+        let mut cl = Cluster::new(&cfg);
+        let r = req("qr");
+        warm(&mut cl, 2, 10, r.func, 8, 1024); // fills worker 2 entirely
+        assert_eq!(cl.workers[2].allocated_vcpus, 8.0, "idle reserves under pressure");
+        let mut s = ShabariScheduler::new(1);
+        let d = s.schedule(&r, 8, 1024, &cl);
+        assert_eq!(d.worker, 2);
+        assert_eq!(d.container, ContainerChoice::Warm(10), "capacity-neutral reuse");
+        // but a backlogged worker still rejects the warm placement
+        cl.workers[2].push_admission(crate::simulator::worker::QueuedAdmission {
+            inv_id: 9,
+            vcpus: 8,
+            mem_mb: 1024,
+        });
+        let d = s.schedule(&r, 8, 1024, &cl);
+        assert_eq!(d.container, ContainerChoice::Cold, "queue-aware view still vetoes");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Shared experiment harness: build policies by name, run traces, and
 //! collect paper-style metrics.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::baselines::{AquatopePolicy, CypressPolicy, ParrotfishPolicy, StaticPolicy};
 use crate::coordinator::allocator::cost::SlackPolicy;
@@ -14,6 +14,7 @@ use crate::coordinator::ShabariPolicy;
 use crate::learner::xla::Backend;
 use crate::metrics::{from_result, RunMetrics};
 use crate::simulator::engine::{simulate, SimResult};
+use crate::simulator::keepalive::KeepAliveSpec;
 use crate::simulator::{Policy, SimConfig};
 use crate::workload::scenario::{self, Scenario};
 use crate::workload::Workload;
@@ -47,6 +48,14 @@ pub struct Ctx {
     /// (`--overload-workers`; deliberately small so the fixed rps axis
     /// crosses saturation).
     pub overload_workers: usize,
+    /// Keep-alive/eviction policy (`--keepalive`, parsed at the CLI
+    /// boundary like `--scenario`; `simulator::keepalive::parse`). The
+    /// default reproduces the legacy fixed-600 s behavior byte-for-byte.
+    pub keepalive: KeepAliveSpec,
+    /// Cluster size of the `experiment keepalive` matrix
+    /// (`--keepalive-workers`; small so admission queues form and
+    /// demand-driven eviction has demand to serve).
+    pub keepalive_workers: usize,
 }
 
 impl Default for Ctx {
@@ -63,6 +72,8 @@ impl Default for Ctx {
             scale_workers: 64,
             scale_rps: 24.0,
             overload_workers: 4,
+            keepalive: KeepAliveSpec::default(),
+            keepalive_workers: 4,
         }
     }
 }
@@ -91,6 +102,12 @@ impl Ctx {
     /// policy × scenario robustness grid uses per cell).
     pub fn with_scenario(&self, scenario: &str) -> Ctx {
         Ctx { scenario: scenario.to_string(), ..self.clone() }
+    }
+
+    /// The same context under a different keep-alive policy (the hook
+    /// the keepalive matrix uses per cell).
+    pub fn with_keepalive(&self, keepalive: KeepAliveSpec) -> Ctx {
+        Ctx { keepalive, ..self.clone() }
     }
 
     /// Build this context's scenario from the registry.
@@ -182,9 +199,45 @@ pub fn run_one(
     Ok((res, metrics))
 }
 
-/// Default testbed config with the experiment seed applied.
+/// Default testbed config with the experiment seed and the context's
+/// keep-alive spec applied.
 pub fn sim_config(ctx: &Ctx) -> SimConfig {
-    SimConfig { seed: ctx.seed ^ 0x51AB, ..Default::default() }
+    let mut cfg = SimConfig { seed: ctx.seed ^ 0x51AB, ..Default::default() };
+    ctx.keepalive.apply(&mut cfg);
+    cfg
+}
+
+/// Re-verify the engine's admission invariant on every replicate of a
+/// sweep (shared by `experiment overload` and `experiment keepalive`):
+/// no worker's reservations ever exceeded the per-worker limits,
+/// witnessed by the lifetime peaks carried in [`RunMetrics`] — valid in
+/// release builds, where the engine's per-event debug asserts are
+/// compiled out.
+pub fn ensure_admission_invariant(
+    outcomes: &[crate::experiments::sweep::CellOutcome<RunMetrics>],
+    limits: &SimConfig,
+) -> Result<()> {
+    for out in outcomes {
+        for (rep, m) in out.per_seed.iter().enumerate() {
+            ensure!(
+                m.peak_alloc_vcpus <= limits.sched_vcpu_limit + 1e-9,
+                "admission invariant violated: {} replicate {rep} peaked at {} vCPUs \
+                 (limit {})",
+                out.cell.id(),
+                m.peak_alloc_vcpus,
+                limits.sched_vcpu_limit
+            );
+            ensure!(
+                m.peak_alloc_mem_mb <= limits.mem_gb * 1024.0 + 1e-9,
+                "admission invariant violated: {} replicate {rep} peaked at {} MB \
+                 (limit {})",
+                out.cell.id(),
+                m.peak_alloc_mem_mb,
+                limits.mem_gb * 1024.0
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Canonical sweep-cell runner: rebuild *everything* stochastic (workload
@@ -253,6 +306,23 @@ mod tests {
     fn unknown_scenario_surfaces_as_error() {
         let ctx = Ctx { duration_s: 60.0, ..Default::default() };
         assert!(run_cell("static-medium", &ctx.with_scenario("nope"), 2.0, 7).is_err());
+    }
+
+    #[test]
+    fn sim_config_applies_the_ctx_keepalive_spec() {
+        use crate::simulator::keepalive::{self, KeepAliveMode};
+        let base = Ctx::default();
+        let cfg = sim_config(&base);
+        assert_eq!(cfg.keepalive, KeepAliveMode::Fixed);
+        assert_eq!(cfg.keep_alive_s, 600.0, "default spec leaves the legacy TTL");
+        let cfg = sim_config(&base.with_keepalive(keepalive::parse("pressure:90").unwrap()));
+        assert_eq!(cfg.keepalive, KeepAliveMode::Pressure);
+        assert_eq!(cfg.keep_alive_s, 90.0);
+        // the explicit fixed:600 spec is byte-identical config-wise to
+        // the default (the PR's stream-compatibility guarantee)
+        let explicit = sim_config(&base.with_keepalive(keepalive::parse("fixed:600").unwrap()));
+        assert_eq!(explicit.keepalive, KeepAliveMode::Fixed);
+        assert_eq!(explicit.keep_alive_s, 600.0);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! `experiment keepalive` — the keep-alive policy × workload matrix
+//! (DESIGN.md §KeepAlive): scheduling policies crossed with every
+//! registered keep-alive variant over (at least) the azure-synthetic and
+//! diurnal scenarios, replicated across `Ctx::seeds` seeds on
+//! `Ctx::jobs` threads, on a deliberately small cluster
+//! (`--keepalive-workers`) so admission queues form and demand-driven
+//! eviction has demand to serve.
+//!
+//! The question it answers: how much of the fixed-TTL warm pool's
+//! idle-container-seconds (the memory-waste proxy behind the paper's
+//! 64–94% wasted-memory reductions) can a smarter eviction policy
+//! recover, and at what cold-start/latency price? Expected shape
+//! (EXPERIMENTS.md): `histogram` and `pressure` cut idle
+//! container-seconds sharply vs `fixed:600` at equal or better tail
+//! latency; `fixed:120` sits between, trading idle seconds for cold
+//! starts without any per-function signal.
+//!
+//! Like `experiment overload`, every replicate re-verifies the admission
+//! invariant — under `pressure` the reservation ledger changes shape
+//! (idle containers hold capacity), so the peaks are re-witnessed here.
+//!
+//! Emits `out/keepalive.json` (`make keepalive`; CI runs a shrunk smoke).
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::simulator::keepalive as ka;
+use crate::simulator::SimConfig;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{self, Ctx};
+use super::sweep::{self, Cell, CellOutcome};
+
+/// Scheduling policies crossed with the keep-alive axis: the full stack
+/// and the biggest static hoarder (demand-driven eviction's natural
+/// prey).
+pub const KA_POLICIES: &[&str] = &["shabari", "static-large"];
+
+/// The keep-alive axis: legacy default, a short fixed TTL, the hybrid
+/// histogram, and demand-driven pressure eviction.
+pub const KA_VARIANTS: &[&str] = &["fixed:600", "fixed:120", "histogram", "pressure"];
+
+/// Workload shapes (idle-gap distributions differ sharply between them).
+pub const KA_SCENARIOS: &[&str] = &["azure-synthetic", "diurnal"];
+
+/// Load on the small `--keepalive-workers` cluster: high enough that
+/// queues form under hoarding, below the overload meltdown regime.
+pub const KA_RPS: f64 = 12.0;
+
+/// Cell label carrying both matrix axes (salts replicate seeds so the
+/// same scheduling policy under two keep-alive variants samples
+/// disjoint RNG streams at replicates ≥ 1, while replicate 0 stays
+/// grid-wide paired).
+fn cell_label(variant: &str, scenario: &str) -> String {
+    format!("keepalive:{variant}|scenario:{scenario}")
+}
+
+/// Recover (variant, scenario) from a cell label.
+fn cell_parts(cell: &Cell) -> (&str, &str) {
+    let rest = cell.label.strip_prefix("keepalive:").unwrap_or(&cell.label);
+    match rest.split_once("|scenario:") {
+        Some((variant, scenario)) => (variant, scenario),
+        None => (rest, "azure-synthetic"),
+    }
+}
+
+/// Run the policy × variant × scenario grid; outcome index is
+/// `(pi * KA_VARIANTS.len() + vi) * KA_SCENARIOS.len() + si`. Every
+/// replicate re-verifies the admission invariant against the per-worker
+/// lifetime peaks (the run errors otherwise).
+pub fn run_keepalive(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>> {
+    let workers = ctx.keepalive_workers;
+    let cells: Vec<Cell> = KA_POLICIES
+        .iter()
+        .flat_map(|p| {
+            KA_VARIANTS.iter().flat_map(move |v| {
+                KA_SCENARIOS
+                    .iter()
+                    .map(move |s| Cell::labeled(p, rps, &cell_label(v, s), workers as f64))
+            })
+        })
+        .collect();
+    let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        let (variant, scenario) = cell_parts(cell);
+        let spec = ka::parse(variant)?;
+        let cctx = ctx.with_seed(seed).with_scenario(scenario).with_keepalive(spec);
+        let workload = cctx.workload();
+        let cfg = SimConfig { workers, ..common::sim_config(&cctx) };
+        let (_, metrics) = common::run_one(&cell.policy, &cctx, &workload, cell.rps, &cfg)?;
+        Ok(metrics)
+    })?;
+    common::ensure_admission_invariant(&outcomes, &common::sim_config(ctx))?;
+    Ok(outcomes)
+}
+
+pub fn keepalive(ctx: &Ctx) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let outcomes = run_keepalive(ctx, KA_RPS)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "(keepalive matrix: {} cells x {} seed(s) on {} job(s), {wall:.1}s wall; \
+         admission invariant held on every replicate)",
+        outcomes.len(),
+        ctx.seeds,
+        ctx.jobs
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "keepalive: {} workers @ {} rps, {}s trace (cross-seed means; \
+             idle-s = container-seconds idle in the warm pool)",
+            ctx.keepalive_workers, KA_RPS, ctx.duration_s
+        ),
+        &[
+            "system",
+            "keepalive",
+            "scenario",
+            "SLO viol [95% CI]",
+            "cold",
+            "idle-s",
+            "evict ttl",
+            "evict press",
+            "prewarm hit",
+            "queue p99 s",
+        ],
+    );
+    for out in &outcomes {
+        let (variant, scenario) = cell_parts(&out.cell);
+        let m = out.mean_metrics();
+        t.row(vec![
+            out.cell.policy.clone(),
+            variant.to_string(),
+            scenario.to_string(),
+            out.stat(|m| m.slo_violation_pct).fmt_ci(1),
+            fpct(m.cold_start_pct),
+            fnum(m.idle_container_s, 0),
+            m.evictions.to_string(),
+            m.pressure_evictions.to_string(),
+            m.prewarm_hits.to_string(),
+            fnum(m.queue_wait.p99, 2),
+        ]);
+    }
+    t.note(
+        "expected shape: histogram/pressure cut idle container-seconds vs fixed:600 \
+         at equal-or-better tail latency; fixed:120 trades idle-s for cold starts blindly",
+    );
+    t.print();
+
+    let limits = common::sim_config(ctx);
+    let dump = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("workers", Json::Num(ctx.keepalive_workers as f64)),
+                ("rps", Json::Num(KA_RPS)),
+                ("duration_s", Json::Num(ctx.duration_s)),
+                ("seeds", Json::Num(ctx.seeds as f64)),
+                ("jobs", Json::Num(ctx.jobs as f64)),
+                ("seed", Json::Num(ctx.seed as f64)),
+                ("sched_vcpu_limit", Json::Num(limits.sched_vcpu_limit)),
+            ]),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                outcomes
+                    .iter()
+                    .map(|out| {
+                        let (variant, scenario) = cell_parts(&out.cell);
+                        let m = out.mean_metrics();
+                        let viol = out.stat(|m| m.slo_violation_pct);
+                        Json::obj(vec![
+                            ("policy", Json::Str(out.cell.policy.clone())),
+                            ("keepalive", Json::Str(variant.to_string())),
+                            ("scenario", Json::Str(scenario.to_string())),
+                            ("slo_violation_pct_mean", Json::Num(viol.mean)),
+                            ("slo_violation_pct_ci95_lo", Json::Num(viol.ci95.0)),
+                            ("slo_violation_pct_ci95_hi", Json::Num(viol.ci95.1)),
+                            ("cold_start_pct", Json::Num(m.cold_start_pct)),
+                            ("idle_container_s", Json::Num(m.idle_container_s)),
+                            ("evictions", Json::Num(m.evictions as f64)),
+                            ("pressure_evictions", Json::Num(m.pressure_evictions as f64)),
+                            ("prewarm_hits", Json::Num(m.prewarm_hits as f64)),
+                            ("queue_p99_s", Json::Num(m.queue_wait.p99)),
+                            ("queued_pct", Json::Num(m.queued_pct)),
+                            ("timeout_pct", Json::Num(m.timeout_pct)),
+                            ("peak_alloc_vcpus", Json::Num(m.peak_alloc_vcpus)),
+                            ("invocations", Json::Num(m.invocations as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::create_dir_all("out").ok();
+    match std::fs::write("out/keepalive.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/keepalive.json)"),
+        Err(e) => eprintln!("warning: could not write out/keepalive.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_labels_round_trip_both_axes() {
+        let c = Cell::labeled("shabari", KA_RPS, &cell_label("pressure", "diurnal"), 4.0);
+        assert_eq!(cell_parts(&c), ("pressure", "diurnal"));
+        // distinct variants/scenarios occupy distinct seed streams
+        let a = Cell::labeled("shabari", 12.0, &cell_label("fixed:600", "diurnal"), 4.0);
+        let b = Cell::labeled("shabari", 12.0, &cell_label("histogram", "diurnal"), 4.0);
+        assert_ne!(sweep::cell_seed(42, &a, 1), sweep::cell_seed(42, &b, 1));
+        assert_eq!(sweep::cell_seed(42, &a, 0), sweep::cell_seed(42, &b, 0));
+    }
+
+    /// Tiny-parameter smoke mirroring the CI job: the grid covers every
+    /// (policy, variant, scenario) triple, is deterministic across
+    /// thread counts, and the smarter policies do not *hoard more* than
+    /// the legacy fixed default.
+    #[test]
+    fn keepalive_grid_covers_axes_and_is_jobs_invariant() {
+        let ctx = Ctx { duration_s: 30.0, keepalive_workers: 1, seeds: 1, ..Default::default() };
+        let seq = run_keepalive(&Ctx { jobs: 1, ..ctx.clone() }, KA_RPS).unwrap();
+        let par = run_keepalive(&Ctx { jobs: 4, ..ctx }, KA_RPS).unwrap();
+        assert_eq!(seq.len(), KA_POLICIES.len() * KA_VARIANTS.len() * KA_SCENARIOS.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell.id(), b.cell.id());
+            let (ma, mb) = (a.mean_metrics(), b.mean_metrics());
+            assert_eq!(ma.invocations, mb.invocations);
+            assert_eq!(
+                ma.idle_container_s.to_bits(),
+                mb.idle_container_s.to_bits(),
+                "{} idle accounting diverged across --jobs",
+                a.cell.id()
+            );
+            assert_eq!(ma.evictions, mb.evictions);
+            assert_eq!(ma.pressure_evictions, mb.pressure_evictions);
+        }
+        // paired replicate-0 worlds: for the same policy × scenario, the
+        // histogram variant must not idle *more* container-seconds than
+        // the fixed default it specializes (its TTLs are clamped to it)
+        let find = |variant: &str| {
+            seq.iter()
+                .find(|o| {
+                    o.cell.policy == "static-large"
+                        && cell_parts(&o.cell) == (variant, "azure-synthetic")
+                })
+                .unwrap()
+                .mean_metrics()
+        };
+        let fixed = find("fixed:600");
+        let hist = find("histogram");
+        assert!(fixed.idle_container_s > 0.0, "fixed must leave an idle warm pool");
+        assert!(
+            hist.idle_container_s <= fixed.idle_container_s,
+            "histogram hoarded more idle-s ({}) than fixed:600 ({})",
+            hist.idle_container_s,
+            fixed.idle_container_s
+        );
+    }
+}

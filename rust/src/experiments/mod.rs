@@ -12,6 +12,7 @@ pub mod analysis;
 pub mod characterize;
 pub mod common;
 pub mod e2e;
+pub mod keepalive;
 pub mod overheads;
 pub mod overload;
 pub mod scale;
@@ -29,11 +30,12 @@ pub use common::Ctx;
 /// robustness matrix — DESIGN.md §Scenarios; `scale`, the 64-worker
 /// engine-throughput benchmark — DESIGN.md §Perf; `overload`, the
 /// past-saturation sweep proving the admission invariant — DESIGN.md
-/// §Admission).
+/// §Admission; `keepalive`, the keep-alive policy × workload matrix —
+/// DESIGN.md §KeepAlive).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios", "scale",
-    "overload",
+    "overload", "keepalive",
 ];
 
 /// Run one experiment by id.
@@ -59,6 +61,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "scenarios" => scenarios::scenarios(ctx),
         "scale" => scale::scale(ctx),
         "overload" => overload::overload(ctx),
+        "keepalive" => keepalive::keepalive(ctx),
         "all" => {
             // Benchmark-style grids skipped under `all`: `scale` is a
             // wall-clock benchmark with its own pinned methodology
@@ -91,7 +94,8 @@ mod tests {
     fn registry_covers_every_table_and_figure() {
         // the paper's evaluation (figures 1-4, 6-14, tables 1-3) plus the
         // repo's own cross-scenario robustness matrix, the engine scale
-        // benchmark, and the past-saturation overload sweep
+        // benchmark, the past-saturation overload sweep, and the
+        // keep-alive policy matrix
         for id in super::EXPERIMENTS {
             assert!(
                 id.starts_with("fig")
@@ -99,9 +103,10 @@ mod tests {
                     || *id == "scenarios"
                     || *id == "scale"
                     || *id == "overload"
+                    || *id == "keepalive"
             );
         }
-        assert_eq!(super::EXPERIMENTS.len(), 20);
+        assert_eq!(super::EXPERIMENTS.len(), 21);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!
 //! Emits `out/overload.json` (`make overload`; CI runs a shrunk smoke).
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 use crate::metrics::RunMetrics;
 use crate::simulator::SimConfig;
@@ -68,27 +68,7 @@ pub fn run_overload(ctx: &Ctx, rps_list: &[f64]) -> Result<Vec<CellOutcome<RunMe
     let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
         run_overload_cell(&cell.policy, ctx, cell.rps, workers, seed)
     })?;
-    let limits = common::sim_config(ctx);
-    for out in &outcomes {
-        for (rep, m) in out.per_seed.iter().enumerate() {
-            ensure!(
-                m.peak_alloc_vcpus <= limits.sched_vcpu_limit + 1e-9,
-                "admission invariant violated: {} replicate {rep} peaked at {} vCPUs \
-                 (limit {})",
-                out.cell.id(),
-                m.peak_alloc_vcpus,
-                limits.sched_vcpu_limit
-            );
-            ensure!(
-                m.peak_alloc_mem_mb <= limits.mem_gb * 1024.0 + 1e-9,
-                "admission invariant violated: {} replicate {rep} peaked at {} MB \
-                 (limit {})",
-                out.cell.id(),
-                m.peak_alloc_mem_mb,
-                limits.mem_gb * 1024.0
-            );
-        }
-    }
+    common::ensure_admission_invariant(&outcomes, &common::sim_config(ctx))?;
     Ok(outcomes)
 }
 

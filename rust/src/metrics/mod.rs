@@ -3,7 +3,7 @@
 //! plus cold-start and failure accounting, computed from
 //! `InvocationRecord`s.
 
-use crate::simulator::engine::SimResult;
+use crate::simulator::engine::{EvictReason, SimResult};
 use crate::simulator::{InvocationRecord, Verdict};
 use crate::util::stats::{self, Summary};
 
@@ -51,6 +51,17 @@ pub struct RunMetrics {
     pub peak_alloc_vcpus: f64,
     /// Highest per-worker memory reservation (MB) observed.
     pub peak_alloc_mem_mb: f64,
+    /// Keep-alive TTL-expiry evictions (DESIGN.md §KeepAlive).
+    pub evictions: u64,
+    /// Demand-driven evictions: idle containers reclaimed to admit
+    /// queued work (`--keepalive pressure`).
+    pub pressure_evictions: u64,
+    /// Warm binds served by a hybrid-histogram pre-warmed container.
+    pub prewarm_hits: u64,
+    /// Total container-seconds spent idle in the warm pool — the
+    /// memory-waste proxy the keepalive experiment minimizes (0 when
+    /// aggregated from bare records).
+    pub idle_container_s: f64,
 }
 
 impl RunMetrics {
@@ -94,6 +105,14 @@ impl RunMetrics {
             // replicate ever exceeded the admission limits.
             peak_alloc_vcpus: runs.iter().map(|r| r.peak_alloc_vcpus).fold(0.0, f64::max),
             peak_alloc_mem_mb: runs.iter().map(|r| r.peak_alloc_mem_mb).fold(0.0, f64::max),
+            evictions: (runs.iter().map(|r| r.evictions).sum::<u64>() as f64 / n).round()
+                as u64,
+            pressure_evictions: (runs.iter().map(|r| r.pressure_evictions).sum::<u64>() as f64
+                / n)
+                .round() as u64,
+            prewarm_hits: (runs.iter().map(|r| r.prewarm_hits).sum::<u64>() as f64 / n).round()
+                as u64,
+            idle_container_s: avg(|r| r.idle_container_s),
         }
     }
 }
@@ -148,6 +167,10 @@ pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
         background_shed: 0,
         peak_alloc_vcpus: 0.0,
         peak_alloc_mem_mb: 0.0,
+        evictions: 0,
+        pressure_evictions: 0,
+        prewarm_hits: 0,
+        idle_container_s: 0.0,
     }
 }
 
@@ -160,6 +183,11 @@ pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
     m.background_shed = res.background_shed;
     m.peak_alloc_vcpus = res.cluster.peak_allocated_vcpus();
     m.peak_alloc_mem_mb = res.cluster.peak_allocated_mem_mb();
+    m.evictions =
+        res.evictions.iter().filter(|e| e.reason == EvictReason::Expired).count() as u64;
+    m.pressure_evictions = res.pressure_evictions;
+    m.prewarm_hits = res.prewarm_hits;
+    m.idle_container_s = res.idle_container_s;
     m
 }
 
@@ -296,6 +324,29 @@ mod tests {
         // single-run mean is the identity on scalar fields
         let one = RunMetrics::mean_of(&[a.clone()]);
         assert_eq!(one.slo_violation_pct.to_bits(), a.slo_violation_pct.to_bits());
+    }
+
+    #[test]
+    fn keepalive_metrics_average_across_replicates() {
+        let mut a = aggregate("x", &[rec(1.0, 2.0, false, Verdict::Completed)]);
+        a.evictions = 10;
+        a.pressure_evictions = 4;
+        a.prewarm_hits = 2;
+        a.idle_container_s = 100.0;
+        let mut b = a.clone();
+        b.evictions = 20;
+        b.pressure_evictions = 0;
+        b.prewarm_hits = 0;
+        b.idle_container_s = 50.0;
+        let m = RunMetrics::mean_of(&[a, b]);
+        assert_eq!(m.evictions, 15);
+        assert_eq!(m.pressure_evictions, 2);
+        assert_eq!(m.prewarm_hits, 1);
+        assert!((m.idle_container_s - 75.0).abs() < 1e-12);
+        // bare-record aggregation starts the counters at zero
+        let fresh = aggregate("x", &[rec(1.0, 2.0, false, Verdict::Completed)]);
+        assert_eq!(fresh.evictions + fresh.pressure_evictions + fresh.prewarm_hits, 0);
+        assert_eq!(fresh.idle_container_s, 0.0);
     }
 
     #[test]

@@ -30,6 +30,19 @@ pub struct Container {
     /// Bumped every time the container goes idle; lets stale eviction
     /// events detect that the container was reused in between.
     pub idle_epoch: u64,
+    /// Launched by a hybrid-histogram pre-warm; cleared at first warm
+    /// use (the engine counts that use as a `prewarm_hit`).
+    pub prewarmed: bool,
+    /// TTL deadline the keep-alive policy assigned for the current idle
+    /// period (engine bookkeeping for the eviction log; `INFINITY`
+    /// until the first idle transition).
+    pub evict_deadline: SimTime,
+    /// Pre-warm the policy requested for the current idle period: when
+    /// the TTL expiry actually evicts this container, the engine
+    /// launches a same-size replacement at this time. Overwritten on
+    /// every idle transition, so a reuse during the grace window
+    /// cancels the pending pre-warm along with the stale eviction.
+    pub prewarm_at: Option<SimTime>,
 }
 
 impl Container {
@@ -43,6 +56,9 @@ impl Container {
             ready_at,
             idle_since: ready_at,
             idle_epoch: 0,
+            prewarmed: false,
+            evict_deadline: f64::INFINITY,
+            prewarm_at: None,
         }
     }
 

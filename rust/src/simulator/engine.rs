@@ -21,6 +21,7 @@ use crate::functions::Demand;
 use crate::util::rng::Rng;
 
 use super::container::Container;
+use super::keepalive::{self, KeepAlivePolicy};
 use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec, QueuedAdmission};
 use super::{
     ContainerChoice, Decision, InvocationRecord, Policy, Request, SimConfig, SimTime, Verdict,
@@ -43,6 +44,9 @@ enum EventKind {
     Timeout { inv: u64 },
     /// Keep-alive expiry for an idle container.
     Evict { worker: usize, container: u64, idle_epoch: u64 },
+    /// Hybrid-histogram pre-warm: launch a background container of this
+    /// size, timed against the function's expected next arrival.
+    PreWarm { worker: usize, func: usize, vcpus: u32, mem_mb: u32 },
 }
 
 #[derive(Debug, Clone)]
@@ -110,6 +114,35 @@ pub struct LaunchRecord {
     pub background: bool,
 }
 
+/// Why the keep-alive subsystem tore a container down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictReason {
+    /// Its idle TTL (assigned by the keep-alive policy) expired.
+    Expired,
+    /// Demand-driven: evicted before its deadline to admit queued work
+    /// (`--keepalive pressure`).
+    Pressure,
+}
+
+/// One keep-alive/pressure eviction. The warm-pool test battery audits
+/// deadlines and idle periods from this log: `Expired` evictions fire
+/// exactly at their policy deadline, `Pressure` evictions at or before
+/// it, and every eviction targets a container that was idle since
+/// `idle_since` (never `Starting`/`Busy` — a violated invocation would
+/// also surface as a lost record).
+#[derive(Debug, Clone, Copy)]
+pub struct EvictionRecord {
+    pub at: SimTime,
+    pub worker: usize,
+    pub container: u64,
+    pub func: usize,
+    pub reason: EvictReason,
+    /// TTL deadline the policy assigned for this idle period.
+    pub deadline: SimTime,
+    /// When the evicted container's final idle period began.
+    pub idle_since: SimTime,
+}
+
 /// Result of a full simulation run.
 #[derive(Debug)]
 pub struct SimResult {
@@ -120,10 +153,27 @@ pub struct SimResult {
     pub background_launches: u64,
     /// Background launches dropped because the target worker could not
     /// admit them (shed, never queued — pre-warming must not jump ahead
-    /// of demand already waiting).
+    /// of demand already waiting). Late hybrid-histogram pre-warms shed
+    /// by the same rule count here too.
     pub background_shed: u64,
     /// Every container creation, in order.
     pub launches: Vec<LaunchRecord>,
+    /// Every keep-alive/pressure eviction, in order (DESIGN.md §KeepAlive).
+    pub evictions: Vec<EvictionRecord>,
+    /// Demand-driven evictions (subset of `evictions`).
+    pub pressure_evictions: u64,
+    /// Hybrid-histogram pre-warm launches that passed admission.
+    pub prewarm_launches: u64,
+    /// Warm binds served by a pre-warmed container (first use each).
+    pub prewarm_hits: u64,
+    /// Total container-seconds spent idle in the warm pool — the run's
+    /// memory-waste proxy (what keep-alive policies trade against cold
+    /// starts). Includes idle time trailing the last use until eviction.
+    pub idle_container_s: f64,
+    /// `ContainerReady` events whose container no longer existed. No
+    /// teardown path removes a `Starting` container, so this is a
+    /// tripwire: always 0 today (debug builds assert on it).
+    pub ready_miss: u64,
 }
 
 impl SimResult {
@@ -149,10 +199,15 @@ impl SimResult {
     }
 }
 
-/// The engine. Owns cluster state; borrows the policy.
+/// The engine. Owns cluster state and the keep-alive policy; borrows
+/// the scheduling policy.
 pub struct Engine<'p, P: Policy> {
     cfg: SimConfig,
     policy: &'p mut P,
+    /// Keep-alive/eviction policy (DESIGN.md §KeepAlive), built per run
+    /// from `SimConfig::keepalive` so its state (histograms) is rebuilt
+    /// deterministically from the run itself.
+    ka: Box<dyn KeepAlivePolicy>,
     cluster: Cluster,
     rng: Rng,
     events: BinaryHeap<Event>,
@@ -168,6 +223,12 @@ pub struct Engine<'p, P: Policy> {
     background_launches: u64,
     background_shed: u64,
     launches: Vec<LaunchRecord>,
+    evictions: Vec<EvictionRecord>,
+    pressure_evictions: u64,
+    prewarm_launches: u64,
+    prewarm_hits: u64,
+    idle_container_s: f64,
+    ready_miss: u64,
     /// Reused completion buffers (no steady-state allocation).
     done_scratch: Vec<u64>,
     finished_scratch: Vec<u64>,
@@ -178,9 +239,13 @@ impl<'p, P: Policy> Engine<'p, P> {
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let rng = Rng::new(cfg.seed ^ 0x5115_BA71);
         let cluster = Cluster::new(&cfg);
+        // Workers read their `idle_reserves` accounting switch off the
+        // same `keepalive::build` impl this instance answers from.
+        let ka = keepalive::build(&cfg);
         Engine {
             cfg,
             policy,
+            ka,
             cluster,
             rng,
             events: BinaryHeap::new(),
@@ -195,6 +260,12 @@ impl<'p, P: Policy> Engine<'p, P> {
             background_launches: 0,
             background_shed: 0,
             launches: Vec::new(),
+            evictions: Vec::new(),
+            pressure_evictions: 0,
+            prewarm_launches: 0,
+            prewarm_hits: 0,
+            idle_container_s: 0.0,
+            ready_miss: 0,
             done_scratch: Vec::new(),
             finished_scratch: Vec::new(),
         }
@@ -226,6 +297,9 @@ impl<'p, P: Policy> Engine<'p, P> {
                 EventKind::Evict { worker, container, idle_epoch } => {
                     self.on_evict(worker, container, idle_epoch)
                 }
+                EventKind::PreWarm { worker, func, vcpus, mem_mb } => {
+                    self.on_prewarm(worker, func, vcpus, mem_mb)
+                }
             }
             // Admission is an invariant at *every* event, not just at the
             // end of the run. Cheap (two float compares per worker); the
@@ -235,6 +309,19 @@ impl<'p, P: Policy> Engine<'p, P> {
             #[cfg(debug_assertions)]
             self.debug_assert_admission_bounds();
         }
+        // Safety net for idle accounting: every idle container schedules
+        // an Evict that fires before the heap drains, so the pool should
+        // be empty here; anything left still gets its idle time counted.
+        let now = self.now;
+        let trailing: f64 = self
+            .cluster
+            .workers
+            .iter()
+            .flat_map(|w| w.containers.values())
+            .filter(|c| c.is_warm_idle())
+            .map(|c| (now - c.idle_since).max(0.0))
+            .sum();
+        self.idle_container_s += trailing;
         SimResult {
             records: self.records,
             cluster: self.cluster,
@@ -242,6 +329,12 @@ impl<'p, P: Policy> Engine<'p, P> {
             background_launches: self.background_launches,
             background_shed: self.background_shed,
             launches: self.launches,
+            evictions: self.evictions,
+            pressure_evictions: self.pressure_evictions,
+            prewarm_launches: self.prewarm_launches,
+            prewarm_hits: self.prewarm_hits,
+            idle_container_s: self.idle_container_s,
+            ready_miss: self.ready_miss,
         }
     }
 
@@ -272,6 +365,10 @@ impl<'p, P: Policy> Engine<'p, P> {
     // ------------------------------------------------------------------
 
     fn on_arrival(&mut self, idx: usize) {
+        // Feed the keep-alive policy's per-function inter-arrival
+        // histograms (no-op for fixed/pressure).
+        let func_idx = self.requests[idx].func;
+        self.ka.observe_arrival(self.now, func_idx);
         let req = self.requests[idx].clone();
         let decision = self.policy.on_request(self.now, &req, &self.cluster);
         debug_assert!(decision.worker < self.cluster.len(), "bad worker id");
@@ -350,13 +447,31 @@ impl<'p, P: Policy> Engine<'p, P> {
         (worker_id, None, p.decision.vcpus, p.decision.mem_mb)
     }
 
+    /// Admission predicate for a resolved route. A still-valid warm bind
+    /// under reservation-holding keep-alive is capacity-neutral — the
+    /// idle container already holds its own reservation, which simply
+    /// rolls over to busy — so it is always admissible; everything else
+    /// must fit under the worker's free reservations.
+    fn can_admit_route(
+        &self,
+        worker_id: usize,
+        warm: Option<u64>,
+        vcpus: u32,
+        mem_mb: u32,
+    ) -> bool {
+        if warm.is_some() && self.ka.idle_reserves() {
+            return true;
+        }
+        self.cluster.workers[worker_id].can_admit(vcpus, mem_mb)
+    }
+
     /// Enforced admission at bind time: start the invocation if the
     /// worker can reserve its effective size *and* nothing is already
     /// waiting (FIFO — newcomers go behind the queue); park it otherwise.
     fn try_admit(&mut self, inv_id: u64) {
         let (worker_id, warm, ask_vcpus, ask_mem) = self.resolve_route(inv_id);
-        let w = &self.cluster.workers[worker_id];
-        if w.admission_queue_len() == 0 && w.can_admit(ask_vcpus, ask_mem) {
+        let queue_empty = self.cluster.workers[worker_id].admission_queue_len() == 0;
+        if queue_empty && self.can_admit_route(worker_id, warm, ask_vcpus, ask_mem) {
             self.admit(inv_id, worker_id, warm);
         } else {
             let p = self.pending.get_mut(&inv_id).expect("pending invocation");
@@ -366,6 +481,11 @@ impl<'p, P: Policy> Engine<'p, P> {
                 vcpus: p.decision.vcpus,
                 mem_mb: p.decision.mem_mb,
             });
+            // Under demand-driven keep-alive, parking is itself pressure:
+            // idle containers may yield to the queue head right now.
+            if self.ka.demand_driven() {
+                self.drain_admission(worker_id);
+            }
         }
     }
 
@@ -395,8 +515,14 @@ impl<'p, P: Policy> Engine<'p, P> {
             };
             let inv_id = front.inv_id;
             let (_, warm, ask_vcpus, ask_mem) = self.resolve_route(inv_id);
-            if !self.cluster.workers[worker_id].can_admit(ask_vcpus, ask_mem) {
-                break;
+            if !self.can_admit_route(worker_id, warm, ask_vcpus, ask_mem) {
+                // Demand-driven keep-alive: idle containers yield (LRU
+                // first) to the queued head before we give up on it.
+                if !(self.ka.demand_driven()
+                    && self.pressure_evict_for(worker_id, ask_vcpus, ask_mem))
+                {
+                    break;
+                }
             }
             let popped = self.cluster.workers[worker_id].pop_admission();
             debug_assert_eq!(popped.map(|q| q.inv_id), Some(inv_id));
@@ -405,6 +531,44 @@ impl<'p, P: Policy> Engine<'p, P> {
             p.queue_s += self.now - since;
             self.admit(inv_id, worker_id, warm);
         }
+    }
+
+    /// Demand-driven eviction (DESIGN.md §KeepAlive): evict idle
+    /// containers — least-recently-used first, i.e. lowest
+    /// `(idle_since, container id)` — until the worker can admit
+    /// `(vcpus, mem_mb)`. Feasibility is checked first: if even evicting
+    /// *every* idle container would not fit the ask, no warmth is
+    /// sacrificed. `Starting`/`Busy` containers are never candidates.
+    /// Returns whether the ask now fits.
+    fn pressure_evict_for(&mut self, worker_id: usize, vcpus: u32, mem_mb: u32) -> bool {
+        debug_assert!(
+            self.ka.idle_reserves(),
+            "demand-driven eviction without reservation-holding idle frees nothing"
+        );
+        let w = &self.cluster.workers[worker_id];
+        let (idle_vcpus, idle_mem) = w
+            .containers
+            .values()
+            .filter(|c| c.is_warm_idle())
+            .fold((0.0, 0.0), |(v, m), c| (v + c.vcpus as f64, m + c.mem_mb as f64));
+        if w.free_sched_vcpus() + idle_vcpus < vcpus as f64
+            || w.free_mem_mb() + idle_mem < mem_mb as f64
+        {
+            return false;
+        }
+        while !self.cluster.workers[worker_id].can_admit(vcpus, mem_mb) {
+            let victim = self.cluster.workers[worker_id]
+                .containers
+                .values()
+                .filter(|c| c.is_warm_idle())
+                .min_by(|a, b| a.idle_since.total_cmp(&b.idle_since).then(a.id.cmp(&b.id)))
+                .map(|c| c.id);
+            let Some(cid) = victim else {
+                return false;
+            };
+            self.evict_container(worker_id, cid, EvictReason::Pressure);
+        }
+        true
     }
 
     fn cold_start(&mut self, inv_id: u64, worker: usize, func: usize, vcpus: u32, mem_mb: u32) {
@@ -453,7 +617,13 @@ impl<'p, P: Policy> Engine<'p, P> {
 
     fn on_container_ready(&mut self, worker: usize, container: u64) {
         let Some(idle_epoch) = self.cluster.container_ready(worker, container, self.now) else {
-            return; // evicted before ready (shouldn't happen)
+            // A ready event for a container that no longer exists. No
+            // teardown path removes a `Starting` container (keep-alive
+            // and pressure evictions only ever target `Idle`), so this
+            // is a tripwire: counted in release builds, fatal in debug.
+            self.ready_miss += 1;
+            debug_assert!(false, "container {container} evicted before ready");
+            return;
         };
         if let Some(inv) = self.waiting_on_container.remove(&container) {
             if !self.pending.contains_key(&inv) {
@@ -469,17 +639,36 @@ impl<'p, P: Policy> Engine<'p, P> {
             self.bind_and_start(inv, worker, container);
         } else {
             // Background container goes idle: its launch reservation is
-            // released, which may admit queued work.
-            self.push(
-                self.now + self.cfg.keep_alive_s,
-                EventKind::Evict { worker, container, idle_epoch },
-            );
+            // released (unless idle holds reservations), which may admit
+            // queued work. `may_prewarm = false`: only containers that
+            // actually served work request pre-warms, or an unused
+            // pre-warm's own idle transition would chain replacements
+            // forever.
+            self.schedule_idle_evict(worker, container, idle_epoch, false);
             self.drain_admission(worker);
         }
     }
 
     /// Bind the invocation to a ready container and start its phases.
     fn bind_and_start(&mut self, inv_id: u64, worker_id: usize, cid: u64) {
+        // Warm-pool accounting: a warm bind consumes the container's
+        // idle period (idle container-seconds are the memory-waste
+        // proxy), and the first use of a pre-warmed container is a
+        // prewarm hit. A just-ready cold start has `idle_since == now`,
+        // so it contributes zero.
+        {
+            let c = self.cluster.workers[worker_id]
+                .containers
+                .get_mut(&cid)
+                .expect("bind: container exists");
+            if c.is_warm_idle() {
+                self.idle_container_s += (self.now - c.idle_since).max(0.0);
+            }
+            if c.prewarmed {
+                c.prewarmed = false;
+                self.prewarm_hits += 1;
+            }
+        }
         // Container size wins (may be larger than requested).
         let (c_vcpus, c_mem) = self.cluster.acquire_container(worker_id, cid);
         let p = self.pending.get_mut(&inv_id).expect("pending invocation");
@@ -693,10 +882,9 @@ impl<'p, P: Policy> Engine<'p, P> {
         match verdict {
             Verdict::Completed => {
                 let idle_epoch = self.cluster.release_container(worker_id, cid, self.now);
-                self.push(
-                    self.now + self.cfg.keep_alive_s,
-                    EventKind::Evict { worker: worker_id, container: cid, idle_epoch },
-                );
+                // This container served work, so it may request a
+                // pre-warmed replacement when its TTL is short.
+                self.schedule_idle_evict(worker_id, cid, idle_epoch, true);
             }
             Verdict::OomKilled | Verdict::TimedOut => {
                 self.cluster.remove_container(worker_id, cid);
@@ -738,17 +926,110 @@ impl<'p, P: Policy> Engine<'p, P> {
         self.records.push(rec);
     }
 
+    /// One idle transition: consult the keep-alive policy, stamp the TTL
+    /// deadline and any pre-warm intent on the container, and schedule
+    /// the epoch-tagged `Evict`. Both idle paths — background-ready and
+    /// release-after-completion — funnel through here (previously two
+    /// duplicated `Evict` push blocks). The pre-warm is *not* scheduled
+    /// here: it materializes only when the expiry actually evicts the
+    /// container (`evict_container`), so a reuse during the grace
+    /// window cancels the pending pre-warm along with the stale
+    /// eviction — no stale-pre-warm race exists by construction.
+    /// `may_prewarm` gates the intent: only containers that actually
+    /// served work get a replacement, so an unused pre-warm's own idle
+    /// transition cannot chain further pre-warms after demand stops.
+    fn schedule_idle_evict(
+        &mut self,
+        worker: usize,
+        container: u64,
+        idle_epoch: u64,
+        may_prewarm: bool,
+    ) {
+        let func = self.cluster.workers[worker].containers[&container].func;
+        let d = self.ka.on_idle(self.now, func);
+        let deadline = self.now + d.ttl_s.max(0.0);
+        {
+            let c = self.cluster.workers[worker]
+                .containers
+                .get_mut(&container)
+                .expect("idle container exists");
+            debug_assert!(c.is_warm_idle() && c.idle_epoch == idle_epoch);
+            c.evict_deadline = deadline;
+            c.prewarm_at = if may_prewarm {
+                d.prewarm_at.map(|at| at.max(deadline))
+            } else {
+                None
+            };
+        }
+        self.push(deadline, EventKind::Evict { worker, container, idle_epoch });
+    }
+
+    /// A hybrid-histogram pre-warm fires: launch a background container
+    /// of the evicted size if the worker has queue-aware capacity, else
+    /// shed it (pre-warming must never jump ahead of parked demand —
+    /// the same rule as policy-requested background launches).
+    fn on_prewarm(&mut self, worker: usize, func: usize, vcpus: u32, mem_mb: u32) {
+        if self.cluster.workers[worker].has_capacity(vcpus, mem_mb) {
+            let cid = self.launch_container(worker, func, vcpus, mem_mb, None);
+            self.cluster.workers[worker]
+                .containers
+                .get_mut(&cid)
+                .expect("just launched")
+                .prewarmed = true;
+            self.prewarm_launches += 1;
+        } else {
+            self.background_shed += 1;
+        }
+    }
+
+    /// Tear down an idle container through the keep-alive lifecycle:
+    /// account its idle period, log the eviction, remove it everywhere
+    /// (warm indexes + any reservation via `Cluster::remove_container`),
+    /// and fire the pre-warm the policy attached to this idle period —
+    /// only on TTL expiry: a pressure eviction yielded its capacity to
+    /// queued demand, so compensating warmth would immediately be shed.
+    /// Only `Idle` containers are ever eviction targets —
+    /// `Starting`/`Busy` hold work.
+    fn evict_container(&mut self, worker: usize, cid: u64, reason: EvictReason) {
+        let (func, vcpus, mem_mb, idle_since, deadline, prewarm_at) = {
+            let c = &self.cluster.workers[worker].containers[&cid];
+            debug_assert!(c.is_warm_idle(), "keep-alive eviction of a non-idle container");
+            (c.func, c.vcpus, c.mem_mb, c.idle_since, c.evict_deadline, c.prewarm_at)
+        };
+        self.idle_container_s += (self.now - idle_since).max(0.0);
+        if reason == EvictReason::Pressure {
+            self.pressure_evictions += 1;
+        }
+        self.evictions.push(EvictionRecord {
+            at: self.now,
+            worker,
+            container: cid,
+            func,
+            reason,
+            deadline,
+            idle_since,
+        });
+        self.cluster.remove_container(worker, cid);
+        if let (EvictReason::Expired, Some(at)) = (reason, prewarm_at) {
+            self.push(at.max(self.now), EventKind::PreWarm { worker, func, vcpus, mem_mb });
+        }
+    }
+
     fn on_evict(&mut self, worker: usize, container: u64, idle_epoch: u64) {
+        // The idle-epoch staleness guard: expiry only fires when the
+        // container is still in the *same* idle period the event was
+        // scheduled for — a warm reuse in between bumped the epoch, and
+        // the new idle period scheduled its own eviction.
         let expired = match self.cluster.workers[worker].containers.get(&container) {
             None => false,
             Some(c) => c.is_warm_idle() && c.idle_epoch == idle_epoch,
         };
         if expired {
-            self.cluster.remove_container(worker, container);
-            // Idle containers hold no reservation, so this drain is a
-            // no-op today; it keeps the "pop on every capacity release"
-            // contract literal (complete, evict, teardown) and covers a
-            // future demand-driven eviction path.
+            self.evict_container(worker, container, EvictReason::Expired);
+            // Under reservation-holding keep-alive this expiry frees real
+            // capacity; otherwise the drain keeps the "pop on every
+            // capacity release" contract literal (complete, evict,
+            // teardown).
             self.drain_admission(worker);
         }
     }
@@ -869,6 +1150,44 @@ mod tests {
         let res = simulate(cfg, &mut p, reqs);
         let rs = res.sorted_records();
         assert!(rs[1].had_cold_start, "container evicted after keep-alive");
+        // the eviction log witnesses both TTL expiries, exactly at their
+        // policy deadlines, with no pressure evictions under `fixed`
+        assert_eq!(res.evictions.len(), 2);
+        for e in &res.evictions {
+            assert_eq!(e.reason, EvictReason::Expired);
+            assert!((e.at - e.deadline).abs() < 1e-9, "expiry at its deadline");
+            assert!((e.at - e.idle_since - 5.0).abs() < 1e-9, "5 s idle TTL");
+        }
+        assert_eq!(res.pressure_evictions, 0);
+        assert_eq!(res.ready_miss, 0);
+    }
+
+    #[test]
+    fn stale_evict_event_spares_reused_container() {
+        // The idle-epoch staleness guard: a warm reuse between an Evict
+        // being scheduled and firing bumps the idle epoch, so the stale
+        // event must NOT evict the (re-idled) container — only the
+        // eviction scheduled for the *current* idle period may.
+        let mut cfg = SimConfig::small();
+        cfg.keep_alive_s = 5.0;
+        let mut p = FixedPolicy { vcpus: 2, mem_mb: 512, next: 0, reuse_warm: true };
+        // req 2 reuses the container before req 1's eviction deadline
+        // (completion + 5 s ≥ 5 s); req 3 lands within 5 s of req 2's
+        // completion but *after* req 1's stale deadline, so it only
+        // stays warm if the stale eviction was skipped.
+        let reqs = vec![qr_request(1, 0.0), qr_request(2, 4.0), qr_request(3, 8.0)];
+        let res = simulate(cfg, &mut p, reqs);
+        let rs = res.sorted_records();
+        assert!(!rs[1].had_cold_start, "req 2 reuses before the deadline");
+        assert!(
+            !rs[2].had_cold_start,
+            "stale evict event must spare the reused container for req 3"
+        );
+        // exactly one real eviction in the end: the final idle period's
+        assert_eq!(res.evictions.len(), 1);
+        assert_eq!(res.evictions[0].reason, EvictReason::Expired);
+        assert!((res.evictions[0].at - res.evictions[0].deadline).abs() < 1e-9);
+        res.cluster.assert_warm_consistent();
     }
 
     #[test]

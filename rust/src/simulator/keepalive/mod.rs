@@ -1,0 +1,279 @@
+//! Pluggable keep-alive & demand-driven eviction policies (ISSUE 5 /
+//! DESIGN.md §KeepAlive).
+//!
+//! "How long to keep a warm container" was a single fixed TTL
+//! (`SimConfig::keep_alive_s`) baked into the engine; this module makes
+//! it an independently testable axis, orthogonal to "where to run
+//! invocations" (the scheduling [`Policy`](crate::simulator::Policy)).
+//! A [`KeepAlivePolicy`] decides, per idle transition, when the
+//! container should be evicted ([`IdleDecision`]) and whether queued
+//! admission demand may reclaim idle containers early (`pressure`).
+//!
+//! Three registered policies (`--keepalive` on every subcommand):
+//!
+//! * `fixed[:secs]` — the legacy behavior: one TTL for everything. With
+//!   the default 600 s this reproduces the pre-subsystem record streams
+//!   byte-for-byte (same events, same order, no extra RNG draws).
+//! * `histogram[:secs]` — Serverless-in-the-Wild–style per-function
+//!   inter-arrival histograms: short keep-alive for bursty functions
+//!   (the tail percentile), evict-then-pre-warm for predictable
+//!   long-gap functions. `:secs` overrides the fallback TTL used while
+//!   a function's history is still cold.
+//! * `pressure[:secs]` — fixed TTL, but idle containers *hold their
+//!   reservation* (OpenWhisk memory-slot semantics) and yield to queued
+//!   demand: when an admission bind parks and evicting idle containers
+//!   (least-recently-used first) would free enough vCPU/memory, the
+//!   engine evicts exactly enough of them so the queued head admits
+//!   immediately.
+//!
+//! The policy object is stateful (histograms accumulate over a run) and
+//! engine-owned: [`build`] constructs one per simulation, so state is
+//! rebuilt deterministically from the run itself and sweep cells stay
+//! independent.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{SimConfig, SimTime};
+
+pub mod histogram;
+pub mod pressure;
+
+pub use histogram::HistogramKeepAlive;
+pub use pressure::PressureKeepAlive;
+
+/// Which keep-alive policy the engine instantiates. Rides in
+/// [`SimConfig`] (which must stay `Clone`); the stateful policy object
+/// itself is built per run by [`build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KeepAliveMode {
+    /// Legacy fixed TTL (`SimConfig::keep_alive_s`).
+    #[default]
+    Fixed,
+    /// Per-function idle-time histograms + pre-warm window.
+    Histogram,
+    /// Fixed TTL + reservation-holding idle + demand-driven eviction.
+    Pressure,
+}
+
+/// Parsed `--keepalive` value: a mode plus an optional TTL override.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct KeepAliveSpec {
+    pub mode: KeepAliveMode,
+    /// Overrides `SimConfig::keep_alive_s` when set (`fixed:<secs>`,
+    /// `pressure:<secs>`, `histogram:<secs>` for the fallback TTL).
+    pub ttl_s: Option<f64>,
+}
+
+impl KeepAliveSpec {
+    /// Imprint this spec on a config (the `experiments::common::sim_config`
+    /// hook).
+    pub fn apply(&self, cfg: &mut SimConfig) {
+        cfg.keepalive = self.mode;
+        if let Some(t) = self.ttl_s {
+            cfg.keep_alive_s = t;
+        }
+    }
+
+    /// Canonical display name (`fixed:600`-style when a TTL is set).
+    pub fn label(&self) -> String {
+        let base = match self.mode {
+            KeepAliveMode::Fixed => "fixed",
+            KeepAliveMode::Histogram => "histogram",
+            KeepAliveMode::Pressure => "pressure",
+        };
+        match self.ttl_s {
+            Some(t) => format!("{base}:{t}"),
+            None => base.to_string(),
+        }
+    }
+}
+
+/// Registered policy names (`shabari list`, CLI errors).
+pub const KEEPALIVES: &[&str] = &["fixed", "histogram", "pressure"];
+
+/// Parse a `--keepalive` value: `fixed`, `fixed:<secs>`, `histogram`,
+/// `histogram:<secs>`, `pressure`, `pressure:<secs>`.
+pub fn parse(name: &str) -> Result<KeepAliveSpec> {
+    let (base, ttl_s) = match name.split_once(':') {
+        Some((b, t)) => {
+            let secs: f64 = t.parse().map_err(|_| {
+                anyhow::anyhow!("--keepalive {b}:<secs> expects a number, got '{t}'")
+            })?;
+            ensure!(
+                secs.is_finite() && secs > 0.0,
+                "--keepalive {b}:<secs> expects a positive TTL, got {secs}"
+            );
+            (b, Some(secs))
+        }
+        None => (name, None),
+    };
+    let mode = match base {
+        "fixed" => KeepAliveMode::Fixed,
+        "histogram" => KeepAliveMode::Histogram,
+        "pressure" => KeepAliveMode::Pressure,
+        other => bail!(
+            "unknown keep-alive policy '{other}' \
+             (known: {KEEPALIVES:?}, each optionally ':<secs>')"
+        ),
+    };
+    Ok(KeepAliveSpec { mode, ttl_s })
+}
+
+/// What to do with a container that just went idle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IdleDecision {
+    /// Evict after this many idle seconds (the TTL; the engine stamps
+    /// `now + ttl_s` on the container as its eviction deadline).
+    pub ttl_s: f64,
+    /// Optionally launch a fresh same-size container on the same worker
+    /// at this absolute time (the hybrid-histogram pre-warm covering
+    /// the warmth a short TTL gives up). The engine stamps this on the
+    /// container and fires it only if the TTL expiry *actually evicts*
+    /// it — a reuse during the TTL window cancels the pre-warm along
+    /// with the stale eviction.
+    pub prewarm_at: Option<SimTime>,
+}
+
+/// A keep-alive policy: per idle transition, an eviction deadline (and
+/// optional pre-warm); globally, whether idle containers hold
+/// reservations and whether queued demand may evict them. Fed
+/// observations through the hooks so per-function state (histograms) is
+/// rebuilt deterministically from each run.
+pub trait KeepAlivePolicy {
+    fn name(&self) -> &'static str;
+
+    /// A container of `func` went idle at `now`: decide its TTL and any
+    /// pre-warm. Called once per idle transition (background-ready and
+    /// release-after-completion both funnel through the engine's
+    /// `schedule_idle_evict`).
+    fn on_idle(&mut self, now: SimTime, func: usize) -> IdleDecision;
+
+    /// Observe a request arrival (feeds per-function inter-arrival
+    /// histograms). Called for every arrival, before routing.
+    fn observe_arrival(&mut self, _now: SimTime, _func: usize) {}
+
+    /// Idle containers keep holding their `(vcpus, mem)` reservation
+    /// (OpenWhisk-like memory-slot semantics). The single source of
+    /// truth: `Worker::new` reads this off `build(cfg)` for its
+    /// accounting switch, and the engine's admission predicate consults
+    /// its own instance — both see the same impl.
+    fn idle_reserves(&self) -> bool {
+        false
+    }
+
+    /// Queued admissions may evict idle containers (LRU) to free
+    /// capacity. Only meaningful together with `idle_reserves` (idle
+    /// containers that reserve nothing free nothing).
+    fn demand_driven(&self) -> bool {
+        false
+    }
+}
+
+/// Legacy behavior: one fixed TTL for every container, no pre-warm, no
+/// demand-driven eviction. Byte-identical streams to the pre-subsystem
+/// engine when the TTL matches `SimConfig::keep_alive_s`.
+pub struct FixedKeepAlive {
+    ttl_s: f64,
+}
+
+impl FixedKeepAlive {
+    pub fn new(ttl_s: f64) -> Self {
+        FixedKeepAlive { ttl_s }
+    }
+}
+
+impl KeepAlivePolicy for FixedKeepAlive {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn on_idle(&mut self, _now: SimTime, _func: usize) -> IdleDecision {
+        IdleDecision { ttl_s: self.ttl_s, prewarm_at: None }
+    }
+}
+
+/// Build the policy a config asks for (one instance per run).
+pub fn build(cfg: &SimConfig) -> Box<dyn KeepAlivePolicy> {
+    match cfg.keepalive {
+        KeepAliveMode::Fixed => Box::new(FixedKeepAlive::new(cfg.keep_alive_s)),
+        KeepAliveMode::Histogram => Box::new(HistogramKeepAlive::new(cfg.keep_alive_s)),
+        KeepAliveMode::Pressure => Box::new(PressureKeepAlive::new(cfg.keep_alive_s)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_registered_names() {
+        for name in KEEPALIVES {
+            let spec = parse(name).unwrap();
+            assert_eq!(spec.ttl_s, None);
+            assert_eq!(spec.label(), *name);
+        }
+    }
+
+    #[test]
+    fn parse_ttl_suffix_and_label_round_trip() {
+        let spec = parse("fixed:600").unwrap();
+        assert_eq!(spec.mode, KeepAliveMode::Fixed);
+        assert_eq!(spec.ttl_s, Some(600.0));
+        assert_eq!(spec.label(), "fixed:600");
+        assert_eq!(parse("pressure:90").unwrap().mode, KeepAliveMode::Pressure);
+        assert_eq!(parse("histogram:120").unwrap().ttl_s, Some(120.0));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_and_malformed() {
+        assert!(parse("nope").is_err());
+        assert!(parse("fixed:abc").is_err());
+        assert!(parse("fixed:-5").is_err());
+        assert!(parse("fixed:0").is_err());
+        let msg = format!("{:#}", parse("nope").unwrap_err());
+        assert!(msg.contains("fixed"), "error must list known names: {msg}");
+    }
+
+    #[test]
+    fn spec_applies_mode_and_ttl_to_config() {
+        let mut cfg = SimConfig::default();
+        parse("pressure:90").unwrap().apply(&mut cfg);
+        assert_eq!(cfg.keepalive, KeepAliveMode::Pressure);
+        assert_eq!(cfg.keep_alive_s, 90.0);
+        // no TTL suffix leaves the config's TTL untouched
+        let mut cfg = SimConfig::default();
+        parse("histogram").unwrap().apply(&mut cfg);
+        assert_eq!(cfg.keepalive, KeepAliveMode::Histogram);
+        assert_eq!(cfg.keep_alive_s, 600.0);
+    }
+
+    #[test]
+    fn default_spec_is_the_legacy_fixed_ttl() {
+        let mut cfg = SimConfig::default();
+        let before = cfg.clone();
+        KeepAliveSpec::default().apply(&mut cfg);
+        assert_eq!(cfg.keepalive, KeepAliveMode::Fixed);
+        assert_eq!(cfg.keep_alive_s, before.keep_alive_s);
+    }
+
+    #[test]
+    fn built_policies_have_coherent_semantic_flags() {
+        for mode in [KeepAliveMode::Fixed, KeepAliveMode::Histogram, KeepAliveMode::Pressure] {
+            let cfg = SimConfig { keepalive: mode, ..SimConfig::default() };
+            let p = build(&cfg);
+            // only pressure runs with reservation-holding idle containers
+            assert_eq!(p.idle_reserves(), mode == KeepAliveMode::Pressure, "{}", p.name());
+            // demand-driven eviction without reservation-holding idle
+            // containers would evict warmth that frees nothing
+            assert!(!p.demand_driven() || p.idle_reserves(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn fixed_policy_returns_the_configured_ttl() {
+        let mut p = FixedKeepAlive::new(600.0);
+        let d = p.on_idle(12.5, 3);
+        assert_eq!(d, IdleDecision { ttl_s: 600.0, prewarm_at: None });
+        assert!(!p.idle_reserves() && !p.demand_driven());
+    }
+}

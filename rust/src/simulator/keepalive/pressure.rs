@@ -1,0 +1,65 @@
+//! Demand-driven keep-alive: fixed TTL plus LRU eviction under
+//! admission pressure.
+//!
+//! Two semantic switches distinguish this from `fixed`:
+//!
+//! * **idle containers hold their reservation** ([`KeepAlivePolicy::
+//!   idle_reserves`]): like OpenWhisk's memory slots, a warm container
+//!   occupies capacity until it is evicted, so hoarded warmth is
+//!   visible to admission instead of free;
+//! * **queued demand evicts** ([`KeepAlivePolicy::demand_driven`]):
+//!   when an admission bind parks on a worker's FIFO queue and evicting
+//!   idle containers would free enough vCPU/memory, the engine evicts
+//!   the least-recently-used idle containers — lowest
+//!   `(idle_since, container id)` first, `Starting`/`Busy` containers
+//!   are never touched — until the queued head admits immediately
+//!   (`Engine::pressure_evict_for`).
+//!
+//! The TTL itself stays fixed (`SimConfig::keep_alive_s`, or the
+//! `pressure:<secs>` override): pressure changes *who wins* when warmth
+//! and demand collide, not the idle horizon.
+
+use super::{IdleDecision, KeepAlivePolicy};
+use crate::simulator::SimTime;
+
+pub struct PressureKeepAlive {
+    ttl_s: f64,
+}
+
+impl PressureKeepAlive {
+    pub fn new(ttl_s: f64) -> Self {
+        PressureKeepAlive { ttl_s }
+    }
+}
+
+impl KeepAlivePolicy for PressureKeepAlive {
+    fn name(&self) -> &'static str {
+        "pressure"
+    }
+
+    fn on_idle(&mut self, _now: SimTime, _func: usize) -> IdleDecision {
+        IdleDecision { ttl_s: self.ttl_s, prewarm_at: None }
+    }
+
+    fn idle_reserves(&self) -> bool {
+        true
+    }
+
+    fn demand_driven(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttl_is_fixed_and_pressure_flags_are_set() {
+        let mut p = PressureKeepAlive::new(300.0);
+        assert_eq!(p.on_idle(7.0, 2), IdleDecision { ttl_s: 300.0, prewarm_at: None });
+        assert_eq!(p.on_idle(900.0, 5).ttl_s, 300.0, "TTL does not drift over time");
+        assert!(p.idle_reserves(), "idle warmth must occupy capacity to be evictable");
+        assert!(p.demand_driven());
+    }
+}

@@ -5,7 +5,10 @@
 //! * workers with physical cores, scheduler admission limits (`userCpu`),
 //!   memory capacity, and a shared NIC;
 //! * container lifecycle: cold start (lognormal latency), warm pools,
-//!   keep-alive eviction, proactive background launches;
+//!   pluggable keep-alive/eviction policies (fixed TTL, per-function
+//!   histograms with pre-warm, demand-driven pressure eviction —
+//!   [`keepalive`], DESIGN.md §KeepAlive), proactive background
+//!   launches;
 //! * execution in phases — network fetch (bandwidth-shared), serial
 //!   compute (1 vCPU), parallel compute (`min(alloc, maxpar)` vCPUs) —
 //!   under processor sharing when a worker's demand exceeds its cores;
@@ -32,6 +35,7 @@
 
 pub mod container;
 pub mod engine;
+pub mod keepalive;
 pub mod worker;
 
 use crate::featurizer::InputSpec;
@@ -184,8 +188,12 @@ pub struct SimConfig {
     /// Mean cold-start latency, seconds (lognormal).
     pub cold_start_mean_s: f64,
     pub cold_start_sigma: f64,
-    /// Idle container keep-alive before eviction, seconds.
+    /// Idle container keep-alive before eviction, seconds (the fixed
+    /// TTL; also the histogram policy's cold-history fallback).
     pub keep_alive_s: f64,
+    /// Which keep-alive/eviction policy the engine runs (DESIGN.md
+    /// §KeepAlive). `Fixed` reproduces the legacy single-TTL behavior.
+    pub keepalive: keepalive::KeepAliveMode,
     /// Platform max invocation walltime.
     pub timeout_s: f64,
     /// RNG seed for execution noise / cold-start draws.
@@ -203,6 +211,7 @@ impl Default for SimConfig {
             cold_start_mean_s: 0.55,
             cold_start_sigma: 0.35,
             keep_alive_s: 600.0,
+            keepalive: keepalive::KeepAliveMode::Fixed,
             timeout_s: 300.0,
             seed: 0xC0FFEE,
         }
@@ -297,6 +306,9 @@ mod tests {
         assert_eq!(c.workers, 16);
         assert_eq!(c.sched_vcpu_limit, 90.0);
         assert_eq!(c.mem_gb, 125.0);
+        // the default keep-alive is the legacy fixed 600 s TTL
+        assert_eq!(c.keepalive, keepalive::KeepAliveMode::Fixed);
+        assert_eq!(c.keep_alive_s, 600.0);
     }
 }
 

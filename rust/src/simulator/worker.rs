@@ -19,7 +19,12 @@
 //! Admission contract (DESIGN.md §Admission): capacity is reserved at
 //! container *launch* — a container holds its (vcpus, mem) reservation
 //! while `Starting` or `Busy`, and releases it while `Idle` (§5: idle
-//! containers consume no scheduler budget). The reservation view
+//! containers consume no scheduler budget) — unless the keep-alive
+//! policy runs with reservation-holding idle containers
+//! ([`Worker::idle_reserves`], DESIGN.md §KeepAlive: under `pressure`
+//! warm containers occupy capacity like OpenWhisk memory slots until
+//! evicted, which is what makes demand-driven eviction free anything at
+//! all). The reservation view
 //! (`allocated_*`, maintained exclusively by the container-lifecycle
 //! methods) is what the engine's hard admission check reads; the
 //! queued-demand view ([`Worker::queued_vcpus`]/[`Worker::queued_mem_mb`],
@@ -122,6 +127,14 @@ pub struct Worker {
     pub active: BTreeMap<u64, ActiveInv>,
     /// Sorted index of idle warm containers.
     warm: BTreeSet<WarmKey>,
+    /// Accounting switch (DESIGN.md §KeepAlive): when true, `Idle`
+    /// containers keep holding their `(vcpus, mem)` reservation —
+    /// ready/release no longer release and acquire no longer re-charges
+    /// — so warmth occupies admission capacity until evicted. Read off
+    /// the keep-alive policy `SimConfig::keepalive` builds
+    /// (`KeepAlivePolicy::idle_reserves`), the same impl the
+    /// engine-owned instance answers from — one source of truth.
+    pub idle_reserves: bool,
     /// Reserved resources of `Starting` + `Busy` containers — the hard
     /// admission view. Cold starts and background pre-warms reserve at
     /// *launch* (closing the decision-to-bind race over their 0.1–10 s
@@ -172,6 +185,17 @@ pub struct Worker {
 
 impl Worker {
     pub fn new(id: usize, cfg: &super::SimConfig) -> Self {
+        Self::with_idle_reserves(id, cfg, super::keepalive::build(cfg).idle_reserves())
+    }
+
+    /// [`Self::new`] with the keep-alive accounting switch precomputed:
+    /// `Cluster::new` builds the policy once and fans the flag out
+    /// instead of boxing one throwaway policy per worker.
+    pub(crate) fn with_idle_reserves(
+        id: usize,
+        cfg: &super::SimConfig,
+        idle_reserves: bool,
+    ) -> Self {
         Worker {
             id,
             physical_cores: cfg.physical_cores,
@@ -181,6 +205,7 @@ impl Worker {
             containers: BTreeMap::new(),
             active: BTreeMap::new(),
             warm: BTreeSet::new(),
+            idle_reserves,
             allocated_vcpus: 0.0,
             allocated_mem_mb: 0.0,
             busy_vcpus: 0.0,
@@ -229,6 +254,24 @@ impl Worker {
     pub fn has_capacity(&self, vcpus: u32, mem_mb: u32) -> bool {
         self.free_sched_vcpus() - self.queued_vcpus() >= vcpus as f64
             && self.free_mem_mb() - self.queued_mem_mb() >= mem_mb as f64
+    }
+
+    /// Scheduler-facing capacity check for binding an *idle warm
+    /// container of this size living on this worker*. Under
+    /// reservation-holding keep-alive (`pressure`, DESIGN.md §KeepAlive)
+    /// the candidate already holds its own reservation, so the bind is
+    /// capacity-neutral — without this, a warm container whose own
+    /// reservation fills the worker would veto its own reuse and be
+    /// pressure-evicted for the resulting cold start. Only queued
+    /// backlog rejects the placement then (a new bind parks behind the
+    /// FIFO queue regardless). With free idle containers this is
+    /// exactly [`Self::has_capacity`].
+    pub fn has_capacity_for_warm(&self, vcpus: u32, mem_mb: u32) -> bool {
+        if self.idle_reserves {
+            self.admission_queue_len() == 0
+        } else {
+            self.has_capacity(vcpus, mem_mb)
+        }
     }
 
     // -- admission queue (engine-driven FIFO) ---------------------------
@@ -305,23 +348,25 @@ impl Worker {
 
     /// Adopt a container. `Starting` containers are unindexed and
     /// reserve capacity immediately (reserve-at-launch); `Idle` ones join
-    /// the warm index with no reservation; `Busy` inserts (test setups)
-    /// reserve like any running container.
+    /// the warm index with no reservation (unless [`Self::idle_reserves`]);
+    /// `Busy` inserts (test setups) reserve like any running container.
     pub fn insert_container(&mut self, c: Container) {
         if c.is_warm_idle() {
             self.warm.insert(Self::warm_key(&c));
-        } else {
+        }
+        if !c.is_warm_idle() || self.idle_reserves {
             self.reserve(c.vcpus, c.mem_mb);
         }
         self.containers.insert(c.id, c);
     }
 
     /// Tear a container down (eviction, OOM, timeout). Releases its
-    /// reservation when it was `Starting` or `Busy`.
+    /// reservation when it was `Starting` or `Busy` — or in any state
+    /// under reservation-holding idle semantics.
     pub fn remove_container(&mut self, cid: u64) -> Option<Container> {
         let c = self.containers.remove(&cid)?;
         self.warm.remove(&Self::warm_key(&c));
-        if !c.is_warm_idle() {
+        if !c.is_warm_idle() || self.idle_reserves {
             self.unreserve(c.vcpus, c.mem_mb);
         }
         Some(c)
@@ -329,9 +374,11 @@ impl Worker {
 
     /// Cold start finished: the container joins the warm pool and drops
     /// its launch reservation (a binding invocation re-charges it via
-    /// [`Self::acquire_container`] in the same event). Returns its
-    /// (new idle epoch, warm key), or None if torn down meanwhile.
-    /// The key lets [`Cluster`] update its index without a second probe.
+    /// [`Self::acquire_container`] in the same event) — under
+    /// reservation-holding idle semantics the launch reservation simply
+    /// rolls over into the idle one. Returns its (new idle epoch, warm
+    /// key), or None if torn down meanwhile. The key lets [`Cluster`]
+    /// update its index without a second probe.
     pub fn container_ready(&mut self, cid: u64, now: SimTime) -> Option<(u64, WarmKey)> {
         let c = self.containers.get_mut(&cid)?;
         c.mark_ready(now);
@@ -339,11 +386,14 @@ impl Worker {
         let key = Self::warm_key(c);
         let (vcpus, mem_mb) = (c.vcpus, c.mem_mb);
         self.warm.insert(key);
-        self.unreserve(vcpus, mem_mb);
+        if !self.idle_reserves {
+            self.unreserve(vcpus, mem_mb);
+        }
         Some((epoch, key))
     }
 
-    /// Mark a warm container busy (re-charging its reservation); returns
+    /// Mark a warm container busy (re-charging its reservation — a
+    /// no-op charge when idle containers already hold theirs); returns
     /// its warm key (`(func, vcpus, mem_mb, id)`).
     pub fn acquire_container(&mut self, cid: u64) -> WarmKey {
         let c = self.containers.get_mut(&cid).expect("acquire: container exists");
@@ -351,12 +401,15 @@ impl Worker {
         let (vcpus, mem_mb) = (c.vcpus, c.mem_mb);
         c.acquire();
         self.warm.remove(&key);
-        self.reserve(vcpus, mem_mb);
+        if !self.idle_reserves {
+            self.reserve(vcpus, mem_mb);
+        }
         key
     }
 
     /// Return a busy container to the warm pool, releasing its
-    /// reservation; returns its (idle epoch, warm key).
+    /// reservation (kept when idle containers reserve); returns its
+    /// (idle epoch, warm key).
     pub fn release_container(&mut self, cid: u64, now: SimTime) -> (u64, WarmKey) {
         let c = self.containers.get_mut(&cid).expect("release: container exists");
         c.release(now);
@@ -364,7 +417,9 @@ impl Worker {
         let key = Self::warm_key(c);
         let (vcpus, mem_mb) = (c.vcpus, c.mem_mb);
         self.warm.insert(key);
-        self.unreserve(vcpus, mem_mb);
+        if !self.idle_reserves {
+            self.unreserve(vcpus, mem_mb);
+        }
         (epoch, key)
     }
 
@@ -641,7 +696,7 @@ impl Worker {
         let mut vcpus = 0u64;
         let mut mem = 0u64;
         for c in self.containers.values() {
-            if !c.is_warm_idle() {
+            if !c.is_warm_idle() || self.idle_reserves {
                 vcpus += c.vcpus as u64;
                 mem += c.mem_mb as u64;
             }
@@ -697,8 +752,14 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(cfg: &super::SimConfig) -> Self {
+        // One keep-alive policy build for the whole cluster: the
+        // `idle_reserves` accounting switch comes from the same impl the
+        // engine-owned instance answers from (single source of truth).
+        let idle_reserves = super::keepalive::build(cfg).idle_reserves();
         Cluster {
-            workers: (0..cfg.workers).map(|i| Worker::new(i, cfg)).collect(),
+            workers: (0..cfg.workers)
+                .map(|i| Worker::with_idle_reserves(i, cfg, idle_reserves))
+                .collect(),
             warm: BTreeSet::new(),
         }
     }
@@ -992,6 +1053,40 @@ mod tests {
         assert_eq!(w.allocated_vcpus, 0.0);
         assert_eq!(w.allocated_mem_mb, 0.0);
         assert_eq!(w.peak_allocated_vcpus, 8.0, "peak witnesses the high-water mark");
+        w.assert_admission_consistent();
+    }
+
+    #[test]
+    fn idle_containers_hold_reservations_under_pressure_mode() {
+        use crate::simulator::keepalive::KeepAliveMode;
+        let cfg = SimConfig { keepalive: KeepAliveMode::Pressure, ..SimConfig::default() };
+        let mut w = Worker::new(0, &cfg);
+        assert!(w.idle_reserves);
+        // launch reserves as always
+        w.insert_container(Container::new(1, 0, 8, 2048, 1.0));
+        assert_eq!(w.allocated_vcpus, 8.0);
+        // ready -> idle KEEPS the reservation (warmth occupies capacity)
+        w.container_ready(1, 1.0).unwrap();
+        assert_eq!(w.allocated_vcpus, 8.0);
+        assert_eq!(w.allocated_mem_mb, 2048.0);
+        w.assert_admission_consistent();
+        // acquire must not double-charge; release keeps holding
+        w.acquire_container(1);
+        assert_eq!(w.allocated_vcpus, 8.0);
+        w.release_container(1, 2.0);
+        assert_eq!(w.allocated_vcpus, 8.0);
+        w.assert_admission_consistent();
+        // only eviction/teardown frees the capacity
+        w.remove_container(1).unwrap();
+        assert_eq!(w.allocated_vcpus, 0.0);
+        assert_eq!(w.allocated_mem_mb, 0.0);
+        assert_eq!(w.peak_allocated_vcpus, 8.0);
+        w.assert_admission_consistent();
+        // inserting an already-idle container (test setups) reserves too
+        let mut idle = Container::new(2, 0, 4, 512, 0.0);
+        idle.mark_ready(0.0);
+        w.insert_container(idle);
+        assert_eq!(w.allocated_vcpus, 4.0);
         w.assert_admission_consistent();
     }
 
