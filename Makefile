@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench bench-scale scenarios overload keepalive clean
+.PHONY: artifacts build test bench bench-scale scenarios overload keepalive adversity clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -30,6 +30,14 @@ overload:
 # invariant per replicate; dumps out/keepalive.json — EXPERIMENTS.md.
 keepalive:
 	cargo run --release -- experiment keepalive
+
+# Adversity matrix (policy x keep-alive x fault profile: none/crash/
+# stragglers/hetero/chaos on a small cluster): SLO + failure/requeue
+# counters under deterministic fault injection, with the release-mode
+# `Cluster::check_invariants` audit per replicate; dumps
+# out/adversity.json — EXPERIMENTS.md + DESIGN.md §Faults.
+adversity:
+	cargo run --release -- experiment adversity
 
 bench:
 	cargo bench

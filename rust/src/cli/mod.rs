@@ -41,6 +41,8 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
     crate::workload::scenario::by_name(&scenario)?;
     // same fail-fast contract for the keep-alive policy
     let keepalive = crate::simulator::keepalive::parse(&a.get_or("keepalive", "fixed"))?;
+    // ... and for the fault profile (default: an immortal, uniform cluster)
+    let faults = crate::simulator::faults::parse(&a.get_or("faults", "none"))?;
     Ok(Ctx {
         seed: a.get_u64("seed", 42)?,
         backend,
@@ -55,6 +57,8 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         overload_workers: a.get_usize("overload-workers", 4)?.max(1),
         keepalive,
         keepalive_workers: a.get_usize("keepalive-workers", 4)?.max(1),
+        faults,
+        adversity_workers: a.get_usize("adversity-workers", 4)?.max(1),
     })
 }
 
@@ -80,6 +84,11 @@ fn run(argv: &[String]) -> Result<()> {
             println!(
                 "keep-alive:  {} (each optionally ':<secs>')",
                 crate::simulator::keepalive::KEEPALIVES.join(", ")
+            );
+            println!(
+                "faults:      {} (crash/chaos take ':<downtime_s>', \
+                 stragglers ':<factor>')",
+                crate::simulator::faults::FAULTS.join(", ")
             );
             Ok(())
         }
@@ -143,6 +152,12 @@ fn cmd_run(a: &args::Args) -> Result<()> {
         format!("{:.1}% / {:.2}s", m.queued_pct, m.queue_wait.p99),
     ]);
     t.row(vec!["OOM / timeout".into(), format!("{:.1}% / {:.1}%", m.oom_pct, m.timeout_pct)]);
+    if m.worker_crashes > 0 || m.failed_pct > 0.0 {
+        t.row(vec![
+            "failed / crashes / requeued".into(),
+            format!("{:.1}% / {} / {}", m.failed_pct, m.worker_crashes, m.requeued_on_crash),
+        ]);
+    }
     t.row(vec!["mean e2e latency".into(), format!("{:.2}s", m.mean_e2e_s)]);
     t.row(vec!["throughput".into(), format!("{:.2}/s", m.throughput)]);
     t.row(vec!["containers created".into(), m.containers_created.to_string()]);
@@ -250,7 +265,8 @@ fn print_help() {
                           --rps <f>         (default 4)\n\
            experiment   regenerate a paper figure/table\n\
                           <id>              fig1..fig14, table1-3, scenarios,\n\
-                                            scale, overload, keepalive, or 'all'\n\
+                                            scale, overload, keepalive,\n\
+                                            adversity, or 'all'\n\
                           --scale-workers <n>  scale-grid cluster size (default 64)\n\
                           --scale-rps <f>      scale-grid request rate (default 24)\n\
                           --overload-workers <n>  overload-sweep cluster size\n\
@@ -260,6 +276,11 @@ fn print_help() {
                           --keepalive-workers <n>  keepalive-matrix cluster size\n\
                                             (default 4; policy x keep-alive x\n\
                                             scenario grid, dumps out/keepalive.json)\n\
+                          --adversity-workers <n>  adversity-matrix cluster size\n\
+                                            (default 4; policy x keep-alive x\n\
+                                            fault-profile grid with per-replicate\n\
+                                            invariant checks, dumps\n\
+                                            out/adversity.json)\n\
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\
@@ -282,6 +303,12 @@ fn print_help() {
                                    pre-warm), or pressure (idle containers\n\
                                    yield to queued demand, LRU eviction);\n\
                                    each accepts ':<secs>' as TTL override\n\
+           --faults <name>         fault profile: none (default), crash or\n\
+                                   crash:<downtime_s> (seed-derived worker\n\
+                                   crash/restart cycles), stragglers or\n\
+                                   stragglers:<factor> (slow workers),\n\
+                                   hetero (mixed worker classes), chaos or\n\
+                                   chaos:<downtime_s> (all three at once)\n\
            --slo-multiplier <f>    SLO = f x median isolated time (default 1.4)\n\
            --xla                   use the AOT XLA learner (production path;\n\
                                    needs a `--features xla` build)\n\

@@ -178,6 +178,17 @@ impl ModelBank {
         self.func_obs.get(&func).copied().unwrap_or(0)
     }
 
+    /// Discount `n` observations of `func` (saturating): a worker crash
+    /// takes the executions it contributed with it, pushing the function
+    /// back toward (or into) its exploration window. Model weights are
+    /// left as-is — SGD history cannot be surgically unlearned — so this
+    /// models Shabari re-verifying confidence after losing a node.
+    pub fn forget(&mut self, func: usize, n: u64) {
+        if let Some(obs) = self.func_obs.get_mut(&func) {
+            *obs = obs.saturating_sub(n);
+        }
+    }
+
     pub fn formulation(&self) -> Formulation {
         self.formulation
     }

@@ -167,6 +167,15 @@ impl ResourceAllocator {
         self.mem_bank.update(&self.factory, rec.func, kind, &x_mem, &mc);
     }
 
+    /// Discount `n` of `func`'s observations from both banks (saturating):
+    /// a crashed worker takes its contributed executions with it, so the
+    /// function may fall back under its confidence thresholds and re-enter
+    /// the default-allocation learning phase (DESIGN.md §Faults).
+    pub fn forget(&mut self, func: usize, n: u64) {
+        self.vcpu_bank.forget(func, n);
+        self.mem_bank.forget(func, n);
+    }
+
     /// Observation counters (sensitivity experiments).
     pub fn vcpu_observations(&self, func: usize) -> u64 {
         self.vcpu_bank.observations(func)
@@ -304,6 +313,30 @@ mod tests {
         let alloc = a.allocate(&r);
         assert!(alloc.vcpus_from_model, "3 obs >= vcpu threshold 2");
         assert!(!alloc.mem_from_model, "3 obs < mem threshold 4");
+    }
+
+    #[test]
+    fn forget_discounts_observations_and_regates_confidence() {
+        let mut cfg = AllocatorConfig::default();
+        cfg.vcpu_confidence = 2;
+        cfg.mem_confidence = 2;
+        let mut a = ResourceAllocator::new(cfg).unwrap();
+        let r = req("qr", 1.0);
+        for _ in 0..3 {
+            a.feedback(&completed(&r, 16, 4096, 0.2, 1.0, 0.1));
+        }
+        assert_eq!(a.vcpu_observations(r.func), 3);
+        assert!(a.allocate(&r).vcpus_from_model);
+        a.forget(r.func, 2);
+        assert_eq!(a.vcpu_observations(r.func), 1);
+        assert_eq!(a.mem_observations(r.func), 1);
+        assert!(
+            !a.allocate(&r).vcpus_from_model,
+            "forgetting must push the function back under confidence"
+        );
+        a.forget(r.func, 100);
+        assert_eq!(a.vcpu_observations(r.func), 0, "forget saturates at zero");
+        a.forget(999, 5); // unknown function: no-op, no panic
     }
 
     #[test]

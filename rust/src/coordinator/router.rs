@@ -2,8 +2,10 @@
 //! `simulator::Policy` — this is the Shabari system the experiments run
 //! (Figure 5's invocation life cycle).
 
+use std::collections::BTreeMap;
+
 use crate::simulator::worker::Cluster;
-use crate::simulator::{Decision, InvocationRecord, Policy, Request, SimTime};
+use crate::simulator::{Decision, InvocationRecord, Policy, Request, SimTime, Verdict};
 
 use super::allocator::ResourceAllocator;
 use super::scheduler::Scheduler;
@@ -12,13 +14,17 @@ use super::scheduler::Scheduler;
 pub struct ShabariPolicy {
     pub allocator: ResourceAllocator,
     pub scheduler: Box<dyn Scheduler>,
+    /// Feedback contributions per `(worker, func)` — the ledger a worker
+    /// crash consults to forget what that worker's runs taught the
+    /// allocator (DESIGN.md §Faults).
+    feedback_counts: BTreeMap<(usize, usize), u64>,
     name: String,
 }
 
 impl ShabariPolicy {
     pub fn new(allocator: ResourceAllocator, scheduler: Box<dyn Scheduler>) -> Self {
         let name = format!("shabari({})", scheduler.name());
-        ShabariPolicy { allocator, scheduler, name }
+        ShabariPolicy { allocator, scheduler, feedback_counts: BTreeMap::new(), name }
     }
 
     /// The full system with default config + Shabari scheduler.
@@ -53,8 +59,29 @@ impl Policy for ShabariPolicy {
     }
 
     fn on_complete(&mut self, _now: SimTime, rec: &InvocationRecord, _cluster: &Cluster) {
+        if rec.verdict == Verdict::Failed {
+            // The worker daemon died with the execution: there is no
+            // measurement to report, so nothing reaches the learner.
+            return;
+        }
+        *self.feedback_counts.entry((rec.worker, rec.func)).or_insert(0) += 1;
         // 5: daemon -> metadata store -> online update (off critical path)
         self.allocator.feedback(rec);
+    }
+
+    fn on_worker_crash(&mut self, _now: SimTime, worker: usize, _cluster: &Cluster) {
+        // Per-function observations contributed by the crashed worker's
+        // daemon are lost with it: discount them so confidence gating may
+        // re-enter the learning phase (DESIGN.md §Faults).
+        let lost: Vec<(usize, u64)> = self
+            .feedback_counts
+            .range((worker, 0)..=(worker, usize::MAX))
+            .map(|(&(_, func), &n)| (func, n))
+            .collect();
+        for (func, n) in lost {
+            self.allocator.forget(func, n);
+            self.feedback_counts.remove(&(worker, func));
+        }
     }
 }
 

@@ -1,0 +1,271 @@
+//! `experiment adversity` — the policy × keep-alive × fault-profile
+//! matrix (DESIGN.md §Faults): scheduling policies crossed with retention
+//! policies under every registered fault profile, replicated across
+//! `Ctx::seeds` seeds on `Ctx::jobs` threads, on a deliberately small
+//! cluster (`--adversity-workers`) so one crashed worker is a real
+//! fraction of capacity.
+//!
+//! The question it answers: Shabari's headline claim is SLO attainment
+//! under real-world conditions, yet every other experiment runs on an
+//! immortal, uniform cluster. This matrix scores each policy when the
+//! cluster itself misbehaves — crash/restart cycles, straggler workers,
+//! heterogeneous capacity classes, and all three at once. Expected shape
+//! (EXPERIMENTS.md §Adversity): Shabari degrades gracefully (its feedback
+//! loop re-learns after losing observations, and right-sizing leaves
+//! slack for rerouted work), while static baselines lose SLO attainment
+//! under stragglers and crashes because their fixed sizes cannot absorb
+//! slower or scarcer capacity.
+//!
+//! Unlike overload/keepalive, the invariant check here is the first-class
+//! [`Cluster::check_invariants`] hook called per replicate — plain
+//! `assert!`s that fire in release builds, checked against each worker's
+//! *own* (possibly heterogeneous) limits. The global-limit
+//! `ensure_admission_invariant` would be wrong under `hetero`.
+//!
+//! Emits `out/adversity.json` (`make adversity`; CI runs a shrunk smoke).
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::simulator::faults;
+use crate::simulator::keepalive as ka;
+use crate::simulator::SimConfig;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+
+use super::common::{self, Ctx};
+use super::sweep::{self, Cell, CellOutcome};
+
+/// Scheduling policies crossed with the fault axis: the full stack and
+/// the biggest static baseline (the paper's main foil).
+pub const ADV_POLICIES: &[&str] = &["shabari", "static-large"];
+
+/// Retention axis: the legacy fixed default and demand-driven pressure
+/// eviction (whose reservation-holding ledger is the one a crash must
+/// not corrupt).
+pub const ADV_KEEPALIVE: &[&str] = &["fixed:600", "pressure"];
+
+/// The fault axis: every registered profile, including the `none`
+/// control column.
+pub const ADV_FAULTS: &[&str] = &["none", "crash", "stragglers", "hetero", "chaos"];
+
+/// Load on the small `--adversity-workers` cluster: busy enough that a
+/// crash displaces real in-flight work, below the overload meltdown.
+pub const ADV_RPS: f64 = 12.0;
+
+/// Cell label carrying both non-policy axes (salts replicate seeds so
+/// the same policy under two profiles samples disjoint RNG streams at
+/// replicates ≥ 1, while replicate 0 stays grid-wide paired).
+fn cell_label(fault: &str, keepalive: &str) -> String {
+    format!("faults:{fault}|keepalive:{keepalive}")
+}
+
+/// Recover (fault, keepalive) from a cell label.
+fn cell_parts(cell: &Cell) -> (&str, &str) {
+    let rest = cell.label.strip_prefix("faults:").unwrap_or(&cell.label);
+    match rest.split_once("|keepalive:") {
+        Some((fault, keepalive)) => (fault, keepalive),
+        None => (rest, "fixed:600"),
+    }
+}
+
+/// Run the policy × fault × keepalive grid; outcome index is
+/// `(pi * ADV_FAULTS.len() + fi) * ADV_KEEPALIVE.len() + ki`. Every
+/// replicate runs `Cluster::check_invariants()` — release-mode
+/// reservation/warm-index/peak checks against per-worker limits.
+pub fn run_adversity(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>> {
+    let workers = ctx.adversity_workers;
+    let cells: Vec<Cell> = ADV_POLICIES
+        .iter()
+        .flat_map(|p| {
+            ADV_FAULTS.iter().flat_map(move |f| {
+                ADV_KEEPALIVE
+                    .iter()
+                    .map(move |k| Cell::labeled(p, rps, &cell_label(f, k), workers as f64))
+            })
+        })
+        .collect();
+    sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        let (fault, keepalive) = cell_parts(cell);
+        let fspec = faults::parse(fault)?;
+        let kspec = ka::parse(keepalive)?;
+        let cctx = ctx.with_seed(seed).with_keepalive(kspec).with_faults(fspec);
+        let workload = cctx.workload();
+        let cfg = SimConfig { workers, ..common::sim_config(&cctx) };
+        let (res, metrics) = common::run_one(&cell.policy, &cctx, &workload, cell.rps, &cfg)?;
+        // First-class invariant hook (ISSUE 6): fires in release builds,
+        // hetero-safe (each worker audited against its own limits).
+        res.cluster.check_invariants();
+        Ok(metrics)
+    })
+}
+
+pub fn adversity(ctx: &Ctx) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let outcomes = run_adversity(ctx, ADV_RPS)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "(adversity matrix: {} cells x {} seed(s) on {} job(s), {wall:.1}s wall; \
+         cluster invariants held on every replicate)",
+        outcomes.len(),
+        ctx.seeds,
+        ctx.jobs
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "adversity: {} workers @ {} rps, {}s trace (cross-seed means; \
+             failed = invocations lost to crashes)",
+            ctx.adversity_workers, ADV_RPS, ctx.duration_s
+        ),
+        &[
+            "system",
+            "faults",
+            "keepalive",
+            "SLO viol [95% CI]",
+            "failed",
+            "crashes",
+            "requeued",
+            "slowdown",
+            "cold",
+            "queue p99 s",
+        ],
+    );
+    for out in &outcomes {
+        let (fault, keepalive) = cell_parts(&out.cell);
+        let m = out.mean_metrics();
+        t.row(vec![
+            out.cell.policy.clone(),
+            fault.to_string(),
+            keepalive.to_string(),
+            out.stat(|m| m.slo_violation_pct).fmt_ci(1),
+            fpct(m.failed_pct),
+            m.worker_crashes.to_string(),
+            m.requeued_on_crash.to_string(),
+            fnum(m.straggler_slowdown, 2),
+            fpct(m.cold_start_pct),
+            fnum(m.queue_wait.p99, 2),
+        ]);
+    }
+    t.note(
+        "expected shape: Shabari degrades gracefully under every profile; static \
+         baselines lose SLO attainment under stragglers/chaos (fixed sizes cannot \
+         absorb slower capacity) and pay more failed work under crash",
+    );
+    t.print();
+
+    let dump = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("workers", Json::Num(ctx.adversity_workers as f64)),
+                ("rps", Json::Num(ADV_RPS)),
+                ("duration_s", Json::Num(ctx.duration_s)),
+                ("seeds", Json::Num(ctx.seeds as f64)),
+                ("jobs", Json::Num(ctx.jobs as f64)),
+                ("seed", Json::Num(ctx.seed as f64)),
+            ]),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                outcomes
+                    .iter()
+                    .map(|out| {
+                        let (fault, keepalive) = cell_parts(&out.cell);
+                        let m = out.mean_metrics();
+                        let viol = out.stat(|m| m.slo_violation_pct);
+                        Json::obj(vec![
+                            ("policy", Json::Str(out.cell.policy.clone())),
+                            ("faults", Json::Str(fault.to_string())),
+                            ("keepalive", Json::Str(keepalive.to_string())),
+                            ("slo_violation_pct_mean", Json::Num(viol.mean)),
+                            ("slo_violation_pct_ci95_lo", Json::Num(viol.ci95.0)),
+                            ("slo_violation_pct_ci95_hi", Json::Num(viol.ci95.1)),
+                            ("failed_pct", Json::Num(m.failed_pct)),
+                            ("worker_crashes", Json::Num(m.worker_crashes as f64)),
+                            ("requeued_on_crash", Json::Num(m.requeued_on_crash as f64)),
+                            ("straggler_slowdown", Json::Num(m.straggler_slowdown)),
+                            ("cold_start_pct", Json::Num(m.cold_start_pct)),
+                            ("timeout_pct", Json::Num(m.timeout_pct)),
+                            ("queue_p99_s", Json::Num(m.queue_wait.p99)),
+                            ("queued_pct", Json::Num(m.queued_pct)),
+                            ("mean_e2e_s", Json::Num(m.mean_e2e_s)),
+                            ("idle_container_s", Json::Num(m.idle_container_s)),
+                            ("peak_alloc_vcpus", Json::Num(m.peak_alloc_vcpus)),
+                            ("invocations", Json::Num(m.invocations as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::create_dir_all("out").ok();
+    match std::fs::write("out/adversity.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/adversity.json)"),
+        Err(e) => eprintln!("warning: could not write out/adversity.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_labels_round_trip_both_axes() {
+        let c = Cell::labeled("shabari", ADV_RPS, &cell_label("chaos", "pressure"), 4.0);
+        assert_eq!(cell_parts(&c), ("chaos", "pressure"));
+        // distinct fault profiles occupy distinct seed streams at rep >= 1
+        let a = Cell::labeled("shabari", 12.0, &cell_label("none", "fixed:600"), 4.0);
+        let b = Cell::labeled("shabari", 12.0, &cell_label("crash", "fixed:600"), 4.0);
+        assert_ne!(sweep::cell_seed(42, &a, 1), sweep::cell_seed(42, &b, 1));
+        assert_eq!(sweep::cell_seed(42, &a, 0), sweep::cell_seed(42, &b, 0));
+    }
+
+    /// Tiny-parameter smoke mirroring the CI job: the grid covers every
+    /// (policy, fault, keepalive) triple, is deterministic across thread
+    /// counts, and the fault counters land where the profile says they
+    /// must. `run_adversity` also exercises `check_invariants` on every
+    /// replicate — including the heterogeneous cells, where the global
+    /// admission-limit check would be meaningless.
+    #[test]
+    fn adversity_grid_covers_axes_and_is_jobs_invariant() {
+        let ctx = Ctx { duration_s: 30.0, adversity_workers: 2, seeds: 1, ..Default::default() };
+        let seq = run_adversity(&Ctx { jobs: 1, ..ctx.clone() }, ADV_RPS).unwrap();
+        let par = run_adversity(&Ctx { jobs: 4, ..ctx }, ADV_RPS).unwrap();
+        assert_eq!(seq.len(), ADV_POLICIES.len() * ADV_FAULTS.len() * ADV_KEEPALIVE.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell.id(), b.cell.id());
+            let (ma, mb) = (a.mean_metrics(), b.mean_metrics());
+            assert_eq!(ma.invocations, mb.invocations);
+            assert_eq!(
+                ma.slo_violation_pct.to_bits(),
+                mb.slo_violation_pct.to_bits(),
+                "{} diverged across --jobs",
+                a.cell.id()
+            );
+            assert_eq!(ma.worker_crashes, mb.worker_crashes);
+            assert_eq!(ma.requeued_on_crash, mb.requeued_on_crash);
+            assert_eq!(ma.failed_pct.to_bits(), mb.failed_pct.to_bits());
+            // profile => counter shape
+            let (fault, _) = cell_parts(&a.cell);
+            match fault {
+                "crash" | "chaos" => {
+                    assert!(ma.worker_crashes > 0, "{}: no crash fired", a.cell.id())
+                }
+                "stragglers" => assert!(
+                    ma.straggler_slowdown < 1.0,
+                    "{}: no straggler configured",
+                    a.cell.id()
+                ),
+                "none" | "hetero" => {
+                    assert_eq!(ma.worker_crashes, 0);
+                    assert_eq!(ma.failed_pct, 0.0);
+                    assert_eq!(ma.straggler_slowdown, 1.0);
+                }
+                other => panic!("unregistered profile {other}"),
+            }
+        }
+    }
+}

@@ -14,6 +14,7 @@ use crate::coordinator::ShabariPolicy;
 use crate::learner::xla::Backend;
 use crate::metrics::{from_result, RunMetrics};
 use crate::simulator::engine::{simulate, SimResult};
+use crate::simulator::faults::FaultsSpec;
 use crate::simulator::keepalive::KeepAliveSpec;
 use crate::simulator::{Policy, SimConfig};
 use crate::workload::scenario::{self, Scenario};
@@ -56,6 +57,14 @@ pub struct Ctx {
     /// (`--keepalive-workers`; small so admission queues form and
     /// demand-driven eviction has demand to serve).
     pub keepalive_workers: usize,
+    /// Fault-injection profile (`--faults`, parsed at the CLI boundary
+    /// like `--keepalive`; `simulator::faults::parse`). The default,
+    /// `none`, reproduces the immortal-cluster streams byte-for-byte.
+    pub faults: FaultsSpec,
+    /// Cluster size of the `experiment adversity` matrix
+    /// (`--adversity-workers`; small so a single crash is a real fraction
+    /// of capacity).
+    pub adversity_workers: usize,
 }
 
 impl Default for Ctx {
@@ -74,6 +83,8 @@ impl Default for Ctx {
             overload_workers: 4,
             keepalive: KeepAliveSpec::default(),
             keepalive_workers: 4,
+            faults: FaultsSpec::default(),
+            adversity_workers: 4,
         }
     }
 }
@@ -108,6 +119,12 @@ impl Ctx {
     /// the keepalive matrix uses per cell).
     pub fn with_keepalive(&self, keepalive: KeepAliveSpec) -> Ctx {
         Ctx { keepalive, ..self.clone() }
+    }
+
+    /// The same context under a different fault profile (the hook the
+    /// adversity matrix uses per cell).
+    pub fn with_faults(&self, faults: FaultsSpec) -> Ctx {
+        Ctx { faults, ..self.clone() }
     }
 
     /// Build this context's scenario from the registry.
@@ -200,10 +217,11 @@ pub fn run_one(
 }
 
 /// Default testbed config with the experiment seed and the context's
-/// keep-alive spec applied.
+/// keep-alive and fault specs applied.
 pub fn sim_config(ctx: &Ctx) -> SimConfig {
     let mut cfg = SimConfig { seed: ctx.seed ^ 0x51AB, ..Default::default() };
     ctx.keepalive.apply(&mut cfg);
+    ctx.faults.apply(&mut cfg);
     cfg
 }
 
@@ -323,6 +341,25 @@ mod tests {
         let explicit = sim_config(&base.with_keepalive(keepalive::parse("fixed:600").unwrap()));
         assert_eq!(explicit.keepalive, KeepAliveMode::Fixed);
         assert_eq!(explicit.keep_alive_s, 600.0);
+    }
+
+    #[test]
+    fn sim_config_applies_the_ctx_faults_spec() {
+        use crate::simulator::faults::{self, FaultsMode};
+        let base = Ctx::default();
+        let cfg = sim_config(&base);
+        assert_eq!(cfg.faults.mode, FaultsMode::None, "default ctx injects nothing");
+        let cfg = sim_config(&base.with_faults(faults::parse("crash:30").unwrap()));
+        assert_eq!(cfg.faults.mode, FaultsMode::Crash);
+        assert_eq!(cfg.faults.param, Some(30.0));
+        // naming `none` explicitly is config-identical to the default
+        // (the byte-stream pin in test_determinism.rs rides on this)
+        let explicit = sim_config(&base.with_faults(faults::parse("none").unwrap()));
+        assert_eq!(explicit.faults, cfg_default_faults());
+    }
+
+    fn cfg_default_faults() -> crate::simulator::faults::FaultsSpec {
+        sim_config(&Ctx::default()).faults
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! tables add p50/p99 and bootstrap CIs (EXPERIMENTS.md).
 
 pub mod ablations;
+pub mod adversity;
 pub mod analysis;
 pub mod characterize;
 pub mod common;
@@ -31,11 +32,12 @@ pub use common::Ctx;
 /// engine-throughput benchmark — DESIGN.md §Perf; `overload`, the
 /// past-saturation sweep proving the admission invariant — DESIGN.md
 /// §Admission; `keepalive`, the keep-alive policy × workload matrix —
-/// DESIGN.md §KeepAlive).
+/// DESIGN.md §KeepAlive; `adversity`, the policy × keep-alive ×
+/// fault-profile matrix — DESIGN.md §Faults).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios", "scale",
-    "overload", "keepalive",
+    "overload", "keepalive", "adversity",
 ];
 
 /// Run one experiment by id.
@@ -62,6 +64,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "scale" => scale::scale(ctx),
         "overload" => overload::overload(ctx),
         "keepalive" => keepalive::keepalive(ctx),
+        "adversity" => adversity::adversity(ctx),
         "all" => {
             // Benchmark-style grids skipped under `all`: `scale` is a
             // wall-clock benchmark with its own pinned methodology
@@ -94,8 +97,8 @@ mod tests {
     fn registry_covers_every_table_and_figure() {
         // the paper's evaluation (figures 1-4, 6-14, tables 1-3) plus the
         // repo's own cross-scenario robustness matrix, the engine scale
-        // benchmark, the past-saturation overload sweep, and the
-        // keep-alive policy matrix
+        // benchmark, the past-saturation overload sweep, the keep-alive
+        // policy matrix, and the fault-injection adversity matrix
         for id in super::EXPERIMENTS {
             assert!(
                 id.starts_with("fig")
@@ -104,9 +107,10 @@ mod tests {
                     || *id == "scale"
                     || *id == "overload"
                     || *id == "keepalive"
+                    || *id == "adversity"
             );
         }
-        assert_eq!(super::EXPERIMENTS.len(), 21);
+        assert_eq!(super::EXPERIMENTS.len(), 22);
     }
 
     #[test]

@@ -62,6 +62,16 @@ pub struct RunMetrics {
     /// memory-waste proxy the keepalive experiment minimizes (0 when
     /// aggregated from bare records).
     pub idle_container_s: f64,
+    /// % of invocations lost to worker crashes (`Verdict::Failed`).
+    pub failed_pct: f64,
+    /// Worker crash events that fired (DESIGN.md §Faults; 0 when
+    /// aggregated from bare records).
+    pub worker_crashes: u64,
+    /// Invocations rerouted through another worker's admission path after
+    /// a crash.
+    pub requeued_on_crash: u64,
+    /// Slowest configured worker speed factor (1.0 = no stragglers).
+    pub straggler_slowdown: f64,
 }
 
 impl RunMetrics {
@@ -113,6 +123,18 @@ impl RunMetrics {
             prewarm_hits: (runs.iter().map(|r| r.prewarm_hits).sum::<u64>() as f64 / n).round()
                 as u64,
             idle_container_s: avg(|r| r.idle_container_s),
+            failed_pct: avg(|r| r.failed_pct),
+            worker_crashes: (runs.iter().map(|r| r.worker_crashes).sum::<u64>() as f64 / n)
+                .round() as u64,
+            requeued_on_crash: (runs.iter().map(|r| r.requeued_on_crash).sum::<u64>() as f64
+                / n)
+                .round() as u64,
+            // The slowdown is a configuration echo, identical across
+            // replicates of a cell; the min keeps it honest if not.
+            straggler_slowdown: runs
+                .iter()
+                .map(|r| r.straggler_slowdown)
+                .fold(1.0, f64::min),
         }
     }
 }
@@ -171,6 +193,10 @@ pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
         pressure_evictions: 0,
         prewarm_hits: 0,
         idle_container_s: 0.0,
+        failed_pct: stats::percent_where(records, |r| r.verdict == Verdict::Failed),
+        worker_crashes: 0,
+        requeued_on_crash: 0,
+        straggler_slowdown: 1.0,
     }
 }
 
@@ -188,6 +214,9 @@ pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
     m.pressure_evictions = res.pressure_evictions;
     m.prewarm_hits = res.prewarm_hits;
     m.idle_container_s = res.idle_container_s;
+    m.worker_crashes = res.worker_crashes;
+    m.requeued_on_crash = res.requeued_on_crash;
+    m.straggler_slowdown = res.straggler_slowdown;
     m
 }
 
@@ -347,6 +376,31 @@ mod tests {
         let fresh = aggregate("x", &[rec(1.0, 2.0, false, Verdict::Completed)]);
         assert_eq!(fresh.evictions + fresh.pressure_evictions + fresh.prewarm_hits, 0);
         assert_eq!(fresh.idle_container_s, 0.0);
+    }
+
+    #[test]
+    fn fault_metrics_aggregate_and_average() {
+        let mut a = aggregate(
+            "x",
+            &[rec(1.0, 2.0, false, Verdict::Completed), rec(0.0, 2.0, false, Verdict::Failed)],
+        );
+        assert!((a.failed_pct - 50.0).abs() < 1e-9);
+        assert!((a.slo_violation_pct - 50.0).abs() < 1e-9, "Failed counts as a violation");
+        // bare-record aggregation carries no engine counters
+        assert_eq!(a.worker_crashes, 0);
+        assert_eq!(a.straggler_slowdown, 1.0);
+        a.worker_crashes = 4;
+        a.requeued_on_crash = 2;
+        a.straggler_slowdown = 0.5;
+        let mut b = a.clone();
+        b.worker_crashes = 2;
+        b.requeued_on_crash = 0;
+        b.straggler_slowdown = 1.0;
+        let m = RunMetrics::mean_of(&[a, b]);
+        assert_eq!(m.worker_crashes, 3);
+        assert_eq!(m.requeued_on_crash, 1);
+        assert!((m.straggler_slowdown - 0.5).abs() < 1e-12, "slowdown reports the min");
+        assert!((m.failed_pct - 50.0).abs() < 1e-9);
     }
 
     #[test]

@@ -14,13 +14,14 @@
 //! timeout produces a `TimedOut` record whether or not it ever bound.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeSet, BinaryHeap, HashMap};
 
 use crate::functions::catalog::CATALOG;
 use crate::functions::Demand;
 use crate::util::rng::Rng;
 
 use super::container::Container;
+use super::faults::FaultPlan;
 use super::keepalive::{self, KeepAlivePolicy};
 use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec, QueuedAdmission};
 use super::{
@@ -47,6 +48,11 @@ enum EventKind {
     /// Hybrid-histogram pre-warm: launch a background container of this
     /// size, timed against the function's expected next arrival.
     PreWarm { worker: usize, func: usize, vcpus: u32, mem_mb: u32 },
+    /// Fault injection (DESIGN.md §Faults): the worker dies — containers,
+    /// reservations, and in-flight work on it are lost.
+    WorkerCrash { worker: usize },
+    /// The crashed worker comes back empty after its downtime.
+    WorkerRestart { worker: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -170,10 +176,19 @@ pub struct SimResult {
     /// memory-waste proxy (what keep-alive policies trade against cold
     /// starts). Includes idle time trailing the last use until eviction.
     pub idle_container_s: f64,
-    /// `ContainerReady` events whose container no longer existed. No
-    /// teardown path removes a `Starting` container, so this is a
-    /// tripwire: always 0 today (debug builds assert on it).
+    /// `ContainerReady` events whose container no longer existed. The only
+    /// teardown path that removes a `Starting` container is a worker crash,
+    /// which voids the ready event through the `crashed_starting` set
+    /// instead of counting here — so this stays a tripwire: always 0
+    /// (debug builds assert on it).
     pub ready_miss: u64,
+    /// Fault injection (DESIGN.md §Faults): worker crash events that fired.
+    pub worker_crashes: u64,
+    /// Invocations that lost their bound worker to a crash and re-entered
+    /// the admission path on another worker (the rest died `Failed`).
+    pub requeued_on_crash: u64,
+    /// Slowest configured worker speed factor (1.0 without stragglers).
+    pub straggler_slowdown: f64,
 }
 
 impl SimResult {
@@ -229,6 +244,13 @@ pub struct Engine<'p, P: Policy> {
     prewarm_hits: u64,
     idle_container_s: f64,
     ready_miss: u64,
+    /// Materialized fault schedule (empty under `faults:none`).
+    faults: FaultPlan,
+    /// `Starting` containers torn down by a crash: their in-flight
+    /// `ContainerReady` events are void, not `ready_miss` tripwires.
+    crashed_starting: BTreeSet<u64>,
+    worker_crashes: u64,
+    requeued_on_crash: u64,
     /// Reused completion buffers (no steady-state allocation).
     done_scratch: Vec<u64>,
     finished_scratch: Vec<u64>,
@@ -238,7 +260,25 @@ impl<'p, P: Policy> Engine<'p, P> {
     pub fn new(cfg: SimConfig, policy: &'p mut P, mut requests: Vec<Request>) -> Self {
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let rng = Rng::new(cfg.seed ^ 0x5115_BA71);
-        let cluster = Cluster::new(&cfg);
+        let mut cluster = Cluster::new(&cfg);
+        // Materialize the fault schedule up front from its own salted RNG
+        // streams (DESIGN.md §Faults) — `faults:none` builds an empty plan
+        // with zero extra draws or events. The horizon covers the last
+        // arrival plus the walltime limit, i.e. every instant an
+        // invocation can still be in flight.
+        let horizon = requests.last().map(|r| r.arrival).unwrap_or(0.0) + cfg.timeout_s;
+        let faults = cfg.faults.plan(cfg.workers, horizon, cfg.seed);
+        for (w, worker) in cluster.workers.iter_mut().enumerate() {
+            worker.speed = faults.speed[w];
+            let scale = faults.capacity_scale[w];
+            if scale != 1.0 {
+                // Heterogeneous classes scale the whole worker shape;
+                // floors keep even the smallest class schedulable.
+                worker.physical_cores *= scale;
+                worker.sched_vcpu_limit = (worker.sched_vcpu_limit * scale).max(1.0);
+                worker.mem_gb = (worker.mem_gb * scale).max(1.0);
+            }
+        }
         // Workers read their `idle_reserves` accounting switch off the
         // same `keepalive::build` impl this instance answers from.
         let ka = keepalive::build(&cfg);
@@ -266,6 +306,10 @@ impl<'p, P: Policy> Engine<'p, P> {
             prewarm_hits: 0,
             idle_container_s: 0.0,
             ready_miss: 0,
+            faults,
+            crashed_starting: BTreeSet::new(),
+            worker_crashes: 0,
+            requeued_on_crash: 0,
             done_scratch: Vec::new(),
             finished_scratch: Vec::new(),
         }
@@ -278,6 +322,18 @@ impl<'p, P: Policy> Engine<'p, P> {
 
     /// Run to completion and return all records.
     pub fn run(mut self) -> SimResult {
+        // Fault schedule first: the plan is sorted by `(at, worker)`, so
+        // the sequence-number tie-break makes same-timestamp crashes fire
+        // in worker-id order (the PR 3 contract), and a crash at an
+        // arrival's exact timestamp is visible to that arrival's decision.
+        // Under `faults:none` the plan is empty and event seq numbers are
+        // byte-identical to a run without this block.
+        let crashes = std::mem::take(&mut self.faults.crashes);
+        for c in &crashes {
+            self.push(c.at, EventKind::WorkerCrash { worker: c.worker });
+            self.push(c.restart_at, EventKind::WorkerRestart { worker: c.worker });
+        }
+        self.faults.crashes = crashes;
         for i in 0..self.requests.len() {
             let at = self.requests[i].arrival;
             self.push(at, EventKind::Arrival(i));
@@ -300,6 +356,8 @@ impl<'p, P: Policy> Engine<'p, P> {
                 EventKind::PreWarm { worker, func, vcpus, mem_mb } => {
                     self.on_prewarm(worker, func, vcpus, mem_mb)
                 }
+                EventKind::WorkerCrash { worker } => self.on_worker_crash(worker),
+                EventKind::WorkerRestart { worker } => self.on_worker_restart(worker),
             }
             // Admission is an invariant at *every* event, not just at the
             // end of the run. Cheap (two float compares per worker); the
@@ -335,6 +393,9 @@ impl<'p, P: Policy> Engine<'p, P> {
             prewarm_hits: self.prewarm_hits,
             idle_container_s: self.idle_container_s,
             ready_miss: self.ready_miss,
+            worker_crashes: self.worker_crashes,
+            requeued_on_crash: self.requeued_on_crash,
+            straggler_slowdown: self.faults.slowest_speed(),
         }
     }
 
@@ -459,6 +520,11 @@ impl<'p, P: Policy> Engine<'p, P> {
         vcpus: u32,
         mem_mb: u32,
     ) -> bool {
+        if self.cluster.workers[worker_id].down {
+            // A down worker admits nothing — not even capacity-neutral
+            // warm binds (its warm pool died with it anyway).
+            return false;
+        }
         if warm.is_some() && self.ka.idle_reserves() {
             return true;
         }
@@ -509,6 +575,11 @@ impl<'p, P: Policy> Engine<'p, P> {
     /// does not fit blocks everything behind it (deterministic; no
     /// backfilling).
     fn drain_admission(&mut self, worker_id: usize) {
+        if self.cluster.workers[worker_id].down {
+            // Down workers admit nothing; their queue waits for the
+            // restart (or the queued requests' own walltime limits).
+            return;
+        }
         loop {
             let Some(front) = self.cluster.workers[worker_id].front_admission() else {
                 break;
@@ -576,7 +647,10 @@ impl<'p, P: Policy> Engine<'p, P> {
         let p = self.pending.get_mut(&inv_id).expect("pending");
         p.had_cold_start = true;
         let ready = self.cluster.workers[worker].containers[&cid].ready_at;
-        p.cold_start_s = (ready - self.now).max(0.0);
+        // `+=`, not `=`: an invocation whose first cold start died with a
+        // crashed worker pays for both launches (0.0 + x is bit-exact, so
+        // the single-launch path is unchanged).
+        p.cold_start_s += (ready - self.now).max(0.0);
         self.cluster.workers[worker].total_cold_starts += 1;
     }
 
@@ -616,6 +690,13 @@ impl<'p, P: Policy> Engine<'p, P> {
     }
 
     fn on_container_ready(&mut self, worker: usize, container: u64) {
+        if self.crashed_starting.remove(&container) {
+            // The cold start raced a worker crash: the `Starting`
+            // container was already torn down (and its waiter rerouted or
+            // failed) by `on_worker_crash` — the ready event is void, not
+            // a `ready_miss` tripwire.
+            return;
+        }
         let Some(idle_epoch) = self.cluster.container_ready(worker, container, self.now) else {
             // A ready event for a container that no longer exists. No
             // teardown path removes a `Starting` container (keep-alive
@@ -886,7 +967,7 @@ impl<'p, P: Policy> Engine<'p, P> {
                 // pre-warmed replacement when its TTL is short.
                 self.schedule_idle_evict(worker_id, cid, idle_epoch, true);
             }
-            Verdict::OomKilled | Verdict::TimedOut => {
+            Verdict::OomKilled | Verdict::TimedOut | Verdict::Failed => {
                 self.cluster.remove_container(worker_id, cid);
             }
         }
@@ -1032,6 +1113,147 @@ impl<'p, P: Policy> Engine<'p, P> {
             // teardown).
             self.drain_admission(worker);
         }
+    }
+
+    /// Crash rerouting: the first up worker after the dead one (wrapping
+    /// scan — deterministic) that can admit the ask right now; otherwise
+    /// the first up worker at all, where the work parks on the admission
+    /// queue. `None` only when the entire cluster is down.
+    fn reroute_target(&self, from: usize, vcpus: u32, mem_mb: u32) -> Option<usize> {
+        let n = self.cluster.len();
+        let mut fallback = None;
+        for step in 1..n {
+            let w = (from + step) % n;
+            if self.cluster.workers[w].down {
+                continue;
+            }
+            if self.cluster.workers[w].can_admit(vcpus, mem_mb) {
+                return Some(w);
+            }
+            if fallback.is_none() {
+                fallback = Some(w);
+            }
+        }
+        fallback
+    }
+
+    /// Re-point a crash-displaced invocation at `new_worker` and push it
+    /// through the ordinary admission path as a cold start (its old warm
+    /// hit and background intent died with the worker); with nowhere to
+    /// go it dies `Failed`.
+    fn requeue_or_fail(&mut self, inv_id: u64, target: Option<usize>) {
+        match target {
+            Some(new_worker) => {
+                let p = self.pending.get_mut(&inv_id).expect("displaced invocation pending");
+                p.decision.worker = new_worker;
+                p.decision.container = ContainerChoice::Cold;
+                p.decision.background = None;
+                self.requeued_on_crash += 1;
+                self.try_admit(inv_id);
+            }
+            None => self.fail_unbound(inv_id, Verdict::Failed),
+        }
+    }
+
+    /// Fault injection (DESIGN.md §Faults): the worker dies. Everything on
+    /// it is lost — in-flight invocations get `Failed` terminal records,
+    /// queued and cold-start-waiting work re-enters the admission path on
+    /// another worker (or fails with the whole cluster down), the warm
+    /// pool and every reservation are torn down, and the policy is told
+    /// last so learners can drop per-worker state.
+    fn on_worker_crash(&mut self, worker_id: usize) {
+        // The plan never crashes a down worker (cycles are disjoint); the
+        // guard keeps a malformed schedule from corrupting state.
+        debug_assert!(!self.cluster.workers[worker_id].down, "crash while already down");
+        if self.cluster.workers[worker_id].down {
+            return;
+        }
+        // Down first: every capacity predicate now answers false, so the
+        // requeue probes below and the drains triggered by completions
+        // steer around this worker.
+        self.cluster.workers[worker_id].down = true;
+        self.worker_crashes += 1;
+        self.cluster.workers[worker_id].advance(self.now);
+
+        // 1. In-flight invocations die with a clean `Failed` record, in
+        //    ascending id order (BTreeMap iteration). `complete` tears
+        //    down each busy container and feeds the policy; its trailing
+        //    queue drain no-ops on the down worker.
+        let active: Vec<u64> = self.cluster.workers[worker_id].active.keys().copied().collect();
+        for id in active {
+            self.complete(id, Verdict::Failed);
+        }
+
+        // 2. Queued admissions reroute in FIFO order, keeping their
+        //    walltime clocks and accrued queue time.
+        while let Some(q) = self.cluster.workers[worker_id].pop_admission() {
+            let p = self.pending.get_mut(&q.inv_id).expect("queued invocation pending");
+            if let Some(since) = p.queued_since.take() {
+                p.queue_s += self.now - since;
+            }
+            let target = self.reroute_target(worker_id, q.vcpus, q.mem_mb);
+            self.requeue_or_fail(q.inv_id, target);
+        }
+
+        // 3. The remaining containers are `Starting` (busy ones died in
+        //    step 1) or idle. Cold starts in flight are lost: their ready
+        //    events are voided via `crashed_starting` and their waiters
+        //    reroute like queued work, in ascending invocation id. Idle
+        //    periods close out in the idle-time ledger first.
+        let mut starting: Vec<u64> = Vec::new();
+        let mut trailing_idle = 0.0;
+        for (cid, c) in &self.cluster.workers[worker_id].containers {
+            if c.is_warm_idle() {
+                trailing_idle += (self.now - c.idle_since).max(0.0);
+            } else {
+                starting.push(*cid);
+            }
+        }
+        self.idle_container_s += trailing_idle;
+        let mut lost_waiters: Vec<u64> = Vec::new();
+        for &cid in &starting {
+            self.crashed_starting.insert(cid);
+            if let Some(inv) = self.waiting_on_container.remove(&cid) {
+                // A waiter may have timed out mid-cold-start already (its
+                // record is written); only live ones reroute.
+                if self.pending.contains_key(&inv) {
+                    lost_waiters.push(inv);
+                }
+            }
+        }
+        let doomed: Vec<u64> =
+            self.cluster.workers[worker_id].containers.keys().copied().collect();
+        for cid in doomed {
+            self.cluster.remove_container(worker_id, cid);
+        }
+        lost_waiters.sort_unstable();
+        for inv in lost_waiters {
+            let (vcpus, mem_mb) = {
+                let p = &self.pending[&inv];
+                (p.decision.vcpus, p.decision.mem_mb)
+            };
+            let target = self.reroute_target(worker_id, vcpus, mem_mb);
+            self.requeue_or_fail(inv, target);
+        }
+
+        // 4. The policy hears about it last, with the post-crash cluster,
+        //    so learners can forget what this worker's runs taught them.
+        self.policy.on_worker_crash(self.now, worker_id, &self.cluster);
+    }
+
+    /// The crashed worker returns, empty: cold warm pool, zero
+    /// reservations. Work routed at it while down parked on its admission
+    /// queue and drains now.
+    fn on_worker_restart(&mut self, worker_id: usize) {
+        debug_assert!(self.cluster.workers[worker_id].down, "restart of a live worker");
+        if !self.cluster.workers[worker_id].down {
+            return;
+        }
+        self.cluster.workers[worker_id].down = false;
+        // No active work existed while down; this just moves the
+        // processor-sharing clock past the outage.
+        self.cluster.workers[worker_id].advance(self.now);
+        self.drain_admission(worker_id);
     }
 }
 

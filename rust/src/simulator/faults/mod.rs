@@ -1,0 +1,376 @@
+//! Deterministic fault injection (ISSUE 6): an orthogonal cluster-dynamics
+//! axis next to scheduling (`Policy`) and retention (`KeepAlivePolicy`).
+//! All five workload scenarios vary *arrivals* only; this module makes the
+//! cluster itself adversarial — worker crash/restart cycles, straggler
+//! (slowed) workers, and heterogeneous capacity classes — while preserving
+//! every determinism contract:
+//!
+//! * the whole fault schedule is derived up front from
+//!   `seed ^ <per-axis salt>` RNG streams ([`FaultsSpec::plan`]), disjoint
+//!   from the engine/trace/policy streams, so enabling faults never
+//!   perturbs a single pre-existing draw;
+//! * crash/restart events enter the ordinary discrete-event heap as
+//!   timestamped events (sorted by `(at, worker)` before pushing, so the
+//!   sequence-number tie-break is the worker id — the PR 3 contract);
+//! * `faults:none` (the default) builds an empty plan: zero extra events,
+//!   zero extra draws, byte-identical streams to a build without this
+//!   module (pinned in `rust/tests/test_determinism.rs`).
+//!
+//! Parsed from `--faults <name>` exactly like `--keepalive` (DESIGN.md
+//! §Faults; registry in [`FAULTS`], parser in [`parse`]).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::SimConfig;
+
+/// Mean time between crashes per worker (seconds of simulated time).
+/// Deliberately short relative to the 600 s experiment window so every
+/// adversity replicate actually exercises the crash path.
+pub const CRASH_MTBF_S: f64 = 120.0;
+
+/// Downtime between a crash and the worker's restart (override with
+/// `crash:<secs>` / `chaos:<secs>`).
+pub const DEFAULT_DOWNTIME_S: f64 = 60.0;
+
+/// Speed multiplier stragglers run at (override with `stragglers:<factor>`).
+pub const DEFAULT_STRAGGLER_FACTOR: f64 = 0.5;
+
+/// Fraction of workers turned into stragglers (ceil, so a 1-worker
+/// cluster still gets one).
+pub const STRAGGLER_FRACTION: f64 = 0.25;
+
+/// Capacity classes cycled across workers under `hetero`: full-size,
+/// half, quarter (scales `physical_cores`, `sched_vcpu_limit`, `mem_gb`).
+/// Worker 0 always keeps the full testbed shape.
+pub const HETERO_SCALE: &[f64] = &[1.0, 0.5, 0.25];
+
+const SALT_CRASH: u64 = 0xC4A5_4ED1;
+const SALT_STRAGGLER: u64 = 0x57A6_61E4;
+
+/// Which fault profile a run injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultsMode {
+    /// No faults — the pre-ISSUE-6 immortal, uniform cluster.
+    #[default]
+    None,
+    /// Seed-derived worker crash/restart cycles.
+    Crash,
+    /// A fixed fraction of workers run slowed by a speed factor.
+    Stragglers,
+    /// Mixed worker capacity classes (uniform limits scaled per worker).
+    Hetero,
+    /// All three at once.
+    Chaos,
+}
+
+/// Parsed `--faults` selection: mode plus its optional numeric parameter
+/// (crash/chaos: downtime seconds; stragglers: speed factor).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultsSpec {
+    pub mode: FaultsMode,
+    pub param: Option<f64>,
+}
+
+/// One crash/restart cycle for one worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashEvent {
+    pub at: f64,
+    pub restart_at: f64,
+    pub worker: usize,
+}
+
+/// The fully materialized fault schedule for one run: computed once at
+/// engine construction, then replayed as ordinary events.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Crash cycles sorted by `(at, worker)` — push order is the
+    /// same-timestamp tie-break.
+    pub crashes: Vec<CrashEvent>,
+    /// Per-worker execution speed multiplier (1.0 = nominal).
+    pub speed: Vec<f64>,
+    /// Per-worker capacity scale on cores/vCPU-limit/memory (1.0 = uniform).
+    pub capacity_scale: Vec<f64>,
+}
+
+impl FaultPlan {
+    fn uniform(workers: usize) -> Self {
+        FaultPlan {
+            crashes: Vec::new(),
+            speed: vec![1.0; workers],
+            capacity_scale: vec![1.0; workers],
+        }
+    }
+
+    /// The slowest configured worker speed (1.0 when no stragglers) —
+    /// surfaced as `RunMetrics::straggler_slowdown`.
+    pub fn slowest_speed(&self) -> f64 {
+        self.speed.iter().copied().fold(1.0, f64::min)
+    }
+}
+
+impl FaultsSpec {
+    /// Write this spec into a sim config (mirrors `KeepAliveSpec::apply`).
+    pub fn apply(&self, cfg: &mut SimConfig) {
+        cfg.faults = *self;
+    }
+
+    /// Canonical registry-style label, e.g. `crash:30`.
+    pub fn label(&self) -> String {
+        let name = match self.mode {
+            FaultsMode::None => "none",
+            FaultsMode::Crash => "crash",
+            FaultsMode::Stragglers => "stragglers",
+            FaultsMode::Hetero => "hetero",
+            FaultsMode::Chaos => "chaos",
+        };
+        match self.param {
+            Some(p) => format!("{name}:{p}"),
+            None => name.to_string(),
+        }
+    }
+
+    /// Materialize the schedule for `workers` workers over `[0, horizon_s]`.
+    ///
+    /// Per-worker crash streams are independent forks of one
+    /// `seed ^ SALT_CRASH` RNG taken in ascending worker id, so the plan is
+    /// identical on any thread and a *prefix* of the plan for any larger
+    /// horizon — tests may call `plan` with a big horizon to learn exact
+    /// crash times and build workloads around them. The first crash lands
+    /// in `[0.25, 0.75] × MTBF`, guaranteeing at least one crash per
+    /// worker whenever the horizon covers the window.
+    pub fn plan(&self, workers: usize, horizon_s: f64, seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::uniform(workers);
+        let crash = matches!(self.mode, FaultsMode::Crash | FaultsMode::Chaos);
+        let straggle = matches!(self.mode, FaultsMode::Stragglers | FaultsMode::Chaos);
+        let hetero = matches!(self.mode, FaultsMode::Hetero | FaultsMode::Chaos);
+
+        if crash {
+            let downtime = self.param.unwrap_or(DEFAULT_DOWNTIME_S);
+            let mut rng = Rng::new(seed ^ SALT_CRASH);
+            for w in 0..workers {
+                let mut wr = rng.fork(w as u64);
+                let mut t = CRASH_MTBF_S * wr.range_f64(0.25, 0.75);
+                while t < horizon_s {
+                    plan.crashes.push(CrashEvent { at: t, restart_at: t + downtime, worker: w });
+                    t += downtime + CRASH_MTBF_S * wr.range_f64(0.5, 1.5);
+                }
+            }
+            plan.crashes
+                .sort_by(|a, b| a.at.total_cmp(&b.at).then_with(|| a.worker.cmp(&b.worker)));
+        }
+        if straggle {
+            let factor = match self.mode {
+                // chaos's param is the crash downtime; stragglers keep the default
+                FaultsMode::Stragglers => self.param.unwrap_or(DEFAULT_STRAGGLER_FACTOR),
+                _ => DEFAULT_STRAGGLER_FACTOR,
+            };
+            let mut rng = Rng::new(seed ^ SALT_STRAGGLER);
+            let k = ((workers as f64) * STRAGGLER_FRACTION).ceil().max(1.0) as usize;
+            let mut ids: Vec<usize> = (0..workers).collect();
+            rng.shuffle(&mut ids);
+            for &w in ids.iter().take(k.min(workers)) {
+                plan.speed[w] = factor;
+            }
+        }
+        if hetero {
+            for w in 0..workers {
+                plan.capacity_scale[w] = HETERO_SCALE[w % HETERO_SCALE.len()];
+            }
+        }
+        plan
+    }
+}
+
+/// All registered fault-profile names (shown by `list`; parametric forms
+/// `crash:<downtime_s>`, `stragglers:<factor>`, `chaos:<downtime_s>` are
+/// accepted too).
+pub const FAULTS: &[&str] = &["none", "crash", "stragglers", "hetero", "chaos"];
+
+/// Parse a `--faults` value (mirrors `keepalive::parse`).
+pub fn parse(name: &str) -> Result<FaultsSpec> {
+    let (mode, param) = match name.split_once(':') {
+        Some((m, p)) => (m, Some(p)),
+        None => (name, None),
+    };
+    let param = match param {
+        None => None,
+        Some(p) => {
+            let v: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--faults {mode}: bad parameter '{p}'"))?;
+            Some(v)
+        }
+    };
+    let spec = match mode {
+        "none" => {
+            ensure!(param.is_none(), "faults profile 'none' takes no parameter");
+            FaultsSpec { mode: FaultsMode::None, param: None }
+        }
+        "crash" | "chaos" => {
+            if let Some(d) = param {
+                ensure!(
+                    d.is_finite() && d > 0.0,
+                    "--faults {mode}: downtime must be positive seconds, got {d}"
+                );
+            }
+            let m = if mode == "crash" { FaultsMode::Crash } else { FaultsMode::Chaos };
+            FaultsSpec { mode: m, param }
+        }
+        "stragglers" => {
+            if let Some(f) = param {
+                ensure!(
+                    f.is_finite() && f > 0.0,
+                    "--faults stragglers: speed factor must be > 0, got {f}"
+                );
+            }
+            FaultsSpec { mode: FaultsMode::Stragglers, param }
+        }
+        "hetero" => {
+            ensure!(param.is_none(), "faults profile 'hetero' takes no parameter");
+            FaultsSpec { mode: FaultsMode::Hetero, param: None }
+        }
+        other => bail!(
+            "unknown faults profile '{other}' (known: {FAULTS:?}, or 'crash:<downtime_s>', \
+             'stragglers:<factor>', 'chaos:<downtime_s>')"
+        ),
+    };
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_registered_names() {
+        for name in FAULTS {
+            let spec = parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.label(), *name);
+        }
+    }
+
+    #[test]
+    fn parse_param_suffix_and_label_round_trip() {
+        let s = parse("crash:30").unwrap();
+        assert_eq!(s.mode, FaultsMode::Crash);
+        assert_eq!(s.param, Some(30.0));
+        assert_eq!(s.label(), "crash:30");
+        let s = parse("stragglers:0.25").unwrap();
+        assert_eq!(s.mode, FaultsMode::Stragglers);
+        assert_eq!(s.param, Some(0.25));
+        let s = parse("chaos:15").unwrap();
+        assert_eq!(s.mode, FaultsMode::Chaos);
+        assert_eq!(s.param, Some(15.0));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_and_malformed() {
+        assert!(parse("meteor").is_err());
+        assert!(parse("crash:abc").is_err());
+        assert!(parse("crash:-5").is_err());
+        assert!(parse("crash:0").is_err());
+        assert!(parse("stragglers:0").is_err());
+        assert!(parse("hetero:2").is_err());
+        assert!(parse("none:1").is_err());
+    }
+
+    #[test]
+    fn spec_applies_mode_and_param_to_config() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.faults.mode, FaultsMode::None);
+        parse("crash:45").unwrap().apply(&mut cfg);
+        assert_eq!(cfg.faults.mode, FaultsMode::Crash);
+        assert_eq!(cfg.faults.param, Some(45.0));
+    }
+
+    #[test]
+    fn default_spec_is_none_and_plans_empty() {
+        let spec = FaultsSpec::default();
+        assert_eq!(spec.mode, FaultsMode::None);
+        let plan = spec.plan(8, 600.0, 42);
+        assert!(plan.crashes.is_empty());
+        assert!(plan.speed.iter().all(|s| *s == 1.0));
+        assert!(plan.capacity_scale.iter().all(|s| *s == 1.0));
+        assert_eq!(plan.slowest_speed(), 1.0);
+    }
+
+    #[test]
+    fn crash_plan_is_deterministic_and_horizon_prefix_stable() {
+        let spec = parse("crash:20").unwrap();
+        let a = spec.plan(4, 600.0, 7);
+        let b = spec.plan(4, 600.0, 7);
+        assert_eq!(a.crashes, b.crashes);
+        assert!(!a.crashes.is_empty());
+        // a longer horizon extends the schedule without rewriting it
+        let long = spec.plan(4, 1200.0, 7);
+        assert_eq!(&long.crashes_for(0)[..a.crashes_for(0).len()], &a.crashes_for(0)[..]);
+        // distinct seeds sample distinct schedules
+        let c = spec.plan(4, 600.0, 8);
+        assert_ne!(a.crashes, c.crashes);
+    }
+
+    #[test]
+    fn crash_cycles_are_well_formed() {
+        let spec = parse("crash:30").unwrap();
+        let plan = spec.plan(4, 2000.0, 11);
+        // sorted by (at, worker)
+        for pair in plan.crashes.windows(2) {
+            assert!(
+                (pair[0].at, pair[0].worker) < (pair[1].at, pair[1].worker),
+                "plan must be sorted"
+            );
+        }
+        for w in 0..4 {
+            let cycles = plan.crashes_for(w);
+            assert!(!cycles.is_empty(), "horizon covers the first-crash window");
+            // first crash inside [0.25, 0.75] x MTBF
+            assert!(cycles[0].at >= 0.25 * CRASH_MTBF_S && cycles[0].at <= 0.75 * CRASH_MTBF_S);
+            for c in &cycles {
+                assert!((c.restart_at - (c.at + 30.0)).abs() < 1e-9, "restart = crash + downtime");
+            }
+            // a worker never crashes while already down
+            for pair in cycles.windows(2) {
+                assert!(pair[1].at > pair[0].restart_at);
+            }
+        }
+    }
+
+    #[test]
+    fn stragglers_pick_a_deterministic_ceil_fraction() {
+        let spec = parse("stragglers:0.5").unwrap();
+        let plan = spec.plan(8, 600.0, 3);
+        let slowed = plan.speed.iter().filter(|s| **s == 0.5).count();
+        assert_eq!(slowed, 2, "ceil(8 * 0.25)");
+        assert!(plan.crashes.is_empty());
+        assert_eq!(plan.slowest_speed(), 0.5);
+        assert_eq!(plan.speed, spec.plan(8, 600.0, 3).speed, "selection deterministic");
+        // even a 1-worker cluster gets its straggler
+        assert_eq!(spec.plan(1, 600.0, 3).speed, vec![0.5]);
+    }
+
+    #[test]
+    fn hetero_cycles_capacity_classes_keeping_worker0_full() {
+        let plan = parse("hetero").unwrap().plan(5, 600.0, 1);
+        assert_eq!(plan.capacity_scale, vec![1.0, 0.5, 0.25, 1.0, 0.5]);
+        assert!(plan.crashes.is_empty());
+        assert!(plan.speed.iter().all(|s| *s == 1.0));
+    }
+
+    #[test]
+    fn chaos_combines_all_three_axes() {
+        let plan = parse("chaos:10").unwrap().plan(4, 600.0, 9);
+        assert!(!plan.crashes.is_empty());
+        assert!((plan.crashes[0].restart_at - plan.crashes[0].at - 10.0).abs() < 1e-9);
+        assert!(plan.speed.iter().any(|s| *s == DEFAULT_STRAGGLER_FACTOR));
+        assert_eq!(plan.capacity_scale[1], 0.5);
+    }
+
+    impl FaultPlan {
+        /// Test helper: this worker's cycles in time order.
+        fn crashes_for(&self, worker: usize) -> Vec<CrashEvent> {
+            self.crashes.iter().copied().filter(|c| c.worker == worker).collect()
+        }
+    }
+}

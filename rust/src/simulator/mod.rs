@@ -21,7 +21,12 @@
 //!   per-worker daemon);
 //! * *enforced* admission: containers reserve vCPU/memory at launch and
 //!   while busy, binds that don't fit park on a per-worker FIFO queue,
-//!   and `allocated ≤ limit` holds at every event (DESIGN.md §Admission).
+//!   and `allocated ≤ limit` holds at every event (DESIGN.md §Admission);
+//! * deterministic fault injection ([`faults`], DESIGN.md §Faults):
+//!   seed-derived worker crash/restart cycles, straggler speed factors,
+//!   and heterogeneous capacity classes, all as ordinary timestamped
+//!   events — `faults:none` (the default) is byte-identical to a
+//!   fault-free build.
 //!
 //! The *policy* (Shabari or a baseline) plugs in through [`Policy`]: it
 //! sees each request plus a read-only cluster view and returns a routing
@@ -35,6 +40,7 @@
 
 pub mod container;
 pub mod engine;
+pub mod faults;
 pub mod keepalive;
 pub mod worker;
 
@@ -95,6 +101,9 @@ pub enum Verdict {
     OomKilled,
     /// Exceeded the platform's max execution walltime; no response sent.
     TimedOut,
+    /// Lost to a worker crash (DESIGN.md §Faults): the container died
+    /// mid-execution, or the invocation had nowhere left to requeue.
+    Failed,
 }
 
 /// Everything recorded about a finished invocation — the input to both
@@ -194,6 +203,10 @@ pub struct SimConfig {
     /// Which keep-alive/eviction policy the engine runs (DESIGN.md
     /// §KeepAlive). `Fixed` reproduces the legacy single-TTL behavior.
     pub keepalive: keepalive::KeepAliveMode,
+    /// Which fault profile the run injects (DESIGN.md §Faults). The
+    /// default `none` adds zero events and zero RNG draws — byte-identical
+    /// to the pre-fault engine.
+    pub faults: faults::FaultsSpec,
     /// Platform max invocation walltime.
     pub timeout_s: f64,
     /// RNG seed for execution noise / cold-start draws.
@@ -212,6 +225,7 @@ impl Default for SimConfig {
             cold_start_sigma: 0.35,
             keep_alive_s: 600.0,
             keepalive: keepalive::KeepAliveMode::Fixed,
+            faults: faults::FaultsSpec::default(),
             timeout_s: 300.0,
             seed: 0xC0FFEE,
         }
@@ -246,6 +260,11 @@ pub trait Policy {
         _cluster: &worker::Cluster,
     ) {
     }
+
+    /// A worker crashed (DESIGN.md §Faults): its warm pool, reservations,
+    /// and any per-worker learning state are gone. Policies tracking
+    /// observations per worker roll them back here.
+    fn on_worker_crash(&mut self, _now: SimTime, _worker: usize, _cluster: &worker::Cluster) {}
 }
 
 #[cfg(test)]
@@ -333,5 +352,9 @@ impl Policy for Box<dyn Policy> {
         cluster: &worker::Cluster,
     ) {
         (**self).on_complete(now, rec, cluster)
+    }
+
+    fn on_worker_crash(&mut self, now: SimTime, worker: usize, cluster: &worker::Cluster) {
+        (**self).on_worker_crash(now, worker, cluster)
     }
 }

@@ -117,6 +117,16 @@ pub struct Worker {
     pub sched_vcpu_limit: f64,
     pub mem_gb: f64,
     pub net_gbps: f64,
+    /// Crashed and not yet restarted (DESIGN.md §Faults). All capacity
+    /// predicates answer `false` while down, so schedulers and the
+    /// engine's admission path steer around the worker; work already
+    /// parked on its FIFO queue waits for the restart (or times out).
+    pub down: bool,
+    /// Execution speed multiplier (1.0 = nominal; stragglers < 1.0,
+    /// DESIGN.md §Faults). Folded into every cached progress rate next
+    /// to the interference factor — ×1.0 is bit-exact, so fault-free
+    /// runs are unchanged.
+    pub speed: f64,
     /// All containers on this worker, in id order. Mutate only through
     /// the container-lifecycle methods (`insert_container`,
     /// `remove_container`, `container_ready`, `acquire_container`,
@@ -202,6 +212,8 @@ impl Worker {
             sched_vcpu_limit: cfg.sched_vcpu_limit,
             mem_gb: cfg.mem_gb,
             net_gbps: cfg.net_gbps,
+            down: false,
+            speed: 1.0,
             containers: BTreeMap::new(),
             active: BTreeMap::new(),
             warm: BTreeSet::new(),
@@ -243,7 +255,9 @@ impl Worker {
     /// Queued demand is deliberately excluded — FIFO fairness is enforced
     /// by the engine popping the queue in order, not by this predicate.
     pub fn can_admit(&self, vcpus: u32, mem_mb: u32) -> bool {
-        self.free_sched_vcpus() >= vcpus as f64 && self.free_mem_mb() >= mem_mb as f64
+        !self.down
+            && self.free_sched_vcpus() >= vcpus as f64
+            && self.free_mem_mb() >= mem_mb as f64
     }
 
     /// Scheduler-facing capacity check: free resources *minus the demand
@@ -252,7 +266,8 @@ impl Worker {
     /// placements would only lengthen its queue (the queue-aware load
     /// view of DESIGN.md §Admission).
     pub fn has_capacity(&self, vcpus: u32, mem_mb: u32) -> bool {
-        self.free_sched_vcpus() - self.queued_vcpus() >= vcpus as f64
+        !self.down
+            && self.free_sched_vcpus() - self.queued_vcpus() >= vcpus as f64
             && self.free_mem_mb() - self.queued_mem_mb() >= mem_mb as f64
     }
 
@@ -267,7 +282,9 @@ impl Worker {
     /// FIFO queue regardless). With free idle containers this is
     /// exactly [`Self::has_capacity`].
     pub fn has_capacity_for_warm(&self, vcpus: u32, mem_mb: u32) -> bool {
-        if self.idle_reserves {
+        if self.down {
+            false
+        } else if self.idle_reserves {
             self.admission_queue_len() == 0
         } else {
             self.has_capacity(vcpus, mem_mb)
@@ -508,7 +525,10 @@ impl Worker {
     }
 
     fn recompute_rates(&mut self) {
-        let interference = self.interference_factor();
+        // Straggler speed rides next to the interference factor: every
+        // compute rate below is scaled by both. `speed == 1.0` multiplies
+        // bit-exactly, so fault-free streams are untouched.
+        let interference = self.speed * self.interference_factor();
         let net_rate = self.net_rate();
         let cores = self.physical_cores;
         self.rates.clear();
@@ -906,6 +926,34 @@ impl Cluster {
         expect_cluster.sort_unstable();
         let got: Vec<_> = self.warm.iter().copied().collect();
         assert_eq!(got, expect_cluster, "cluster warm index drifted");
+    }
+
+    /// First-class invariant check (ISSUE 6): reservation accounting,
+    /// admission limits, warm-index consistency, and the *peak*
+    /// reservation witness, all as plain `assert!`s so they fire in
+    /// release builds too — the adversity experiment and the fault test
+    /// battery call this per replicate. Peaks are checked against each
+    /// worker's **own** limits, so it holds on heterogeneous clusters
+    /// where a single cluster-wide limit would be meaningless.
+    pub fn check_invariants(&self) {
+        self.assert_admission_consistent();
+        self.assert_warm_consistent();
+        for w in &self.workers {
+            assert!(
+                w.peak_allocated_vcpus <= w.sched_vcpu_limit + 1e-9,
+                "worker {}: peak vCPU reservation {} exceeded its limit {}",
+                w.id,
+                w.peak_allocated_vcpus,
+                w.sched_vcpu_limit
+            );
+            assert!(
+                w.peak_allocated_mem_mb <= w.mem_gb * 1024.0 + 1e-9,
+                "worker {}: peak memory reservation {} MB exceeded its limit {} MB",
+                w.id,
+                w.peak_allocated_mem_mb,
+                w.mem_gb * 1024.0
+            );
+        }
     }
 }
 

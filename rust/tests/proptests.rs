@@ -230,6 +230,53 @@ fn prop_featurizer_stable_and_padded() {
 }
 
 #[test]
+fn prop_every_arrival_terminates_exactly_once_under_faults() {
+    // Conservation under adversity (DESIGN.md §Faults): whatever the
+    // scheduler, keep-alive policy, or fault profile, every arrival in
+    // the trace yields exactly one terminal record (Completed | OomKilled
+    // | TimedOut | Failed) — nothing is dropped, nothing double-counted,
+    // and the per-worker invariants hold at end of run. Each case is a
+    // full mini-simulation, so the case count stays small; failures
+    // report the case seed for `prop::check_one`.
+    use shabari::experiments::common::{self, Ctx};
+    use shabari::simulator::{faults, keepalive};
+    prop::check(0xC8, 10, |rng| {
+        let policy = *rng.choose(&["shabari", "shabari-ow-sched", "shabari-hermod"]);
+        let ka = *rng.choose(&["fixed:120", "histogram", "pressure"]);
+        let profile = *rng.choose(&["crash", "crash:20", "stragglers", "hetero", "chaos"]);
+        let ctx = Ctx {
+            seed: rng.next_u64(),
+            duration_s: 60.0,
+            keepalive: keepalive::parse(ka).unwrap(),
+            faults: faults::parse(profile).unwrap(),
+            ..Default::default()
+        };
+        let rps = 4.0;
+        let workload = ctx.workload();
+        let cfg = SimConfig { workers: 3, ..common::sim_config(&ctx) };
+        let (res, _) = common::run_one(policy, &ctx, &workload, rps, &cfg).unwrap();
+        // regenerate the (deterministic) trace to know exactly what arrived
+        let scenario = ctx.build_scenario().unwrap();
+        let trace = workload.trace_with(
+            scenario.as_ref(),
+            rps,
+            ctx.duration_s,
+            common::trace_seed(&ctx, rps),
+        );
+        let mut got: Vec<u64> = res.records.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        let mut want: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(
+            got, want,
+            "conservation broken under {policy}/{ka}/{profile}: \
+             every arrival must produce exactly one terminal record"
+        );
+        res.cluster.check_invariants();
+    });
+}
+
+#[test]
 fn prop_demand_models_monotone_and_finite() {
     prop::check(0xC7, 100, |rng| {
         let func = &CATALOG[rng.below(CATALOG.len())];

@@ -89,6 +89,66 @@ fn tie_heavy_run_is_byte_deterministic_including_learner_state() {
     );
 }
 
+/// Full-stream fingerprint of the tie-heavy workload under an arbitrary
+/// config: ordered records (id, timing bits, sizing, verdict) + learner
+/// model state + fault counters.
+fn fingerprint(cfg: SimConfig) -> (Vec<(u64, u64, u64, u32, u32, u8)>, Vec<u32>, u64, u64) {
+    let (fi, reqs) = tie_heavy_requests();
+    let allocator = ResourceAllocator::new(AllocatorConfig::default()).unwrap();
+    let mut policy = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(7)));
+    let res = simulate(cfg, &mut policy, reqs);
+    let stream: Vec<(u64, u64, u64, u32, u32, u8)> = res
+        .records
+        .iter()
+        .map(|r| {
+            let v = match r.verdict {
+                Verdict::Completed => 0u8,
+                Verdict::OomKilled => 1,
+                Verdict::TimedOut => 2,
+                Verdict::Failed => 3,
+            };
+            (r.id, r.exec_s.to_bits(), r.e2e_s.to_bits(), r.vcpus, r.mem_mb, v)
+        })
+        .collect();
+    let probe = featurize(&res.records[0].input).vector.with_slo(1.0);
+    let scores = policy.allocator.vcpu_scores_for(fi, &probe);
+    let score_bits: Vec<u32> = scores.iter().map(|s| s.to_bits()).collect();
+    res.cluster.check_invariants();
+    (stream, score_bits, res.worker_crashes, res.requeued_on_crash)
+}
+
+#[test]
+fn faults_none_is_byte_identical_to_the_default_config() {
+    // The fault axis at `none` must be a true no-op (ISSUE 6): a config
+    // that never mentions faults and one that explicitly parses
+    // `--faults none` produce byte-identical record streams and learner
+    // state — zero extra RNG draws, zero extra events, zero crashes.
+    let plain = SimConfig { workers: 1, ..SimConfig::default() };
+    let mut parsed = SimConfig { workers: 1, ..SimConfig::default() };
+    shabari::simulator::faults::parse("none").unwrap().apply(&mut parsed);
+    let a = fingerprint(plain);
+    let b = fingerprint(parsed);
+    assert_eq!(a.0.len(), 60, "all invocations must complete");
+    assert_eq!(a, b, "--faults none perturbed the default byte stream");
+    assert_eq!(a.2, 0, "no crashes under faults:none");
+    assert!(a.0.iter().all(|r| r.5 != 3), "no Failed records under faults:none");
+}
+
+#[test]
+fn faulty_runs_are_byte_deterministic() {
+    // Crash/restart cycles, stragglers, and heterogeneous workers are all
+    // seed-derived: the same config twice (including any Failed verdicts
+    // and requeue counters) must agree byte-for-byte, and the per-worker
+    // invariants must hold after teardown/restart churn.
+    let mut cfg = SimConfig { workers: 2, ..SimConfig::default() };
+    shabari::simulator::faults::parse("chaos:20").unwrap().apply(&mut cfg);
+    let a = fingerprint(cfg.clone());
+    let b = fingerprint(cfg);
+    assert_eq!(a.0.len(), 60, "every arrival must still terminate exactly once");
+    assert_eq!(a, b, "faulty record streams diverged across identical runs");
+    assert!(a.2 > 0, "chaos profile must schedule at least one crash");
+}
+
 #[test]
 fn completion_feedback_arrives_in_invocation_id_order_within_a_batch() {
     // All 20 wave-0 invocations share arrival, input sizes, and one

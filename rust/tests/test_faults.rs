@@ -1,0 +1,160 @@
+//! Fault-injection battery (ISSUE 6 / DESIGN.md §Faults): end-to-end
+//! behavior of crash/restart cycles, stragglers, and heterogeneous
+//! worker classes through the public `simulate` entry point.
+//!
+//! The tests never hunt seeds: [`FaultsSpec::plan`] is horizon-prefix
+//! stable and uses RNG streams disjoint from the engine's, so a test can
+//! ask the plan for the exact first crash time under the engine's own
+//! seed and place arrivals right before it — the crash is then
+//! *guaranteed* to land on in-flight work.
+
+use shabari::baselines::StaticPolicy;
+use shabari::functions::catalog::{index_of, CATALOG};
+use shabari::functions::inputs;
+use shabari::simulator::engine::simulate;
+use shabari::simulator::faults;
+use shabari::simulator::{Request, SimConfig, Verdict};
+use shabari::util::rng::Rng;
+
+/// `n` simultaneous qr invocations arriving at `at` (ids from `start_id`).
+fn qr_wave(start_id: u64, n: usize, at: f64, slo: f64) -> Vec<Request> {
+    let fi = index_of("qr").unwrap();
+    let mut rng = Rng::new(17);
+    let pool = inputs::pool(&CATALOG[fi], &mut rng);
+    (0..n)
+        .map(|i| Request {
+            id: start_id + i as u64,
+            func: fi,
+            input: pool[i % pool.len()].clone(),
+            arrival: at,
+            slo_s: slo,
+        })
+        .collect()
+}
+
+#[test]
+fn crash_fails_in_flight_work_and_restart_recovers() {
+    // One worker, first crash at t0 (read off the plan), downtime 600 s.
+    // A 40-wide wave lands 0.5 s before the crash: with 20-vCPU static
+    // asks against a 90-vCPU limit, most of it is still queued or waiting
+    // on ~0.55 s cold starts when the worker dies — and with no other
+    // worker to reroute to, everything in-system dies as `Failed`. A
+    // small wave after the restart must complete normally on the revived
+    // worker (the next crash is at least MTBF/2 after the restart).
+    let spec = faults::parse("crash:600").unwrap();
+    let seed = 123u64;
+    let t0 = spec.plan(1, 10_000.0, seed).crashes[0].at;
+    let mut reqs = qr_wave(1, 40, t0 - 0.5, 60.0);
+    reqs.extend(qr_wave(41, 3, t0 + 605.0, 60.0));
+    let mut cfg = SimConfig { workers: 1, seed, ..SimConfig::default() };
+    spec.apply(&mut cfg);
+    let mut policy = StaticPolicy::large(7);
+    let res = simulate(cfg, &mut policy, reqs);
+
+    assert_eq!(res.records.len(), 43, "every arrival must terminate exactly once");
+    assert!(res.worker_crashes >= 1, "the planned crash must have fired");
+    let failed: Vec<u64> = res
+        .records
+        .iter()
+        .filter(|r| r.verdict == Verdict::Failed)
+        .map(|r| r.id)
+        .collect();
+    assert!(!failed.is_empty(), "a 1-worker crash must strand in-flight work");
+    assert!(
+        failed.iter().all(|id| *id <= 40),
+        "only the pre-crash wave may fail: {failed:?}"
+    );
+    for r in res.records.iter().filter(|r| r.id > 40) {
+        assert_eq!(
+            r.verdict,
+            Verdict::Completed,
+            "restarted worker must serve invocation {} normally",
+            r.id
+        );
+    }
+    res.cluster.check_invariants();
+}
+
+#[test]
+fn crash_requeues_displaced_work_onto_the_surviving_worker() {
+    // Two workers, wave 0.5 s before the cluster's first crash. The
+    // memory-centric OpenWhisk route (static baselines) spreads 40 x
+    // 5 GB asks across both workers' admission queues, so whichever
+    // worker dies holds queued/waiting invocations — they must re-enter
+    // the admission path on the surviving worker, not vanish.
+    let spec = faults::parse("crash:10").unwrap();
+    let seed = 77u64;
+    let tmin = spec.plan(2, 10_000.0, seed).crashes[0].at;
+    let reqs = qr_wave(1, 40, tmin - 0.5, 60.0);
+    let mut cfg = SimConfig { workers: 2, seed, ..SimConfig::default() };
+    spec.apply(&mut cfg);
+    let mut policy = StaticPolicy::large(7);
+    let res = simulate(cfg, &mut policy, reqs);
+
+    assert_eq!(res.records.len(), 40, "every arrival must terminate exactly once");
+    assert!(res.worker_crashes >= 1);
+    assert!(
+        res.requeued_on_crash > 0,
+        "displaced queued/waiting work must reroute to the up worker"
+    );
+    res.cluster.check_invariants();
+}
+
+#[test]
+fn stragglers_stretch_execution_by_the_speed_factor() {
+    // A single uncontended invocation on a 0.25x straggler must run ~4x
+    // longer than on a nominal worker (the speed factor multiplies into
+    // the epoch-cached rate computation; x1.0 is bit-exact).
+    let run = |profile: Option<&str>| {
+        let mut cfg = SimConfig { workers: 1, seed: 5, ..SimConfig::default() };
+        if let Some(p) = profile {
+            faults::parse(p).unwrap().apply(&mut cfg);
+        }
+        let mut policy = StaticPolicy::large(7);
+        let res = simulate(cfg, &mut policy, qr_wave(1, 1, 0.0, 60.0));
+        assert_eq!(res.records.len(), 1);
+        assert_eq!(res.records[0].verdict, Verdict::Completed);
+        (res.records[0].exec_s, res.straggler_slowdown)
+    };
+    let (nominal, s_none) = run(None);
+    let (slowed, s_strag) = run(Some("stragglers:0.25"));
+    assert_eq!(s_none, 1.0);
+    assert_eq!(s_strag, 0.25, "slowdown echoes the configured factor");
+    assert!(
+        slowed > 2.0 * nominal,
+        "0.25x straggler must stretch execution: {nominal}s -> {slowed}s"
+    );
+}
+
+#[test]
+fn hetero_scales_per_worker_limits_and_serves_cleanly() {
+    // hetero cycles capacity classes 1.0/0.5/0.25 (worker 0 stays full
+    // size); medium 12-vCPU/3 GB asks fit even the quarter worker, so a
+    // paced trace completes cleanly and the release-mode invariant check
+    // audits each worker against its *own* scaled limits.
+    let mut cfg = SimConfig { workers: 3, seed: 9, ..SimConfig::default() };
+    faults::parse("hetero").unwrap().apply(&mut cfg);
+    let mut reqs = Vec::new();
+    for i in 0..12u64 {
+        reqs.extend(qr_wave(i + 1, 1, i as f64 * 2.0, 60.0));
+    }
+    let mut policy = StaticPolicy::medium(7);
+    let res = simulate(cfg, &mut policy, reqs);
+
+    let w = &res.cluster.workers;
+    assert_eq!(w[0].sched_vcpu_limit, 90.0);
+    assert_eq!(w[1].sched_vcpu_limit, 45.0);
+    assert_eq!(w[2].sched_vcpu_limit, 22.5);
+    assert_eq!(w[0].physical_cores, 96.0);
+    assert_eq!(w[1].physical_cores, 48.0);
+    assert_eq!(w[2].physical_cores, 24.0);
+    assert_eq!(w[0].mem_gb, 125.0);
+    assert_eq!(w[1].mem_gb, 62.5);
+    assert_eq!(w[2].mem_gb, 31.25);
+
+    assert_eq!(res.records.len(), 12, "every arrival must terminate exactly once");
+    assert!(res.records.iter().all(|r| r.verdict == Verdict::Completed));
+    assert_eq!(res.worker_crashes, 0, "hetero alone never crashes anyone");
+    assert_eq!(res.straggler_slowdown, 1.0, "hetero alone never slows anyone");
+    res.cluster.check_invariants();
+}

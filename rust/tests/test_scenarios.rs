@@ -122,6 +122,56 @@ fn trace_file_round_trips_the_sample_csv() {
 }
 
 #[test]
+fn trace_file_missing_path_errors_with_the_path_no_panic() {
+    // The CLI fail-fast check routes through `scenario::by_name`, so a
+    // typo'd path must come back as a clean error citing the path — not
+    // a panic, and not a silent fall-back to the embedded sample.
+    let err = scenario::by_name("trace-file:data/no_such_trace_anywhere.csv").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no_such_trace_anywhere.csv"), "error must cite the path: {msg}");
+    assert!(msg.contains("reading trace file"), "error must say what failed: {msg}");
+}
+
+#[test]
+fn trace_file_malformed_rows_error_with_row_context_no_panic() {
+    // Unique filenames per case: the parsed-profile cache memoizes by
+    // path for the life of the process, so reusing a name across cases
+    // (or with another test) could serve a stale parse.
+    let dir = std::env::temp_dir();
+    let write = |name: &str, text: &str| {
+        let path = dir.join(format!("shabari_negpath_{}_{name}", std::process::id()));
+        std::fs::write(&path, text).unwrap();
+        format!("{}", path.display())
+    };
+
+    // non-numeric count on file line 3: the error must carry the real
+    // line number and the offending field through the registry wrapper
+    let p = write("bad_count.csv", "HashOwner,Trigger,1,2\nabc,http,1,2\ndef,http,3,oops\n");
+    let msg = format!("{:#}", scenario::by_name(&format!("trace-file:{p}")).unwrap_err());
+    assert!(msg.contains("parsing trace file"), "{msg}");
+    assert!(msg.contains("line 3"), "row context lost: {msg}");
+    assert!(msg.contains("oops"), "offending field lost: {msg}");
+
+    // a truncated row (too few columns) is a row error, not an index panic
+    let p = write("short_row.csv", "HashOwner,Trigger,1,2\nabc,http\n");
+    let msg = format!("{:#}", scenario::by_name(&format!("trace-file:{p}")).unwrap_err());
+    assert!(msg.contains("line 2"), "{msg}");
+
+    // structurally hopeless files: empty, no minute columns, zero mass
+    for (name, text) in [
+        ("empty.csv", ""),
+        ("no_minutes.csv", "HashOwner,HashApp,Trigger\nabc,def,http\n"),
+        ("zero_mass.csv", "HashOwner,Trigger,1,2\nabc,http,0,0\n"),
+    ] {
+        let p = write(name, text);
+        assert!(
+            scenario::by_name(&format!("trace-file:{p}")).is_err(),
+            "{name} must be rejected"
+        );
+    }
+}
+
+#[test]
 fn zipf_mix_matches_the_requested_skew() {
     let w = Workload::build(1, 1.4);
     let z = ZipfSkew::new(1.1);

@@ -71,6 +71,42 @@ fn aggregates_byte_identical_across_job_counts() {
 }
 
 #[test]
+fn faulty_cells_byte_identical_across_job_counts() {
+    // The fault axis rides the same determinism contract as everything
+    // else (ISSUE 6): a cell running crash/straggler/hetero injection
+    // must produce bit-identical per-seed metrics — including the fault
+    // counters and Failed percentages — at any `--jobs`.
+    use shabari::simulator::faults;
+    let base = quick_ctx();
+    let cells = vec![Cell::new("shabari", 3.0), Cell::new("static-medium", 3.0)];
+    let sweep_with = |jobs: usize, profile: &str| {
+        let ctx = Ctx { faults: faults::parse(profile).unwrap(), ..base.clone() };
+        sweep::run_cells(&cells, ctx.seed, 2, jobs, move |cell, seed| {
+            run_cell(&cell.policy, &ctx, cell.rps, seed)
+        })
+        .unwrap()
+    };
+    for profile in ["chaos:15", "stragglers:0.4"] {
+        let sequential = sweep_with(1, profile);
+        let parallel = sweep_with(8, profile);
+        for (a, b) in sequential.iter().zip(&parallel) {
+            for (ma, mb) in a.per_seed.iter().zip(&b.per_seed) {
+                assert_eq!(
+                    metric_bits(ma),
+                    metric_bits(mb),
+                    "faulty cell {} ({profile}) diverged across --jobs",
+                    a.cell.id()
+                );
+                assert_eq!(ma.worker_crashes, mb.worker_crashes);
+                assert_eq!(ma.requeued_on_crash, mb.requeued_on_crash);
+                assert_eq!(ma.failed_pct.to_bits(), mb.failed_pct.to_bits());
+                assert_eq!(ma.straggler_slowdown.to_bits(), mb.straggler_slowdown.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
 fn rerunning_a_sweep_is_deterministic() {
     let ctx = quick_ctx();
     let cells = vec![Cell::new("static-large", 2.0)];
