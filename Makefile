@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench bench-scale scenarios overload keepalive adversity clean
+.PHONY: artifacts build test bench bench-scale scenarios overload keepalive adversity trace clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -38,6 +38,14 @@ keepalive:
 # out/adversity.json — EXPERIMENTS.md + DESIGN.md §Faults.
 adversity:
 	cargo run --release -- experiment adversity
+
+# Traced demo run + digest: JSONL lifecycle trace and Chrome trace-event
+# timeline (load out/trace.json in Perfetto), then the latency-breakdown /
+# utilization report — EXPERIMENTS.md + DESIGN.md §Observability.
+trace:
+	cargo run --release -- run --policy shabari --rps 4 --seeds 1 \
+		--trace out/trace.jsonl --trace-chrome out/trace.json
+	cargo run --release -- report out/trace.jsonl
 
 bench:
 	cargo bench

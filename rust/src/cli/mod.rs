@@ -3,14 +3,17 @@
 //! Subcommands:
 //!   run         — run one policy over a trace, print metrics
 //!   experiment  — regenerate a paper figure/table (fig1..fig14, table1-3)
+//!   report      — latency breakdown + utilization timeline of a trace
 //!   profile     — isolated profiling of one function (SLO derivation)
 //!   selfcheck   — artifacts load + XLA/native learner parity
 //!   list        — known policies and experiments
 
 pub mod args;
+pub mod report;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
+use crate::experiments::common::TraceOut;
 use crate::experiments::sweep;
 use crate::experiments::{self, Ctx};
 use crate::learner::xla::Backend;
@@ -43,6 +46,21 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
     let keepalive = crate::simulator::keepalive::parse(&a.get_or("keepalive", "fixed"))?;
     // ... and for the fault profile (default: an immortal, uniform cluster)
     let faults = crate::simulator::faults::parse(&a.get_or("faults", "none"))?;
+    // lifecycle tracing (DESIGN.md §Observability): either exporter flag
+    // switches the engine's trace sink on; absent both, tracing stays
+    // dormant and every stream is byte-identical to an untraced run
+    let trace_jsonl = a.get("trace").map(str::to_string);
+    let trace_chrome = a.get("trace-chrome").map(str::to_string);
+    let trace = if trace_jsonl.is_some() || trace_chrome.is_some() {
+        let interval_s = a.get_f64("trace-interval", 10.0)?;
+        ensure!(
+            interval_s > 0.0,
+            "--trace-interval expects a positive number of seconds, got {interval_s}"
+        );
+        Some(TraceOut { jsonl: trace_jsonl, chrome: trace_chrome, interval_s, exact: false })
+    } else {
+        None
+    };
     Ok(Ctx {
         seed: a.get_u64("seed", 42)?,
         backend,
@@ -59,6 +77,7 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         keepalive_workers: a.get_usize("keepalive-workers", 4)?.max(1),
         faults,
         adversity_workers: a.get_usize("adversity-workers", 4)?.max(1),
+        trace,
     })
 }
 
@@ -68,6 +87,13 @@ fn run(argv: &[String]) -> Result<()> {
     let a = args::Args::parse(rest, BOOL_FLAGS)?;
     if a.get_bool("verbose") {
         crate::util::log::set_level(crate::util::log::Level::Debug);
+    }
+    // --log-level names the level exactly and wins over --verbose
+    if let Some(name) = a.get("log-level") {
+        match crate::util::log::parse_level(name) {
+            Some(l) => crate::util::log::set_level(l),
+            None => bail!("--log-level expects error|warn|info|debug|trace, got '{name}'"),
+        }
     }
     match cmd {
         "help" | "--help" | "-h" => {
@@ -93,6 +119,7 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(&a),
+        "report" => report::cmd_report(&a),
         "experiment" => {
             let ctx = ctx_from(&a)?;
             let id = a
@@ -108,7 +135,12 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_run(a: &args::Args) -> Result<()> {
-    let ctx = ctx_from(a)?;
+    let mut ctx = ctx_from(a)?;
+    if let Some(t) = ctx.trace.as_mut() {
+        // a single run is one cell: write to the requested paths verbatim
+        // (grids keep exact=false and get per-cell suffixed names)
+        t.exact = true;
+    }
     let policy = a.get_or("policy", "shabari");
     let rps = a.get_f64("rps", 4.0)?;
     let t0 = std::time::Instant::now();
@@ -178,6 +210,14 @@ fn cmd_run(a: &args::Args) -> Result<()> {
         ),
     ]);
     t.print();
+    if let Some(tr) = &ctx.trace {
+        if let Some(p) = &tr.jsonl {
+            println!("(wrote lifecycle trace {p}; inspect with `shabari report {p}`)");
+        }
+        if let Some(p) = &tr.chrome {
+            println!("(wrote Chrome trace {p}; load in Perfetto or chrome://tracing)");
+        }
+    }
     Ok(())
 }
 
@@ -281,6 +321,10 @@ fn print_help() {
                                             fault-profile grid with per-replicate\n\
                                             invariant checks, dumps\n\
                                             out/adversity.json)\n\
+           report       digest a JSONL lifecycle trace: latency breakdown\n\
+                        (decision/queue/cold-start/exec percentiles) +\n\
+                        cluster utilization timeline\n\
+                          <path>            trace written by --trace\n\
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\
@@ -309,6 +353,16 @@ fn print_help() {
                                    stragglers:<factor> (slow workers),\n\
                                    hetero (mixed worker classes), chaos or\n\
                                    chaos:<downtime_s> (all three at once)\n\
+           --trace <path>          record every lifecycle event + utilization\n\
+                                   sample to a JSONL trace (off = byte-identical\n\
+                                   to an untraced run; sweeps trace replicate 0\n\
+                                   of each cell into per-cell suffixed files)\n\
+           --trace-chrome <path>   also export Chrome trace-event JSON\n\
+                                   (Perfetto / chrome://tracing; workers are\n\
+                                   tracks, invocations are spans)\n\
+           --trace-interval <s>    utilization sampling interval (default 10)\n\
+           --log-level <name>      stderr log level: error|warn|info|debug|trace\n\
+                                   (wins over --verbose and SHABARI_LOG)\n\
            --slo-multiplier <f>    SLO = f x median isolated time (default 1.4)\n\
            --xla                   use the AOT XLA learner (production path;\n\
                                    needs a `--features xla` build)\n\

@@ -1,0 +1,177 @@
+//! `shabari report` — human-readable digest of a JSONL lifecycle trace
+//! (DESIGN.md §Observability): the per-invocation latency breakdown
+//! (decision / queue / cold-start / exec percentiles over the whole run)
+//! and the cluster utilization timeline (busy vs allocated-idle vCPUs,
+//! queue depth, warm pool per sampling interval).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::spans::{breakdown, LatencyBreakdown};
+use crate::simulator::trace::TraceLog;
+use crate::util::table::{fnum, Table};
+
+use super::args::Args;
+
+/// Cap on printed timeline rows: long runs are strided down (first
+/// sample of each stride), never truncated at the front or back.
+const MAX_TIMELINE_ROWS: usize = 48;
+
+pub fn cmd_report(a: &Args) -> Result<()> {
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: shabari report <trace.jsonl>"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let log = TraceLog::from_jsonl(&text).with_context(|| format!("parsing trace {path}"))?;
+    print!("{}", render_report(&log));
+    Ok(())
+}
+
+/// The full report as a string (testable without capturing stdout).
+pub fn render_report(log: &TraceLog) -> String {
+    let mut out = String::new();
+    out.push_str(&render_header(log));
+    let spans = log.spans();
+    let b = breakdown(&spans);
+    out.push_str(&render_breakdown(&b));
+    out.push_str(&render_timeline(log));
+    out
+}
+
+fn render_header(log: &TraceLog) -> String {
+    let mut s = String::from("trace:");
+    for (k, v) in &log.meta {
+        s.push_str(&format!(" {k}={v}"));
+    }
+    s.push_str(&format!(
+        "\n       {} events, {} timeline samples @ {}s interval\n",
+        log.events.len(),
+        log.samples.len(),
+        log.cfg.sample_interval_s
+    ));
+    s
+}
+
+fn render_breakdown(b: &LatencyBreakdown) -> String {
+    let mut t = Table::new(
+        &format!("latency breakdown — {} invocations (seconds)", b.invocations),
+        &["component", "count", "mean", "p50", "p90", "p99", "max"],
+    );
+    for (label, h) in b.components() {
+        t.row(vec![
+            label.to_string(),
+            h.count().to_string(),
+            fnum(h.mean(), 3),
+            fnum(h.percentile(50.0), 3),
+            fnum(h.percentile(90.0), 3),
+            fnum(h.percentile(99.0), 3),
+            fnum(h.max(), 3),
+        ]);
+    }
+    t.note(
+        "percentiles are log2-bucket upper bounds (within 2x); \
+         decision+queue+cold-start+exec telescopes to e2e per invocation",
+    );
+    let mut s = t.render();
+    let verdicts: Vec<String> =
+        b.verdicts.iter().map(|(k, v)| format!("{k} {v}")).collect();
+    s.push_str(&format!(
+        "verdicts: {}  (max component-sum error {:.1e}s)\n",
+        verdicts.join(", "),
+        b.max_sum_error_s
+    ));
+    s
+}
+
+fn render_timeline(log: &TraceLog) -> String {
+    if log.samples.is_empty() {
+        return String::from("(no timeline samples — run longer than the sample interval)\n");
+    }
+    let stride = log.samples.len().div_ceil(MAX_TIMELINE_ROWS);
+    let mut t = Table::new(
+        &format!(
+            "cluster timeline — {} workers, every {}s{}",
+            log.worker_count(),
+            log.cfg.sample_interval_s,
+            if stride > 1 { format!(" (showing every {stride}th sample)") } else { String::new() }
+        ),
+        &["t (s)", "busy vCPU", "alloc vCPU", "limit", "util", "idle", "queue", "warm", "down"],
+    );
+    for sample in log.samples.iter().step_by(stride) {
+        let busy: f64 = sample.workers.iter().map(|w| w.busy_vcpus).sum();
+        let alloc: f64 = sample.workers.iter().map(|w| w.allocated_vcpus).sum();
+        let limit: f64 = sample.workers.iter().map(|w| w.vcpu_limit).sum();
+        let queue: usize = sample.workers.iter().map(|w| w.queue_depth).sum();
+        let warm: usize = sample.workers.iter().map(|w| w.warm_pool).sum();
+        let down = sample.workers.iter().filter(|w| w.down).count();
+        let util = if limit > 0.0 { 100.0 * busy / limit } else { 0.0 };
+        // idle fraction = capacity neither running an invocation nor
+        // held by a reservation, the "where every vCPU goes" column
+        let idle = if limit > 0.0 { 100.0 * (limit - alloc).max(0.0) / limit } else { 0.0 };
+        t.row(vec![
+            fnum(sample.at, 0),
+            fnum(busy, 1),
+            fnum(alloc, 1),
+            fnum(limit, 0),
+            format!("{util:.0}%"),
+            format!("{idle:.0}%"),
+            queue.to_string(),
+            warm.to_string(),
+            down.to_string(),
+        ]);
+    }
+    t.note(
+        "util = busy/limit; idle = unreserved capacity; alloc-busy is \
+         reserved-but-idle (cold starts in flight + warm slack)",
+    );
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{self, Ctx, TraceOut};
+
+    fn traced_log() -> TraceLog {
+        // run a real small simulation with tracing on and report on it
+        let ctx = Ctx {
+            duration_s: 60.0,
+            trace: Some(TraceOut { interval_s: 10.0, ..Default::default() }),
+            ..Default::default()
+        };
+        let workload = ctx.workload();
+        let cfg = common::sim_config(&ctx);
+        let (res, _) =
+            common::run_one("static-medium", &ctx, &workload, 2.0, &cfg).unwrap();
+        res.trace.expect("tracing was enabled")
+    }
+
+    #[test]
+    fn report_renders_breakdown_and_timeline() {
+        let log = traced_log();
+        let s = render_report(&log);
+        assert!(s.contains("latency breakdown"), "{s}");
+        assert!(s.contains("cold-start"), "{s}");
+        assert!(s.contains("e2e"), "{s}");
+        assert!(s.contains("cluster timeline"), "{s}");
+        assert!(s.contains("verdicts: "), "{s}");
+        // 60 s at a 10 s interval: several timeline rows made it in
+        assert!(log.samples.len() >= 5, "{} samples", log.samples.len());
+    }
+
+    #[test]
+    fn report_round_trips_through_jsonl() {
+        let log = traced_log();
+        let reparsed = TraceLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(render_report(&log), render_report(&reparsed));
+    }
+
+    #[test]
+    fn empty_trace_reports_gracefully() {
+        let log = TraceLog::new(Default::default(), Default::default());
+        let s = render_report(&log);
+        assert!(s.contains("0 invocations"), "{s}");
+        assert!(s.contains("no timeline samples"), "{s}");
+    }
+}

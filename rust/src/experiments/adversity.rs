@@ -155,6 +155,7 @@ pub fn adversity(ctx: &Ctx) -> Result<()> {
     t.print();
 
     let dump = Json::obj(vec![
+        ("perf", common::perf_json(wall, &outcomes)),
         (
             "config",
             Json::obj(vec![

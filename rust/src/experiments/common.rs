@@ -16,9 +16,37 @@ use crate::metrics::{from_result, RunMetrics};
 use crate::simulator::engine::{simulate, SimResult};
 use crate::simulator::faults::FaultsSpec;
 use crate::simulator::keepalive::KeepAliveSpec;
+use crate::simulator::trace::{TraceConfig, TraceLog};
 use crate::simulator::{Policy, SimConfig};
+use crate::util::rng::fnv1a;
 use crate::workload::scenario::{self, Scenario};
 use crate::workload::Workload;
+
+/// Trace-output request carried on [`Ctx`] (`--trace`/`--trace-chrome`,
+/// DESIGN.md §Observability). `None` on `Ctx` — the default — means the
+/// engine's tracing stays off and every stream is byte-identical to an
+/// untraced build.
+#[derive(Debug, Clone)]
+pub struct TraceOut {
+    /// JSONL event-log destination (`--trace PATH`).
+    pub jsonl: Option<String>,
+    /// Chrome trace-event destination (`--trace-chrome PATH`).
+    pub chrome: Option<String>,
+    /// Timeline sampling interval, simulated seconds (`--trace-interval`).
+    pub interval_s: f64,
+    /// `true` for single `run` invocations: write to the paths verbatim.
+    /// Experiment grids run many (policy × load × override) cells, so
+    /// they leave this `false` and each cell's files get a
+    /// `-<policy>-<rps>-<hash8>` suffix before the extension instead
+    /// ([`trace_paths`]) — deterministic, collision-free names.
+    pub exact: bool,
+}
+
+impl Default for TraceOut {
+    fn default() -> Self {
+        TraceOut { jsonl: None, chrome: None, interval_s: 10.0, exact: false }
+    }
+}
 
 /// Experiment context, filled from CLI flags.
 #[derive(Debug, Clone)]
@@ -65,6 +93,11 @@ pub struct Ctx {
     /// (`--adversity-workers`; small so a single crash is a real fraction
     /// of capacity).
     pub adversity_workers: usize,
+    /// Lifecycle-trace output request (`--trace`/`--trace-chrome`;
+    /// DESIGN.md §Observability). `None` — the default — keeps tracing
+    /// compiled in but dormant: byte-identical streams, zero extra RNG
+    /// draws. Sweeps trace replicate 0 only (see [`Ctx::with_seed`]).
+    pub trace: Option<TraceOut>,
 }
 
 impl Default for Ctx {
@@ -85,6 +118,7 @@ impl Default for Ctx {
             keepalive_workers: 4,
             faults: FaultsSpec::default(),
             adversity_workers: 4,
+            trace: None,
         }
     }
 }
@@ -105,8 +139,15 @@ impl Ctx {
     /// The same context re-based on a sweep-derived seed. Everything a
     /// cell runs (workload pools, traces, policies, cluster RNG) keys off
     /// `seed`, so this is the only hook replication needs.
+    ///
+    /// Tracing survives the re-base only at the *base* seed: replicate 0
+    /// of every sweep cell runs at exactly `ctx.seed`
+    /// (`sweep::cell_seed`), so this gate traces one replicate per cell
+    /// and leaves replicates ≥ 1 untraced — one timeline per cell, no
+    /// file-name races across replicates.
     pub fn with_seed(&self, seed: u64) -> Ctx {
-        Ctx { seed, ..self.clone() }
+        let trace = if seed == self.seed { self.trace.clone() } else { None };
+        Ctx { seed, trace, ..self.clone() }
     }
 
     /// The same context under a different workload scenario (the hook the
@@ -199,7 +240,10 @@ pub fn trace_seed(ctx: &Ctx, rps: f64) -> u64 {
 }
 
 /// Run one policy over a trace at `rps` under `Ctx::scenario`; returns
-/// raw result + metrics.
+/// raw result + metrics. When the context requests tracing
+/// (`Ctx::trace`), the run's lifecycle trace is exported to disk here —
+/// the one place every runner (single runs and sweep cells alike)
+/// funnels through.
 pub fn run_one(
     name: &str,
     ctx: &Ctx,
@@ -212,17 +256,129 @@ pub fn run_one(
     let trace =
         workload.trace_with(scenario.as_ref(), rps, ctx.duration_s, trace_seed(ctx, rps));
     let res = simulate(sim_cfg.clone(), &mut policy, trace);
+    if let (Some(out), Some(log)) = (&ctx.trace, &res.trace) {
+        write_trace(out, log, name, rps, ctx, sim_cfg)?;
+    }
     let metrics = from_result(name, &res);
     Ok((res, metrics))
 }
 
+/// Resolve the on-disk names for one traced run. Exact mode returns the
+/// requested paths verbatim; grid mode suffixes each with the cell tag
+/// and an FNV-1a hash of the full cell descriptor (scenario, keep-alive,
+/// faults, cluster size, seeds) so overridden cells sharing a
+/// (policy, rps) pair still get distinct files.
+pub fn trace_paths(
+    out: &TraceOut,
+    name: &str,
+    rps: f64,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+) -> (Option<String>, Option<String>) {
+    if out.exact {
+        return (out.jsonl.clone(), out.chrome.clone());
+    }
+    let desc = format!(
+        "{name}@{rps}|scenario={}|keepalive={}|faults={}|workers={}|seed={}|sim_seed={}|dur={}",
+        ctx.scenario,
+        ctx.keepalive.label(),
+        ctx.faults.label(),
+        cfg.workers,
+        ctx.seed,
+        cfg.seed,
+        ctx.duration_s,
+    );
+    let tag = sanitize_tag(&format!("{name}-{rps}"));
+    let suffix = format!("-{tag}-{:08x}", fnv1a(desc.as_bytes()) & 0xffff_ffff);
+    (
+        out.jsonl.as_deref().map(|p| suffixed(p, &suffix)),
+        out.chrome.as_deref().map(|p| suffixed(p, &suffix)),
+    )
+}
+
+/// Keep path-safe characters; everything else becomes `-`.
+fn sanitize_tag(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '-' })
+        .collect()
+}
+
+/// Insert `suffix` before the file extension (`out/t.jsonl` + `-x` →
+/// `out/t-x.jsonl`); appended verbatim when there is no extension.
+fn suffixed(path: &str, suffix: &str) -> String {
+    match path.rsplit_once('.') {
+        Some((stem, ext)) if !ext.contains('/') => format!("{stem}{suffix}.{ext}"),
+        _ => format!("{path}{suffix}"),
+    }
+}
+
+fn write_trace(
+    out: &TraceOut,
+    log: &TraceLog,
+    name: &str,
+    rps: f64,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+) -> Result<()> {
+    let (jsonl, chrome) = trace_paths(out, name, rps, ctx, cfg);
+    crate::log_trace!(
+        "trace export for {name}@{rps}: {} events, {} samples",
+        log.events.len(),
+        log.samples.len()
+    );
+    if let Some(path) = jsonl {
+        write_file(&path, &log.to_jsonl())?;
+        crate::log_debug!("wrote lifecycle trace (JSONL) to {path}");
+    }
+    if let Some(path) = chrome {
+        write_file(&path, &log.to_chrome())?;
+        crate::log_debug!("wrote Chrome trace-event timeline to {path}");
+    }
+    Ok(())
+}
+
+fn write_file(path: &str, contents: &str) -> Result<()> {
+    use anyhow::Context;
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating trace directory for {path}"))?;
+        }
+    }
+    std::fs::write(path, contents).with_context(|| format!("writing trace file {path}"))
+}
+
 /// Default testbed config with the experiment seed and the context's
-/// keep-alive and fault specs applied.
+/// keep-alive, fault, and trace specs applied.
 pub fn sim_config(ctx: &Ctx) -> SimConfig {
     let mut cfg = SimConfig { seed: ctx.seed ^ 0x51AB, ..Default::default() };
     ctx.keepalive.apply(&mut cfg);
     ctx.faults.apply(&mut cfg);
+    cfg.trace =
+        ctx.trace.as_ref().map(|t| TraceConfig { sample_interval_s: t.interval_s });
     cfg
+}
+
+/// Engine self-throughput summary for `out/*.json` experiment artifacts:
+/// wall-clock, total simulated invocations and engine events across every
+/// (cell, replicate), and the derived per-wall-second rates — so any
+/// saved artifact doubles as a perf record for before/after comparisons.
+pub fn perf_json(
+    wall_s: f64,
+    outcomes: &[crate::experiments::sweep::CellOutcome<RunMetrics>],
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let invocations: usize =
+        outcomes.iter().flat_map(|o| &o.per_seed).map(|m| m.invocations).sum();
+    let sim_events: u64 =
+        outcomes.iter().flat_map(|o| &o.per_seed).map(|m| m.sim_events).sum();
+    Json::obj(vec![
+        ("wall_s", Json::Num(wall_s)),
+        ("invocations", Json::Num(invocations as f64)),
+        ("sim_events", Json::Num(sim_events as f64)),
+        ("sim_inv_per_s", Json::Num(invocations as f64 / wall_s.max(1e-9))),
+        ("sim_events_per_s", Json::Num(sim_events as f64 / wall_s.max(1e-9))),
+    ])
 }
 
 /// Re-verify the engine's admission invariant on every replicate of a
@@ -360,6 +516,49 @@ mod tests {
 
     fn cfg_default_faults() -> crate::simulator::faults::FaultsSpec {
         sim_config(&Ctx::default()).faults
+    }
+
+    #[test]
+    fn with_seed_traces_only_the_base_replicate() {
+        let traced = Ctx {
+            trace: Some(TraceOut { jsonl: Some("out/t.jsonl".into()), ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(traced.with_seed(traced.seed).trace.is_some(), "replicate 0 keeps the trace");
+        assert!(traced.with_seed(traced.seed ^ 99).trace.is_none(), "replicates >= 1 drop it");
+        // and a traced ctx flips the engine's trace config on
+        assert!(sim_config(&traced).trace.is_some());
+        assert!(sim_config(&Ctx::default()).trace.is_none(), "default stays dormant");
+    }
+
+    #[test]
+    fn trace_paths_exact_vs_grid_suffix() {
+        let ctx = Ctx::default();
+        let cfg = sim_config(&ctx);
+        let out = TraceOut {
+            jsonl: Some("out/t.jsonl".into()),
+            chrome: Some("out/t.json".into()),
+            interval_s: 10.0,
+            exact: true,
+        };
+        assert_eq!(
+            trace_paths(&out, "shabari", 4.0, &ctx, &cfg),
+            (Some("out/t.jsonl".into()), Some("out/t.json".into())),
+            "exact mode passes paths through verbatim"
+        );
+        let grid = TraceOut { exact: false, ..out };
+        let (j, c) = trace_paths(&grid, "shabari", 4.0, &ctx, &cfg);
+        let j = j.unwrap();
+        assert!(j.starts_with("out/t-shabari-4") && j.ends_with(".jsonl"), "{j}");
+        assert!(c.unwrap().ends_with(".json"));
+        // distinct cells never collide, same cell is stable
+        let (j2, _) = trace_paths(&grid, "cypress", 4.0, &ctx, &cfg);
+        assert_ne!(j, j2.unwrap());
+        let (k, _) =
+            trace_paths(&grid, "shabari", 4.0, &ctx.with_scenario("flash-crowd"), &cfg);
+        assert_ne!(j, k.unwrap(), "config overrides reach the hash");
+        let (again, _) = trace_paths(&grid, "shabari", 4.0, &ctx, &cfg);
+        assert_eq!(j, again.unwrap(), "names are deterministic");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::metrics::RunMetrics;
 use crate::util::json::Json;
 use crate::util::table::{fnum, fpct, Table};
 
-use super::common::{run_cell, Ctx};
+use super::common::{perf_json, run_cell, Ctx};
 use super::sweep::{self, Cell, CellOutcome};
 
 /// The six systems of Fig 8, in the paper's order.
@@ -160,7 +160,7 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
     t.print();
 
     // machine-readable dump for EXPERIMENTS.md bookkeeping
-    let dump = Json::Arr(
+    let policies = Json::Arr(
         FIG8_POLICIES
             .iter()
             .enumerate()
@@ -187,6 +187,8 @@ pub fn fig8(ctx: &Ctx) -> Result<()> {
             })
             .collect(),
     );
+    let dump =
+        Json::obj(vec![("perf", perf_json(wall, &outcomes)), ("policies", policies)]);
     std::fs::create_dir_all("out").ok();
     match std::fs::write("out/fig8.json", dump.to_pretty()) {
         Ok(()) => println!("(dumped out/fig8.json)"),

@@ -149,6 +149,7 @@ pub fn keepalive(ctx: &Ctx) -> Result<()> {
 
     let limits = common::sim_config(ctx);
     let dump = Json::obj(vec![
+        ("perf", common::perf_json(wall, &outcomes)),
         (
             "config",
             Json::obj(vec![

@@ -126,6 +126,7 @@ pub fn overload(ctx: &Ctx) -> Result<()> {
     t.print();
 
     let dump = Json::obj(vec![
+        ("perf", common::perf_json(wall, &outcomes)),
         (
             "config",
             Json::obj(vec![

@@ -32,8 +32,13 @@ pub struct ScaleRow {
     pub wall_s: f64,
     /// Simulated invocations across all replicates.
     pub invocations: usize,
+    /// Engine events processed across all replicates.
+    pub sim_events: u64,
     /// Simulated invocations per wall-second (the headline number).
     pub sim_inv_per_s: f64,
+    /// Engine events per wall-second (finer-grained than invocations:
+    /// insensitive to how much queueing/prewarm churn a policy causes).
+    pub sim_events_per_s: f64,
     /// Cross-seed mean metrics (sanity: the grid simulates real work).
     pub metrics: RunMetrics,
 }
@@ -68,11 +73,14 @@ pub fn run_scale(ctx: &Ctx) -> Result<Vec<ScaleRow>> {
         let wall_s = t0.elapsed().as_secs_f64();
         let out = &outcomes[0];
         let invocations: usize = out.per_seed.iter().map(|m| m.invocations).sum();
+        let sim_events: u64 = out.per_seed.iter().map(|m| m.sim_events).sum();
         rows.push(ScaleRow {
             policy: policy.to_string(),
             wall_s,
             invocations,
+            sim_events,
             sim_inv_per_s: invocations as f64 / wall_s.max(1e-9),
+            sim_events_per_s: sim_events as f64 / wall_s.max(1e-9),
             metrics: out.mean_metrics(),
         });
     }
@@ -86,7 +94,7 @@ pub fn scale(ctx: &Ctx) -> Result<()> {
             "engine scale: {} workers @ {} rps, {}s trace, {} seed(s) x {} job(s)",
             ctx.scale_workers, ctx.scale_rps, ctx.duration_s, ctx.seeds, ctx.jobs
         ),
-        &["system", "invocations", "wall s", "sim inv/s", "SLO viol", "containers"],
+        &["system", "invocations", "wall s", "sim inv/s", "sim ev/s", "SLO viol", "containers"],
     );
     for r in &rows {
         t.row(vec![
@@ -94,6 +102,7 @@ pub fn scale(ctx: &Ctx) -> Result<()> {
             r.invocations.to_string(),
             fnum(r.wall_s, 2),
             fnum(r.sim_inv_per_s, 0),
+            fnum(r.sim_events_per_s, 0),
             fpct(r.metrics.slo_violation_pct),
             r.metrics.containers_created.to_string(),
         ]);
@@ -121,8 +130,10 @@ pub fn scale(ctx: &Ctx) -> Result<()> {
                         Json::obj(vec![
                             ("policy", Json::Str(r.policy.clone())),
                             ("invocations", Json::Num(r.invocations as f64)),
+                            ("sim_events", Json::Num(r.sim_events as f64)),
                             ("wall_s", Json::Num(r.wall_s)),
                             ("sim_inv_per_s", Json::Num(r.sim_inv_per_s)),
+                            ("sim_events_per_s", Json::Num(r.sim_events_per_s)),
                             ("slo_violation_pct", Json::Num(r.metrics.slo_violation_pct)),
                             (
                                 "containers_created",
@@ -165,6 +176,11 @@ mod tests {
             assert_eq!(a.policy, b.policy);
             assert!(a.invocations > 50, "{}: {} invocations", a.policy, a.invocations);
             assert_eq!(a.invocations, b.invocations);
+            // every invocation costs several engine events (arrival,
+            // ready, complete, evictions...), so the self-throughput
+            // counter must outrun the invocation count
+            assert!(a.sim_events > a.invocations as u64, "{}: {} events", a.policy, a.sim_events);
+            assert_eq!(a.sim_events, b.sim_events);
             assert_eq!(
                 a.metrics.slo_violation_pct.to_bits(),
                 b.metrics.slo_violation_pct.to_bits(),

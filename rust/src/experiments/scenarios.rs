@@ -14,7 +14,7 @@ use crate::util::json::Json;
 use crate::util::table::{fnum, fpct, Table};
 use crate::workload::scenario::SCENARIOS;
 
-use super::common::{run_cell, Ctx};
+use super::common::{perf_json, run_cell, Ctx};
 use super::e2e::FIG8_POLICIES;
 use super::sweep::{self, Cell, CellOutcome};
 
@@ -135,7 +135,7 @@ pub fn scenarios(ctx: &Ctx) -> Result<()> {
     t.print();
 
     // machine-readable dump for cross-scenario plotting
-    let dump = Json::Arr(
+    let policies = Json::Arr(
         FIG8_POLICIES
             .iter()
             .enumerate()
@@ -170,6 +170,8 @@ pub fn scenarios(ctx: &Ctx) -> Result<()> {
             })
             .collect(),
     );
+    let dump =
+        Json::obj(vec![("perf", perf_json(wall, &outcomes)), ("policies", policies)]);
     std::fs::create_dir_all("out").ok();
     match std::fs::write("out/scenarios.json", dump.to_pretty()) {
         Ok(()) => println!("(dumped out/scenarios.json)"),

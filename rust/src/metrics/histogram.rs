@@ -1,0 +1,195 @@
+//! Fixed-bucket log2 latency histograms (DESIGN.md §Observability).
+//!
+//! The span-breakdown report needs percentile *distributions* of latency
+//! components, not just means, and it needs them mergeable across seeds
+//! and byte-deterministic across platforms. A [`Log2Histogram`] has 44
+//! fixed power-of-two buckets from 1 µs up (~17.6 ks at the top — well
+//! past any walltime limit), so merging is counter addition and bucket
+//! placement never calls a libm function: edges are found by exact f64
+//! doubling (an exponent increment), not `log2()`, whose last-bit
+//! behavior is platform-dependent.
+
+/// Lower edge of bucket 1: values below this (including 0 and negative
+/// float residue) land in bucket 0.
+pub const MIN_S: f64 = 1e-6;
+
+/// Bucket count. Bucket 0 is `(-inf, MIN_S)`, bucket `i` (1..BUCKETS-1)
+/// is `[MIN_S * 2^(i-1), MIN_S * 2^i)`, and the last bucket is the
+/// catch-all up to infinity.
+pub const BUCKETS: usize = 44;
+
+/// A mergeable fixed-bucket histogram of nonnegative seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Log2Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Log2Histogram { counts: [0; BUCKETS], count: 0, sum: 0.0, max: 0.0 }
+    }
+}
+
+/// Bucket index for a value, by exact repeated doubling of the edge —
+/// each step is an f64 exponent increment, so the edges are identical
+/// bit-for-bit on every platform.
+pub fn bucket_index(v: f64) -> usize {
+    if !(v >= MIN_S) {
+        // Sub-microsecond, zero, negative residue, NaN: bucket 0.
+        return 0;
+    }
+    let mut edge = MIN_S;
+    for i in 1..BUCKETS {
+        edge *= 2.0;
+        if v < edge {
+            return i;
+        }
+    }
+    BUCKETS - 1
+}
+
+/// Upper edge of a bucket (`MIN_S * 2^i`); callers display ranges with
+/// `upper_edge(i-1)..upper_edge(i)`.
+pub fn upper_edge(i: usize) -> f64 {
+    let mut edge = MIN_S;
+    for _ in 0..i.min(BUCKETS - 1) {
+        edge *= 2.0;
+    }
+    edge
+}
+
+impl Log2Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v.max(0.0);
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile estimate: the upper edge of the first bucket where the
+    /// cumulative count reaches `ceil(p/100 * count)` — an upper bound
+    /// within one bucket width (≤ 2x). The catch-all top bucket reports
+    /// the recorded max instead of its (unbounded) edge, as does any
+    /// bucket the max itself falls in.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().clamp(1.0, self.count as f64) as u64;
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += self.counts[i];
+            if cum >= rank {
+                return if i == BUCKETS - 1 { self.max } else { upper_edge(i).min(self.max) };
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram in (cross-seed aggregation): counts add,
+    /// max takes the max.
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for i in 0..BUCKETS {
+            self.counts[i] += other.counts[i];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Raw bucket counts (exporters / tests).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_exact_powers_of_two() {
+        // below the first edge -> bucket 0
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(9.9e-7), 0);
+        // the edge itself opens the next bucket (half-open intervals)
+        assert_eq!(bucket_index(MIN_S), 1);
+        assert_eq!(bucket_index(2e-6), 2);
+        assert_eq!(bucket_index(4e-6), 3);
+        // one ulp under an edge stays in the lower bucket
+        assert_eq!(bucket_index(f64::from_bits((2e-6f64).to_bits() - 1)), 1);
+        // ~1 s lives where upper_edge brackets it
+        let i = bucket_index(1.0);
+        assert!(upper_edge(i - 1) <= 1.0 && 1.0 < upper_edge(i));
+        // far beyond the range -> catch-all
+        assert_eq!(bucket_index(1e12), BUCKETS - 1);
+        // upper_edge doubles exactly
+        for i in 1..BUCKETS {
+            assert_eq!(upper_edge(i), 2.0 * upper_edge(i - 1));
+        }
+    }
+
+    #[test]
+    fn percentile_is_bucket_upper_bound() {
+        let mut h = Log2Histogram::default();
+        for _ in 0..99 {
+            h.record(0.001);
+        }
+        h.record(10.0);
+        assert_eq!(h.count(), 100);
+        // p50 falls in 0.001's bucket: its upper edge is within 2x above
+        let p50 = h.percentile(50.0);
+        assert!((0.001..=0.002048).contains(&p50), "p50 {p50}");
+        // p100 reports the exact max
+        assert_eq!(h.percentile(100.0), 10.0);
+        assert!(h.percentile(99.0) <= 10.0);
+        assert!((h.mean() - (99.0 * 0.001 + 10.0) / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Log2Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_keeps_max() {
+        let mut a = Log2Histogram::default();
+        a.record(0.5);
+        let mut b = Log2Histogram::default();
+        b.record(2.0);
+        b.record(8.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 8.0);
+        let sum: u64 = a.buckets().iter().sum();
+        assert_eq!(sum, 3);
+    }
+}

@@ -7,6 +7,9 @@ use crate::simulator::engine::{EvictReason, SimResult};
 use crate::simulator::{InvocationRecord, Verdict};
 use crate::util::stats::{self, Summary};
 
+pub mod histogram;
+pub mod spans;
+
 /// Aggregated metrics for one run (one policy at one load).
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
@@ -72,6 +75,11 @@ pub struct RunMetrics {
     pub requeued_on_crash: u64,
     /// Slowest configured worker speed factor (1.0 = no stragglers).
     pub straggler_slowdown: f64,
+    /// Discrete events the engine processed (0 when aggregated from bare
+    /// records). With the harness's wall-clock this yields the
+    /// self-throughput numbers (`sim_inv_per_s`, `sim_events_per_s`)
+    /// stamped into every experiment artifact.
+    pub sim_events: u64,
 }
 
 impl RunMetrics {
@@ -135,6 +143,8 @@ impl RunMetrics {
                 .iter()
                 .map(|r| r.straggler_slowdown)
                 .fold(1.0, f64::min),
+            sim_events: (runs.iter().map(|r| r.sim_events).sum::<u64>() as f64 / n).round()
+                as u64,
         }
     }
 }
@@ -197,6 +207,7 @@ pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
         worker_crashes: 0,
         requeued_on_crash: 0,
         straggler_slowdown: 1.0,
+        sim_events: 0,
     }
 }
 
@@ -217,6 +228,7 @@ pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
     m.worker_crashes = res.worker_crashes;
     m.requeued_on_crash = res.requeued_on_crash;
     m.straggler_slowdown = res.straggler_slowdown;
+    m.sim_events = res.events_processed;
     m
 }
 

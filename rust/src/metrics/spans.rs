@@ -1,0 +1,108 @@
+//! Per-invocation latency breakdowns over trace spans (DESIGN.md
+//! §Observability): the percentile view of *where latency goes* —
+//! decision vs queue vs cold start vs execution — that run-level means
+//! cannot show (the paper's 6x-variability motivation).
+
+use std::collections::BTreeMap;
+
+use crate::simulator::trace::{verdict_label, InvocationSpans};
+
+use super::histogram::Log2Histogram;
+
+/// Component distributions assembled from a run's invocation spans.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyBreakdown {
+    pub decision: Log2Histogram,
+    pub queue: Log2Histogram,
+    pub cold_start: Log2Histogram,
+    pub exec: Log2Histogram,
+    pub e2e: Log2Histogram,
+    pub invocations: u64,
+    /// Terminal verdicts by label (completed / oom-killed / …), ordered.
+    pub verdicts: BTreeMap<String, u64>,
+    /// Largest observed `|components_sum - e2e|` — the telescoping
+    /// invariant's witness (float residue only; the trace-battery test
+    /// bounds it at 1e-9 s).
+    pub max_sum_error_s: f64,
+}
+
+impl LatencyBreakdown {
+    /// `(label, histogram)` rows in report order.
+    pub fn components(&self) -> [(&'static str, &Log2Histogram); 5] {
+        [
+            ("decision", &self.decision),
+            ("queue", &self.queue),
+            ("cold-start", &self.cold_start),
+            ("exec", &self.exec),
+            ("e2e", &self.e2e),
+        ]
+    }
+}
+
+/// Fold invocation spans into component histograms.
+pub fn breakdown(spans: &[InvocationSpans]) -> LatencyBreakdown {
+    let mut b = LatencyBreakdown::default();
+    for s in spans {
+        b.decision.record(s.decision_s);
+        b.queue.record(s.queue_s);
+        b.cold_start.record(s.cold_start_s);
+        b.exec.record(s.exec_s);
+        b.e2e.record(s.e2e_s());
+        b.invocations += 1;
+        *b.verdicts.entry(verdict_label(s.verdict).to_string()).or_insert(0) += 1;
+        let err = (s.components_sum() - s.e2e_s()).abs();
+        if err > b.max_sum_error_s {
+            b.max_sum_error_s = err;
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::Verdict;
+
+    fn span(decision: f64, queue: f64, cold: f64, exec: f64, verdict: Verdict) -> InvocationSpans {
+        InvocationSpans {
+            inv: 1,
+            func: 0,
+            worker: 0,
+            arrival: 0.0,
+            end: decision + queue + cold + exec,
+            verdict,
+            decision_s: decision,
+            queue_s: queue,
+            cold_start_s: cold,
+            exec_s: exec,
+            episodes: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn breakdown_folds_components_and_verdicts() {
+        let spans = vec![
+            span(0.01, 0.0, 0.6, 2.0, Verdict::Completed),
+            span(0.01, 5.0, 0.0, 1.0, Verdict::Completed),
+            span(0.02, 30.0, 0.0, 0.0, Verdict::TimedOut),
+        ];
+        let b = breakdown(&spans);
+        assert_eq!(b.invocations, 3);
+        assert_eq!(b.queue.count(), 3);
+        assert_eq!(b.queue.max(), 30.0);
+        assert_eq!(b.verdicts.get("completed"), Some(&2));
+        assert_eq!(b.verdicts.get("timed-out"), Some(&1));
+        // spans built to telescope exactly
+        assert!(b.max_sum_error_s < 1e-12, "sum error {}", b.max_sum_error_s);
+        assert_eq!(b.e2e.count(), 3);
+        assert!((b.e2e.mean() - ((2.61 + 6.01 + 30.02) / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_breakdown_is_safe() {
+        let b = breakdown(&[]);
+        assert_eq!(b.invocations, 0);
+        assert_eq!(b.e2e.percentile(99.0), 0.0);
+        assert!(b.verdicts.is_empty());
+    }
+}

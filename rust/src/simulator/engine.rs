@@ -12,9 +12,14 @@
 //! release (completion, eviction, teardown, background-ready). A request
 //! can die *in queue*: its walltime clock is scheduled at arrival, so
 //! timeout produces a `TimedOut` record whether or not it ever bound.
+//!
+//! With `SimConfig::trace` set, every lifecycle transition above is also
+//! recorded into a side-band [`TraceLog`] (DESIGN.md §Observability) and
+//! a fixed-interval utilization timeline rides the run loop — zero extra
+//! RNG draws, zero extra heap events, byte-identical records either way.
 
 use std::cmp::Ordering;
-use std::collections::{BTreeSet, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 
 use crate::functions::catalog::CATALOG;
 use crate::functions::Demand;
@@ -23,6 +28,7 @@ use crate::util::rng::Rng;
 use super::container::Container;
 use super::faults::FaultPlan;
 use super::keepalive::{self, KeepAlivePolicy};
+use super::trace::{TimelineSample, TraceEventKind, TraceLog};
 use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec, QueuedAdmission};
 use super::{
     ContainerChoice, Decision, InvocationRecord, Policy, Request, SimConfig, SimTime, Verdict,
@@ -189,6 +195,13 @@ pub struct SimResult {
     pub requeued_on_crash: u64,
     /// Slowest configured worker speed factor (1.0 without stragglers).
     pub straggler_slowdown: f64,
+    /// Heap events processed over the run — with wall-clock time at the
+    /// caller this gives the engine's self-throughput (`sim_events_per_s`).
+    pub events_processed: u64,
+    /// The lifecycle trace (DESIGN.md §Observability), present iff
+    /// `SimConfig::trace` was set. The engine never writes files — the
+    /// caller serializes via `TraceLog::{to_jsonl, to_chrome}`.
+    pub trace: Option<TraceLog>,
 }
 
 impl SimResult {
@@ -254,6 +267,12 @@ pub struct Engine<'p, P: Policy> {
     /// Reused completion buffers (no steady-state allocation).
     done_scratch: Vec<u64>,
     finished_scratch: Vec<u64>,
+    events_processed: u64,
+    /// Lifecycle trace sink (DESIGN.md §Observability). `None` is the
+    /// zero-cost off state: every recording site is an `is_some()` check,
+    /// and the sink draws no RNG and pushes no heap events either way, so
+    /// record streams are byte-identical with tracing on or off.
+    trace: Option<TraceLog>,
 }
 
 impl<'p, P: Policy> Engine<'p, P> {
@@ -282,6 +301,18 @@ impl<'p, P: Policy> Engine<'p, P> {
         // Workers read their `idle_reserves` accounting switch off the
         // same `keepalive::build` impl this instance answers from.
         let ka = keepalive::build(&cfg);
+        let trace = cfg.trace.clone().map(|tc| {
+            let mut meta = BTreeMap::new();
+            meta.insert("policy".to_string(), policy.name());
+            meta.insert("keepalive".to_string(), cfg.keepalive.label().to_string());
+            meta.insert("keep_alive_s".to_string(), format!("{}", cfg.keep_alive_s));
+            meta.insert("faults".to_string(), cfg.faults.label());
+            meta.insert("fault_plan".to_string(), faults.describe());
+            meta.insert("workers".to_string(), cfg.workers.to_string());
+            meta.insert("seed".to_string(), cfg.seed.to_string());
+            meta.insert("requests".to_string(), requests.len().to_string());
+            TraceLog::new(tc, meta)
+        });
         Engine {
             cfg,
             policy,
@@ -312,6 +343,34 @@ impl<'p, P: Policy> Engine<'p, P> {
             requeued_on_crash: 0,
             done_scratch: Vec::new(),
             finished_scratch: Vec::new(),
+            events_processed: 0,
+            trace,
+        }
+    }
+
+    /// Record one lifecycle event at the current simulated time. No-op
+    /// with tracing off; purely side-band either way (never touches
+    /// engine state, the RNG, or the event heap).
+    fn trace_event(&mut self, kind: TraceEventKind) {
+        if let Some(t) = self.trace.as_mut() {
+            t.record(self.now, kind);
+        }
+    }
+
+    /// Emit every due utilization snapshot up to `upto` (the next event's
+    /// timestamp). The sampler rides the run loop instead of scheduling
+    /// heap events, so event sequence numbers — and therefore every
+    /// record stream — are identical with tracing on or off. Cluster
+    /// state is piecewise-constant between events, so sampling at a
+    /// boundary that falls inside an event gap reads the exact value
+    /// that held across the whole gap.
+    fn sample_timeline_to(&mut self, upto: SimTime) {
+        let Some(t) = self.trace.as_mut() else {
+            return;
+        };
+        while t.next_sample_at() <= upto {
+            let at = t.next_sample_at();
+            t.push_sample(TimelineSample::capture(at, &self.cluster));
         }
     }
 
@@ -340,6 +399,10 @@ impl<'p, P: Policy> Engine<'p, P> {
         }
         while let Some(ev) = self.events.pop() {
             debug_assert!(ev.at >= self.now - 1e-9, "time went backwards");
+            self.events_processed += 1;
+            if self.trace.is_some() {
+                self.sample_timeline_to(ev.at);
+            }
             self.now = ev.at.max(self.now);
             match ev.kind {
                 EventKind::Arrival(i) => self.on_arrival(i),
@@ -380,6 +443,15 @@ impl<'p, P: Policy> Engine<'p, P> {
             .map(|c| (now - c.idle_since).max(0.0))
             .sum();
         self.idle_container_s += trailing;
+        // Close the utilization timeline: any boundaries left before the
+        // final event, then one end-of-run snapshot (skipped when the
+        // last boundary already sampled this exact instant).
+        if self.trace.is_some() {
+            self.sample_timeline_to(now);
+            if let Some(t) = self.trace.as_mut() {
+                t.close(now, &self.cluster);
+            }
+        }
         SimResult {
             records: self.records,
             cluster: self.cluster,
@@ -396,6 +468,8 @@ impl<'p, P: Policy> Engine<'p, P> {
             worker_crashes: self.worker_crashes,
             requeued_on_crash: self.requeued_on_crash,
             straggler_slowdown: self.faults.slowest_speed(),
+            events_processed: self.events_processed,
+            trace: self.trace,
         }
     }
 
@@ -441,6 +515,17 @@ impl<'p, P: Policy> Engine<'p, P> {
 
         let inv_id = req.id;
         let arrival = req.arrival;
+        if self.trace.is_some() {
+            self.trace_event(TraceEventKind::Arrival { inv: inv_id, func: req.func });
+            self.trace_event(TraceEventKind::Decision {
+                inv: inv_id,
+                worker: decision.worker,
+                vcpus: decision.vcpus,
+                mem_mb: decision.mem_mb,
+                warm: matches!(decision.container, ContainerChoice::Warm(_)),
+                overhead_s: decision.overhead_s,
+            });
+        }
         let pend = Pending {
             vcpus: decision.vcpus,
             mem_mb: decision.mem_mb,
@@ -485,6 +570,7 @@ impl<'p, P: Policy> Engine<'p, P> {
                 self.background_launches += 1;
             } else {
                 self.background_shed += 1;
+                self.trace_event(TraceEventKind::PrewarmShed { worker: bg.worker });
             }
         }
     }
@@ -547,6 +633,14 @@ impl<'p, P: Policy> Engine<'p, P> {
                 vcpus: p.decision.vcpus,
                 mem_mb: p.decision.mem_mb,
             });
+            if self.trace.is_some() {
+                let depth = self.cluster.workers[worker_id].admission_queue_len();
+                self.trace_event(TraceEventKind::QueueEnter {
+                    inv: inv_id,
+                    worker: worker_id,
+                    depth,
+                });
+            }
             // Under demand-driven keep-alive, parking is itself pressure:
             // idle containers may yield to the queue head right now.
             if self.ka.demand_driven() {
@@ -599,7 +693,13 @@ impl<'p, P: Policy> Engine<'p, P> {
             debug_assert_eq!(popped.map(|q| q.inv_id), Some(inv_id));
             let p = self.pending.get_mut(&inv_id).expect("queued invocation pending");
             let since = p.queued_since.take().expect("queued invocation has queued_since");
-            p.queue_s += self.now - since;
+            let waited_s = self.now - since;
+            p.queue_s += waited_s;
+            self.trace_event(TraceEventKind::QueueAdmit {
+                inv: inv_id,
+                worker: worker_id,
+                waited_s,
+            });
             self.admit(inv_id, worker_id, warm);
         }
     }
@@ -652,6 +752,7 @@ impl<'p, P: Policy> Engine<'p, P> {
         // the single-launch path is unchanged).
         p.cold_start_s += (ready - self.now).max(0.0);
         self.cluster.workers[worker].total_cold_starts += 1;
+        self.trace_event(TraceEventKind::ColdStartBegin { inv: inv_id, worker, container: cid });
     }
 
     /// Create a container (cold). If `for_inv` is set, the invocation is
@@ -670,6 +771,14 @@ impl<'p, P: Policy> Engine<'p, P> {
         self.launches.push(LaunchRecord {
             at: self.now,
             worker,
+            func,
+            vcpus,
+            mem_mb,
+            background: for_inv.is_none(),
+        });
+        self.trace_event(TraceEventKind::ContainerLaunch {
+            worker,
+            container: cid,
             func,
             vcpus,
             mem_mb,
@@ -706,6 +815,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             debug_assert!(false, "container {container} evicted before ready");
             return;
         };
+        self.trace_event(TraceEventKind::ContainerReady { worker, container });
         if let Some(inv) = self.waiting_on_container.remove(&container) {
             if !self.pending.contains_key(&inv) {
                 // The waiting invocation timed out mid-cold-start (its
@@ -732,6 +842,10 @@ impl<'p, P: Policy> Engine<'p, P> {
 
     /// Bind the invocation to a ready container and start its phases.
     fn bind_and_start(&mut self, inv_id: u64, worker_id: usize, cid: u64) {
+        // For the trace: a bind is warm iff this invocation never paid a
+        // cold start (its own just-ready container also parks `Idle` for
+        // an instant, so the container's state can't distinguish them).
+        let was_warm = !self.pending[&inv_id].had_cold_start;
         // Warm-pool accounting: a warm bind consumes the container's
         // idle period (idle container-seconds are the memory-waste
         // proxy), and the first use of a pre-warmed container is a
@@ -760,6 +874,21 @@ impl<'p, P: Policy> Engine<'p, P> {
 
         // Build the phase list from the ground-truth demand.
         let d = p.demand.clone();
+        if self.trace.is_some() {
+            self.trace_event(TraceEventKind::Bind {
+                inv: inv_id,
+                worker: worker_id,
+                container: cid,
+                vcpus: c_vcpus,
+                mem_mb: c_mem,
+                warm: was_warm,
+            });
+            self.trace_event(TraceEventKind::ExecBegin {
+                inv: inv_id,
+                worker: worker_id,
+                container: cid,
+            });
+        }
         let mut phases: Vec<PhaseSpec> = Vec::new();
         if d.net_bytes > 0.0 {
             phases.push(PhaseSpec { phase: Phase::Net, work: d.net_bytes, demand: 1.0 });
@@ -933,6 +1062,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             peak_vcpus_used: 0.0,
             mem_used_gb: 0.0,
         };
+        self.trace_event(TraceEventKind::End { inv: inv_id, worker: worker_id, verdict });
         self.policy.on_complete(self.now, &rec, &self.cluster);
         self.records.push(rec);
         if was_queued {
@@ -1003,6 +1133,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             peak_vcpus_used: active.peak_vcpus,
             mem_used_gb: active.mem_used_gb.min(p.mem_mb as f64 / 1024.0),
         };
+        self.trace_event(TraceEventKind::End { inv: inv_id, worker: worker_id, verdict });
         self.policy.on_complete(self.now, &rec, &self.cluster);
         self.records.push(rec);
     }
@@ -1028,7 +1159,13 @@ impl<'p, P: Policy> Engine<'p, P> {
     ) {
         let func = self.cluster.workers[worker].containers[&container].func;
         let d = self.ka.on_idle(self.now, func);
-        let deadline = self.now + d.ttl_s.max(0.0);
+        let ttl_s = d.ttl_s.max(0.0);
+        let deadline = self.now + ttl_s;
+        let prewarm_at = if may_prewarm {
+            d.prewarm_at.map(|at| at.max(deadline))
+        } else {
+            None
+        };
         {
             let c = self.cluster.workers[worker]
                 .containers
@@ -1036,12 +1173,14 @@ impl<'p, P: Policy> Engine<'p, P> {
                 .expect("idle container exists");
             debug_assert!(c.is_warm_idle() && c.idle_epoch == idle_epoch);
             c.evict_deadline = deadline;
-            c.prewarm_at = if may_prewarm {
-                d.prewarm_at.map(|at| at.max(deadline))
-            } else {
-                None
-            };
+            c.prewarm_at = prewarm_at;
         }
+        self.trace_event(TraceEventKind::ContainerIdle {
+            worker,
+            container,
+            ttl_s,
+            prewarm: prewarm_at.is_some(),
+        });
         self.push(deadline, EventKind::Evict { worker, container, idle_epoch });
     }
 
@@ -1058,8 +1197,10 @@ impl<'p, P: Policy> Engine<'p, P> {
                 .expect("just launched")
                 .prewarmed = true;
             self.prewarm_launches += 1;
+            self.trace_event(TraceEventKind::PrewarmFired { worker, func, vcpus, mem_mb });
         } else {
             self.background_shed += 1;
+            self.trace_event(TraceEventKind::PrewarmShed { worker });
         }
     }
 
@@ -1090,6 +1231,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             deadline,
             idle_since,
         });
+        self.trace_event(TraceEventKind::ContainerEvict { worker, container: cid, reason });
         self.cluster.remove_container(worker, cid);
         if let (EvictReason::Expired, Some(at)) = (reason, prewarm_at) {
             self.push(at.max(self.now), EventKind::PreWarm { worker, func, vcpus, mem_mb });
@@ -1173,6 +1315,7 @@ impl<'p, P: Policy> Engine<'p, P> {
         // steer around this worker.
         self.cluster.workers[worker_id].down = true;
         self.worker_crashes += 1;
+        self.trace_event(TraceEventKind::WorkerCrash { worker: worker_id });
         self.cluster.workers[worker_id].advance(self.now);
 
         // 1. In-flight invocations die with a clean `Failed` record, in
@@ -1250,6 +1393,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             return;
         }
         self.cluster.workers[worker_id].down = false;
+        self.trace_event(TraceEventKind::WorkerRestart { worker: worker_id });
         // No active work existed while down; this just moves the
         // processor-sharing clock past the outage.
         self.cluster.workers[worker_id].advance(self.now);

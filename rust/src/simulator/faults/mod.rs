@@ -108,6 +108,21 @@ impl FaultPlan {
     pub fn slowest_speed(&self) -> f64 {
         self.speed.iter().copied().fold(1.0, f64::min)
     }
+
+    /// One-line plan summary for trace metadata (DESIGN.md
+    /// §Observability), e.g. `7 crash cycles, slowest speed 0.5,
+    /// smallest capacity 0.25`.
+    pub fn describe(&self) -> String {
+        let stragglers = self.speed.iter().filter(|s| **s < 1.0).count();
+        let smallest = self.capacity_scale.iter().copied().fold(1.0, f64::min);
+        format!(
+            "{} crash cycles, {} stragglers, slowest speed {}, smallest capacity {}",
+            self.crashes.len(),
+            stragglers,
+            self.slowest_speed(),
+            smallest
+        )
+    }
 }
 
 impl FaultsSpec {

@@ -55,6 +55,17 @@ pub enum KeepAliveMode {
     Pressure,
 }
 
+impl KeepAliveMode {
+    /// Registry name of the mode (trace metadata, display).
+    pub fn label(self) -> &'static str {
+        match self {
+            KeepAliveMode::Fixed => "fixed",
+            KeepAliveMode::Histogram => "histogram",
+            KeepAliveMode::Pressure => "pressure",
+        }
+    }
+}
+
 /// Parsed `--keepalive` value: a mode plus an optional TTL override.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct KeepAliveSpec {
@@ -76,11 +87,7 @@ impl KeepAliveSpec {
 
     /// Canonical display name (`fixed:600`-style when a TTL is set).
     pub fn label(&self) -> String {
-        let base = match self.mode {
-            KeepAliveMode::Fixed => "fixed",
-            KeepAliveMode::Histogram => "histogram",
-            KeepAliveMode::Pressure => "pressure",
-        };
+        let base = self.mode.label();
         match self.ttl_s {
             Some(t) => format!("{base}:{t}"),
             None => base.to_string(),

@@ -42,6 +42,7 @@ pub mod container;
 pub mod engine;
 pub mod faults;
 pub mod keepalive;
+pub mod trace;
 pub mod worker;
 
 use crate::featurizer::InputSpec;
@@ -211,6 +212,10 @@ pub struct SimConfig {
     pub timeout_s: f64,
     /// RNG seed for execution noise / cold-start draws.
     pub seed: u64,
+    /// Lifecycle tracing (DESIGN.md §Observability). `None` (the
+    /// default) records nothing and is byte-identical to an untraced
+    /// build: tracing adds zero events and zero RNG draws either way.
+    pub trace: Option<trace::TraceConfig>,
 }
 
 impl Default for SimConfig {
@@ -228,6 +233,7 @@ impl Default for SimConfig {
             faults: faults::FaultsSpec::default(),
             timeout_s: 300.0,
             seed: 0xC0FFEE,
+            trace: None,
         }
     }
 }

@@ -1,0 +1,1071 @@
+//! Lifecycle tracing & utilization timelines (DESIGN.md §Observability).
+//!
+//! A zero-cost-when-off trace sink the engine threads through every
+//! lifecycle transition: per-invocation events (arrival, decision,
+//! queueing, cold start, bind, exec, terminal verdict), per-container
+//! events (launch, idle, evict, pre-warm), and worker crash/restart —
+//! plus a simulated-time timeline sampler that snapshots per-worker
+//! utilization (allocated/busy vCPUs, memory, admission-queue depth,
+//! warm-pool size) at a fixed interval.
+//!
+//! Determinism contract: recording is purely observational. The engine
+//! draws no extra RNG values and pushes no extra events whether tracing
+//! is on or off — the sampler rides the run loop at interval boundaries
+//! instead of scheduling heap events, so event sequence numbers are
+//! untouched. `InvocationRecord` streams are byte-identical either way
+//! (pinned in `tests/test_determinism.rs`), and trace files contain only
+//! simulated time — never wall clock — so they are byte-identical at any
+//! `--jobs` (pinned in `tests/test_trace.rs`).
+//!
+//! Two exporters: line-delimited JSON ([`TraceLog::to_jsonl`], one event
+//! or sample per line, parsed back by [`TraceLog::from_jsonl`] for the
+//! `report` subcommand) and the Chrome trace-event format
+//! ([`TraceLog::to_chrome`], loadable in Perfetto / `chrome://tracing`:
+//! workers are process tracks, invocations are spans on per-invocation
+//! threads, utilization samples are counter series).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::engine::EvictReason;
+use super::worker::Cluster;
+use super::{SimTime, Verdict};
+
+/// Trace-sink configuration (`SimConfig::trace`; `None` = tracing off).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Fixed interval of the cluster utilization timeline, simulated
+    /// seconds. Cluster state is piecewise-constant between events, so
+    /// boundary sampling is exact, not an approximation.
+    pub sample_interval_s: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { sample_interval_s: 10.0 }
+    }
+}
+
+/// One timestamped lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at: SimTime,
+    pub kind: TraceEventKind,
+}
+
+/// The event taxonomy (DESIGN.md §Observability). Per-invocation events
+/// carry `inv`; container events carry `container`; all carry the worker
+/// they happened on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEventKind {
+    /// A request arrived and entered the platform.
+    Arrival { inv: u64, func: usize },
+    /// The policy routed it: predicted size, target worker, warm intent.
+    Decision { inv: u64, worker: usize, vcpus: u32, mem_mb: u32, warm: bool, overhead_s: f64 },
+    /// Parked on the worker's FIFO admission queue (`depth` after push).
+    QueueEnter { inv: u64, worker: usize, depth: usize },
+    /// Popped off the admission queue after `waited_s`.
+    QueueAdmit { inv: u64, worker: usize, waited_s: f64 },
+    /// A cold start began for this invocation (container launching).
+    ColdStartBegin { inv: u64, worker: usize, container: u64 },
+    /// A launching container finished its cold start.
+    ContainerReady { worker: usize, container: u64 },
+    /// The invocation bound a ready container (its effective size; `warm`
+    /// = served from the warm pool rather than its own cold start).
+    Bind { inv: u64, worker: usize, container: u64, vcpus: u32, mem_mb: u32, warm: bool },
+    /// Phased execution started.
+    ExecBegin { inv: u64, worker: usize, container: u64 },
+    /// Terminal verdict (completed / OOM-killed / timed-out / failed).
+    End { inv: u64, worker: usize, verdict: Verdict },
+    /// A container was created (cold start or proactive background).
+    ContainerLaunch { worker: usize, container: u64, func: usize, vcpus: u32, mem_mb: u32, background: bool },
+    /// A container went idle with a keep-alive TTL (`prewarm` = the
+    /// policy attached a pre-warm intent to this idle period).
+    ContainerIdle { worker: usize, container: u64, ttl_s: f64, prewarm: bool },
+    /// A container was evicted (TTL expiry or demand-driven pressure).
+    ContainerEvict { worker: usize, container: u64, reason: EvictReason },
+    /// A keep-alive pre-warm fired and passed admission.
+    PrewarmFired { worker: usize, func: usize, vcpus: u32, mem_mb: u32 },
+    /// A proactive launch (policy background or keep-alive pre-warm) was
+    /// cancelled by queue-aware admission — shed, never queued.
+    PrewarmShed { worker: usize },
+    /// Fault injection: the worker died (DESIGN.md §Faults).
+    WorkerCrash { worker: usize },
+    /// The crashed worker came back empty.
+    WorkerRestart { worker: usize },
+}
+
+/// Per-worker utilization gauge at one timeline instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSample {
+    pub worker: usize,
+    /// Reserved vCPUs (`Starting` + `Busy` containers — the admission view).
+    pub allocated_vcpus: f64,
+    /// vCPU allocations of running invocations (the interference basis).
+    pub busy_vcpus: f64,
+    pub vcpu_limit: f64,
+    pub allocated_mem_mb: f64,
+    pub mem_limit_mb: f64,
+    /// FIFO admission-queue depth.
+    pub queue_depth: usize,
+    /// Idle warm containers parked on the worker.
+    pub warm_pool: usize,
+    pub down: bool,
+}
+
+/// One fixed-interval snapshot of every worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineSample {
+    pub at: SimTime,
+    pub workers: Vec<WorkerSample>,
+}
+
+impl TimelineSample {
+    /// Snapshot current cluster state at `at`. State is piecewise-constant
+    /// between events, so sampling at a boundary that falls between two
+    /// events reads the exact value that held over the whole gap.
+    pub fn capture(at: SimTime, cluster: &Cluster) -> Self {
+        TimelineSample {
+            at,
+            workers: cluster
+                .workers
+                .iter()
+                .map(|w| WorkerSample {
+                    worker: w.id,
+                    allocated_vcpus: w.allocated_vcpus,
+                    busy_vcpus: w.busy_vcpus,
+                    vcpu_limit: w.sched_vcpu_limit,
+                    allocated_mem_mb: w.allocated_mem_mb,
+                    mem_limit_mb: w.mem_limit_mb(),
+                    queue_depth: w.admission_queue_len(),
+                    warm_pool: w.warm_index().len(),
+                    down: w.down,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The in-memory trace: run metadata, the event stream in engine
+/// processing order (chronological; same-timestamp events in the order
+/// the engine handled them), and the utilization timeline.
+#[derive(Debug, Clone)]
+pub struct TraceLog {
+    pub cfg: TraceConfig,
+    /// Run description (policy, keep-alive, faults, workers, seed) — all
+    /// strings so the JSONL meta line stays schema-free.
+    pub meta: BTreeMap<String, String>,
+    pub events: Vec<TraceEvent>,
+    pub samples: Vec<TimelineSample>,
+    /// Next unemitted timeline boundary (sampler bookkeeping).
+    next_sample: SimTime,
+}
+
+impl TraceLog {
+    pub fn new(cfg: TraceConfig, meta: BTreeMap<String, String>) -> Self {
+        TraceLog { cfg, meta, events: Vec::new(), samples: Vec::new(), next_sample: 0.0 }
+    }
+
+    pub fn record(&mut self, at: SimTime, kind: TraceEventKind) {
+        self.events.push(TraceEvent { at, kind });
+    }
+
+    /// Next timeline boundary the sampler owes a snapshot for.
+    pub fn next_sample_at(&self) -> SimTime {
+        self.next_sample
+    }
+
+    /// Emit a boundary snapshot and advance to the next boundary.
+    pub fn push_sample(&mut self, s: TimelineSample) {
+        self.samples.push(s);
+        self.next_sample += self.cfg.sample_interval_s.max(1e-9);
+    }
+
+    /// Closing snapshot of the end-of-run state (skipped when the last
+    /// boundary already sampled this exact instant).
+    pub fn close(&mut self, at: SimTime, cluster: &Cluster) {
+        if self.samples.last().is_some_and(|s| s.at == at) {
+            return;
+        }
+        self.samples.push(TimelineSample::capture(at, cluster));
+    }
+
+    /// Workers covered by the run (meta first, data as fallback).
+    pub fn worker_count(&self) -> usize {
+        if let Some(n) = self.meta.get("workers").and_then(|s| s.parse::<usize>().ok()) {
+            return n;
+        }
+        let from_samples = self.samples.iter().flat_map(|s| &s.workers).map(|w| w.worker + 1);
+        let from_events = self.events.iter().filter_map(|e| e.kind.worker()).map(|w| w + 1);
+        from_samples.chain(from_events).max().unwrap_or(0)
+    }
+
+    /// Assemble the per-invocation latency spans (see [`assemble_spans`]).
+    pub fn spans(&self) -> Vec<InvocationSpans> {
+        assemble_spans(&self.events)
+    }
+}
+
+impl TraceEventKind {
+    /// The worker an event happened on (`None` only for `Arrival`,
+    /// which precedes the routing decision).
+    pub fn worker(&self) -> Option<usize> {
+        use TraceEventKind::*;
+        match *self {
+            Arrival { .. } => None,
+            Decision { worker, .. }
+            | QueueEnter { worker, .. }
+            | QueueAdmit { worker, .. }
+            | ColdStartBegin { worker, .. }
+            | ContainerReady { worker, .. }
+            | Bind { worker, .. }
+            | ExecBegin { worker, .. }
+            | End { worker, .. }
+            | ContainerLaunch { worker, .. }
+            | ContainerIdle { worker, .. }
+            | ContainerEvict { worker, .. }
+            | PrewarmFired { worker, .. }
+            | PrewarmShed { worker }
+            | WorkerCrash { worker }
+            | WorkerRestart { worker } => Some(worker),
+        }
+    }
+
+    /// The invocation an event belongs to, if any.
+    pub fn inv(&self) -> Option<u64> {
+        use TraceEventKind::*;
+        match *self {
+            Arrival { inv, .. }
+            | Decision { inv, .. }
+            | QueueEnter { inv, .. }
+            | QueueAdmit { inv, .. }
+            | ColdStartBegin { inv, .. }
+            | Bind { inv, .. }
+            | ExecBegin { inv, .. }
+            | End { inv, .. } => Some(inv),
+            _ => None,
+        }
+    }
+}
+
+pub fn verdict_label(v: Verdict) -> &'static str {
+    match v {
+        Verdict::Completed => "completed",
+        Verdict::OomKilled => "oom-killed",
+        Verdict::TimedOut => "timed-out",
+        Verdict::Failed => "failed",
+    }
+}
+
+fn verdict_from(label: &str) -> Result<Verdict> {
+    Ok(match label {
+        "completed" => Verdict::Completed,
+        "oom-killed" => Verdict::OomKilled,
+        "timed-out" => Verdict::TimedOut,
+        "failed" => Verdict::Failed,
+        other => bail!("unknown verdict '{other}'"),
+    })
+}
+
+pub fn evict_reason_label(r: EvictReason) -> &'static str {
+    match r {
+        EvictReason::Expired => "expired",
+        EvictReason::Pressure => "pressure",
+    }
+}
+
+fn evict_reason_from(label: &str) -> Result<EvictReason> {
+    Ok(match label {
+        "expired" => EvictReason::Expired,
+        "pressure" => EvictReason::Pressure,
+        other => bail!("unknown evict reason '{other}'"),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Span assembly
+// ---------------------------------------------------------------------
+
+/// Latency component an instant of an invocation's life is attributed to.
+/// Exactly one is active from arrival to the terminal verdict, so the
+/// per-kind sums telescope to end-to-end latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Decision overhead and any other platform residue (e.g. the gap
+    /// between two episodes after a crash re-route).
+    Decision,
+    /// Parked on a FIFO admission queue.
+    Queue,
+    /// Waiting on a container cold start.
+    ColdStart,
+    /// Phased execution.
+    Exec,
+}
+
+pub fn span_label(k: SpanKind) -> &'static str {
+    match k {
+        SpanKind::Decision => "decision",
+        SpanKind::Queue => "queue",
+        SpanKind::ColdStart => "cold-start",
+        SpanKind::Exec => "exec",
+    }
+}
+
+/// One contiguous attributed interval of an invocation's life.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Episode {
+    pub kind: SpanKind,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub worker: usize,
+}
+
+/// Per-invocation latency breakdown assembled from trace events. The
+/// component sums cover the invocation's whole life:
+/// `decision_s + queue_s + cold_start_s + exec_s == e2e_s` up to float
+/// rounding — including deaths in queue or mid-cold-start, where the
+/// open episode is closed at the terminal event (unlike
+/// `InvocationRecord`, whose `queue_s`/`cold_start_s` only count closed
+/// episodes and can under-report for unbound deaths).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvocationSpans {
+    pub inv: u64,
+    pub func: usize,
+    /// Worker of the final episode (crash re-routes move invocations).
+    pub worker: usize,
+    pub arrival: SimTime,
+    pub end: SimTime,
+    pub verdict: Verdict,
+    pub decision_s: f64,
+    pub queue_s: f64,
+    pub cold_start_s: f64,
+    pub exec_s: f64,
+    /// The contiguous intervals the sums above were accumulated from.
+    pub episodes: Vec<Episode>,
+}
+
+impl InvocationSpans {
+    pub fn e2e_s(&self) -> f64 {
+        self.end - self.arrival
+    }
+
+    pub fn components_sum(&self) -> f64 {
+        self.decision_s + self.queue_s + self.cold_start_s + self.exec_s
+    }
+}
+
+/// Walk the event stream and attribute every instant of every
+/// invocation's life to exactly one [`SpanKind`]: a cursor starts at
+/// arrival in `Decision`, and each transition event closes the open
+/// episode at its timestamp and opens the next. Invocations without a
+/// terminal event (never possible in a completed run) are dropped.
+pub fn assemble_spans(events: &[TraceEvent]) -> Vec<InvocationSpans> {
+    struct St {
+        func: usize,
+        arrival: SimTime,
+        cursor: SimTime,
+        active: SpanKind,
+        worker: usize,
+        episodes: Vec<Episode>,
+        done: Option<(SimTime, Verdict)>,
+    }
+    impl St {
+        fn switch(&mut self, t: SimTime, next: SpanKind, worker: usize) {
+            if t > self.cursor {
+                self.episodes.push(Episode {
+                    kind: self.active,
+                    start: self.cursor,
+                    end: t,
+                    worker: self.worker,
+                });
+            }
+            self.cursor = t;
+            self.active = next;
+            self.worker = worker;
+        }
+    }
+    let mut by_inv: BTreeMap<u64, St> = BTreeMap::new();
+    for ev in events {
+        let t = ev.at;
+        use TraceEventKind::*;
+        match ev.kind {
+            Arrival { inv, func } => {
+                by_inv.insert(
+                    inv,
+                    St {
+                        func,
+                        arrival: t,
+                        cursor: t,
+                        active: SpanKind::Decision,
+                        worker: 0,
+                        episodes: Vec::new(),
+                        done: None,
+                    },
+                );
+            }
+            Decision { inv, worker, .. } => {
+                // Same timestamp as Arrival: just pin the worker.
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.worker = worker;
+                }
+            }
+            QueueEnter { inv, worker, .. } => {
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.switch(t, SpanKind::Queue, worker);
+                }
+            }
+            QueueAdmit { inv, worker, .. } => {
+                // Admission leads straight into a bind or cold start at
+                // the same timestamp; the residual bucket is Decision.
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.switch(t, SpanKind::Decision, worker);
+                }
+            }
+            ColdStartBegin { inv, worker, .. } => {
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.switch(t, SpanKind::ColdStart, worker);
+                }
+            }
+            Bind { inv, worker, .. } => {
+                // Closes a cold-start episode (or nothing, for a warm
+                // bind at the cursor's timestamp); ExecBegin follows at
+                // the same instant.
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.switch(t, SpanKind::Decision, worker);
+                }
+            }
+            ExecBegin { inv, worker, .. } => {
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.switch(t, SpanKind::Exec, worker);
+                }
+            }
+            End { inv, worker, verdict } => {
+                if let Some(st) = by_inv.get_mut(&inv) {
+                    st.switch(t, SpanKind::Decision, worker);
+                    st.done = Some((t, verdict));
+                }
+            }
+            _ => {}
+        }
+    }
+    by_inv
+        .into_iter()
+        .filter_map(|(inv, st)| {
+            let (end, verdict) = st.done?;
+            let mut spans = InvocationSpans {
+                inv,
+                func: st.func,
+                worker: st.worker,
+                arrival: st.arrival,
+                end,
+                verdict,
+                decision_s: 0.0,
+                queue_s: 0.0,
+                cold_start_s: 0.0,
+                exec_s: 0.0,
+                episodes: st.episodes,
+            };
+            for ep in &spans.episodes {
+                let d = ep.end - ep.start;
+                match ep.kind {
+                    SpanKind::Decision => spans.decision_s += d,
+                    SpanKind::Queue => spans.queue_s += d,
+                    SpanKind::ColdStart => spans.cold_start_s += d,
+                    SpanKind::Exec => spans.exec_s += d,
+                }
+            }
+            Some(spans)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// JSONL exporter / parser
+// ---------------------------------------------------------------------
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        use TraceEventKind::*;
+        let mut pairs: Vec<(&str, Json)> = vec![("type", Json::Str("event".into()))];
+        let num = |x: f64| Json::Num(x);
+        pairs.push(("t", num(self.at)));
+        match &self.kind {
+            Arrival { inv, func } => {
+                pairs.push(("ev", Json::Str("arrival".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("func", num(*func as f64)));
+            }
+            Decision { inv, worker, vcpus, mem_mb, warm, overhead_s } => {
+                pairs.push(("ev", Json::Str("decision".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("vcpus", num(*vcpus as f64)));
+                pairs.push(("mem_mb", num(*mem_mb as f64)));
+                pairs.push(("warm", Json::Bool(*warm)));
+                pairs.push(("overhead_s", num(*overhead_s)));
+            }
+            QueueEnter { inv, worker, depth } => {
+                pairs.push(("ev", Json::Str("queue-enter".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("depth", num(*depth as f64)));
+            }
+            QueueAdmit { inv, worker, waited_s } => {
+                pairs.push(("ev", Json::Str("queue-admit".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("waited_s", num(*waited_s)));
+            }
+            ColdStartBegin { inv, worker, container } => {
+                pairs.push(("ev", Json::Str("cold-start".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+            }
+            ContainerReady { worker, container } => {
+                pairs.push(("ev", Json::Str("container-ready".into())));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+            }
+            Bind { inv, worker, container, vcpus, mem_mb, warm } => {
+                pairs.push(("ev", Json::Str("bind".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+                pairs.push(("vcpus", num(*vcpus as f64)));
+                pairs.push(("mem_mb", num(*mem_mb as f64)));
+                pairs.push(("warm", Json::Bool(*warm)));
+            }
+            ExecBegin { inv, worker, container } => {
+                pairs.push(("ev", Json::Str("exec-begin".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+            }
+            End { inv, worker, verdict } => {
+                pairs.push(("ev", Json::Str("end".into())));
+                pairs.push(("inv", num(*inv as f64)));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("verdict", Json::Str(verdict_label(*verdict).into())));
+            }
+            ContainerLaunch { worker, container, func, vcpus, mem_mb, background } => {
+                pairs.push(("ev", Json::Str("launch".into())));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+                pairs.push(("func", num(*func as f64)));
+                pairs.push(("vcpus", num(*vcpus as f64)));
+                pairs.push(("mem_mb", num(*mem_mb as f64)));
+                pairs.push(("background", Json::Bool(*background)));
+            }
+            ContainerIdle { worker, container, ttl_s, prewarm } => {
+                pairs.push(("ev", Json::Str("idle".into())));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+                pairs.push(("ttl_s", num(*ttl_s)));
+                pairs.push(("prewarm", Json::Bool(*prewarm)));
+            }
+            ContainerEvict { worker, container, reason } => {
+                pairs.push(("ev", Json::Str("evict".into())));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("container", num(*container as f64)));
+                pairs.push(("reason", Json::Str(evict_reason_label(*reason).into())));
+            }
+            PrewarmFired { worker, func, vcpus, mem_mb } => {
+                pairs.push(("ev", Json::Str("prewarm".into())));
+                pairs.push(("worker", num(*worker as f64)));
+                pairs.push(("func", num(*func as f64)));
+                pairs.push(("vcpus", num(*vcpus as f64)));
+                pairs.push(("mem_mb", num(*mem_mb as f64)));
+            }
+            PrewarmShed { worker } => {
+                pairs.push(("ev", Json::Str("prewarm-shed".into())));
+                pairs.push(("worker", num(*worker as f64)));
+            }
+            WorkerCrash { worker } => {
+                pairs.push(("ev", Json::Str("crash".into())));
+                pairs.push(("worker", num(*worker as f64)));
+            }
+            WorkerRestart { worker } => {
+                pairs.push(("ev", Json::Str("restart".into())));
+                pairs.push(("worker", num(*worker as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        let at = req_f64(j, "t")?;
+        let ev = req_str(j, "ev")?;
+        use TraceEventKind::*;
+        let kind = match ev {
+            "arrival" => Arrival { inv: req_u64(j, "inv")?, func: req_usize(j, "func")? },
+            "decision" => Decision {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                vcpus: req_u32(j, "vcpus")?,
+                mem_mb: req_u32(j, "mem_mb")?,
+                warm: req_bool(j, "warm")?,
+                overhead_s: req_f64(j, "overhead_s")?,
+            },
+            "queue-enter" => QueueEnter {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                depth: req_usize(j, "depth")?,
+            },
+            "queue-admit" => QueueAdmit {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                waited_s: req_f64(j, "waited_s")?,
+            },
+            "cold-start" => ColdStartBegin {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+            },
+            "container-ready" => ContainerReady {
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+            },
+            "bind" => Bind {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+                vcpus: req_u32(j, "vcpus")?,
+                mem_mb: req_u32(j, "mem_mb")?,
+                warm: req_bool(j, "warm")?,
+            },
+            "exec-begin" => ExecBegin {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+            },
+            "end" => End {
+                inv: req_u64(j, "inv")?,
+                worker: req_usize(j, "worker")?,
+                verdict: verdict_from(req_str(j, "verdict")?)?,
+            },
+            "launch" => ContainerLaunch {
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+                func: req_usize(j, "func")?,
+                vcpus: req_u32(j, "vcpus")?,
+                mem_mb: req_u32(j, "mem_mb")?,
+                background: req_bool(j, "background")?,
+            },
+            "idle" => ContainerIdle {
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+                ttl_s: req_f64(j, "ttl_s")?,
+                prewarm: req_bool(j, "prewarm")?,
+            },
+            "evict" => ContainerEvict {
+                worker: req_usize(j, "worker")?,
+                container: req_u64(j, "container")?,
+                reason: evict_reason_from(req_str(j, "reason")?)?,
+            },
+            "prewarm" => PrewarmFired {
+                worker: req_usize(j, "worker")?,
+                func: req_usize(j, "func")?,
+                vcpus: req_u32(j, "vcpus")?,
+                mem_mb: req_u32(j, "mem_mb")?,
+            },
+            "prewarm-shed" => PrewarmShed { worker: req_usize(j, "worker")? },
+            "crash" => WorkerCrash { worker: req_usize(j, "worker")? },
+            "restart" => WorkerRestart { worker: req_usize(j, "worker")? },
+            other => bail!("unknown trace event '{other}'"),
+        };
+        Ok(TraceEvent { at, kind })
+    }
+}
+
+impl TimelineSample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::Str("sample".into())),
+            ("t", Json::Num(self.at)),
+            (
+                "workers",
+                Json::Arr(
+                    self.workers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("w", Json::Num(w.worker as f64)),
+                                ("alloc_vcpus", Json::Num(w.allocated_vcpus)),
+                                ("busy_vcpus", Json::Num(w.busy_vcpus)),
+                                ("vcpu_limit", Json::Num(w.vcpu_limit)),
+                                ("alloc_mem_mb", Json::Num(w.allocated_mem_mb)),
+                                ("mem_limit_mb", Json::Num(w.mem_limit_mb)),
+                                ("queue", Json::Num(w.queue_depth as f64)),
+                                ("warm", Json::Num(w.warm_pool as f64)),
+                                ("down", Json::Bool(w.down)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TimelineSample> {
+        let at = req_f64(j, "t")?;
+        let workers = j
+            .get("workers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("sample missing 'workers'"))?
+            .iter()
+            .map(|w| {
+                Ok(WorkerSample {
+                    worker: req_usize(w, "w")?,
+                    allocated_vcpus: req_f64(w, "alloc_vcpus")?,
+                    busy_vcpus: req_f64(w, "busy_vcpus")?,
+                    vcpu_limit: req_f64(w, "vcpu_limit")?,
+                    allocated_mem_mb: req_f64(w, "alloc_mem_mb")?,
+                    mem_limit_mb: req_f64(w, "mem_limit_mb")?,
+                    queue_depth: req_usize(w, "queue")?,
+                    warm_pool: req_usize(w, "warm")?,
+                    down: req_bool(w, "down")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TimelineSample { at, workers })
+    }
+}
+
+impl TraceLog {
+    /// Line-delimited JSON: one meta line, then every event, then every
+    /// timeline sample — each line a standalone JSON object tagged with
+    /// `"type"`. Contains only simulated time, so the bytes depend only
+    /// on the run's (config, seed) — never on wall clock or `--jobs`.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let meta = Json::obj(vec![
+            ("type", Json::Str("meta".into())),
+            ("interval_s", Json::Num(self.cfg.sample_interval_s)),
+            (
+                "run",
+                Json::Obj(
+                    self.meta.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+                ),
+            ),
+        ]);
+        out.push_str(&meta.to_string());
+        out.push('\n');
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        for s in &self.samples {
+            out.push_str(&s.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a [`Self::to_jsonl`] document back (the `report` subcommand).
+    pub fn from_jsonl(text: &str) -> Result<TraceLog> {
+        let mut log = TraceLog::new(TraceConfig::default(), BTreeMap::new());
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            match j.get("type").and_then(Json::as_str) {
+                Some("meta") => {
+                    log.cfg.sample_interval_s = req_f64(&j, "interval_s")?;
+                    if let Some(Json::Obj(run)) = j.get("run") {
+                        for (k, v) in run {
+                            if let Some(s) = v.as_str() {
+                                log.meta.insert(k.clone(), s.to_string());
+                            }
+                        }
+                    }
+                }
+                Some("event") => log.events.push(
+                    TraceEvent::from_json(&j).with_context(|| format!("trace line {}", i + 1))?,
+                ),
+                Some("sample") => log.samples.push(
+                    TimelineSample::from_json(&j)
+                        .with_context(|| format!("trace line {}", i + 1))?,
+                ),
+                other => bail!("trace line {}: unknown type {:?}", i + 1, other),
+            }
+        }
+        Ok(log)
+    }
+
+    /// Chrome trace-event JSON (load in Perfetto or `chrome://tracing`):
+    /// each worker is a process track (`pid = worker + 1`), each
+    /// invocation a thread on its worker carrying its latency-component
+    /// spans as `X` complete events, container/worker transitions as
+    /// instant events, and the utilization timeline as `C` counter
+    /// series. Timestamps are simulated microseconds.
+    pub fn to_chrome(&self) -> String {
+        let us = |t: SimTime| Json::Num((t * 1e6).round());
+        let mut evs: Vec<Json> = Vec::new();
+        for w in 0..self.worker_count() {
+            evs.push(Json::obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("process_name".into())),
+                ("pid", Json::Num((w + 1) as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![("name", Json::Str(format!("worker {w}")))])),
+            ]));
+        }
+        // Invocation latency spans (skip zero-length episodes).
+        for s in self.spans() {
+            for ep in &s.episodes {
+                evs.push(Json::obj(vec![
+                    ("ph", Json::Str("X".into())),
+                    ("name", Json::Str(span_label(ep.kind).into())),
+                    ("cat", Json::Str("invocation".into())),
+                    ("pid", Json::Num((ep.worker + 1) as f64)),
+                    ("tid", Json::Num(s.inv as f64)),
+                    ("ts", us(ep.start)),
+                    ("dur", us(ep.end - ep.start)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("inv", Json::Num(s.inv as f64)),
+                            ("func", Json::Num(s.func as f64)),
+                            ("verdict", Json::Str(verdict_label(s.verdict).into())),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+        // Container / worker transitions as instant events on tid 0.
+        for ev in &self.events {
+            use TraceEventKind::*;
+            let (name, worker) = match &ev.kind {
+                ContainerLaunch { worker, container, background, .. } => (
+                    format!("launch c{container}{}", if *background { " (bg)" } else { "" }),
+                    *worker,
+                ),
+                ContainerReady { worker, container } => (format!("ready c{container}"), *worker),
+                ContainerIdle { worker, container, .. } => (format!("idle c{container}"), *worker),
+                ContainerEvict { worker, container, reason } => {
+                    (format!("evict c{container} ({})", evict_reason_label(*reason)), *worker)
+                }
+                PrewarmFired { worker, .. } => ("prewarm".to_string(), *worker),
+                PrewarmShed { worker } => ("prewarm shed".to_string(), *worker),
+                WorkerCrash { worker } => ("CRASH".to_string(), *worker),
+                WorkerRestart { worker } => ("restart".to_string(), *worker),
+                _ => continue,
+            };
+            evs.push(Json::obj(vec![
+                ("ph", Json::Str("i".into())),
+                ("name", Json::Str(name)),
+                ("cat", Json::Str("container".into())),
+                ("s", Json::Str("p".into())),
+                ("pid", Json::Num((worker + 1) as f64)),
+                ("tid", Json::Num(0.0)),
+                ("ts", us(ev.at)),
+            ]));
+        }
+        // Utilization counters per worker.
+        for s in &self.samples {
+            for w in &s.workers {
+                evs.push(Json::obj(vec![
+                    ("ph", Json::Str("C".into())),
+                    ("name", Json::Str("vcpus".into())),
+                    ("pid", Json::Num((w.worker + 1) as f64)),
+                    ("ts", us(s.at)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("busy", Json::Num(w.busy_vcpus)),
+                            ("allocated_idle", Json::Num((w.allocated_vcpus - w.busy_vcpus).max(0.0))),
+                        ]),
+                    ),
+                ]));
+                evs.push(Json::obj(vec![
+                    ("ph", Json::Str("C".into())),
+                    ("name", Json::Str("queue+warm".into())),
+                    ("pid", Json::Num((w.worker + 1) as f64)),
+                    ("ts", us(s.at)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("queue", Json::Num(w.queue_depth as f64)),
+                            ("warm", Json::Num(w.warm_pool as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+        ])
+        .to_string()
+    }
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| anyhow!("missing number '{key}'"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(req_f64(j, key)? as u64)
+}
+
+fn req_u32(j: &Json, key: &str) -> Result<u32> {
+    Ok(req_f64(j, key)? as u32)
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    Ok(req_f64(j, key)? as usize)
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key).and_then(Json::as_str).ok_or_else(|| anyhow!("missing string '{key}'"))
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    match j.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => bail!("missing bool '{key}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: SimTime, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent { at, kind }
+    }
+
+    /// A queued + cold-started invocation: arrival 0, decision overhead
+    /// to 0.5, queued to 3.0, cold start to 4.2, exec to 10.0.
+    fn lifecycle_events() -> Vec<TraceEvent> {
+        use TraceEventKind::*;
+        vec![
+            ev(0.0, Arrival { inv: 7, func: 2 }),
+            ev(
+                0.0,
+                Decision { inv: 7, worker: 1, vcpus: 8, mem_mb: 2048, warm: false, overhead_s: 0.5 },
+            ),
+            ev(0.5, QueueEnter { inv: 7, worker: 1, depth: 1 }),
+            ev(3.0, QueueAdmit { inv: 7, worker: 1, waited_s: 2.5 }),
+            ev(
+                3.0,
+                ContainerLaunch {
+                    worker: 1,
+                    container: 4,
+                    func: 2,
+                    vcpus: 8,
+                    mem_mb: 2048,
+                    background: false,
+                },
+            ),
+            ev(3.0, ColdStartBegin { inv: 7, worker: 1, container: 4 }),
+            ev(4.2, ContainerReady { worker: 1, container: 4 }),
+            ev(4.2, Bind { inv: 7, worker: 1, container: 4, vcpus: 8, mem_mb: 2048, warm: false }),
+            ev(4.2, ExecBegin { inv: 7, worker: 1, container: 4 }),
+            ev(10.0, End { inv: 7, worker: 1, verdict: Verdict::Completed }),
+        ]
+    }
+
+    #[test]
+    fn span_assembly_attributes_every_second() {
+        let spans = assemble_spans(&lifecycle_events());
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.inv, 7);
+        assert_eq!(s.verdict, Verdict::Completed);
+        assert!((s.decision_s - 0.5).abs() < 1e-12, "decision {}", s.decision_s);
+        assert!((s.queue_s - 2.5).abs() < 1e-12, "queue {}", s.queue_s);
+        assert!((s.cold_start_s - 1.2).abs() < 1e-12, "cold {}", s.cold_start_s);
+        assert!((s.exec_s - 5.8).abs() < 1e-12, "exec {}", s.exec_s);
+        assert!((s.components_sum() - s.e2e_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn span_assembly_closes_open_episodes_at_death() {
+        use TraceEventKind::*;
+        // Died waiting in queue: the open queue episode closes at End.
+        let events = vec![
+            ev(0.0, Arrival { inv: 1, func: 0 }),
+            ev(0.0, Decision { inv: 1, worker: 0, vcpus: 4, mem_mb: 512, warm: false, overhead_s: 0.0 }),
+            ev(0.0, QueueEnter { inv: 1, worker: 0, depth: 1 }),
+            ev(30.0, End { inv: 1, worker: 0, verdict: Verdict::TimedOut }),
+        ];
+        let spans = assemble_spans(&events);
+        assert_eq!(spans.len(), 1);
+        assert!((spans[0].queue_s - 30.0).abs() < 1e-12);
+        assert_eq!(spans[0].exec_s, 0.0);
+        assert!((spans[0].components_sum() - spans[0].e2e_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_lossless() {
+        let mut log = TraceLog::new(
+            TraceConfig { sample_interval_s: 5.0 },
+            [("policy".to_string(), "shabari".to_string())].into_iter().collect(),
+        );
+        for e in lifecycle_events() {
+            log.record(e.at, e.kind);
+        }
+        log.samples.push(TimelineSample {
+            at: 5.0,
+            workers: vec![WorkerSample {
+                worker: 0,
+                allocated_vcpus: 8.0,
+                busy_vcpus: 8.0,
+                vcpu_limit: 90.0,
+                allocated_mem_mb: 2048.0,
+                mem_limit_mb: 128000.0,
+                queue_depth: 2,
+                warm_pool: 1,
+                down: false,
+            }],
+        });
+        let text = log.to_jsonl();
+        let back = TraceLog::from_jsonl(&text).unwrap();
+        assert_eq!(back.cfg.sample_interval_s, 5.0);
+        assert_eq!(back.meta.get("policy").map(String::as_str), Some("shabari"));
+        assert_eq!(back.events, log.events);
+        assert_eq!(back.samples, log.samples);
+        // and the re-export is byte-identical (stable key order)
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_worker_tracks() {
+        let mut log = TraceLog::new(TraceConfig::default(), BTreeMap::new());
+        for e in lifecycle_events() {
+            log.record(e.at, e.kind);
+        }
+        let j = json::parse(&log.to_chrome()).unwrap();
+        let evs = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!evs.is_empty());
+        // worker 1 appears in the events, so tracks 0..=1 get names
+        let names: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(names.len(), 2);
+        // every complete event has pid/tid/ts/dur
+        for e in evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("X")) {
+            for key in ["pid", "tid", "ts", "dur"] {
+                assert!(e.get(key).and_then(Json::as_f64).is_some(), "missing {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_bookkeeping_advances_by_interval() {
+        let mut log = TraceLog::new(TraceConfig { sample_interval_s: 10.0 }, BTreeMap::new());
+        assert_eq!(log.next_sample_at(), 0.0);
+        log.push_sample(TimelineSample { at: 0.0, workers: vec![] });
+        assert_eq!(log.next_sample_at(), 10.0);
+        log.push_sample(TimelineSample { at: 10.0, workers: vec![] });
+        assert_eq!(log.next_sample_at(), 20.0);
+    }
+}

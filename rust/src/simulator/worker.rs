@@ -245,9 +245,16 @@ impl Worker {
         (self.sched_vcpu_limit - self.allocated_vcpus).max(0.0)
     }
 
+    /// Memory admission limit in MB — the denominator shared by the
+    /// admission predicates and the timeline sampler's memory gauge
+    /// (DESIGN.md §Observability).
+    pub fn mem_limit_mb(&self) -> f64 {
+        self.mem_gb * 1024.0
+    }
+
     /// Free memory (MB) under the admission limit (reservations only).
     pub fn free_mem_mb(&self) -> f64 {
-        (self.mem_gb * 1024.0 - self.allocated_mem_mb).max(0.0)
+        (self.mem_limit_mb() - self.allocated_mem_mb).max(0.0)
     }
 
     /// Hard admission check the *engine* uses when binding or launching a

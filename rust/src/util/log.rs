@@ -21,14 +21,31 @@ fn level() -> u8 {
         return l;
     }
     let parsed = match std::env::var("SHABARI_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("info") => Level::Info,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Warn,
+        Ok(name) => parse_level(name).unwrap_or_else(|| {
+            // One-time, since the result is cached in LEVEL below: a typo
+            // like SHABARI_LOG=dbug should not silently mean "warn".
+            eprintln!(
+                "[WARN ] unrecognized SHABARI_LOG value '{name}' \
+                 (expected error|warn|info|debug|trace); using warn"
+            );
+            Level::Warn
+        }),
+        Err(_) => Level::Warn,
     } as u8;
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
+}
+
+/// Parse a level name (the `SHABARI_LOG` / `--log-level` vocabulary).
+pub fn parse_level(name: &str) -> Option<Level> {
+    match name {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
 }
 
 /// Override the level programmatically (tests, CLI flag).
@@ -61,6 +78,8 @@ macro_rules! log_warn { ($($t:tt)*) => { $crate::util::log::log($crate::util::lo
 macro_rules! log_info { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {
@@ -74,5 +93,16 @@ mod tests {
         assert!(!enabled(Level::Info));
         set_level(Level::Trace);
         assert!(enabled(Level::Debug));
+    }
+
+    #[test]
+    fn parse_level_covers_the_vocabulary() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("trace"), Some(Level::Trace));
+        assert_eq!(parse_level("dbug"), None);
+        assert_eq!(parse_level(""), None);
     }
 }

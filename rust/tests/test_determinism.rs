@@ -135,6 +135,25 @@ fn faults_none_is_byte_identical_to_the_default_config() {
 }
 
 #[test]
+fn tracing_leaves_the_record_stream_byte_identical() {
+    // The trace sink must be pure observation (the observability PR's
+    // zero-cost-when-on guarantee for *simulation state*): a traced run
+    // draws zero extra RNG values and schedules zero extra events, so
+    // records, learner state, and fault counters are byte-identical to
+    // the untraced run — the trace rides entirely on the side.
+    let plain = SimConfig { workers: 1, ..SimConfig::default() };
+    let traced = SimConfig {
+        workers: 1,
+        trace: Some(shabari::simulator::trace::TraceConfig { sample_interval_s: 5.0 }),
+        ..SimConfig::default()
+    };
+    let a = fingerprint(plain);
+    let b = fingerprint(traced);
+    assert_eq!(a.0.len(), 60, "all invocations must complete");
+    assert_eq!(a, b, "enabling --trace perturbed the byte stream");
+}
+
+#[test]
 fn faulty_runs_are_byte_deterministic() {
     // Crash/restart cycles, stragglers, and heterogeneous workers are all
     // seed-derived: the same config twice (including any Failed verdicts

@@ -1,0 +1,211 @@
+//! Trace-battery integration tests (DESIGN.md §Observability): a traced
+//! run must (a) attribute every second of every invocation's life to
+//! exactly one span component, telescoping to the recorded end-to-end
+//! latency, (b) export losslessly to JSONL and to valid Chrome
+//! trace-event JSON, (c) produce byte-identical trace files regardless
+//! of `--jobs`, and (d) sample timelines that respect the admission
+//! invariants. The companion determinism pin (tracing *off* is
+//! byte-identical) lives in `test_determinism.rs`.
+
+use shabari::coordinator::allocator::{AllocatorConfig, ResourceAllocator};
+use shabari::coordinator::scheduler::shabari::ShabariScheduler;
+use shabari::coordinator::ShabariPolicy;
+use shabari::experiments::common::{self, Ctx, TraceOut};
+use shabari::experiments::sweep;
+use shabari::functions::catalog::{index_of, CATALOG};
+use shabari::functions::inputs;
+use shabari::simulator::engine::{simulate, SimResult};
+use shabari::simulator::trace::{TraceConfig, TraceEventKind, TraceLog};
+use shabari::simulator::{Request, SimConfig};
+use shabari::util::json::{self, Json};
+use shabari::util::rng::Rng;
+
+/// 3 waves x 20 simultaneous invocations on one worker: guaranteed
+/// queueing, cold starts, and same-timestamp event batches.
+fn tie_heavy_requests() -> Vec<Request> {
+    let fi = index_of("qr").unwrap();
+    let mut rng = Rng::new(11);
+    let pool = inputs::pool(&CATALOG[fi], &mut rng);
+    let mut reqs = Vec::new();
+    for wave in 0..3u64 {
+        for i in 0..20u64 {
+            let id = wave * 20 + i + 1;
+            reqs.push(Request {
+                id,
+                func: fi,
+                input: pool[(id as usize) % pool.len()].clone(),
+                arrival: wave as f64 * 15.0,
+                slo_s: 1.0,
+            });
+        }
+    }
+    reqs
+}
+
+fn traced_run() -> SimResult {
+    let allocator = ResourceAllocator::new(AllocatorConfig::default()).unwrap();
+    let mut policy = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(7)));
+    let cfg = SimConfig {
+        workers: 1,
+        trace: Some(TraceConfig { sample_interval_s: 5.0 }),
+        ..SimConfig::default()
+    };
+    simulate(cfg, &mut policy, tie_heavy_requests())
+}
+
+#[test]
+fn spans_telescope_to_e2e_for_every_invocation() {
+    let res = traced_run();
+    let log = res.trace.as_ref().expect("tracing was on");
+    let spans = log.spans();
+    assert_eq!(spans.len(), res.records.len(), "one span chain per record");
+    let mut queued = 0usize;
+    let mut cold = 0usize;
+    for s in &spans {
+        let err = (s.components_sum() - s.e2e_s()).abs();
+        assert!(
+            err < 1e-9,
+            "invocation {}: decision {} + queue {} + cold {} + exec {} != e2e {} (err {err})",
+            s.inv,
+            s.decision_s,
+            s.queue_s,
+            s.cold_start_s,
+            s.exec_s,
+            s.e2e_s()
+        );
+        assert!(s.decision_s >= 0.0 && s.queue_s >= 0.0);
+        assert!(s.cold_start_s >= 0.0 && s.exec_s >= 0.0);
+        queued += (s.queue_s > 0.0) as usize;
+        cold += (s.cold_start_s > 0.0) as usize;
+    }
+    // 20 simultaneous arrivals on one cold worker: both components are
+    // exercised for real, not vacuously zero
+    assert!(queued > 0, "tie-heavy load must queue someone");
+    assert!(cold > 0, "first wave hits a cold worker");
+    // spans agree with the engine's own records on end-to-end latency
+    // (the records' e2e_s is the ground truth the components must cover)
+    for r in &res.records {
+        let s = spans.iter().find(|s| s.inv == r.id).expect("span chain for record");
+        assert!(
+            (s.e2e_s() - r.e2e_s).abs() < 1e-9,
+            "invocation {}: span e2e {} != record e2e {}",
+            r.id,
+            s.e2e_s(),
+            r.e2e_s
+        );
+    }
+}
+
+#[test]
+fn event_stream_is_consistent_with_the_record_stream() {
+    let res = traced_run();
+    let log = res.trace.as_ref().unwrap();
+    let count = |f: &dyn Fn(&TraceEventKind) -> bool| {
+        log.events.iter().filter(|e| f(&e.kind)).count()
+    };
+    let arrivals = count(&|k| matches!(k, TraceEventKind::Arrival { .. }));
+    let decisions = count(&|k| matches!(k, TraceEventKind::Decision { .. }));
+    let ends = count(&|k| matches!(k, TraceEventKind::End { .. }));
+    let execs = count(&|k| matches!(k, TraceEventKind::ExecBegin { .. }));
+    assert_eq!(arrivals, res.records.len(), "one Arrival per record");
+    assert_eq!(decisions, res.records.len(), "one Decision per record");
+    assert_eq!(ends, res.records.len(), "one terminal event per record");
+    assert!(execs <= res.records.len(), "at most one ExecBegin per invocation");
+    // timestamps never run backwards (the engine records in event order)
+    for pair in log.events.windows(2) {
+        assert!(pair[0].at <= pair[1].at, "out-of-order trace events");
+    }
+}
+
+#[test]
+fn jsonl_and_chrome_exports_are_valid_and_lossless() {
+    let res = traced_run();
+    let log = res.trace.as_ref().unwrap();
+    // JSONL: every line parses; the round trip is byte-identical
+    let jsonl = log.to_jsonl();
+    for (i, line) in jsonl.lines().enumerate() {
+        json::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+    }
+    let reparsed = TraceLog::from_jsonl(&jsonl).unwrap();
+    assert_eq!(reparsed.to_jsonl(), jsonl, "JSONL round trip must be lossless");
+    assert_eq!(reparsed.spans().len(), log.spans().len());
+    // Chrome export: valid JSON, worker tracks + spans present
+    let chrome = log.to_chrome();
+    let j = json::parse(&chrome).unwrap();
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty());
+    let phases: Vec<&str> =
+        events.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+    assert!(phases.contains(&"M"), "process_name metadata for worker tracks");
+    assert!(phases.contains(&"X"), "complete events for invocation spans");
+    assert!(phases.contains(&"C"), "counter events for utilization");
+}
+
+#[test]
+fn repeated_traced_runs_are_byte_identical() {
+    let a = traced_run();
+    let b = traced_run();
+    let (ta, tb) = (a.trace.unwrap(), b.trace.unwrap());
+    assert!(!ta.events.is_empty());
+    assert_eq!(ta.to_jsonl(), tb.to_jsonl(), "JSONL bytes diverged across identical runs");
+    assert_eq!(ta.to_chrome(), tb.to_chrome(), "Chrome bytes diverged across identical runs");
+}
+
+#[test]
+fn timeline_samples_respect_admission_invariants() {
+    let res = traced_run();
+    let log = res.trace.as_ref().unwrap();
+    assert!(!log.samples.is_empty(), "a multi-wave run spans several intervals");
+    for (i, s) in log.samples.iter().enumerate() {
+        assert!(
+            (s.at - i as f64 * 5.0).abs() < 1e-9 || i + 1 == log.samples.len(),
+            "sample {i} at {} off the 5s grid",
+            s.at
+        );
+        for w in &s.workers {
+            assert!(w.busy_vcpus <= w.allocated_vcpus + 1e-9, "busy exceeds reservations");
+            assert!(w.allocated_vcpus <= w.vcpu_limit + 1e-9, "reservations exceed the limit");
+            assert!(w.allocated_mem_mb <= w.mem_limit_mb + 1e-9, "memory exceeds the limit");
+        }
+    }
+}
+
+#[test]
+fn trace_files_are_byte_identical_across_jobs() {
+    let base = std::env::temp_dir().join(format!("shabari-trace-jobs-{}", std::process::id()));
+    let run = |jobs: usize, tag: &str| -> (String, Vec<u8>) {
+        let dir = base.join(tag);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ctx = Ctx {
+            duration_s: 60.0,
+            seeds: 2,
+            jobs,
+            trace: Some(TraceOut {
+                jsonl: Some(dir.join("t.jsonl").to_string_lossy().into_owned()),
+                chrome: None,
+                interval_s: 10.0,
+                exact: false,
+            }),
+            ..Default::default()
+        };
+        let cells = [sweep::Cell::new("static-medium", 2.0)];
+        sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+            common::run_cell(&cell.policy, &ctx, cell.rps, seed)
+        })
+        .unwrap();
+        // replicate-0 gating: exactly one traced replicate -> one file
+        let mut files: Vec<_> =
+            std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+        assert_eq!(files.len(), 1, "expected exactly one trace file, got {files:?}");
+        let path = files.pop().unwrap();
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        (name, std::fs::read(&path).unwrap())
+    };
+    let (name_a, bytes_a) = run(1, "a");
+    let (name_b, bytes_b) = run(4, "b");
+    assert!(!bytes_a.is_empty());
+    assert_eq!(name_a, name_b, "cell-derived trace names must not depend on --jobs");
+    assert!(name_a.starts_with("t-static-medium-2"), "{name_a}");
+    assert_eq!(bytes_a, bytes_b, "trace bytes diverged across --jobs");
+    std::fs::remove_dir_all(&base).ok();
+}
