@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test bench bench-scale scenarios overload keepalive adversity trace clean
+.PHONY: artifacts build test lint bench bench-scale scenarios overload keepalive adversity trace clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -12,6 +12,12 @@ build:
 
 test:
 	cargo test -q
+
+# Determinism linter (rules D001-D005, DESIGN.md §Static analysis):
+# hash-ordered collections, wall-clock reads, unsalted RNG forks, partial
+# float orders, fallible queue pops. Non-zero exit on any violation.
+lint:
+	cargo run --release -- lint
 
 # Cross-scenario robustness matrix (every Fig-8 system x every workload
 # scenario, incl. the checked-in sample trace) — EXPERIMENTS.md.

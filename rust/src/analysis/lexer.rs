@@ -1,0 +1,514 @@
+//! A minimal hand-rolled Rust lexer — just enough token structure for the
+//! determinism rules (DESIGN.md §Static analysis). No third-party parser
+//! exists in the offline build, and the rules only need identifiers,
+//! literals, a handful of compound operators (`==`, `!=`, `::`) and
+//! comment/test-region boundaries; full grammar fidelity is explicitly a
+//! non-goal.
+//!
+//! What it does get right, because the rules depend on it:
+//!
+//! * strings (plain, raw `r#".."#`, byte) and char literals never leak
+//!   identifier tokens, so fixture text inside test strings cannot
+//!   self-trigger rules;
+//! * char literals vs lifetimes (`'a'` vs `'a`) are disambiguated, so
+//!   generic code does not desynchronize the stream;
+//! * nested block comments and line comments are captured (line comments
+//!   carry the `lint:allow` escapes);
+//! * int vs float literals are distinguished (`1..2` stays integral,
+//!   `1.0`/`1e3`/`1f64` are floats) — rule D004 keys on float operands;
+//! * `#[cfg(test)]` / `#[test]` regions are marked token-by-token so
+//!   test-only code is exempt from the runtime-determinism rules.
+
+/// Token classes the rules discriminate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Int,
+    Float,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token. `text` is the source slice for idents/numbers/puncts;
+/// string and char literal bodies are not retained (rules never read them).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+    /// Inside a `#[cfg(test)]`/`#[test]`-guarded block (set by
+    /// [`mark_test_regions`], false straight out of [`lex`]).
+    pub in_test: bool,
+}
+
+/// A line comment (`//...`). Block comments are skipped entirely: the
+/// `lint:allow` escape syntax is line-comment only.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    /// Code tokens precede the comment on its own line (a trailing
+    /// comment covers that line; a standalone one covers the next).
+    pub trailing: bool,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs run to EOF, which
+/// is good enough for a linter over code that must already compile.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut last_tok_line = 0u32;
+
+    let mut push = |toks: &mut Vec<Token>, kind: TokenKind, text: String, ln: u32| {
+        toks.push(Token { kind, text, line: ln, in_test: false });
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: b[start..i].iter().collect(),
+                trailing: last_tok_line == line,
+            });
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings (r"..", r#".."#, br#".."#), raw idents (r#ident)
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && b[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    k += 1;
+                    let start_line = line;
+                    while k < n {
+                        if b[k] == '\n' {
+                            line += 1;
+                            k += 1;
+                        } else if b[k] == '"' {
+                            let tail = b[k + 1..].iter().take_while(|&&h| h == '#').count();
+                            if tail >= hashes {
+                                k += 1 + hashes;
+                                break;
+                            }
+                            k += 1;
+                        } else {
+                            k += 1;
+                        }
+                    }
+                    push(&mut toks, TokenKind::Str, "<raw>".into(), start_line);
+                    last_tok_line = start_line;
+                    i = k;
+                    continue;
+                }
+                if hashes == 1 && j == i && k < n && is_ident_start(b[k]) {
+                    let mut m = k;
+                    while m < n && is_ident_char(b[m]) {
+                        m += 1;
+                    }
+                    push(&mut toks, TokenKind::Ident, b[k..m].iter().collect(), line);
+                    last_tok_line = line;
+                    i = m;
+                    continue;
+                }
+            }
+            // b"..." / b'.' fall through as plain string/char below
+            if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+                i += 1;
+                // re-dispatch on the quote character
+                let q = b[i];
+                if q == '"' {
+                    i = scan_string(&b, i, &mut line);
+                    push(&mut toks, TokenKind::Str, "<str>".into(), line);
+                    last_tok_line = line;
+                    continue;
+                }
+                let (next, text) = scan_char_or_lifetime(&b, i);
+                push(&mut toks, TokenKind::Char, text, line);
+                last_tok_line = line;
+                i = next;
+                continue;
+            }
+        }
+        if c == '"' {
+            let start_line = line;
+            i = scan_string(&b, i, &mut line);
+            push(&mut toks, TokenKind::Str, "<str>".into(), start_line);
+            last_tok_line = start_line;
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime
+            if i + 1 < n && is_ident_char(b[i + 1]) && b[i + 1] != '\\' {
+                let mut j = i + 1;
+                while j < n && is_ident_char(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' {
+                    push(&mut toks, TokenKind::Char, b[i..=j].iter().collect(), line);
+                    last_tok_line = line;
+                    i = j + 1;
+                } else {
+                    push(&mut toks, TokenKind::Lifetime, b[i..j].iter().collect(), line);
+                    last_tok_line = line;
+                    i = j;
+                }
+                continue;
+            }
+            let (next, text) = scan_char_or_lifetime(&b, i);
+            push(&mut toks, TokenKind::Char, text, line);
+            last_tok_line = line;
+            i = next;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (next, kind, text) = scan_number(&b, i);
+            push(&mut toks, kind, text, line);
+            last_tok_line = line;
+            i = next;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            push(&mut toks, TokenKind::Ident, b[i..j].iter().collect(), line);
+            last_tok_line = line;
+            i = j;
+            continue;
+        }
+        // punctuation: combine the operators the rules key on
+        if i + 1 < n {
+            let two: String = b[i..i + 2].iter().collect();
+            if two == "==" || two == "!=" || two == "::" {
+                push(&mut toks, TokenKind::Punct, two, line);
+                last_tok_line = line;
+                i += 2;
+                continue;
+            }
+        }
+        push(&mut toks, TokenKind::Punct, c.to_string(), line);
+        last_tok_line = line;
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// Scan a `"`-delimited string starting at the opening quote; returns the
+/// index past the closing quote. Tracks embedded newlines.
+fn scan_string(b: &[char], start: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Scan a char literal starting at `'` (escape or punctuation body);
+/// returns (index past closing quote, literal text).
+fn scan_char_or_lifetime(b: &[char], start: usize) -> (usize, String) {
+    let n = b.len();
+    let mut j = start + 1;
+    if j < n && b[j] == '\\' {
+        j += 2; // skip escape head; \u{..} bodies fall into the scan below
+    }
+    while j < n && b[j] != '\'' {
+        j += 1;
+    }
+    let end = (j + 1).min(n);
+    (end, b[start..end].iter().collect())
+}
+
+/// Scan an integer or float literal; returns (next index, kind, text).
+fn scan_number(b: &[char], start: usize) -> (usize, TokenKind, String) {
+    let n = b.len();
+    let mut j = start;
+    let mut is_float = false;
+    let radix_prefix = b[j] == '0' && j + 1 < n && matches!(b[j + 1], 'x' | 'o' | 'b');
+    if radix_prefix {
+        j += 2;
+        while j < n && is_ident_char(b[j]) {
+            j += 1;
+        }
+    } else {
+        while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+            j += 1;
+        }
+        if j < n && b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+            is_float = true;
+            j += 1;
+            while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+                j += 1;
+            }
+        } else if j < n && b[j] == '.' {
+            let after = b.get(j + 1);
+            if after.is_none_or(|&a| !is_ident_start(a) && a != '.') {
+                // trailing-dot float like `1.`
+                is_float = true;
+                j += 1;
+            }
+        }
+        if j < n && (b[j] == 'e' || b[j] == 'E') {
+            let mut k = j + 1;
+            if k < n && (b[k] == '+' || b[k] == '-') {
+                k += 1;
+            }
+            if k < n && b[k].is_ascii_digit() {
+                is_float = true;
+                j = k;
+                while j < n && (b[j].is_ascii_digit() || b[j] == '_') {
+                    j += 1;
+                }
+            }
+        }
+        // type suffix (u64, f64, usize, ...) folds into the token
+        let s = j;
+        while j < n && is_ident_char(b[j]) {
+            j += 1;
+        }
+        let suffix: String = b[s..j].iter().collect();
+        if suffix == "f32" || suffix == "f64" {
+            is_float = true;
+        }
+    }
+    let kind = if is_float { TokenKind::Float } else { TokenKind::Int };
+    (j, kind, b[start..j].iter().collect())
+}
+
+/// Mark tokens inside `#[cfg(test)]` / `#[test]`-guarded blocks. The
+/// attribute latches `pending`; the next `{` opens the region (matched by
+/// brace depth), while a `;` first cancels it (attribute on a `use` or
+/// other braceless item). Regions do not nest observably: inside a test
+/// region everything already counts as test code.
+pub fn mark_test_regions(toks: &mut [Token]) {
+    let n = toks.len();
+    let mut depth = 0i32;
+    let mut pending = false;
+    let mut in_test = false;
+    let mut test_depth = 0i32;
+    let mut i = 0usize;
+    while i < n {
+        if !in_test && toks[i].text == "#" && i + 1 < n && toks[i + 1].text == "[" {
+            // scan the bracket-balanced attribute
+            let mut j = i + 1;
+            let mut bdepth = 0i32;
+            let mut first_ident: Option<String> = None;
+            let mut has_test_ident = false;
+            while j < n {
+                match toks[j].text.as_str() {
+                    "[" => bdepth += 1,
+                    "]" => {
+                        bdepth -= 1;
+                        if bdepth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {
+                        if toks[j].kind == TokenKind::Ident {
+                            if first_ident.is_none() {
+                                first_ident = Some(toks[j].text.clone());
+                            } else if toks[j].text == "test" {
+                                has_test_ident = true;
+                            }
+                        }
+                    }
+                }
+                j += 1;
+            }
+            match first_ident.as_deref() {
+                Some("test") => pending = true,
+                Some("cfg") if has_test_ident => pending = true,
+                _ => {}
+            }
+            i = (j + 1).min(n);
+            continue;
+        }
+        match toks[i].text.as_str() {
+            "{" => {
+                if pending {
+                    in_test = true;
+                    test_depth = depth;
+                    pending = false;
+                }
+                depth += 1;
+            }
+            "}" => {
+                depth -= 1;
+                if in_test && depth == test_depth {
+                    toks[i].in_test = true; // closing brace still in region
+                    in_test = false;
+                    i += 1;
+                    continue;
+                }
+            }
+            ";" => {
+                if pending {
+                    pending = false;
+                }
+            }
+            _ => {}
+        }
+        toks[i].in_test = in_test;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        let (toks, _) = lex(src);
+        toks.iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_identifier_text() {
+        assert_eq!(idents(r##"let s = "HashMap::new()";"##), vec!["let", "s"]);
+        let raw = "let s = r#\"Instant::now()\"#;";
+        assert_eq!(idents(raw), vec!["let", "s"]);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let (toks, _) = lex("fn f<'a>(x: &'a str) -> char { 'b' }");
+        let kinds: Vec<(TokenKind, &str)> =
+            toks.iter().map(|t| (t.kind, t.text.as_str())).collect();
+        assert!(kinds.contains(&(TokenKind::Lifetime, "'a")));
+        assert!(kinds.contains(&(TokenKind::Char, "'b'")));
+    }
+
+    #[test]
+    fn numbers_classify_int_vs_float() {
+        let src = "let a = 1..2; let b = 1.5; let c = 0xFF_AB; let d = 1e3; let e = 2f64;";
+        let (toks, _) = lex(src);
+        let nums: Vec<(TokenKind, &str)> = toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokenKind::Int | TokenKind::Float))
+            .map(|t| (t.kind, t.text.as_str()))
+            .collect();
+        assert_eq!(
+            nums,
+            vec![
+                (TokenKind::Int, "1"),
+                (TokenKind::Int, "2"),
+                (TokenKind::Float, "1.5"),
+                (TokenKind::Int, "0xFF_AB"),
+                (TokenKind::Float, "1e3"),
+                (TokenKind::Float, "2f64"),
+            ]
+        );
+    }
+
+    #[test]
+    fn nested_block_comments_are_skipped() {
+        assert_eq!(idents("/* a /* b */ c */ fn f() {}"), vec!["fn", "f"]);
+    }
+
+    #[test]
+    fn trailing_vs_standalone_comments() {
+        let (_, comments) = lex("let x = 1; // trailing\n// standalone\nlet y = 2;");
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].trailing);
+        assert!(!comments[1].trailing);
+    }
+
+    #[test]
+    fn compound_operators_are_single_tokens() {
+        let (toks, _) = lex("a == b != c :: d");
+        let puncts: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(puncts, vec!["==", "!=", "::"]);
+    }
+
+    #[test]
+    fn cfg_test_region_marks_tokens() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn inner() {}\n}\nfn after() {}";
+        let (mut toks, _) = lex(src);
+        mark_test_regions(&mut toks);
+        let flag = |name: &str| toks.iter().find(|t| t.text == name).unwrap().in_test;
+        assert!(!flag("live"));
+        assert!(flag("inner"));
+        assert!(!flag("after"));
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_does_not_latch() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { let x = 1; }";
+        let (mut toks, _) = lex(src);
+        mark_test_regions(&mut toks);
+        assert!(toks.iter().all(|t| !t.in_test));
+    }
+}

@@ -1,0 +1,256 @@
+//! `shabari-lint`: a dependency-free static-analysis pass enforcing the
+//! repo's determinism contracts (DESIGN.md §Static analysis).
+//!
+//! Every result in this repo rests on byte-identical replay — the online
+//! learner's SGD order, the cross-seed sweep CIs, and the jobs-/shard-
+//! invariance pins all assume event order and RNG draws are exactly
+//! reproducible. Those contracts were enforced only at runtime (byte-pin
+//! tests); this pass checks them at CI time, before a refactor can
+//! reintroduce hash-order or wall-clock nondeterminism:
+//!
+//! * **D001** no `HashMap`/`HashSet` in `simulator/`, `coordinator/`,
+//!   `learner/`, `metrics/` paths;
+//! * **D002** no wall-clock reads outside `util::bench`/benches;
+//! * **D003** RNG forks through `util::rng` with named `SALT_*` salts;
+//! * **D004** float ordering via `total_cmp`, never `partial_cmp`/`f64 ==`;
+//! * **D005** no `unwrap/expect` on event/admission-queue pops in
+//!   `simulator/`.
+//!
+//! Escape hatch: `// lint:allow(DXXX): <reason>`. Trailing on a line it
+//! covers that line; standalone it covers the next code line. The reason
+//! is mandatory — an allow without one is itself a violation — and every
+//! used escape is reported in the summary table, so the audit trail stays
+//! visible. Unused allows are reported but do not fail the build.
+//!
+//! Entry points: [`lint_source`] (one in-memory file — the fixture tests),
+//! [`lint_tree`] (walk `src`/`tests`/`benches` under a root). The `lint`
+//! CLI subcommand wraps [`lint_tree`] with `--json` and a non-zero exit
+//! on violations, which is what CI gates on.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use lexer::{lex, mark_test_regions, Comment, Token};
+use rules::check_file;
+
+/// A confirmed violation (no matching `lint:allow`).
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// A `lint:allow` escape, with the line it covers and its reason.
+#[derive(Debug, Clone)]
+pub struct AllowedSite {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub reason: String,
+}
+
+/// Everything one lint pass produced.
+#[derive(Debug, Clone, Default)]
+pub struct LintOutcome {
+    pub violations: Vec<Violation>,
+    /// Escapes that suppressed a real rule hit (the summary table).
+    pub allowed: Vec<AllowedSite>,
+    /// Escapes that matched nothing (reported, not fatal: the linter errs
+    /// toward keeping stale-but-documented escapes visible rather than
+    /// breaking the build over them).
+    pub unused_allows: Vec<AllowedSite>,
+    pub files: usize,
+}
+
+impl LintOutcome {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    fn merge(&mut self, other: LintOutcome) {
+        self.violations.extend(other.violations);
+        self.allowed.extend(other.allowed);
+        self.unused_allows.extend(other.unused_allows);
+        self.files += other.files;
+    }
+}
+
+/// One parsed `lint:allow` escape before matching.
+#[derive(Debug)]
+struct Allow {
+    rule: String,
+    line: u32,
+    covered: u32,
+    reason: String,
+    used: bool,
+}
+
+/// Parse `lint:allow(DXXX): reason` escapes out of the plain `//` line
+/// comments — several rules at once via a comma list. A trailing comment
+/// covers its own line; a standalone comment covers the next line that
+/// holds any token. Doc comments (`///`, `//!`) never carry escapes, so
+/// documentation *about* the escape syntax stays inert.
+fn parse_allows(toks: &[Token], comments: &[Comment]) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for c in comments {
+        if c.text.starts_with("///") || c.text.starts_with("//!") {
+            continue;
+        }
+        let Some(at) = c.text.find("lint:allow(") else {
+            continue;
+        };
+        let rest = &c.text[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let ids = &rest[..close];
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("").to_string();
+        let covered = if c.trailing {
+            c.line
+        } else {
+            toks.iter()
+                .map(|t| t.line)
+                .find(|&l| l > c.line)
+                .unwrap_or(0)
+        };
+        for id in ids.split(',') {
+            let id = id.trim();
+            if id.is_empty() {
+                continue;
+            }
+            allows.push(Allow {
+                rule: id.to_string(),
+                line: c.line,
+                covered,
+                reason: reason.clone(),
+                used: false,
+            });
+        }
+    }
+    allows
+}
+
+/// Lint one file's source text. `path` drives rule scoping and should be
+/// repo-relative with `/` separators (`rust/src/simulator/engine.rs`).
+pub fn lint_source(path: &str, src: &str) -> LintOutcome {
+    let (mut toks, comments) = lex(src);
+    mark_test_regions(&mut toks);
+    let mut allows = parse_allows(&toks, &comments);
+    let raw = check_file(path, &toks);
+
+    let mut out = LintOutcome { files: 1, ..LintOutcome::default() };
+    for v in raw {
+        let hit = allows
+            .iter_mut()
+            .find(|a| a.rule == v.rule && (a.covered == v.line || a.line == v.line));
+        match hit {
+            Some(a) => {
+                a.used = true;
+                out.allowed.push(AllowedSite {
+                    rule: v.rule.to_string(),
+                    path: path.to_string(),
+                    line: v.line,
+                    reason: a.reason.clone(),
+                });
+            }
+            None => out.violations.push(Violation {
+                rule: v.rule.to_string(),
+                path: path.to_string(),
+                line: v.line,
+                message: v.message,
+            }),
+        }
+    }
+    for a in &allows {
+        if a.reason.is_empty() {
+            out.violations.push(Violation {
+                rule: a.rule.clone(),
+                path: path.to_string(),
+                line: a.line,
+                message: "lint:allow without a reason: every escape must say why \
+                          the site is safe"
+                    .to_string(),
+            });
+        } else if !a.used {
+            out.unused_allows.push(AllowedSite {
+                rule: a.rule.clone(),
+                path: path.to_string(),
+                line: a.line,
+                reason: a.reason.clone(),
+            });
+        }
+    }
+    out
+}
+
+/// The scanned subtrees, relative to the crate dir (`rust/`).
+const SCAN_DIRS: &[&str] = &["src", "tests", "benches"];
+
+/// Resolve the crate dir under `root`: accepts both the repo root (which
+/// holds `rust/src`) and the crate dir itself (`cargo test` runs with cwd
+/// = `rust/`).
+fn crate_dir(root: &Path) -> Result<std::path::PathBuf> {
+    let nested = root.join("rust");
+    if nested.join("src").is_dir() {
+        return Ok(nested);
+    }
+    if root.join("src").is_dir() {
+        return Ok(root.to_path_buf());
+    }
+    anyhow::bail!(
+        "no Rust tree under {}: expected rust/src or src",
+        root.display()
+    )
+}
+
+/// Recursively collect `.rs` files, sorted for a deterministic report.
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree under `root` (repo root or crate dir): every `.rs`
+/// file in `src`, `tests`, and `benches`.
+pub fn lint_tree(root: &Path) -> Result<LintOutcome> {
+    let crate_root = crate_dir(root)?;
+    let mut files = Vec::new();
+    for sub in SCAN_DIRS {
+        let dir = crate_root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut out = LintOutcome::default();
+    for f in &files {
+        let src = fs::read_to_string(f).with_context(|| format!("reading {}", f.display()))?;
+        // rule scoping keys on the path relative to the crate dir
+        let rel = f
+            .strip_prefix(&crate_root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.merge(lint_source(&rel, &src));
+    }
+    Ok(out)
+}

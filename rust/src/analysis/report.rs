@@ -1,0 +1,96 @@
+//! Rendering for lint outcomes: the human-readable report (violations +
+//! the `lint:allow` summary table) and the machine-readable `--json`
+//! document CI artifacts can consume.
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::rules::all_rules;
+use super::{AllowedSite, LintOutcome};
+
+/// Render the human-readable report. Violations first (grep-friendly
+/// `path:line [rule] message` lines), then the allow summary table, then
+/// a one-line verdict.
+pub fn render(out: &LintOutcome) -> String {
+    let mut s = String::new();
+    if !out.violations.is_empty() {
+        s.push_str("determinism violations:\n");
+        for v in &out.violations {
+            s.push_str(&format!("  {}:{} [{}] {}\n", v.path, v.line, v.rule, v.message));
+        }
+        s.push('\n');
+    }
+    if !out.allowed.is_empty() {
+        s.push_str(&allow_table("lint:allow escapes in effect", &out.allowed).render());
+        s.push('\n');
+    }
+    if !out.unused_allows.is_empty() {
+        s.push_str(&allow_table("unused lint:allow escapes (stale?)", &out.unused_allows).render());
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "lint: {} file(s), {} violation(s), {} allowed, {} unused allow(s)\n",
+        out.files,
+        out.violations.len(),
+        out.allowed.len(),
+        out.unused_allows.len()
+    ));
+    s
+}
+
+fn allow_table(title: &str, sites: &[AllowedSite]) -> Table {
+    let mut t = Table::new(title, &["rule", "site", "reason"]);
+    for a in sites {
+        t.row(vec![a.rule.clone(), format!("{}:{}", a.path, a.line), a.reason.clone()]);
+    }
+    t
+}
+
+/// The `--json` document: rules, violations, allows, counters. Object
+/// keys are BTreeMap-ordered and files were walked sorted, so the dump is
+/// byte-stable across runs.
+pub fn to_json(out: &LintOutcome) -> Json {
+    let rules = all_rules()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", Json::Str(r.id().to_string())),
+                ("summary", Json::Str(r.summary().to_string())),
+            ])
+        })
+        .collect();
+    let violations = out
+        .violations
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("rule", Json::Str(v.rule.clone())),
+                ("path", Json::Str(v.path.clone())),
+                ("line", Json::Num(f64::from(v.line))),
+                ("message", Json::Str(v.message.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("rules", Json::Arr(rules)),
+        ("violations", Json::Arr(violations)),
+        ("allowed", Json::Arr(allow_json(&out.allowed))),
+        ("unused_allows", Json::Arr(allow_json(&out.unused_allows))),
+        ("files", Json::Num(out.files as f64)),
+        ("clean", Json::Bool(out.is_clean())),
+    ])
+}
+
+fn allow_json(sites: &[AllowedSite]) -> Vec<Json> {
+    sites
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("rule", Json::Str(a.rule.clone())),
+                ("path", Json::Str(a.path.clone())),
+                ("line", Json::Num(f64::from(a.line))),
+                ("reason", Json::Str(a.reason.clone())),
+            ])
+        })
+        .collect()
+}

@@ -1,0 +1,310 @@
+//! The determinism rules (D001–D005). Each rule is a small token-stream
+//! pattern matcher behind the [`Rule`] trait; path scoping decides where a
+//! rule applies, and `#[cfg(test)]` regions are exempt from the
+//! runtime-only rules (tests may freely compare floats or unwrap pops —
+//! they *check* determinism rather than produce it).
+//!
+//! The rules deliberately work without type information: they encode the
+//! repo's naming conventions (`Rng::new`, `SALT_*`, `pop_admission`)
+//! rather than resolved semantics, trading false-negative room for a
+//! dependency-free pass that runs in milliseconds. Divergences from a
+//! type-aware linter are documented per rule in DESIGN.md §Static
+//! analysis.
+
+use super::lexer::{Token, TokenKind};
+
+/// A rule hit before `lint:allow` filtering.
+#[derive(Debug, Clone)]
+pub struct RawViolation {
+    pub rule: &'static str,
+    pub line: u32,
+    pub message: String,
+}
+
+/// One determinism rule: an id (`D00x`), a one-line summary for the
+/// report, and a token-stream check.
+pub trait Rule {
+    fn id(&self) -> &'static str;
+    fn summary(&self) -> &'static str;
+    /// Whether the rule scans `path` at all (normalized, `/`-separated).
+    fn applies(&self, path: &str) -> bool;
+    fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>);
+}
+
+/// Paths whose iteration/compare order feeds event order or SGD order.
+const DETERMINISM_DIRS: &[&str] =
+    &["src/simulator/", "src/coordinator/", "src/learner/", "src/metrics/"];
+
+fn in_determinism_dirs(path: &str) -> bool {
+    DETERMINISM_DIRS.iter().any(|d| path.contains(d))
+}
+
+/// `util::bench` and the bench harness are the sanctioned wall-clock
+/// consumers (they measure the host, not the simulation).
+fn is_bench_path(path: &str) -> bool {
+    path.contains("/benches/") || path.starts_with("benches/") || path.ends_with("util/bench.rs")
+}
+
+fn is_text(toks: &[Token], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.text == text)
+}
+
+/// D001: hash-ordered collections in determinism-scoped paths.
+#[derive(Debug)]
+pub struct HashOrder;
+
+impl Rule for HashOrder {
+    fn id(&self) -> &'static str {
+        "D001"
+    }
+    fn summary(&self) -> &'static str {
+        "no HashMap/HashSet in simulator/coordinator/learner/metrics paths"
+    }
+    fn applies(&self, path: &str) -> bool {
+        in_determinism_dirs(path)
+    }
+    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+        for t in toks {
+            if t.in_test || t.kind != TokenKind::Ident {
+                continue;
+            }
+            if t.text == "HashMap" || t.text == "HashSet" {
+                out.push(RawViolation {
+                    rule: self.id(),
+                    line: t.line,
+                    message: format!(
+                        "{} in a determinism-scoped path: iteration order is \
+                         hash-seeded; use BTreeMap/BTreeSet or sort before iterating",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// D002: wall-clock reads outside `util::bench`/benches.
+#[derive(Debug)]
+pub struct WallClock;
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        "D002"
+    }
+    fn summary(&self) -> &'static str {
+        "no Instant::now/SystemTime::now outside util::bench and benches/"
+    }
+    fn applies(&self, path: &str) -> bool {
+        !is_bench_path(path)
+    }
+    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokenKind::Ident {
+                continue;
+            }
+            if (t.text == "Instant" || t.text == "SystemTime")
+                && is_text(toks, i + 1, "::")
+                && is_text(toks, i + 2, "now")
+            {
+                out.push(RawViolation {
+                    rule: self.id(),
+                    line: t.line,
+                    message: format!(
+                        "wall-clock read ({}::now) outside util::bench/benches: \
+                         simulated time must come from the event clock",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// D003: process-varying randomness and inline (unnamed) RNG salts.
+#[derive(Debug)]
+pub struct UnsaltedRng;
+
+/// Identifiers that smuggle per-process entropy into a run.
+const RANDOM_SOURCES: &[&str] = &["DefaultHasher", "RandomState", "thread_rng", "from_entropy"];
+
+impl Rule for UnsaltedRng {
+    fn id(&self) -> &'static str {
+        "D003"
+    }
+    fn summary(&self) -> &'static str {
+        "RNG forks go through util::rng with named SALT_* constants"
+    }
+    fn applies(&self, _path: &str) -> bool {
+        true
+    }
+    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokenKind::Ident {
+                continue;
+            }
+            if RANDOM_SOURCES.contains(&t.text.as_str()) {
+                out.push(RawViolation {
+                    rule: self.id(),
+                    line: t.line,
+                    message: format!(
+                        "{} is process-varying randomness; all RNG must flow \
+                         from util::rng with an explicit seed",
+                        t.text
+                    ),
+                });
+            }
+            // `Rng::new( ... <int literal> ^ ... )`: inline salts defeat
+            // grep-ability; the convention is `seed ^ SALT_X` with the
+            // constant named at module scope (PR 6).
+            if t.text == "Rng"
+                && is_text(toks, i + 1, "::")
+                && is_text(toks, i + 2, "new")
+                && is_text(toks, i + 3, "(")
+            {
+                let mut j = i + 4;
+                let mut pdepth = 1i32;
+                while j < toks.len() && pdepth > 0 {
+                    match toks[j].text.as_str() {
+                        "(" => pdepth += 1,
+                        ")" => pdepth -= 1,
+                        "^" => {
+                            let prev_lit = toks[j - 1].kind == TokenKind::Int;
+                            let next_lit =
+                                toks.get(j + 1).is_some_and(|t| t.kind == TokenKind::Int);
+                            if prev_lit || next_lit {
+                                out.push(RawViolation {
+                                    rule: self.id(),
+                                    line: toks[j].line,
+                                    message: "inline RNG salt: hoist the literal to a named \
+                                              SALT_* constant (seed ^ SALT_X convention)"
+                                        .to_string(),
+                                });
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// D004: float ordering/equality must be total.
+#[derive(Debug)]
+pub struct FloatOrder;
+
+impl Rule for FloatOrder {
+    fn id(&self) -> &'static str {
+        "D004"
+    }
+    fn summary(&self) -> &'static str {
+        "float ordering via total_cmp; no partial_cmp, no exact f64 =="
+    }
+    fn applies(&self, _path: &str) -> bool {
+        true
+    }
+    fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+        let det = in_determinism_dirs(path);
+        for (i, t) in toks.iter().enumerate() {
+            // partial_cmp is flagged everywhere, tests included: a test
+            // that sorts through a partial order can mask the exact
+            // nondeterminism the battery exists to catch.
+            if t.kind == TokenKind::Ident && t.text == "partial_cmp" {
+                out.push(RawViolation {
+                    rule: self.id(),
+                    line: t.line,
+                    message: "partial_cmp is not a total order over floats; \
+                              use f64::total_cmp"
+                        .to_string(),
+                });
+            }
+            if det
+                && !t.in_test
+                && t.kind == TokenKind::Punct
+                && (t.text == "==" || t.text == "!=")
+            {
+                let prev_f = i > 0 && toks[i - 1].kind == TokenKind::Float;
+                let next_f = toks.get(i + 1).is_some_and(|n| n.kind == TokenKind::Float);
+                if prev_f || next_f {
+                    out.push(RawViolation {
+                        rule: self.id(),
+                        line: t.line,
+                        message: "exact float equality in a determinism-scoped path; \
+                                  use total_cmp or justify the exact compare"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// D005: fallible pops on event/admission queues in the simulator.
+#[derive(Debug)]
+pub struct FalliblePop;
+
+const POP_NAMES: &[&str] = &["pop", "pop_front", "pop_first", "pop_last", "pop_admission"];
+
+impl Rule for FalliblePop {
+    fn id(&self) -> &'static str {
+        "D005"
+    }
+    fn summary(&self) -> &'static str {
+        "no unwrap/expect on event-heap or admission-queue pops in simulator/"
+    }
+    fn applies(&self, path: &str) -> bool {
+        path.contains("src/simulator/")
+    }
+    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.in_test || t.kind != TokenKind::Ident {
+                continue;
+            }
+            if POP_NAMES.contains(&t.text.as_str())
+                && i > 0
+                && toks[i - 1].text == "."
+                && is_text(toks, i + 1, "(")
+                && is_text(toks, i + 2, ")")
+                && is_text(toks, i + 3, ".")
+                && toks.get(i + 4)
+                    .is_some_and(|n| n.text == "unwrap" || n.text == "expect")
+            {
+                out.push(RawViolation {
+                    rule: self.id(),
+                    line: t.line,
+                    message: format!(
+                        "{}().{}() on an event/admission queue: handle empty \
+                         explicitly (while let / if let)",
+                        t.text,
+                        toks[i + 4].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// The registry, in rule-id order. The report and the docs iterate this.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(HashOrder),
+        Box::new(WallClock),
+        Box::new(UnsaltedRng),
+        Box::new(FloatOrder),
+        Box::new(FalliblePop),
+    ]
+}
+
+/// Run every applicable rule over one file's token stream.
+pub fn check_file(path: &str, toks: &[Token]) -> Vec<RawViolation> {
+    let mut out = Vec::new();
+    for rule in all_rules() {
+        if rule.applies(path) {
+            rule.check(path, toks, &mut out);
+        }
+    }
+    // stable report order: by line, then rule id
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}

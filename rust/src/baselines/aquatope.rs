@@ -34,16 +34,21 @@ pub struct AquaAlloc {
     pub mem_mb: u32,
 }
 
+#[derive(Debug)]
 pub struct AquatopePolicy {
     allocs: Vec<AquaAlloc>,
     scheduler: ShabariScheduler,
 }
 
+/// Salt decorrelating the offline BO-search stream from the run streams
+/// sharing the same seed.
+const SALT_AQUATOPE: u64 = 0xAA70_93E5;
+
 impl AquatopePolicy {
     /// Offline BO-style phase. `slo_of` maps (func, input) to the SLO the
     /// search targets (the evaluation's per-input SLOs).
     pub fn offline(seed: u64, slo_of: impl Fn(usize, usize) -> f64) -> Self {
-        let mut rng = Rng::new(seed ^ 0xAA70_93E5);
+        let mut rng = Rng::new(seed ^ SALT_AQUATOPE);
         let mut allocs = Vec::with_capacity(CATALOG.len());
         for (fi, spec) in CATALOG.iter().enumerate() {
             let pool = inputs::pool(spec, &mut rng);

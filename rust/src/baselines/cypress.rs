@@ -13,7 +13,7 @@
 //!   real serverless traffic, most containers end up holding a single
 //!   invocation — the memory-waste failure mode of Fig 8c/8e.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::coordinator::scheduler::openwhisk::OpenWhiskScheduler;
 use crate::coordinator::scheduler::Scheduler;
@@ -58,18 +58,19 @@ impl SizeRegression {
     }
 }
 
+#[derive(Debug)]
 pub struct CypressPolicy {
-    regressions: HashMap<usize, SizeRegression>,
+    regressions: BTreeMap<usize, SizeRegression>,
     /// Running max footprint per function (per-invocation memory unit).
-    mem_unit_mb: HashMap<usize, u32>,
+    mem_unit_mb: BTreeMap<usize, u32>,
     scheduler: OpenWhiskScheduler,
 }
 
 impl CypressPolicy {
     pub fn new(seed: u64) -> Self {
         CypressPolicy {
-            regressions: HashMap::new(),
-            mem_unit_mb: HashMap::new(),
+            regressions: BTreeMap::new(),
+            mem_unit_mb: BTreeMap::new(),
             scheduler: OpenWhiskScheduler::new(seed),
         }
     }

@@ -29,17 +29,22 @@ pub struct Recommendation {
     pub vcpus: u32,
 }
 
+#[derive(Debug)]
 pub struct ParrotfishPolicy {
     recs: Vec<Recommendation>,
     scheduler: OpenWhiskScheduler,
 }
+
+/// Salt decorrelating the offline-profiling stream from the run streams
+/// sharing the same seed.
+const SALT_PARROTFISH: u64 = 0x9A44_07F1;
 
 impl ParrotfishPolicy {
     /// Offline phase: profile each function on two representative inputs
     /// across the memory ladder; pick the cheapest configuration
     /// (GB-seconds cost model, like the real tool).
     pub fn offline(seed: u64) -> Self {
-        let mut rng = Rng::new(seed ^ 0x9A44_07F1);
+        let mut rng = Rng::new(seed ^ SALT_PARROTFISH);
         let mut recs = Vec::with_capacity(CATALOG.len());
         for (fi, spec) in CATALOG.iter().enumerate() {
             let pool = inputs::pool(spec, &mut rng);

@@ -7,6 +7,7 @@ use crate::coordinator::scheduler::Scheduler;
 use crate::simulator::worker::Cluster;
 use crate::simulator::{Decision, InvocationRecord, Policy, Request, SimTime};
 
+#[derive(Debug)]
 pub struct StaticPolicy {
     vcpus: u32,
     mem_mb: u32,

@@ -6,6 +6,7 @@
 //!   report      — latency breakdown + utilization timeline of a trace
 //!   profile     — isolated profiling of one function (SLO derivation)
 //!   selfcheck   — artifacts load + XLA/native learner parity
+//!   lint        — determinism linter (rules D001–D005, CI gate)
 //!   list        — known policies and experiments
 
 pub mod args;
@@ -30,7 +31,7 @@ pub fn main() -> i32 {
     }
 }
 
-const BOOL_FLAGS: &[&str] = &["xla", "native", "verbose"];
+const BOOL_FLAGS: &[&str] = &["xla", "native", "verbose", "json"];
 
 fn ctx_from(a: &args::Args) -> Result<Ctx> {
     let backend = if a.get_bool("xla") { Backend::Xla } else { Backend::Native };
@@ -130,6 +131,7 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "profile" => cmd_profile(&a),
         "selfcheck" => cmd_selfcheck(&a),
+        "lint" => cmd_lint(&a),
         other => bail!("unknown subcommand '{other}' (see `shabari help`)"),
     }
 }
@@ -143,6 +145,7 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     }
     let policy = a.get_or("policy", "shabari");
     let rps = a.get_f64("rps", 4.0)?;
+    // lint:allow(D002): host-side sweep timing for the operator report only
     let t0 = std::time::Instant::now();
     // One sweep cell replicated across --seeds, executed on --jobs threads.
     let cells = [sweep::Cell::new(&policy, rps)];
@@ -217,6 +220,23 @@ fn cmd_run(a: &args::Args) -> Result<()> {
         if let Some(p) = &tr.chrome {
             println!("(wrote Chrome trace {p}; load in Perfetto or chrome://tracing)");
         }
+    }
+    Ok(())
+}
+
+/// `shabari lint [--root <dir>] [--json]`: the determinism linter
+/// (DESIGN.md §Static analysis). Exit code is the CI gate: non-zero on
+/// any violation a `lint:allow(DXXX): <reason>` escape does not cover.
+fn cmd_lint(a: &args::Args) -> Result<()> {
+    let root = a.get_or("root", ".");
+    let out = crate::analysis::lint_tree(std::path::Path::new(&root))?;
+    if a.get_bool("json") {
+        println!("{}", crate::analysis::report::to_json(&out).to_pretty());
+    } else {
+        print!("{}", crate::analysis::report::render(&out));
+    }
+    if !out.is_clean() {
+        bail!("{} determinism violation(s), see report above", out.violations.len());
     }
     Ok(())
 }
@@ -328,6 +348,11 @@ fn print_help() {
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\
+           lint         determinism linter: rules D001..D005 over\n\
+                        rust/{{src,tests,benches}} (non-zero exit on any\n\
+                        violation without a `lint:allow(DXXX): <reason>`)\n\
+                          --root <dir>      repo or crate root (default .)\n\
+                          --json            machine-readable report\n\
            list         known policies and experiment ids\n\
            help         this message\n\
          \n\

@@ -13,7 +13,8 @@
 //!   dominate the early updates and starve slower ones (mobilenet's SLO
 //!   violations in Fig 6a).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
+use std::fmt;
 
 use crate::featurizer::{FeatureVector, InputKind};
 use crate::learner::native::DynCsmc;
@@ -59,12 +60,12 @@ pub struct ModelBank {
     formulation: Formulation,
     /// PerFunction: keyed by function index. PerInputType: keyed by
     /// input-kind index.
-    models: HashMap<usize, Box<dyn CsmcModel>>,
+    models: BTreeMap<usize, Box<dyn CsmcModel>>,
     /// OneHot: single wide model.
     wide: Option<DynCsmc>,
     /// Per-function observation counts (confidence gating is always
     /// per function, regardless of model sharing).
-    func_obs: HashMap<usize, u64>,
+    func_obs: BTreeMap<usize, u64>,
     lr: f32,
     /// Experience replay: ring of recent (x, costs) per model key, plus
     /// how many replayed updates accompany each fresh one. The memory
@@ -73,8 +74,22 @@ pub struct ModelBank {
     /// bank keeps replay at 0 so the explore/revert dynamics of Fig 9a
     /// stay responsive.
     replay: usize,
-    history: HashMap<usize, Vec<([f32; FEAT_DIM], [f32; NUM_CLASSES])>>,
+    history: BTreeMap<usize, Vec<([f32; FEAT_DIM], [f32; NUM_CLASSES])>>,
     replay_cursor: u64,
+}
+
+/// Manual `Debug`: `models` holds `Box<dyn CsmcModel>` trait objects, so
+/// print the bank's shape (formulation, key count, hyperparameters)
+/// instead of the weights.
+impl fmt::Debug for ModelBank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ModelBank")
+            .field("formulation", &self.formulation)
+            .field("models", &self.models.len())
+            .field("lr", &self.lr)
+            .field("replay", &self.replay)
+            .finish_non_exhaustive()
+    }
 }
 
 /// Capacity of each per-key replay ring.
@@ -93,12 +108,12 @@ impl ModelBank {
         };
         ModelBank {
             formulation,
-            models: HashMap::new(),
+            models: BTreeMap::new(),
             wide,
-            func_obs: HashMap::new(),
+            func_obs: BTreeMap::new(),
             lr,
             replay,
-            history: HashMap::new(),
+            history: BTreeMap::new(),
             replay_cursor: 0,
         }
     }

@@ -78,6 +78,7 @@ pub struct Allocation {
 
 /// Shabari's Resource Allocator: per-function online models for vCPU and
 /// memory, fed by the worker daemon's per-invocation reports.
+#[derive(Debug)]
 pub struct ResourceAllocator {
     pub cfg: AllocatorConfig,
     factory: ModelFactory,

@@ -21,6 +21,19 @@ pub struct ShabariPolicy {
     name: String,
 }
 
+/// Manual `Debug`: the scheduler is a `Box<dyn Scheduler>` trait object,
+/// so print its registry name alongside the allocator state.
+impl std::fmt::Debug for ShabariPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShabariPolicy")
+            .field("name", &self.name)
+            .field("scheduler", &self.scheduler.name())
+            .field("allocator", &self.allocator)
+            .field("feedback_entries", &self.feedback_counts.len())
+            .finish_non_exhaustive()
+    }
+}
+
 impl ShabariPolicy {
     pub fn new(allocator: ResourceAllocator, scheduler: Box<dyn Scheduler>) -> Self {
         let name = format!("shabari({})", scheduler.name());

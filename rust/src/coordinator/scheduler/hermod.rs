@@ -14,14 +14,19 @@ use crate::util::rng::Rng;
 
 use super::{SchedDecision, Scheduler};
 
+#[derive(Debug)]
 pub struct HermodScheduler {
     rng: Rng,
     pub latency_s: f64,
 }
 
+/// Salt decorrelating this scheduler's tie-break stream from the other
+/// consumers of the run seed.
+const SALT_HERMOD_SCHED: u64 = 0x4E58_410D;
+
 impl HermodScheduler {
     pub fn new(seed: u64) -> Self {
-        HermodScheduler { rng: Rng::new(seed ^ 0x4E58_410D), latency_s: 0.001 }
+        HermodScheduler { rng: Rng::new(seed ^ SALT_HERMOD_SCHED), latency_s: 0.001 }
     }
 }
 

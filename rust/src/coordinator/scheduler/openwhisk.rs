@@ -11,14 +11,19 @@ use crate::util::rng::Rng;
 
 use super::{home_server, SchedDecision, Scheduler};
 
+#[derive(Debug)]
 pub struct OpenWhiskScheduler {
     rng: Rng,
     pub latency_s: f64,
 }
 
+/// Salt decorrelating this scheduler's tie-break stream from the other
+/// consumers of the run seed.
+const SALT_OPENWHISK_SCHED: u64 = 0x0111_5C4E;
+
 impl OpenWhiskScheduler {
     pub fn new(seed: u64) -> Self {
-        OpenWhiskScheduler { rng: Rng::new(seed ^ 0x0111_5C4E), latency_s: 0.001 }
+        OpenWhiskScheduler { rng: Rng::new(seed ^ SALT_OPENWHISK_SCHED), latency_s: 0.001 }
     }
 
     /// Memory-only admission (ignores vCPU load entirely). Queue-aware:

@@ -24,6 +24,7 @@ use crate::util::rng::Rng;
 
 use super::{home_server, probe_from, SchedDecision, Scheduler};
 
+#[derive(Debug)]
 pub struct ShabariScheduler {
     rng: Rng,
     /// Modeled critical-path latency (Fig 14: 0.5–1.5 ms).
@@ -34,10 +35,14 @@ pub struct ShabariScheduler {
     pub cold_routes: u64,
 }
 
+/// Salt decorrelating the scheduler's tie-break stream from the other
+/// consumers of the run seed (engine, workload, learner).
+const SALT_SHABARI_SCHED: u64 = 0x5C4E_D011;
+
 impl ShabariScheduler {
     pub fn new(seed: u64) -> Self {
         ShabariScheduler {
-            rng: Rng::new(seed ^ 0x5C4E_D011),
+            rng: Rng::new(seed ^ SALT_SHABARI_SCHED),
             latency_s: 0.001,
             warm_exact_hits: 0,
             warm_larger_hits: 0,

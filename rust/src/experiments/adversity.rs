@@ -101,6 +101,7 @@ pub fn run_adversity(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>
 }
 
 pub fn adversity(ctx: &Ctx) -> Result<()> {
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
     let t0 = std::time::Instant::now();
     let outcomes = run_adversity(ctx, ADV_RPS)?;
     let wall = t0.elapsed().as_secs_f64();

@@ -54,6 +54,7 @@ pub fn run_sweep(ctx: &Ctx, rps_list: &[f64]) -> Result<Vec<Vec<RunMetrics>>> {
 
 pub fn fig8(ctx: &Ctx) -> Result<()> {
     let rps_list = [2.0, 3.0, 4.0, 5.0, 6.0];
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
     let t0 = std::time::Instant::now();
     let outcomes = run_sweep_outcomes(ctx, &rps_list)?;
     let wall = t0.elapsed().as_secs_f64();

@@ -95,6 +95,7 @@ pub fn run_keepalive(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>
 }
 
 pub fn keepalive(ctx: &Ctx) -> Result<()> {
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
     let t0 = std::time::Instant::now();
     let outcomes = run_keepalive(ctx, KA_RPS)?;
     let wall = t0.elapsed().as_secs_f64();

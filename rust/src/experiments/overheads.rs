@@ -31,6 +31,7 @@ fn measure_ms(iters: usize, mut f: impl FnMut()) -> f64 {
     for _ in 0..iters.min(16) {
         f();
     }
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
     let t0 = std::time::Instant::now();
     for _ in 0..iters {
         f();

@@ -73,6 +73,7 @@ pub fn run_overload(ctx: &Ctx, rps_list: &[f64]) -> Result<Vec<CellOutcome<RunMe
 }
 
 pub fn overload(ctx: &Ctx) -> Result<()> {
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
     let t0 = std::time::Instant::now();
     let outcomes = run_overload(ctx, OVERLOAD_RPS)?;
     let wall = t0.elapsed().as_secs_f64();

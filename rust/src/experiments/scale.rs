@@ -66,6 +66,7 @@ pub fn run_scale(ctx: &Ctx) -> Result<Vec<ScaleRow>> {
     let mut rows = Vec::with_capacity(SCALE_POLICIES.len());
     for policy in SCALE_POLICIES {
         let cells = [Cell::labeled(policy, rps, "workers", workers as f64)];
+        // lint:allow(D002): host wall time for the bench throughput figure only
         let t0 = std::time::Instant::now();
         let outcomes = sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
             run_scale_cell(&cell.policy, ctx, cell.rps, workers, seed)

@@ -68,6 +68,7 @@ pub fn run_matrix(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>> {
 }
 
 pub fn scenarios(ctx: &Ctx) -> Result<()> {
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
     let t0 = std::time::Instant::now();
     let outcomes = run_matrix(ctx, MATRIX_RPS)?;
     let wall = t0.elapsed().as_secs_f64();

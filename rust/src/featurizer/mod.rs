@@ -13,7 +13,7 @@
 
 pub mod extract;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::runtime::FEAT_DIM;
 
@@ -202,7 +202,7 @@ pub fn featurize(input: &InputSpec) -> Featurized {
 /// hit means zero critical-path extraction latency.
 #[derive(Debug, Default)]
 pub struct FeatureCache {
-    cache: HashMap<u64, FeatureVector>,
+    cache: BTreeMap<u64, FeatureVector>,
     pub hits: u64,
     pub misses: u64,
 }

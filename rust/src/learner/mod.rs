@@ -40,11 +40,14 @@ pub trait CsmcModel {
     }
 }
 
-/// Index of the minimum value (first on ties).
+/// Index of the minimum value (first on ties). Ranks through
+/// `f32::total_cmp` so the allocator's class choice stays a total order
+/// even if a cost score ever degenerates to NaN (a NaN ranks above every
+/// real score instead of poisoning every comparison it touches).
 pub fn argmin(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, v) in xs.iter().enumerate() {
-        if *v < xs[best] {
+        if v.total_cmp(&xs[best]) == std::cmp::Ordering::Less {
             best = i;
         }
     }
@@ -77,6 +80,9 @@ mod tests {
         assert_eq!(argmin(&[3.0, 1.0, 2.0]), 1);
         assert_eq!(argmin(&[1.0, 1.0]), 0, "first wins ties");
         assert_eq!(argmin(&[5.0]), 0);
+        // total_cmp ranks +NaN above every real score: a degenerate cost
+        // never wins the class choice and never poisons the comparison
+        assert_eq!(argmin(&[f32::NAN, 2.0, 3.0]), 1);
     }
 
     #[test]

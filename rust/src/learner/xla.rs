@@ -34,6 +34,18 @@ pub struct XlaCsmc {
     lr_lit: xla::Literal,
 }
 
+/// Manual `Debug`: `xla::Literal` buffers have no `Debug`; the scalar
+/// hyperparameters and update count describe the model state.
+#[cfg(feature = "xla")]
+impl std::fmt::Debug for XlaCsmc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaCsmc")
+            .field("lr", &self.lr)
+            .field("updates", &self.updates)
+            .finish_non_exhaustive()
+    }
+}
+
 #[cfg(feature = "xla")]
 impl XlaCsmc {
     pub fn new(engine: Rc<XlaEngine>, lr: f32) -> Self {
@@ -139,6 +151,18 @@ pub enum ModelFactory {
     #[cfg(feature = "xla")]
     Xla(Rc<XlaEngine>, f32),
     Native(f32),
+}
+
+/// Manual `Debug`: the Xla variant holds the shared PJRT engine, which
+/// has no meaningful field view; the learning rate identifies the factory.
+impl std::fmt::Debug for ModelFactory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            #[cfg(feature = "xla")]
+            ModelFactory::Xla(_, lr) => f.debug_tuple("Xla").field(lr).finish(),
+            ModelFactory::Native(lr) => f.debug_tuple("Native").field(lr).finish(),
+        }
+    }
 }
 
 impl ModelFactory {

@@ -14,7 +14,27 @@
 //!
 //! Python never runs on the request path: `rust/src/runtime` loads the HLO
 //! artifacts through the PJRT C API (`xla` crate) once at startup.
+//!
+//! Reproducibility is a checked invariant, not a convention: the runtime
+//! byte-pin tests replay whole runs, and `shabari lint` (the [`analysis`]
+//! module, DESIGN.md §Static analysis) statically enforces the
+//! determinism contracts (D001–D005) over this crate at CI time.
 
+// No unsafe anywhere: the only FFI (PJRT) lives behind the vendored `xla`
+// crate, and everything in this crate is safe simulation/learning code.
+#![forbid(unsafe_code)]
+// Determinism-adjacent hygiene, enforced crate-wide. `Debug` everywhere
+// keeps dumps/assertions available on every public type; the unused-*
+// lints keep dead generality from accreting.
+#![deny(
+    missing_debug_implementations,
+    non_ascii_idents,
+    unused_extern_crates,
+    unused_lifetimes,
+    unused_must_use
+)]
+
+pub mod analysis;
 pub mod baselines;
 pub mod cli;
 pub mod coordinator;

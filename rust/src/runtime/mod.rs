@@ -17,7 +17,7 @@
 //! usable backend (DESIGN.md §1).
 
 #[cfg(feature = "xla")]
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 #[cfg(feature = "xla")]
 use std::path::{Path, PathBuf};
 
@@ -48,8 +48,20 @@ struct LoadedExe {
 #[cfg(feature = "xla")]
 pub struct XlaEngine {
     client: xla::PjRtClient,
-    exes: HashMap<String, LoadedExe>,
+    exes: BTreeMap<String, LoadedExe>,
     dir: PathBuf,
+}
+
+/// Manual `Debug`: the PJRT client is an opaque FFI handle; the artifact
+/// directory and loaded executable names describe the engine.
+#[cfg(feature = "xla")]
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("dir", &self.dir)
+            .field("exes", &self.exes.keys().collect::<Vec<_>>())
+            .finish_non_exhaustive()
+    }
 }
 
 #[cfg(feature = "xla")]
@@ -59,7 +71,7 @@ impl XlaEngine {
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        let mut engine = Self { client, exes: HashMap::new(), dir: dir.clone() };
+        let mut engine = Self { client, exes: BTreeMap::new(), dir: dir.clone() };
         for name in ARTIFACTS {
             let path = dir.join(format!("{name}.hlo.txt"));
             engine
@@ -73,7 +85,7 @@ impl XlaEngine {
     /// Create an engine with no artifacts loaded (tests load ad-hoc HLO).
     pub fn empty() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Self { client, exes: HashMap::new(), dir: PathBuf::from("artifacts") })
+        Ok(Self { client, exes: BTreeMap::new(), dir: PathBuf::from("artifacts") })
     }
 
     /// Load and compile one HLO-text file under `name`.

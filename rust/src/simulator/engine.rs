@@ -19,7 +19,7 @@
 //! RNG draws, zero extra heap events, byte-identical records either way.
 
 use std::cmp::Ordering;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::functions::catalog::CATALOG;
 use crate::functions::Demand;
@@ -75,6 +75,7 @@ impl PartialEq for Event {
 }
 impl Eq for Event {}
 impl PartialOrd for Event {
+    // lint:allow(D004): trait-mandated signature; delegates to the total `Ord::cmp` below
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
@@ -242,9 +243,9 @@ pub struct Engine<'p, P: Policy> {
     seq: u64,
     now: SimTime,
     requests: Vec<Request>,
-    pending: HashMap<u64, Pending>,
+    pending: BTreeMap<u64, Pending>,
     /// container id -> invocation waiting for its cold start.
-    waiting_on_container: HashMap<u64, u64>,
+    waiting_on_container: BTreeMap<u64, u64>,
     records: Vec<InvocationRecord>,
     next_container_id: u64,
     containers_created: u64,
@@ -275,10 +276,29 @@ pub struct Engine<'p, P: Policy> {
     trace: Option<TraceLog>,
 }
 
+/// Manual `Debug`: the engine borrows the policy generically and owns a
+/// `Box<dyn KeepAlivePolicy>`; print the simulation cursor and queue
+/// shape, which is what a stuck-run report needs.
+impl<P: Policy> std::fmt::Debug for Engine<'_, P> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("now", &self.now)
+            .field("seq", &self.seq)
+            .field("events", &self.events.len())
+            .field("pending", &self.pending.len())
+            .field("events_processed", &self.events_processed)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Salt for the engine's own RNG stream (exec-time noise, OOM coin
+/// flips), decorrelated from workload/policy streams off the same seed.
+const SALT_ENGINE: u64 = 0x5115_BA71;
+
 impl<'p, P: Policy> Engine<'p, P> {
     pub fn new(cfg: SimConfig, policy: &'p mut P, mut requests: Vec<Request>) -> Self {
         requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
-        let rng = Rng::new(cfg.seed ^ 0x5115_BA71);
+        let rng = Rng::new(cfg.seed ^ SALT_ENGINE);
         let mut cluster = Cluster::new(&cfg);
         // Materialize the fault schedule up front from its own salted RNG
         // streams (DESIGN.md §Faults) — `faults:none` builds an empty plan
@@ -290,6 +310,7 @@ impl<'p, P: Policy> Engine<'p, P> {
         for (w, worker) in cluster.workers.iter_mut().enumerate() {
             worker.speed = faults.speed[w];
             let scale = faults.capacity_scale[w];
+            // lint:allow(D004): 1.0 is an exact sentinel assigned above, not a computed value
             if scale != 1.0 {
                 // Heterogeneous classes scale the whole worker shape;
                 // floors keep even the smallest class schedulable.
@@ -323,8 +344,8 @@ impl<'p, P: Policy> Engine<'p, P> {
             seq: 0,
             now: 0.0,
             requests,
-            pending: HashMap::new(),
-            waiting_on_container: HashMap::new(),
+            pending: BTreeMap::new(),
+            waiting_on_container: BTreeMap::new(),
             records: Vec::new(),
             next_container_id: 1,
             containers_created: 0,

@@ -90,6 +90,7 @@ impl FuncHist {
 /// The hybrid histogram policy. No RNG, no floating accumulation across
 /// functions: state is per-function bin counts, so identical runs build
 /// identical histograms.
+#[derive(Debug)]
 pub struct HistogramKeepAlive {
     /// TTL while a function's history is cold (`SimConfig::keep_alive_s`).
     default_ttl_s: f64,

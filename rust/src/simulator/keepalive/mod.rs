@@ -179,6 +179,7 @@ pub trait KeepAlivePolicy {
 /// Legacy behavior: one fixed TTL for every container, no pre-warm, no
 /// demand-driven eviction. Byte-identical streams to the pre-subsystem
 /// engine when the TTL matches `SimConfig::keep_alive_s`.
+#[derive(Debug)]
 pub struct FixedKeepAlive {
     ttl_s: f64,
 }

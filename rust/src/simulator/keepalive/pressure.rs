@@ -22,6 +22,7 @@
 use super::{IdleDecision, KeepAlivePolicy};
 use crate::simulator::SimTime;
 
+#[derive(Debug)]
 pub struct PressureKeepAlive {
     ttl_s: f64,
 }

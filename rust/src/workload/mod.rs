@@ -12,7 +12,17 @@ use crate::functions::inputs;
 use crate::simulator::Request;
 use crate::util::rng::Rng;
 
+/// Salt for the suite-construction stream (input pools + SLO derivation),
+/// decorrelated from the engine/policy streams off the same seed.
+const SALT_WORKLOAD: u64 = 0x3017_AB1E;
+
+/// Salt for trace generation (arrival times, function/input picks). Public
+/// because the scenario byte-pin test replays the legacy recipe with the
+/// identical stream.
+pub const SALT_TRACE: u64 = 0x7A3C_E000;
+
 /// The benchmark suite: every function's input pool plus per-input SLOs.
+#[derive(Debug)]
 pub struct Workload {
     /// Input pools, indexed by catalog function index.
     pub pools: Vec<Vec<InputSpec>>,
@@ -25,7 +35,7 @@ impl Workload {
     /// Build the full Table-1 suite with SLOs at `multiplier` x the
     /// median isolated runtime (1.4x in the paper's evaluation).
     pub fn build(seed: u64, multiplier: f64) -> Self {
-        let mut rng = Rng::new(seed ^ 0x3017_AB1E);
+        let mut rng = Rng::new(seed ^ SALT_WORKLOAD);
         let mut pools = Vec::with_capacity(CATALOG.len());
         let mut slos = Vec::with_capacity(CATALOG.len());
         for spec in CATALOG {
@@ -100,7 +110,7 @@ impl Workload {
         duration_s: f64,
         seed: u64,
     ) -> Vec<Request> {
-        let mut rng = Rng::new(seed ^ 0x7A3C_E000);
+        let mut rng = Rng::new(seed ^ SALT_TRACE);
         let starts = scenario.arrival_times(rps, duration_s, &mut rng);
         starts
             .into_iter()

@@ -9,7 +9,7 @@
 //! `rust/data/azure_sample.csv` (embedded at compile time, so `trace-file`
 //! works regardless of the working directory).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Mutex, OnceLock};
 
 use anyhow::{Context, Result};
@@ -23,9 +23,9 @@ use super::Scenario;
 /// per (cell, replicate) for determinism, and a real Azure day trace is
 /// hundreds of MB — re-reading it once per cell would dominate the sweep.
 /// Profiles are immutable once parsed, so one read per process suffices.
-fn path_cache() -> &'static Mutex<HashMap<String, Vec<u64>>> {
-    static CACHE: OnceLock<Mutex<HashMap<String, Vec<u64>>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn path_cache() -> &'static Mutex<BTreeMap<String, Vec<u64>>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<String, Vec<u64>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
 }
 
 /// The checked-in sample trace (Azure Functions schema, 10 minutes,

@@ -1,0 +1,267 @@
+//! Determinism-linter battery (DESIGN.md §Static analysis).
+//!
+//! Per-rule positive/negative fixtures as embedded strings (no temp-file
+//! nondeterminism), the `lint:allow` escape semantics, and the self-check
+//! that the repo tree itself is lint-clean — which is exactly what the CI
+//! gate (`cargo run --release -- lint`) enforces.
+
+use std::path::Path;
+
+use shabari::analysis::{lint_source, lint_tree, report, LintOutcome};
+
+/// Rules fired on a fixture, in report order.
+fn rules_of(out: &LintOutcome) -> Vec<&str> {
+    out.violations.iter().map(|v| v.rule.as_str()).collect()
+}
+
+// ---------------------------------------------------------------- D001
+
+#[test]
+fn d001_flags_hash_collections_in_scoped_paths() {
+    let src = "use std::collections::HashMap;\n";
+    for dir in ["simulator", "coordinator", "learner", "metrics"] {
+        let out = lint_source(&format!("src/{dir}/x.rs"), src);
+        assert_eq!(rules_of(&out), vec!["D001"], "{dir}");
+    }
+    let out = lint_source("src/simulator/x.rs", "fn f(s: &mut HashSet<u32>) {}\n");
+    assert_eq!(rules_of(&out), vec!["D001"]);
+}
+
+#[test]
+fn d001_ignores_unscoped_paths_and_sorted_collections() {
+    let src = "use std::collections::HashMap;\n";
+    assert!(lint_source("src/util/x.rs", src).is_clean());
+    assert!(lint_source("tests/test_x.rs", src).is_clean());
+    let sorted = "use std::collections::{BTreeMap, BTreeSet};\n";
+    assert!(lint_source("src/simulator/x.rs", sorted).is_clean());
+}
+
+#[test]
+fn d001_exempts_test_regions_and_string_literals() {
+    let test_only = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+    assert!(lint_source("src/simulator/x.rs", test_only).is_clean());
+    let in_str = "const MSG: &str = \"HashMap order leaks\";\n";
+    assert!(lint_source("src/simulator/x.rs", in_str).is_clean());
+}
+
+// ---------------------------------------------------------------- D002
+
+#[test]
+fn d002_flags_wall_clock_reads() {
+    let src = "fn f() { let t0 = std::time::Instant::now(); }\n";
+    let out = lint_source("src/metrics/x.rs", src);
+    assert_eq!(rules_of(&out), vec!["D002"]);
+    let sys = "fn f() { let t = std::time::SystemTime::now(); }\n";
+    assert_eq!(rules_of(&lint_source("src/util/x.rs", sys)), vec!["D002"]);
+}
+
+#[test]
+fn d002_exempts_bench_paths_tests_and_bare_imports() {
+    let src = "fn f() { let t0 = std::time::Instant::now(); }\n";
+    assert!(lint_source("src/util/bench.rs", src).is_clean());
+    assert!(lint_source("benches/bench_x.rs", src).is_clean());
+    let test_only = format!("#[cfg(test)]\nmod tests {{\n    {src}\n}}\n");
+    assert!(lint_source("src/simulator/x.rs", &test_only).is_clean());
+    // importing the type is fine; only the `::now` read is a violation
+    assert!(lint_source("src/simulator/x.rs", "use std::time::Instant;\n").is_clean());
+}
+
+// ---------------------------------------------------------------- D003
+
+#[test]
+fn d003_flags_inline_rng_salts() {
+    let src = "fn f(seed: u64) { let r = Rng::new(seed ^ 0x5115_BA71); }\n";
+    let out = lint_source("src/workload/x.rs", src);
+    assert_eq!(rules_of(&out), vec!["D003"]);
+    // literal-first order is the same violation
+    let flipped = "fn f(seed: u64) { let r = Rng::new(0xABC ^ seed); }\n";
+    assert_eq!(rules_of(&lint_source("src/workload/x.rs", flipped)), vec!["D003"]);
+}
+
+#[test]
+fn d003_accepts_named_salts_plain_seeds_and_hashes() {
+    let named = "fn f(seed: u64) { let r = Rng::new(seed ^ SALT_ENGINE); }\n";
+    assert!(lint_source("src/simulator/x.rs", named).is_clean());
+    assert!(lint_source("src/simulator/x.rs", "fn f() { let r = Rng::new(42); }\n").is_clean());
+    let hashed = "fn f(seed: u64) { let r = Rng::new(seed ^ fnv1a(b\"tag\")); }\n";
+    assert!(lint_source("src/experiments/x.rs", hashed).is_clean());
+}
+
+#[test]
+fn d003_flags_entropy_sources_even_in_tests() {
+    // a hash-seeded or entropy-fed test is nondeterministic CI — no exemption
+    let src = "#[cfg(test)]\nmod tests {\n    fn f() { let r = thread_rng(); }\n}\n";
+    let out = lint_source("src/util/x.rs", src);
+    assert_eq!(rules_of(&out), vec!["D003"]);
+    for ident in ["DefaultHasher", "RandomState", "from_entropy"] {
+        let src = format!("fn f() {{ let h = {ident}::default(); }}\n");
+        assert_eq!(rules_of(&lint_source("src/util/x.rs", &src)), vec!["D003"], "{ident}");
+    }
+}
+
+// ---------------------------------------------------------------- D004
+
+#[test]
+fn d004_flags_partial_cmp_everywhere() {
+    let src = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+    for path in ["src/util/x.rs", "src/simulator/x.rs", "tests/test_x.rs"] {
+        assert_eq!(rules_of(&lint_source(path, src)), vec!["D004"], "{path}");
+    }
+    let total = "fn f(xs: &mut [f64]) { xs.sort_by(f64::total_cmp); }\n";
+    assert!(lint_source("src/simulator/x.rs", total).is_clean());
+}
+
+#[test]
+fn d004_flags_exact_float_compares_in_scoped_paths_only() {
+    let src = "fn f(x: f64) -> bool { x == 1.0 }\n";
+    assert_eq!(rules_of(&lint_source("src/simulator/x.rs", src)), vec!["D004"]);
+    let neq = "fn f(x: f64) -> bool { 0.5 != x }\n";
+    assert_eq!(rules_of(&lint_source("src/learner/x.rs", neq)), vec!["D004"]);
+    // unscoped path, integer compare, and test regions all pass
+    assert!(lint_source("src/util/x.rs", src).is_clean());
+    assert!(lint_source("src/simulator/x.rs", "fn f(x: u64) -> bool { x == 1 }\n").is_clean());
+    let test_only = "#[cfg(test)]\nmod tests {\n    fn f(x: f64) -> bool { x == 1.0 }\n}\n";
+    assert!(lint_source("src/simulator/x.rs", test_only).is_clean());
+}
+
+// ---------------------------------------------------------------- D005
+
+#[test]
+fn d005_flags_fallible_pops_in_simulator() {
+    let src = "fn f(h: &mut BinaryHeap<u64>) { let e = h.pop().unwrap(); }\n";
+    assert_eq!(rules_of(&lint_source("src/simulator/engine.rs", src)), vec!["D005"]);
+    let exp = "fn f(w: &mut W) { let e = w.pop_admission().expect(\"q\"); }\n";
+    assert_eq!(rules_of(&lint_source("src/simulator/worker.rs", exp)), vec!["D005"]);
+}
+
+#[test]
+fn d005_accepts_explicit_handling_and_other_paths() {
+    let ok = "fn f(h: &mut BinaryHeap<u64>) { while let Some(e) = h.pop() {} }\n";
+    assert!(lint_source("src/simulator/engine.rs", ok).is_clean());
+    // outside simulator/ the rule does not apply at all
+    let src = "fn f(h: &mut BinaryHeap<u64>) { let e = h.pop().unwrap(); }\n";
+    assert!(lint_source("src/coordinator/x.rs", src).is_clean());
+    let test_only =
+        "#[cfg(test)]\nmod tests {\n    fn f(h: &mut H) { let e = h.pop().unwrap(); }\n}\n";
+    assert!(lint_source("src/simulator/x.rs", test_only).is_clean());
+}
+
+// ------------------------------------------------------ lint:allow escapes
+
+#[test]
+fn allow_trailing_comment_covers_its_line() {
+    let src = "use std::collections::HashMap; // lint:allow(D001): fixture reason\n";
+    let out = lint_source("src/simulator/x.rs", src);
+    assert!(out.is_clean(), "{:?}", out.violations);
+    assert_eq!(out.allowed.len(), 1);
+    assert_eq!(out.allowed[0].rule, "D001");
+    assert_eq!(out.allowed[0].reason, "fixture reason");
+    assert!(out.unused_allows.is_empty());
+}
+
+#[test]
+fn allow_standalone_comment_covers_next_code_line() {
+    let src = "// lint:allow(D002): fixture reason\nfn f() { let t = Instant::now(); }\n";
+    let out = lint_source("src/metrics/x.rs", src);
+    assert!(out.is_clean(), "{:?}", out.violations);
+    assert_eq!(out.allowed.len(), 1);
+}
+
+#[test]
+fn allow_comma_list_covers_multiple_rules() {
+    let src = "// lint:allow(D001,D004): fixture reason\n\
+               fn f(m: &HashMap<u32, f64>, x: f64) -> bool { x == 1.0 }\n";
+    let out = lint_source("src/simulator/x.rs", src);
+    assert!(out.is_clean(), "{:?}", out.violations);
+    assert_eq!(out.allowed.len(), 2);
+}
+
+#[test]
+fn allow_does_not_leak_to_other_rules_or_lines() {
+    // the escape names D001; the D004 hit on the same line still fires
+    let src = "// lint:allow(D001): fixture reason\n\
+               fn f(m: &HashMap<u32, f64>, x: f64) -> bool { x == 1.0 }\n";
+    let out = lint_source("src/simulator/x.rs", src);
+    assert_eq!(rules_of(&out), vec!["D004"]);
+    // ... and an escape two lines up covers nothing but the next code line
+    let far = "// lint:allow(D001): fixture reason\nfn g() {}\nuse std::collections::HashMap;\n";
+    let out = lint_source("src/simulator/x.rs", far);
+    assert_eq!(rules_of(&out), vec!["D001"]);
+    assert_eq!(out.unused_allows.len(), 1);
+}
+
+#[test]
+fn allow_without_reason_is_itself_a_violation() {
+    let src = "use std::collections::HashMap; // lint:allow(D001)\n";
+    let out = lint_source("src/simulator/x.rs", src);
+    assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+    assert!(out.violations[0].message.contains("reason"), "{}", out.violations[0].message);
+}
+
+#[test]
+fn unused_allow_is_reported_but_not_fatal() {
+    let src = "// lint:allow(D005): stale escape\nfn f() {}\n";
+    let out = lint_source("src/simulator/x.rs", src);
+    assert!(out.is_clean());
+    assert_eq!(out.unused_allows.len(), 1);
+    assert_eq!(out.unused_allows[0].rule, "D005");
+}
+
+#[test]
+fn doc_comments_never_carry_escapes() {
+    // documentation *about* the syntax must not register as an escape
+    let src = "/// Use `lint:allow(D001): reason` to escape.\nfn f() {}\n";
+    let out = lint_source("src/simulator/x.rs", src);
+    assert!(out.is_clean());
+    assert!(out.unused_allows.is_empty());
+}
+
+// ------------------------------------------------------------ reporting
+
+#[test]
+fn report_renders_violations_and_allow_table() {
+    let src = "use std::collections::HashMap;\n\
+               use std::collections::BTreeMap; // lint:allow(D004): fixture reason, unused\n";
+    let mut out = lint_source("src/simulator/x.rs", src);
+    let text = report::render(&out);
+    assert!(text.contains("D001"), "{text}");
+    assert!(text.contains("src/simulator/x.rs:1"), "{text}");
+    assert!(text.contains("unused lint:allow"), "{text}");
+    // json carries the same facts plus the verdict bit
+    let json = report::to_json(&out).to_string();
+    assert!(json.contains("\"clean\":false"), "{json}");
+    assert!(json.contains("\"rule\":\"D001\""), "{json}");
+    out.violations.clear();
+    assert!(report::to_json(&out).to_string().contains("\"clean\":true"));
+}
+
+#[test]
+fn json_report_is_deterministic() {
+    let src = "use std::collections::HashMap;\nfn f(x: f64) -> bool { x == 1.0 }\n";
+    let a = report::to_json(&lint_source("src/learner/x.rs", src)).to_pretty();
+    let b = report::to_json(&lint_source("src/learner/x.rs", src)).to_pretty();
+    assert_eq!(a, b);
+}
+
+// ------------------------------------------------------------ self-check
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    // cargo runs integration tests with cwd = the crate dir (`rust/`);
+    // `lint_tree` also accepts the workspace root, which is what the CI
+    // step and `make lint` pass.
+    let out = lint_tree(Path::new(".")).expect("tree walk");
+    assert!(out.files > 50, "expected the whole crate, saw {} files", out.files);
+    assert!(
+        out.is_clean(),
+        "repo tree must be lint-clean:\n{}",
+        report::render(&out)
+    );
+    // every escape in the tree carries its reason (the acceptance bar:
+    // no blanket, unexplained suppressions anywhere)
+    assert!(!out.allowed.is_empty(), "the audited sites should be visible");
+    for a in &out.allowed {
+        assert!(!a.reason.is_empty(), "allow without reason at {}:{}", a.path, a.line);
+    }
+    assert!(out.unused_allows.is_empty(), "stale escapes: {:?}", out.unused_allows);
+}

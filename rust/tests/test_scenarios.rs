@@ -18,7 +18,7 @@ use shabari::metrics::RunMetrics;
 use shabari::util::prop;
 use shabari::util::rng::Rng;
 use shabari::workload::scenario::{self, shapes::ZipfSkew, trace_file::TraceFile, Scenario};
-use shabari::workload::{azure, Workload};
+use shabari::workload::{azure, Workload, SALT_TRACE};
 
 /// The pre-scenario trace recipe, inlined: this is the code shape
 /// `Workload::trace_over` had before the `Scenario` trait existed (same
@@ -32,7 +32,7 @@ fn legacy_trace(
     duration_s: f64,
     seed: u64,
 ) -> Vec<(f64, usize, usize)> {
-    let mut rng = Rng::new(seed ^ 0x7A3C_E000);
+    let mut rng = Rng::new(seed ^ SALT_TRACE);
     let starts = azure::arrival_times(rps, duration_s, &mut rng);
     starts
         .into_iter()
