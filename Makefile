@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test lint bench bench-scale scenarios overload keepalive adversity trace clean
+.PHONY: artifacts build test lint lint-rules bench bench-scale scenarios overload keepalive adversity trace clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -13,11 +13,19 @@ build:
 test:
 	cargo test -q
 
-# Determinism linter (rules D001-D005, DESIGN.md §Static analysis):
-# hash-ordered collections, wall-clock reads, unsalted RNG forks, partial
-# float orders, fallible queue pops. Non-zero exit on any violation.
+# Two-pass determinism linter (DESIGN.md §Static analysis): token rules
+# D001-D005 (hash-ordered collections, wall-clock reads, unsalted RNG
+# forks, partial float orders, fallible queue pops) plus the crate-wide
+# rules D006-D010 (salt registry, metrics-aggregation coverage, trace
+# taxonomy, eviction funnel, RNG-stream hygiene). Non-zero exit on any
+# violation.
 lint:
 	cargo run --release -- lint
+
+# The rule catalog: id, pass (token vs crate), file scope, and contract
+# for every D-rule the gate enforces.
+lint-rules:
+	cargo run --release -- lint --list-rules
 
 # Cross-scenario robustness matrix (every Fig-8 system x every workload
 # scenario, incl. the checked-in sample trace) — EXPERIMENTS.md.

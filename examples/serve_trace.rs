@@ -46,14 +46,14 @@ fn main() -> anyhow::Result<()> {
     // Shabari (full system)
     let allocator = ResourceAllocator::new(acfg)?;
     let mut shabari = ShabariPolicy::new(allocator, Box::new(ShabariScheduler::new(42)));
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(D002): host wall time for the driver report; simulated time comes from the engine
     let res_s = simulate(SimConfig::default(), &mut shabari, trace.clone());
     let wall_s = t0.elapsed().as_secs_f64();
     let ms = from_result("shabari", &res_s);
 
     // static-large comparison
     let mut static_large = StaticPolicy::large(42);
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(D002): host wall time for the driver report; simulated time comes from the engine
     let res_l = simulate(SimConfig::default(), &mut static_large, trace);
     let wall_l = t0.elapsed().as_secs_f64();
     let ml = from_result("static-large", &res_l);

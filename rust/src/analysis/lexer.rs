@@ -1,9 +1,10 @@
 //! A minimal hand-rolled Rust lexer — just enough token structure for the
 //! determinism rules (DESIGN.md §Static analysis). No third-party parser
 //! exists in the offline build, and the rules only need identifiers,
-//! literals, a handful of compound operators (`==`, `!=`, `::`) and
-//! comment/test-region boundaries; full grammar fidelity is explicitly a
-//! non-goal.
+//! literals, a handful of compound operators (`==`, `!=`, `::`, `=>`,
+//! `->`) and comment/test-region boundaries; full grammar fidelity is
+//! explicitly a non-goal. The item-tree parser (`analysis::parse`) builds
+//! on exactly this token stream.
 //!
 //! What it does get right, because the rules depend on it:
 //!
@@ -234,10 +235,11 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
             i = j;
             continue;
         }
-        // punctuation: combine the operators the rules key on
+        // punctuation: combine the operators the rules and the item-tree
+        // parser key on (`=>` delimits match arms, `->` return types)
         if i + 1 < n {
             let two: String = b[i..i + 2].iter().collect();
-            if two == "==" || two == "!=" || two == "::" {
+            if two == "==" || two == "!=" || two == "::" || two == "=>" || two == "->" {
                 push(&mut toks, TokenKind::Punct, two, line);
                 last_tok_line = line;
                 i += 2;
@@ -484,13 +486,13 @@ mod tests {
 
     #[test]
     fn compound_operators_are_single_tokens() {
-        let (toks, _) = lex("a == b != c :: d");
+        let (toks, _) = lex("a == b != c :: d => e -> f");
         let puncts: Vec<&str> = toks
             .iter()
             .filter(|t| t.kind == TokenKind::Punct)
             .map(|t| t.text.as_str())
             .collect();
-        assert_eq!(puncts, vec!["==", "!=", "::"]);
+        assert_eq!(puncts, vec!["==", "!=", "::", "=>", "->"]);
     }
 
     #[test]

@@ -6,38 +6,56 @@
 //! invariance pins all assume event order and RNG draws are exactly
 //! reproducible. Those contracts were enforced only at runtime (byte-pin
 //! tests); this pass checks them at CI time, before a refactor can
-//! reintroduce hash-order or wall-clock nondeterminism:
+//! reintroduce hash-order or wall-clock nondeterminism.
 //!
-//! * **D001** no `HashMap`/`HashSet` in `simulator/`, `coordinator/`,
-//!   `learner/`, `metrics/` paths;
-//! * **D002** no wall-clock reads outside `util::bench`/benches;
-//! * **D003** RNG forks through `util::rng` with named `SALT_*` salts;
-//! * **D004** float ordering via `total_cmp`, never `partial_cmp`/`f64 ==`;
-//! * **D005** no `unwrap/expect` on event/admission-queue pops in
-//!   `simulator/`.
+//! The analyzer runs **two passes**. Pass one lexes every file, marks
+//! test regions, parses the item tree ([`parse`]) and builds a crate-wide
+//! symbol index ([`symbols`]). Pass two runs the per-file token rules
+//! (**D001–D005**: hash order, wall clock, unsalted RNG, float order,
+//! fallible pops) and the cross-file contract rules (**D006–D010**: the
+//! salt registry, metrics-aggregation coverage, trace-taxonomy coverage,
+//! the Evict funnel, RNG-stream hygiene) over the index. Cross-file
+//! violations cite both sites — the offending line *and* the conflicting
+//! definition.
 //!
 //! Escape hatch: `// lint:allow(DXXX): <reason>`. Trailing on a line it
 //! covers that line; standalone it covers the next code line. The reason
 //! is mandatory — an allow without one is itself a violation — and every
 //! used escape is reported in the summary table, so the audit trail stays
-//! visible. Unused allows are reported but do not fail the build.
+//! visible. Unused allows are reported but do not fail the build. Two
+//! structured cousins feed the coverage rules: `lint:covers(D008, ..)`
+//! and `lint:reducer(D007, ..)` (see [`symbols`]).
 //!
-//! Entry points: [`lint_source`] (one in-memory file — the fixture tests),
-//! [`lint_tree`] (walk `src`/`tests`/`benches` under a root). The `lint`
-//! CLI subcommand wraps [`lint_tree`] with `--json` and a non-zero exit
-//! on violations, which is what CI gates on.
+//! Entry points: [`lint_source`] (one in-memory file — the fixture
+//! tests), [`lint_sources`] (a set of in-memory files — the cross-file
+//! fixtures), [`lint_tree`] (walk `src`/`tests`/`benches`/`examples`
+//! under a root). The `lint` CLI subcommand wraps [`lint_tree`] with
+//! `--json`, `--only`, `--list-rules` and a non-zero exit on violations,
+//! which is what CI gates on.
 
 pub mod lexer;
+pub mod parse;
 pub mod report;
 pub mod rules;
+pub mod symbols;
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use lexer::{lex, mark_test_regions, Comment, Token};
-use rules::check_file;
+use symbols::{CrateIndex, DirectiveVerb, FileIndex};
+
+/// The second location of a cross-file diagnostic: where the conflicting
+/// definition / aggregation fn / sanctioned funnel lives.
+#[derive(Debug, Clone)]
+pub struct RelatedSite {
+    pub path: String,
+    pub line: u32,
+    pub note: String,
+}
 
 /// A confirmed violation (no matching `lint:allow`).
 #[derive(Debug, Clone)]
@@ -46,6 +64,7 @@ pub struct Violation {
     pub path: String,
     pub line: u32,
     pub message: String,
+    pub related: Option<RelatedSite>,
 }
 
 /// A `lint:allow` escape, with the line it covers and its reason.
@@ -73,13 +92,6 @@ pub struct LintOutcome {
 impl LintOutcome {
     pub fn is_clean(&self) -> bool {
         self.violations.is_empty()
-    }
-
-    fn merge(&mut self, other: LintOutcome) {
-        self.violations.extend(other.violations);
-        self.allowed.extend(other.allowed);
-        self.unused_allows.extend(other.unused_allows);
-        self.files += other.files;
     }
 }
 
@@ -140,56 +152,139 @@ fn parse_allows(toks: &[Token], comments: &[Comment]) -> Vec<Allow> {
 }
 
 /// Lint one file's source text. `path` drives rule scoping and should be
-/// repo-relative with `/` separators (`rust/src/simulator/engine.rs`).
+/// repo-relative with `/` separators (`src/simulator/engine.rs`).
 pub fn lint_source(path: &str, src: &str) -> LintOutcome {
-    let (mut toks, comments) = lex(src);
-    mark_test_regions(&mut toks);
-    let mut allows = parse_allows(&toks, &comments);
-    let raw = check_file(path, &toks);
+    lint_sources(&[(path, src)])
+}
 
-    let mut out = LintOutcome { files: 1, ..LintOutcome::default() };
+/// Lint a set of in-memory files as one crate (both passes).
+pub fn lint_sources(files: &[(&str, &str)]) -> LintOutcome {
+    lint_sources_only(files, None)
+}
+
+/// [`lint_sources`] restricted to a rule subset (`--only D006,D007`).
+/// Meta-hygiene (reasonless allows/directives, unknown directive rules)
+/// always applies: a rule filter must not hide a malformed escape.
+pub fn lint_sources_only(files: &[(&str, &str)], only: Option<&BTreeSet<String>>) -> LintOutcome {
+    let mut sorted: Vec<(&str, &str)> = files.to_vec();
+    sorted.sort_by_key(|&(p, _)| p);
+
+    // pass one: lex, mark test regions, parse allows + item tree, index
+    let mut allows_by_path: BTreeMap<String, Vec<Allow>> = BTreeMap::new();
+    let mut indexed = Vec::with_capacity(sorted.len());
+    for (path, src) in &sorted {
+        let (mut toks, comments) = lex(src);
+        mark_test_regions(&mut toks);
+        allows_by_path.insert(path.to_string(), parse_allows(&toks, &comments));
+        indexed.push(FileIndex::build(path, toks, &comments));
+    }
+    let idx = CrateIndex::build(indexed);
+
+    // pass two: token rules per file, then crate rules over the index
+    let mut raw = Vec::new();
+    for f in &idx.files {
+        rules::check_file(&f.path, &f.toks, &mut raw);
+    }
+    for rule in rules::crate_rules() {
+        rule.check(&idx, &mut raw);
+    }
+    if let Some(only) = only {
+        raw.retain(|v| only.contains(v.rule));
+    }
+    raw.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+
+    // match escapes, collect meta-hygiene violations
+    let mut out = LintOutcome { files: idx.files.len(), ..LintOutcome::default() };
     for v in raw {
-        let hit = allows
-            .iter_mut()
-            .find(|a| a.rule == v.rule && (a.covered == v.line || a.line == v.line));
+        let hit = allows_by_path.get_mut(&v.path).and_then(|allows| {
+            allows
+                .iter_mut()
+                .find(|a| a.rule == v.rule && (a.covered == v.line || a.line == v.line))
+        });
         match hit {
             Some(a) => {
                 a.used = true;
                 out.allowed.push(AllowedSite {
                     rule: v.rule.to_string(),
-                    path: path.to_string(),
+                    path: v.path.clone(),
                     line: v.line,
                     reason: a.reason.clone(),
                 });
             }
             None => out.violations.push(Violation {
                 rule: v.rule.to_string(),
-                path: path.to_string(),
+                path: v.path,
                 line: v.line,
                 message: v.message,
+                related: v.related,
             }),
         }
     }
-    for a in &allows {
-        if a.reason.is_empty() {
-            out.violations.push(Violation {
-                rule: a.rule.clone(),
-                path: path.to_string(),
-                line: a.line,
-                message: "lint:allow without a reason: every escape must say why \
-                          the site is safe"
-                    .to_string(),
+    for (path, allows) in &allows_by_path {
+        for a in allows {
+            if a.reason.is_empty() {
+                out.violations.push(Violation {
+                    rule: a.rule.clone(),
+                    path: path.clone(),
+                    line: a.line,
+                    message: "lint:allow without a reason: every escape must say why \
+                              the site is safe"
+                        .to_string(),
+                    related: None,
+                });
+            } else if !a.used {
+                out.unused_allows.push(AllowedSite {
+                    rule: a.rule.clone(),
+                    path: path.clone(),
+                    line: a.line,
+                    reason: a.reason.clone(),
+                });
+            }
+        }
+    }
+    for f in &idx.files {
+        directive_hygiene(f, &mut out.violations);
+    }
+    out.violations
+        .sort_by(|a, b| (&a.path, a.line, &a.rule).cmp(&(&b.path, b.line, &b.rule)));
+    out
+}
+
+/// Structured-directive hygiene, always on: a `lint:covers`/`lint:reducer`
+/// with no reason or bound to the wrong rule is itself a violation (a
+/// silently ignored annotation would be worse than none).
+fn directive_hygiene(f: &FileIndex, out: &mut Vec<Violation>) {
+    for d in &f.directives {
+        let (verb, expected) = match d.verb {
+            DirectiveVerb::Covers => ("lint:covers", "D008"),
+            DirectiveVerb::Reducer => ("lint:reducer", "D007"),
+        };
+        if d.rule != expected {
+            out.push(Violation {
+                rule: expected.to_string(),
+                path: f.path.clone(),
+                line: d.line,
+                message: format!(
+                    "{verb} only annotates {expected} (got {}); the directive is ignored \
+                     as written",
+                    if d.rule.is_empty() { "nothing" } else { &d.rule }
+                ),
+                related: None,
             });
-        } else if !a.used {
-            out.unused_allows.push(AllowedSite {
-                rule: a.rule.clone(),
-                path: path.to_string(),
-                line: a.line,
-                reason: a.reason.clone(),
+        }
+        if d.reason.is_empty() {
+            out.push(Violation {
+                rule: expected.to_string(),
+                path: f.path.clone(),
+                line: d.line,
+                message: format!(
+                    "{verb} without a reason: every annotation must say why the \
+                     divergence is deliberate"
+                ),
+                related: None,
             });
         }
     }
-    out
 }
 
 /// The scanned subtrees, relative to the crate dir (`rust/`).
@@ -198,7 +293,7 @@ const SCAN_DIRS: &[&str] = &["src", "tests", "benches"];
 /// Resolve the crate dir under `root`: accepts both the repo root (which
 /// holds `rust/src`) and the crate dir itself (`cargo test` runs with cwd
 /// = `rust/`).
-fn crate_dir(root: &Path) -> Result<std::path::PathBuf> {
+fn crate_dir(root: &Path) -> Result<PathBuf> {
     let nested = root.join("rust");
     if nested.join("src").is_dir() {
         return Ok(nested);
@@ -213,7 +308,7 @@ fn crate_dir(root: &Path) -> Result<std::path::PathBuf> {
 }
 
 /// Recursively collect `.rs` files, sorted for a deterministic report.
-fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
     let mut entries: Vec<_> = fs::read_dir(dir)
         .with_context(|| format!("reading {}", dir.display()))?
         .collect::<std::io::Result<_>>()?;
@@ -229,28 +324,57 @@ fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
     Ok(())
 }
 
-/// Lint the whole tree under `root` (repo root or crate dir): every `.rs`
-/// file in `src`, `tests`, and `benches`.
-pub fn lint_tree(root: &Path) -> Result<LintOutcome> {
+/// Every `.rs` file the tree walk lints, as (repo-relative label, path)
+/// pairs sorted by label: `src`, `tests`, `benches` under the crate dir,
+/// plus the workspace `examples/` tree (which sits next to the crate dir
+/// when the linter runs from the repo root, or one level up when `cargo
+/// test` runs with cwd = `rust/`).
+pub fn tree_files(root: &Path) -> Result<Vec<(String, PathBuf)>> {
     let crate_root = crate_dir(root)?;
-    let mut files = Vec::new();
+    let mut out = Vec::new();
+    let mut add = |label: &str, dir: &Path, out: &mut Vec<(String, PathBuf)>| -> Result<()> {
+        let mut files = Vec::new();
+        collect_rs(dir, &mut files)?;
+        for p in files {
+            let rel = p
+                .strip_prefix(dir)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((format!("{label}/{rel}"), p));
+        }
+        Ok(())
+    };
     for sub in SCAN_DIRS {
         let dir = crate_root.join(sub);
         if dir.is_dir() {
-            collect_rs(&dir, &mut files)?;
+            add(sub, &dir, &mut out)?;
         }
     }
-    files.sort();
-    let mut out = LintOutcome::default();
-    for f in &files {
-        let src = fs::read_to_string(f).with_context(|| format!("reading {}", f.display()))?;
-        // rule scoping keys on the path relative to the crate dir
-        let rel = f
-            .strip_prefix(&crate_root)
-            .unwrap_or(f)
-            .to_string_lossy()
-            .replace('\\', "/");
-        out.merge(lint_source(&rel, &src));
+    for cand in [crate_root.join("examples"), crate_root.join("..").join("examples")] {
+        if cand.is_dir() {
+            add("examples", &cand, &mut out)?;
+            break;
+        }
     }
+    out.sort();
     Ok(out)
+}
+
+/// Lint the whole tree under `root` (repo root or crate dir) as one
+/// crate: both passes over every file [`tree_files`] returns.
+pub fn lint_tree(root: &Path) -> Result<LintOutcome> {
+    lint_tree_only(root, None)
+}
+
+/// [`lint_tree`] restricted to a rule subset (`--only`).
+pub fn lint_tree_only(root: &Path, only: Option<&BTreeSet<String>>) -> Result<LintOutcome> {
+    let files = tree_files(root)?;
+    let mut srcs = Vec::with_capacity(files.len());
+    for (rel, p) in &files {
+        let src = fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        srcs.push((rel.clone(), src));
+    }
+    let refs: Vec<(&str, &str)> = srcs.iter().map(|(p, s)| (p.as_str(), s.as_str())).collect();
+    Ok(lint_sources_only(&refs, only))
 }

@@ -1,0 +1,843 @@
+//! An item-tree parser over the [`lexer`](super::lexer) token stream —
+//! pass one of the two-pass analyzer (DESIGN.md §Static analysis v2).
+//!
+//! It recovers exactly the structure the cross-file rules (D006–D010)
+//! query: modules, structs with fields, enums with variants, `const`/
+//! `static` definitions with literal values, fn/impl signatures, and
+//! brace-matched body token ranges. Everything else (`use`, `type`,
+//! macros, trait declarations) is skipped with balanced-delimiter
+//! recovery, so unknown syntax degrades to "no items", never to a
+//! desynchronized tree.
+//!
+//! Items guarded by `#[cfg(test)]` / `#[test]` are dropped at parse time:
+//! the crate-wide symbol index describes shipped code only, mirroring the
+//! token rules' test-region exemption.
+
+use super::lexer::{Token, TokenKind};
+
+/// Item classes the cross-file rules discriminate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ItemKind {
+    Mod,
+    Struct,
+    Enum,
+    Const,
+    Static,
+    Fn,
+    Impl,
+}
+
+/// One named field of a struct.
+#[derive(Debug, Clone)]
+pub struct Field {
+    pub name: String,
+    /// Type text with tokens joined (`Vec<Episode>`, `Option<f64>`).
+    pub ty: String,
+    pub line: u32,
+}
+
+/// One enum variant (payload shape is not retained — the rules only need
+/// the name and the definition site).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub line: u32,
+}
+
+/// One parsed item. `span` is the token index range `[start, end)` of the
+/// whole item; `body` is the range strictly inside its braces, if any.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub kind: ItemKind,
+    /// Item name; for impls, the self-type name (`Engine` for
+    /// `impl<'p, P: Policy> Engine<'p, P>`).
+    pub name: String,
+    pub line: u32,
+    pub span: (usize, usize),
+    pub body: Option<(usize, usize)>,
+    /// Nested items: mod contents, impl methods/consts.
+    pub children: Vec<Item>,
+    /// Struct fields (named structs only; tuple/unit structs have none).
+    pub fields: Vec<Field>,
+    /// Enum variants.
+    pub variants: Vec<Variant>,
+    /// `const`/`static` initializer, when it is a single integer literal
+    /// (the D006 salt-registry value check).
+    pub const_value: Option<u128>,
+    /// Header text: `fn name ( .. ) -> ..` / `impl Trait for Type`.
+    pub signature: String,
+}
+
+impl Item {
+    fn new(kind: ItemKind, name: String, line: u32) -> Self {
+        Item {
+            kind,
+            name,
+            line,
+            span: (0, 0),
+            body: None,
+            children: Vec::new(),
+            fields: Vec::new(),
+            variants: Vec::new(),
+            const_value: None,
+            signature: String::new(),
+        }
+    }
+}
+
+/// Parse the item tree of one file. Test-guarded items are dropped; the
+/// token stream must already be [`mark_test_regions`](super::lexer)-ed by
+/// the caller only for consistency — the parser re-detects the guarding
+/// attributes itself so it also works on a raw stream.
+pub fn parse_items(toks: &[Token]) -> Vec<Item> {
+    let mut p = Parser { t: toks, i: 0 };
+    p.items(toks.len())
+}
+
+/// Parse a `u64`-ish integer literal (`0x5C4E_D011`, `1_000u64`, `0b101`).
+pub fn int_literal_value(text: &str) -> Option<u128> {
+    let t = text.replace('_', "");
+    let (radix, digits) = match t.get(..2) {
+        Some("0x") => (16, &t[2..]),
+        Some("0o") => (8, &t[2..]),
+        Some("0b") => (2, &t[2..]),
+        _ => (10, t.as_str()),
+    };
+    // strip a trailing type suffix; careful with hex, where the suffix and
+    // the digits share the alphabet (`0xFFu64`): take the longest valid
+    // digit prefix, then require the rest to be a known suffix.
+    let valid = |c: char| c.is_digit(radix);
+    let split = digits.find(|c| !valid(c)).unwrap_or(digits.len());
+    let (num, suffix) = digits.split_at(split);
+    const SUFFIXES: &[&str] =
+        &["", "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"];
+    if num.is_empty() || !SUFFIXES.contains(&suffix) {
+        return None;
+    }
+    u128::from_str_radix(num, radix).ok()
+}
+
+/// One arm of a `match` expression.
+#[derive(Debug, Clone)]
+pub struct MatchArm {
+    /// Token index range `[start, end)` of the pattern (before `=>`).
+    pub head: (usize, usize),
+    pub line: u32,
+    /// The pattern is a bare `_` (optionally guarded).
+    pub is_wildcard: bool,
+}
+
+/// Token indices of every `match` keyword inside `range` (outer-to-inner
+/// source order). Pair with [`match_arms_at`].
+pub fn find_matches(toks: &[Token], range: (usize, usize)) -> Vec<usize> {
+    (range.0..range.1.min(toks.len()))
+        .filter(|&i| toks[i].kind == TokenKind::Ident && toks[i].text == "match")
+        .collect()
+}
+
+/// Extract the arms of the `match` whose keyword sits at `match_idx`. The
+/// scrutinee runs to the first `{` at balanced depth (struct literals
+/// need parens in scrutinee position, so that brace is the match body).
+pub fn match_arms_at(toks: &[Token], match_idx: usize) -> Vec<MatchArm> {
+    let n = toks.len();
+    // find the body-opening brace
+    let mut i = match_idx + 1;
+    let (mut par, mut brk) = (0i32, 0i32);
+    while i < n {
+        match toks[i].text.as_str() {
+            "(" => par += 1,
+            ")" => par -= 1,
+            "[" => brk += 1,
+            "]" => brk -= 1,
+            "{" if par == 0 && brk == 0 => break,
+            _ => {}
+        }
+        i += 1;
+    }
+    if i >= n {
+        return Vec::new();
+    }
+    let mut arms = Vec::new();
+    let mut j = i + 1;
+    while j < n && toks[j].text != "}" {
+        let head_start = j;
+        let line = toks[j].line;
+        // pattern runs to `=>` at balanced depth
+        let (mut p, mut bk, mut br) = (0i32, 0i32, 0i32);
+        while j < n {
+            match toks[j].text.as_str() {
+                "(" => p += 1,
+                ")" => p -= 1,
+                "[" => bk += 1,
+                "]" => bk -= 1,
+                "{" => br += 1,
+                "}" => {
+                    if br == 0 {
+                        // ran into the match-closing brace: malformed arm
+                        return arms;
+                    }
+                    br -= 1;
+                }
+                "=>" if p == 0 && bk == 0 && br == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= n {
+            return arms;
+        }
+        let head = (head_start, j);
+        let is_wildcard = toks[head_start].text == "_"
+            && (j == head_start + 1 || toks[head_start + 1].text == "if");
+        arms.push(MatchArm { head, line, is_wildcard });
+        j += 1; // past `=>`
+        // arm body: a braced block, or an expression up to `,` / `}`
+        if j < n && toks[j].text == "{" {
+            j = skip_balanced(toks, j, "{", "}");
+        } else {
+            let (mut p, mut bk, mut br) = (0i32, 0i32, 0i32);
+            while j < n {
+                match toks[j].text.as_str() {
+                    "(" => p += 1,
+                    ")" => p -= 1,
+                    "[" => bk += 1,
+                    "]" => bk -= 1,
+                    "{" => br += 1,
+                    "}" => {
+                        if br == 0 {
+                            break; // match-closing brace ends the last arm
+                        }
+                        br -= 1;
+                    }
+                    "," if p == 0 && bk == 0 && br == 0 => {
+                        j += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            continue;
+        }
+        if j < n && toks[j].text == "," {
+            j += 1;
+        }
+    }
+    arms
+}
+
+/// Skip past a balanced `open ... close` group starting at `i` (which must
+/// hold `open`); returns the index just past the matching close.
+fn skip_balanced(toks: &[Token], i: usize, open: &str, close: &str) -> usize {
+    let n = toks.len();
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < n {
+        if toks[j].text == open {
+            depth += 1;
+        } else if toks[j].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    n
+}
+
+struct Parser<'a> {
+    t: &'a [Token],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn text(&self, i: usize) -> &str {
+        self.t.get(i).map(|t| t.text.as_str()).unwrap_or("")
+    }
+
+    fn line(&self, i: usize) -> u32 {
+        self.t.get(i).map(|t| t.line).unwrap_or(0)
+    }
+
+    /// Parse items until `end` (exclusive token index).
+    fn items(&mut self, end: usize) -> Vec<Item> {
+        let mut items = Vec::new();
+        let mut drop_next = false; // `#[cfg(test)]` / `#[test]` latch
+        while self.i < end {
+            // inner attributes (`#![..]`) decorate the enclosing scope
+            if self.text(self.i) == "#" && self.text(self.i + 1) == "!" && self.text(self.i + 2) == "[" {
+                self.i = skip_balanced(self.t, self.i + 2, "[", "]").min(end);
+                continue;
+            }
+            // attributes: scan for test guards, then skip
+            if self.text(self.i) == "#" && self.text(self.i + 1) == "[" {
+                let after = skip_balanced(self.t, self.i + 1, "[", "]").min(end);
+                if attr_is_test(&self.t[self.i + 2..after.saturating_sub(1)]) {
+                    drop_next = true;
+                }
+                self.i = after;
+                continue;
+            }
+            // visibility: `pub`, `pub(crate)`, `pub(in ..)`
+            if self.text(self.i) == "pub" {
+                self.i += 1;
+                if self.text(self.i) == "(" {
+                    self.i = skip_balanced(self.t, self.i, "(", ")").min(end);
+                }
+                continue;
+            }
+            let parsed = match self.text(self.i) {
+                "mod" => self.item_mod(end),
+                "struct" => self.item_struct(end),
+                "enum" => self.item_enum(end),
+                "const" | "static" => self.item_const(end),
+                "fn" => self.item_fn(end),
+                "impl" => self.item_impl(end),
+                "unsafe" | "async" | "extern" => {
+                    // qualifier: fold into whatever item follows
+                    self.i += 1;
+                    continue;
+                }
+                _ => {
+                    self.skip_item(end);
+                    None
+                }
+            };
+            if let Some(item) = parsed {
+                if drop_next {
+                    drop_next = false;
+                } else {
+                    items.push(item);
+                }
+            } else {
+                drop_next = false;
+            }
+        }
+        items
+    }
+
+    /// `mod name { items }` or `mod name;`
+    fn item_mod(&mut self, end: usize) -> Option<Item> {
+        let start = self.i;
+        let line = self.line(self.i);
+        self.i += 1;
+        let name = self.ident()?;
+        let mut item = Item::new(ItemKind::Mod, name, line);
+        if self.text(self.i) == "{" {
+            let close = skip_balanced(self.t, self.i, "{", "}").min(end);
+            item.body = Some((self.i + 1, close.saturating_sub(1)));
+            self.i += 1;
+            item.children = self.items(close.saturating_sub(1));
+            self.i = close;
+        } else if self.text(self.i) == ";" {
+            self.i += 1;
+        }
+        item.span = (start, self.i);
+        Some(item)
+    }
+
+    /// `struct Name<..> { fields }` / tuple / unit structs.
+    fn item_struct(&mut self, end: usize) -> Option<Item> {
+        let start = self.i;
+        let line = self.line(self.i);
+        self.i += 1;
+        let name = self.ident()?;
+        let mut item = Item::new(ItemKind::Struct, name, line);
+        self.skip_generics();
+        self.skip_where("{;(");
+        match self.text(self.i) {
+            "{" => {
+                let close = skip_balanced(self.t, self.i, "{", "}").min(end);
+                item.body = Some((self.i + 1, close.saturating_sub(1)));
+                item.fields = self.fields(self.i + 1, close.saturating_sub(1));
+                self.i = close;
+            }
+            "(" => {
+                self.i = skip_balanced(self.t, self.i, "(", ")").min(end);
+                self.skip_where(";");
+                if self.text(self.i) == ";" {
+                    self.i += 1;
+                }
+            }
+            ";" => self.i += 1,
+            _ => {}
+        }
+        item.span = (start, self.i);
+        Some(item)
+    }
+
+    /// Named fields between `open..close` token indices.
+    fn fields(&mut self, open: usize, close: usize) -> Vec<Field> {
+        let mut out = Vec::new();
+        let mut j = open;
+        while j < close {
+            // skip attributes and visibility on the field
+            if self.text(j) == "#" && self.text(j + 1) == "[" {
+                j = skip_balanced(self.t, j + 1, "[", "]").min(close);
+                continue;
+            }
+            if self.text(j) == "pub" {
+                j += 1;
+                if self.text(j) == "(" {
+                    j = skip_balanced(self.t, j, "(", ")").min(close);
+                }
+                continue;
+            }
+            let Some(t) = self.t.get(j) else { break };
+            if t.kind != TokenKind::Ident {
+                j += 1;
+                continue;
+            }
+            let name = t.text.clone();
+            let line = t.line;
+            if self.text(j + 1) != ":" {
+                j += 1;
+                continue;
+            }
+            // type runs to `,` at balanced depth (or the closing brace)
+            let mut k = j + 2;
+            let (mut p, mut bk, mut ang) = (0i32, 0i32, 0i32);
+            let mut ty = String::new();
+            while k < close {
+                match self.text(k) {
+                    "(" => p += 1,
+                    ")" => p -= 1,
+                    "[" => bk += 1,
+                    "]" => bk -= 1,
+                    "<" => ang += 1,
+                    ">" => ang -= 1,
+                    "," if p == 0 && bk == 0 && ang == 0 => break,
+                    _ => {}
+                }
+                ty.push_str(self.text(k));
+                k += 1;
+            }
+            out.push(Field { name, ty, line });
+            j = k + 1;
+        }
+        out
+    }
+
+    /// `enum Name<..> { Variant, Variant(..), Variant { .. }, .. }`
+    fn item_enum(&mut self, end: usize) -> Option<Item> {
+        let start = self.i;
+        let line = self.line(self.i);
+        self.i += 1;
+        let name = self.ident()?;
+        let mut item = Item::new(ItemKind::Enum, name, line);
+        self.skip_generics();
+        self.skip_where("{");
+        if self.text(self.i) == "{" {
+            let close = skip_balanced(self.t, self.i, "{", "}").min(end);
+            item.body = Some((self.i + 1, close.saturating_sub(1)));
+            let mut j = self.i + 1;
+            let inner_end = close.saturating_sub(1);
+            while j < inner_end {
+                if self.text(j) == "#" && self.text(j + 1) == "[" {
+                    j = skip_balanced(self.t, j + 1, "[", "]").min(inner_end);
+                    continue;
+                }
+                let Some(t) = self.t.get(j) else { break };
+                if t.kind == TokenKind::Ident {
+                    item.variants.push(Variant { name: t.text.clone(), line: t.line });
+                    j += 1;
+                    // payload / discriminant, then the separating comma
+                    match self.text(j) {
+                        "{" => j = skip_balanced(self.t, j, "{", "}").min(inner_end),
+                        "(" => j = skip_balanced(self.t, j, "(", ")").min(inner_end),
+                        _ => {}
+                    }
+                    while j < inner_end && self.text(j) != "," {
+                        j += 1;
+                    }
+                }
+                j += 1;
+            }
+            self.i = close;
+        }
+        item.span = (start, self.i);
+        Some(item)
+    }
+
+    /// `const NAME: Ty = expr;` / `static NAME: Ty = expr;`
+    fn item_const(&mut self, end: usize) -> Option<Item> {
+        let start = self.i;
+        let line = self.line(self.i);
+        let kind = if self.text(self.i) == "static" { ItemKind::Static } else { ItemKind::Const };
+        self.i += 1;
+        if self.text(self.i) == "mut" {
+            self.i += 1;
+        }
+        let name = self.ident()?;
+        let mut item = Item::new(kind, name, line);
+        // skip the type annotation up to `=` (or `;` for extern decls)
+        while self.i < end && self.text(self.i) != "=" && self.text(self.i) != ";" {
+            match self.text(self.i) {
+                "(" => self.i = skip_balanced(self.t, self.i, "(", ")").min(end),
+                "[" => self.i = skip_balanced(self.t, self.i, "[", "]").min(end),
+                "{" => self.i = skip_balanced(self.t, self.i, "{", "}").min(end),
+                _ => self.i += 1,
+            }
+        }
+        if self.text(self.i) == "=" {
+            self.i += 1;
+            let expr_start = self.i;
+            let (mut p, mut bk, mut br) = (0i32, 0i32, 0i32);
+            while self.i < end {
+                match self.text(self.i) {
+                    "(" => p += 1,
+                    ")" => p -= 1,
+                    "[" => bk += 1,
+                    "]" => bk -= 1,
+                    "{" => br += 1,
+                    "}" => br -= 1,
+                    ";" if p == 0 && bk == 0 && br == 0 => break,
+                    _ => {}
+                }
+                self.i += 1;
+            }
+            if self.i == expr_start + 1 && self.t[expr_start].kind == TokenKind::Int {
+                item.const_value = int_literal_value(&self.t[expr_start].text);
+            }
+        }
+        if self.text(self.i) == ";" {
+            self.i += 1;
+        }
+        item.span = (start, self.i);
+        Some(item)
+    }
+
+    /// `fn name(..) -> .. { body }` (or `;` for trait-style decls).
+    fn item_fn(&mut self, end: usize) -> Option<Item> {
+        let start = self.i;
+        let line = self.line(self.i);
+        self.i += 1;
+        let name = self.ident()?;
+        let mut item = Item::new(ItemKind::Fn, name, line);
+        // signature runs to the body `{` or a `;` at balanced depth; `<`
+        // is tracked so `where P: Fn(usize) -> bool {` cannot fool it
+        let sig_start = start;
+        let (mut p, mut bk) = (0i32, 0i32);
+        while self.i < end {
+            match self.text(self.i) {
+                "(" => p += 1,
+                ")" => p -= 1,
+                "[" => bk += 1,
+                "]" => bk -= 1,
+                "{" if p == 0 && bk == 0 => break,
+                ";" if p == 0 && bk == 0 => break,
+                _ => {}
+            }
+            self.i += 1;
+        }
+        item.signature = self.t[sig_start..self.i.min(end)]
+            .iter()
+            .map(|t| t.text.as_str())
+            .collect::<Vec<_>>()
+            .join(" ");
+        if self.text(self.i) == "{" {
+            let close = skip_balanced(self.t, self.i, "{", "}").min(end);
+            item.body = Some((self.i + 1, close.saturating_sub(1)));
+            self.i = close;
+        } else if self.text(self.i) == ";" {
+            self.i += 1;
+        }
+        item.span = (start, self.i);
+        Some(item)
+    }
+
+    /// `impl<..> Type { .. }` / `impl<..> Trait for Type { .. }`
+    fn item_impl(&mut self, end: usize) -> Option<Item> {
+        let start = self.i;
+        let line = self.line(self.i);
+        self.i += 1;
+        self.skip_generics();
+        // header runs to the body `{` at balanced depth
+        let head_start = self.i;
+        let (mut p, mut bk, mut ang) = (0i32, 0i32, 0i32);
+        while self.i < end {
+            match self.text(self.i) {
+                "(" => p += 1,
+                ")" => p -= 1,
+                "[" => bk += 1,
+                "]" => bk -= 1,
+                "<" => ang += 1,
+                ">" => ang -= 1,
+                "{" if p == 0 && bk == 0 && ang <= 0 => break,
+                _ => {}
+            }
+            self.i += 1;
+        }
+        let head = &self.t[head_start..self.i.min(end)];
+        let name = impl_type_name(head);
+        let mut item = Item::new(ItemKind::Impl, name, line);
+        item.signature = std::iter::once("impl")
+            .chain(head.iter().map(|t| t.text.as_str()))
+            .collect::<Vec<_>>()
+            .join(" ");
+        if self.text(self.i) == "{" {
+            let close = skip_balanced(self.t, self.i, "{", "}").min(end);
+            item.body = Some((self.i + 1, close.saturating_sub(1)));
+            self.i += 1;
+            item.children = self.items(close.saturating_sub(1));
+            self.i = close;
+        }
+        item.span = (start, self.i);
+        Some(item)
+    }
+
+    fn ident(&mut self) -> Option<String> {
+        let t = self.t.get(self.i)?;
+        if t.kind != TokenKind::Ident {
+            return None;
+        }
+        self.i += 1;
+        Some(t.text.clone())
+    }
+
+    /// Skip `<..>` generics by angle depth (the lexer emits single `<` and
+    /// `>`, so nested generics never fuse into `>>`).
+    fn skip_generics(&mut self) {
+        if self.text(self.i) != "<" {
+            return;
+        }
+        let mut depth = 0i32;
+        while self.i < self.t.len() {
+            match self.text(self.i) {
+                "<" => depth += 1,
+                ">" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        self.i += 1;
+                        return;
+                    }
+                }
+                _ => {}
+            }
+            self.i += 1;
+        }
+    }
+
+    /// Skip a `where` clause up to any of the `stop` characters.
+    fn skip_where(&mut self, stop: &str) {
+        if self.text(self.i) != "where" {
+            return;
+        }
+        let (mut p, mut bk, mut ang) = (0i32, 0i32, 0i32);
+        while self.i < self.t.len() {
+            let t = self.text(self.i);
+            match t {
+                "(" => p += 1,
+                ")" => p -= 1,
+                "[" => bk += 1,
+                "]" => bk -= 1,
+                "<" => ang += 1,
+                ">" => ang -= 1,
+                _ => {}
+            }
+            if p == 0 && bk == 0 && ang <= 0 && t.len() == 1 && stop.contains(t) {
+                return;
+            }
+            self.i += 1;
+        }
+    }
+
+    /// Generic recovery: consume one unrecognized item — through a `;` at
+    /// balanced depth, or a balanced `{..}` block, whichever comes first.
+    fn skip_item(&mut self, end: usize) {
+        let (mut p, mut bk) = (0i32, 0i32);
+        while self.i < end {
+            match self.text(self.i) {
+                "(" => p += 1,
+                ")" => p -= 1,
+                "[" => bk += 1,
+                "]" => bk -= 1,
+                "{" if p == 0 && bk == 0 => {
+                    self.i = skip_balanced(self.t, self.i, "{", "}").min(end);
+                    return;
+                }
+                ";" if p == 0 && bk == 0 => {
+                    self.i += 1;
+                    return;
+                }
+                _ => {}
+            }
+            self.i += 1;
+        }
+    }
+}
+
+/// Is this attribute body (`cfg ( test )`, `test`, `tokio :: test`) a
+/// test guard? Mirrors `mark_test_regions`' detection.
+fn attr_is_test(body: &[Token]) -> bool {
+    let mut first_ident: Option<&str> = None;
+    let mut has_test = false;
+    for t in body {
+        if t.kind == TokenKind::Ident {
+            if first_ident.is_none() {
+                first_ident = Some(&t.text);
+            } else if t.text == "test" {
+                has_test = true;
+            }
+        }
+    }
+    matches!(first_ident, Some("test")) || (matches!(first_ident, Some("cfg")) && has_test)
+}
+
+/// The self-type name of an impl header (tokens between `impl<..>` and the
+/// body brace): the last identifier at angle depth 0 of the type path
+/// after `for` (or of the whole head when there is no trait).
+fn impl_type_name(head: &[Token]) -> String {
+    let mut ang = 0i32;
+    let type_part: &[Token] = head
+        .iter()
+        .position(|t| {
+            let at_depth0 = ang == 0;
+            match t.text.as_str() {
+                "<" => ang += 1,
+                ">" => ang -= 1,
+                _ => {}
+            }
+            at_depth0 && t.text == "for"
+        })
+        .map(|p| &head[p + 1..])
+        .unwrap_or(head);
+    let mut ang = 0i32;
+    let mut name = String::new();
+    for t in type_part {
+        match t.text.as_str() {
+            "<" => ang += 1,
+            ">" => ang -= 1,
+            "where" if ang == 0 => break,
+            _ => {
+                if ang == 0 && t.kind == TokenKind::Ident {
+                    name = t.text.clone();
+                }
+            }
+        }
+    }
+    name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn parse(src: &str) -> Vec<Item> {
+        let (toks, _) = lex(src);
+        parse_items(&toks)
+    }
+
+    #[test]
+    fn nested_mods_build_a_tree() {
+        let items = parse("mod outer { mod inner { fn leaf() {} } fn mid() {} } fn top() {}");
+        assert_eq!(items.len(), 2);
+        let outer = &items[0];
+        assert_eq!((outer.kind, outer.name.as_str()), (ItemKind::Mod, "outer"));
+        let inner = &outer.children[0];
+        assert_eq!((inner.kind, inner.name.as_str()), (ItemKind::Mod, "inner"));
+        assert_eq!(inner.children[0].name, "leaf");
+        assert_eq!(outer.children[1].name, "mid");
+        assert_eq!(items[1].name, "top");
+    }
+
+    #[test]
+    fn generic_struct_fields_and_types() {
+        let items = parse(
+            "pub struct Window<T: Clone> where T: Default {\n\
+             \x20   pub items: Vec<(T, f64)>,\n\
+             \x20   cap: usize,\n\
+             }",
+        );
+        assert_eq!(items.len(), 1);
+        let s = &items[0];
+        assert_eq!((s.kind, s.name.as_str()), (ItemKind::Struct, "Window"));
+        let fields: Vec<(&str, &str)> =
+            s.fields.iter().map(|f| (f.name.as_str(), f.ty.as_str())).collect();
+        assert_eq!(fields, vec![("items", "Vec<(T,f64)>"), ("cap", "usize")]);
+    }
+
+    #[test]
+    fn tuple_and_unit_structs_parse() {
+        let items = parse("struct Wrap(pub f64);\nstruct Marker;\nfn after() {}");
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0].name, "Wrap");
+        assert!(items[0].fields.is_empty());
+        assert_eq!(items[1].name, "Marker");
+        assert_eq!(items[2].name, "after");
+    }
+
+    #[test]
+    fn enum_variants_with_payloads() {
+        let items = parse(
+            "enum Kind { Plain, Tuple(u64, f64), Struct { a: usize, b: Vec<u8> }, Last = 3 }",
+        );
+        let e = &items[0];
+        assert_eq!(e.kind, ItemKind::Enum);
+        let names: Vec<&str> = e.variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, vec!["Plain", "Tuple", "Struct", "Last"]);
+    }
+
+    #[test]
+    fn const_literal_values_parse() {
+        let items = parse(
+            "const SALT_A: u64 = 0x5C4E_D011;\nconst B: u64 = 1_000u64;\nconst C: u64 = 1 + 2;",
+        );
+        assert_eq!(items[0].const_value, Some(0x5C4E_D011));
+        assert_eq!(items[1].const_value, Some(1000));
+        assert_eq!(items[2].const_value, None); // expressions are opaque
+    }
+
+    #[test]
+    fn cfg_test_items_are_dropped() {
+        let items = parse(
+            "fn live() {}\n#[cfg(test)]\nmod tests { fn helper() {} }\n#[test]\nfn t() {}\nfn after() {}",
+        );
+        let names: Vec<&str> = items.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["live", "after"]);
+    }
+
+    #[test]
+    fn impl_methods_and_type_names() {
+        let items = parse(
+            "impl<'p, P: Policy> Engine<'p, P> { fn step(&mut self) {} }\n\
+             impl std::fmt::Debug for Span { fn fmt(&self) {} }",
+        );
+        assert_eq!(items[0].name, "Engine");
+        assert_eq!(items[0].children[0].name, "step");
+        assert_eq!(items[1].name, "Span");
+        assert!(items[1].signature.contains("Debug for Span"));
+    }
+
+    #[test]
+    fn match_arm_extraction() {
+        let src = "fn f(k: Kind) -> u32 { match k { Kind::A { x, .. } => x, Kind::B(v) => { v + 1 } _ if x > 0 => 2, _ => 0, } }";
+        let (toks, _) = lex(src);
+        let items = parse_items(&toks);
+        let body = items[0].body.unwrap();
+        let matches = find_matches(&toks, body);
+        assert_eq!(matches.len(), 1);
+        let arms = match_arms_at(&toks, matches[0]);
+        assert_eq!(arms.len(), 4);
+        let head_text = |a: &MatchArm| {
+            toks[a.head.0..a.head.1].iter().map(|t| t.text.clone()).collect::<Vec<_>>().join("")
+        };
+        assert_eq!(head_text(&arms[0]), "Kind::A{x,..}");
+        assert_eq!(head_text(&arms[1]), "Kind::B(v)");
+        assert!(arms[2].is_wildcard); // guarded `_ if ..`
+        assert!(arms[3].is_wildcard);
+        assert!(!arms[0].is_wildcard);
+    }
+
+    #[test]
+    fn fn_bodies_are_brace_matched() {
+        let (toks, _) = lex("fn a() { if x { y(); } }\nfn b() {}");
+        let items = parse_items(&toks);
+        let (s, e) = items[0].body.unwrap();
+        let body_text: Vec<&str> = toks[s..e].iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(body_text, vec!["if", "x", "{", "y", "(", ")", ";", "}"]);
+        assert!(items[1].body.unwrap().0 > e);
+    }
+}

@@ -1,22 +1,26 @@
 //! Rendering for lint outcomes: the human-readable report (violations +
-//! the `lint:allow` summary table) and the machine-readable `--json`
-//! document CI artifacts can consume.
+//! the `lint:allow` summary table), the `--list-rules` registry table,
+//! and the machine-readable `--json` document CI artifacts can consume.
 
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-use super::rules::all_rules;
-use super::{AllowedSite, LintOutcome};
+use super::rules::rule_metas;
+use super::{AllowedSite, LintOutcome, Violation};
 
 /// Render the human-readable report. Violations first (grep-friendly
-/// `path:line [rule] message` lines), then the allow summary table, then
-/// a one-line verdict.
+/// `path:line [rule] message` lines, cross-file hits followed by their
+/// `related:` site), then the allow summary table, then a one-line
+/// verdict.
 pub fn render(out: &LintOutcome) -> String {
     let mut s = String::new();
     if !out.violations.is_empty() {
         s.push_str("determinism violations:\n");
         for v in &out.violations {
             s.push_str(&format!("  {}:{} [{}] {}\n", v.path, v.line, v.rule, v.message));
+            if let Some(r) = &v.related {
+                s.push_str(&format!("      related: {}:{} ({})\n", r.path, r.line, r.note));
+            }
         }
         s.push('\n');
     }
@@ -38,6 +42,20 @@ pub fn render(out: &LintOutcome) -> String {
     s
 }
 
+/// Render the `--list-rules` registry: id, pass, scope, contract.
+pub fn render_rule_list() -> String {
+    let mut t = Table::new("lint rules", &["id", "pass", "scope", "contract"]);
+    for m in rule_metas() {
+        t.row(vec![
+            m.id.to_string(),
+            m.pass.label().to_string(),
+            m.scope.to_string(),
+            m.summary.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 fn allow_table(title: &str, sites: &[AllowedSite]) -> Table {
     let mut t = Table::new(title, &["rule", "site", "reason"]);
     for a in sites {
@@ -50,27 +68,18 @@ fn allow_table(title: &str, sites: &[AllowedSite]) -> Table {
 /// keys are BTreeMap-ordered and files were walked sorted, so the dump is
 /// byte-stable across runs.
 pub fn to_json(out: &LintOutcome) -> Json {
-    let rules = all_rules()
+    let rules = rule_metas()
         .iter()
-        .map(|r| {
+        .map(|m| {
             Json::obj(vec![
-                ("id", Json::Str(r.id().to_string())),
-                ("summary", Json::Str(r.summary().to_string())),
+                ("id", Json::Str(m.id.to_string())),
+                ("summary", Json::Str(m.summary.to_string())),
+                ("scope", Json::Str(m.scope.to_string())),
+                ("pass", Json::Str(m.pass.label().to_string())),
             ])
         })
         .collect();
-    let violations = out
-        .violations
-        .iter()
-        .map(|v| {
-            Json::obj(vec![
-                ("rule", Json::Str(v.rule.clone())),
-                ("path", Json::Str(v.path.clone())),
-                ("line", Json::Num(f64::from(v.line))),
-                ("message", Json::Str(v.message.clone())),
-            ])
-        })
-        .collect();
+    let violations = out.violations.iter().map(violation_json).collect();
     Json::obj(vec![
         ("rules", Json::Arr(rules)),
         ("violations", Json::Arr(violations)),
@@ -79,6 +88,26 @@ pub fn to_json(out: &LintOutcome) -> Json {
         ("files", Json::Num(out.files as f64)),
         ("clean", Json::Bool(out.is_clean())),
     ])
+}
+
+fn violation_json(v: &Violation) -> Json {
+    let mut fields = vec![
+        ("rule", Json::Str(v.rule.clone())),
+        ("path", Json::Str(v.path.clone())),
+        ("line", Json::Num(f64::from(v.line))),
+        ("message", Json::Str(v.message.clone())),
+    ];
+    if let Some(r) = &v.related {
+        fields.push((
+            "related",
+            Json::obj(vec![
+                ("path", Json::Str(r.path.clone())),
+                ("line", Json::Num(f64::from(r.line))),
+                ("note", Json::Str(r.note.clone())),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 fn allow_json(sites: &[AllowedSite]) -> Vec<Json> {

@@ -1,34 +1,156 @@
-//! The determinism rules (D001–D005). Each rule is a small token-stream
-//! pattern matcher behind the [`Rule`] trait; path scoping decides where a
+//! The determinism rules. D001–D005 are token-stream pattern matchers
+//! behind the [`Rule`] trait (pass two, per file); D006–D010 are
+//! cross-file contract checks behind the [`CrateRule`] trait, querying
+//! the [`CrateIndex`] built in pass one. Path scoping decides where a
 //! rule applies, and `#[cfg(test)]` regions are exempt from the
 //! runtime-only rules (tests may freely compare floats or unwrap pops —
 //! they *check* determinism rather than produce it).
 //!
 //! The rules deliberately work without type information: they encode the
-//! repo's naming conventions (`Rng::new`, `SALT_*`, `pop_admission`)
-//! rather than resolved semantics, trading false-negative room for a
-//! dependency-free pass that runs in milliseconds. Divergences from a
-//! type-aware linter are documented per rule in DESIGN.md §Static
-//! analysis.
+//! repo's naming conventions (`Rng::new`, `SALT_*`, `pop_admission`,
+//! `TraceEventKind`) rather than resolved semantics, trading
+//! false-negative room for a dependency-free pass that runs in
+//! milliseconds. Divergences from a type-aware linter are documented per
+//! rule in DESIGN.md §Static analysis.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::lexer::{Token, TokenKind};
+use super::parse::ItemKind;
+use super::symbols::{enum_mentions, CrateIndex, DirectiveVerb, FileIndex};
+use super::RelatedSite;
 
 /// A rule hit before `lint:allow` filtering.
 #[derive(Debug, Clone)]
 pub struct RawViolation {
     pub rule: &'static str,
+    pub path: String,
     pub line: u32,
     pub message: String,
+    /// Second location for cross-file diagnostics (the conflicting
+    /// definition, the aggregation fn, the sanctioned funnel).
+    pub related: Option<RelatedSite>,
 }
 
-/// One determinism rule: an id (`D00x`), a one-line summary for the
-/// report, and a token-stream check.
+impl RawViolation {
+    fn at(rule: &'static str, path: &str, line: u32, message: String) -> RawViolation {
+        RawViolation { rule, path: path.to_string(), line, message, related: None }
+    }
+
+    fn with_related(mut self, path: &str, line: u32, note: &str) -> RawViolation {
+        self.related = Some(RelatedSite { path: path.to_string(), line, note: note.to_string() });
+        self
+    }
+}
+
+/// Which analyzer pass a rule runs in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    /// Per-file token-stream scan.
+    Token,
+    /// Whole-crate symbol-index query.
+    Crate,
+}
+
+impl Pass {
+    pub fn label(self) -> &'static str {
+        match self {
+            Pass::Token => "token",
+            Pass::Crate => "crate",
+        }
+    }
+}
+
+/// Registry metadata: id, contract, file scope, pass. `--list-rules`,
+/// the JSON schema, and the docs all render from this table.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleMeta {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub scope: &'static str,
+    pub pass: Pass,
+}
+
+/// Every rule, in id order.
+pub fn rule_metas() -> Vec<RuleMeta> {
+    vec![
+        RuleMeta {
+            id: "D001",
+            summary: "no HashMap/HashSet in simulator/coordinator/learner/metrics paths",
+            scope: "src/{simulator,coordinator,learner,metrics}/ (non-test)",
+            pass: Pass::Token,
+        },
+        RuleMeta {
+            id: "D002",
+            summary: "no Instant::now/SystemTime::now outside util::bench and benches/",
+            scope: "everywhere but util/bench.rs and benches/ (non-test)",
+            pass: Pass::Token,
+        },
+        RuleMeta {
+            id: "D003",
+            summary: "RNG forks go through util::rng with named SALT_* constants",
+            scope: "everywhere, tests included",
+            pass: Pass::Token,
+        },
+        RuleMeta {
+            id: "D004",
+            summary: "float ordering via total_cmp; no partial_cmp, no exact f64 ==",
+            scope: "partial_cmp everywhere; float == in determinism dirs (non-test)",
+            pass: Pass::Token,
+        },
+        RuleMeta {
+            id: "D005",
+            summary: "no unwrap/expect on event-heap or admission-queue pops in simulator/",
+            scope: "src/simulator/ (non-test)",
+            pass: Pass::Token,
+        },
+        RuleMeta {
+            id: "D006",
+            summary: "every SALT_* const unique by name and value; every Rng fork salt resolves",
+            scope: "crate-wide (src, tests, benches, examples)",
+            pass: Pass::Crate,
+        },
+        RuleMeta {
+            id: "D007",
+            summary: "every numeric RunMetrics field aggregated in mean_of or lint:reducer-annotated",
+            scope: "src/metrics/mod.rs (RunMetrics vs mean_of)",
+            pass: Pass::Crate,
+        },
+        RuleMeta {
+            id: "D008",
+            summary: "every TraceEventKind variant constructed in simulator/ and handled in spans/exporters",
+            scope: "src/simulator/ (trace.rs taxonomy vs engine + exporters)",
+            pass: Pass::Crate,
+        },
+        RuleMeta {
+            id: "D009",
+            summary: "EventKind::Evict is only constructed inside schedule_idle_evict",
+            scope: "src/simulator/ (non-test)",
+            pass: Pass::Crate,
+        },
+        RuleMeta {
+            id: "D010",
+            summary: "no Rng clones; no two Rng::new forks sharing one salt symbol",
+            scope: "crate-wide, tests included",
+            pass: Pass::Crate,
+        },
+    ]
+}
+
+/// One token-pass rule: an id (`D00x`), a path scope, and a token-stream
+/// check. Summaries live in [`rule_metas`].
 pub trait Rule {
     fn id(&self) -> &'static str;
-    fn summary(&self) -> &'static str;
     /// Whether the rule scans `path` at all (normalized, `/`-separated).
     fn applies(&self, path: &str) -> bool;
     fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>);
+}
+
+/// One crate-pass rule: sees the whole [`CrateIndex`] at once and can
+/// cite two locations per violation.
+pub trait CrateRule {
+    fn id(&self) -> &'static str;
+    fn check(&self, idx: &CrateIndex, out: &mut Vec<RawViolation>);
 }
 
 /// Paths whose iteration/compare order feeds event order or SGD order.
@@ -57,27 +179,25 @@ impl Rule for HashOrder {
     fn id(&self) -> &'static str {
         "D001"
     }
-    fn summary(&self) -> &'static str {
-        "no HashMap/HashSet in simulator/coordinator/learner/metrics paths"
-    }
     fn applies(&self, path: &str) -> bool {
         in_determinism_dirs(path)
     }
-    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+    fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
         for t in toks {
             if t.in_test || t.kind != TokenKind::Ident {
                 continue;
             }
             if t.text == "HashMap" || t.text == "HashSet" {
-                out.push(RawViolation {
-                    rule: self.id(),
-                    line: t.line,
-                    message: format!(
+                out.push(RawViolation::at(
+                    self.id(),
+                    path,
+                    t.line,
+                    format!(
                         "{} in a determinism-scoped path: iteration order is \
                          hash-seeded; use BTreeMap/BTreeSet or sort before iterating",
                         t.text
                     ),
-                });
+                ));
             }
         }
     }
@@ -91,13 +211,10 @@ impl Rule for WallClock {
     fn id(&self) -> &'static str {
         "D002"
     }
-    fn summary(&self) -> &'static str {
-        "no Instant::now/SystemTime::now outside util::bench and benches/"
-    }
     fn applies(&self, path: &str) -> bool {
         !is_bench_path(path)
     }
-    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+    fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
         for (i, t) in toks.iter().enumerate() {
             if t.in_test || t.kind != TokenKind::Ident {
                 continue;
@@ -106,15 +223,16 @@ impl Rule for WallClock {
                 && is_text(toks, i + 1, "::")
                 && is_text(toks, i + 2, "now")
             {
-                out.push(RawViolation {
-                    rule: self.id(),
-                    line: t.line,
-                    message: format!(
+                out.push(RawViolation::at(
+                    self.id(),
+                    path,
+                    t.line,
+                    format!(
                         "wall-clock read ({}::now) outside util::bench/benches: \
                          simulated time must come from the event clock",
                         t.text
                     ),
-                });
+                ));
             }
         }
     }
@@ -131,27 +249,25 @@ impl Rule for UnsaltedRng {
     fn id(&self) -> &'static str {
         "D003"
     }
-    fn summary(&self) -> &'static str {
-        "RNG forks go through util::rng with named SALT_* constants"
-    }
     fn applies(&self, _path: &str) -> bool {
         true
     }
-    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+    fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
         for (i, t) in toks.iter().enumerate() {
             if t.kind != TokenKind::Ident {
                 continue;
             }
             if RANDOM_SOURCES.contains(&t.text.as_str()) {
-                out.push(RawViolation {
-                    rule: self.id(),
-                    line: t.line,
-                    message: format!(
+                out.push(RawViolation::at(
+                    self.id(),
+                    path,
+                    t.line,
+                    format!(
                         "{} is process-varying randomness; all RNG must flow \
                          from util::rng with an explicit seed",
                         t.text
                     ),
-                });
+                ));
             }
             // `Rng::new( ... <int literal> ^ ... )`: inline salts defeat
             // grep-ability; the convention is `seed ^ SALT_X` with the
@@ -172,13 +288,14 @@ impl Rule for UnsaltedRng {
                             let next_lit =
                                 toks.get(j + 1).is_some_and(|t| t.kind == TokenKind::Int);
                             if prev_lit || next_lit {
-                                out.push(RawViolation {
-                                    rule: self.id(),
-                                    line: toks[j].line,
-                                    message: "inline RNG salt: hoist the literal to a named \
-                                              SALT_* constant (seed ^ SALT_X convention)"
+                                out.push(RawViolation::at(
+                                    self.id(),
+                                    path,
+                                    toks[j].line,
+                                    "inline RNG salt: hoist the literal to a named \
+                                     SALT_* constant (seed ^ SALT_X convention)"
                                         .to_string(),
-                                });
+                                ));
                             }
                         }
                         _ => {}
@@ -198,9 +315,6 @@ impl Rule for FloatOrder {
     fn id(&self) -> &'static str {
         "D004"
     }
-    fn summary(&self) -> &'static str {
-        "float ordering via total_cmp; no partial_cmp, no exact f64 =="
-    }
     fn applies(&self, _path: &str) -> bool {
         true
     }
@@ -211,13 +325,14 @@ impl Rule for FloatOrder {
             // that sorts through a partial order can mask the exact
             // nondeterminism the battery exists to catch.
             if t.kind == TokenKind::Ident && t.text == "partial_cmp" {
-                out.push(RawViolation {
-                    rule: self.id(),
-                    line: t.line,
-                    message: "partial_cmp is not a total order over floats; \
-                              use f64::total_cmp"
+                out.push(RawViolation::at(
+                    self.id(),
+                    path,
+                    t.line,
+                    "partial_cmp is not a total order over floats; \
+                     use f64::total_cmp"
                         .to_string(),
-                });
+                ));
             }
             if det
                 && !t.in_test
@@ -227,13 +342,14 @@ impl Rule for FloatOrder {
                 let prev_f = i > 0 && toks[i - 1].kind == TokenKind::Float;
                 let next_f = toks.get(i + 1).is_some_and(|n| n.kind == TokenKind::Float);
                 if prev_f || next_f {
-                    out.push(RawViolation {
-                        rule: self.id(),
-                        line: t.line,
-                        message: "exact float equality in a determinism-scoped path; \
-                                  use total_cmp or justify the exact compare"
+                    out.push(RawViolation::at(
+                        self.id(),
+                        path,
+                        t.line,
+                        "exact float equality in a determinism-scoped path; \
+                         use total_cmp or justify the exact compare"
                             .to_string(),
-                    });
+                    ));
                 }
             }
         }
@@ -250,13 +366,10 @@ impl Rule for FalliblePop {
     fn id(&self) -> &'static str {
         "D005"
     }
-    fn summary(&self) -> &'static str {
-        "no unwrap/expect on event-heap or admission-queue pops in simulator/"
-    }
     fn applies(&self, path: &str) -> bool {
         path.contains("src/simulator/")
     }
-    fn check(&self, _path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
+    fn check(&self, path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
         for (i, t) in toks.iter().enumerate() {
             if t.in_test || t.kind != TokenKind::Ident {
                 continue;
@@ -270,22 +383,438 @@ impl Rule for FalliblePop {
                 && toks.get(i + 4)
                     .is_some_and(|n| n.text == "unwrap" || n.text == "expect")
             {
-                out.push(RawViolation {
-                    rule: self.id(),
-                    line: t.line,
-                    message: format!(
+                out.push(RawViolation::at(
+                    self.id(),
+                    path,
+                    t.line,
+                    format!(
                         "{}().{}() on an event/admission queue: handle empty \
                          explicitly (while let / if let)",
                         t.text,
                         toks[i + 4].text
                     ),
-                });
+                ));
             }
         }
     }
 }
 
-/// The registry, in rule-id order. The report and the docs iterate this.
+/// D006: the crate-wide salt registry. Every `SALT_*` const must be
+/// defined exactly once, all literal values must be pairwise distinct,
+/// and every `Rng::new(seed ^ SALT_X)` operand must resolve to one of
+/// the definitions.
+#[derive(Debug)]
+pub struct SaltRegistry;
+
+impl CrateRule for SaltRegistry {
+    fn id(&self) -> &'static str {
+        "D006"
+    }
+    fn check(&self, idx: &CrateIndex, out: &mut Vec<RawViolation>) {
+        let defs = idx.consts_with_prefix("SALT_");
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, d) in defs.iter().enumerate() {
+            by_name.entry(&d.name).or_default().push(i);
+        }
+        for (name, sites) in &by_name {
+            for &i in &sites[1..] {
+                let first = &defs[sites[0]];
+                out.push(
+                    RawViolation::at(
+                        self.id(),
+                        &defs[i].path,
+                        defs[i].line,
+                        format!("{name} is defined more than once; salts must be crate-unique"),
+                    )
+                    .with_related(&first.path, first.line, "first definition"),
+                );
+            }
+        }
+        // value collisions across *distinct* names (same-name duplicates
+        // were already reported above): key on each name's first def.
+        let mut by_value: BTreeMap<u128, Vec<usize>> = BTreeMap::new();
+        for sites in by_name.values() {
+            let d = &defs[sites[0]];
+            if let Some(v) = d.value {
+                by_value.entry(v).or_default().push(sites[0]);
+            }
+        }
+        for (value, sites) in &by_value {
+            let mut sites = sites.clone();
+            sites.sort_by(|&a, &b| (&defs[a].path, defs[a].line).cmp(&(&defs[b].path, defs[b].line)));
+            for &i in &sites[1..] {
+                let first = &defs[sites[0]];
+                out.push(
+                    RawViolation::at(
+                        self.id(),
+                        &defs[i].path,
+                        defs[i].line,
+                        format!(
+                            "{} has the same value (0x{value:X}) as {}; colliding salts \
+                             collapse two RNG streams into one",
+                            defs[i].name, first.name
+                        ),
+                    )
+                    .with_related(&first.path, first.line, "colliding definition"),
+                );
+            }
+        }
+        // unresolved fork operands
+        let names: BTreeSet<&str> = by_name.keys().copied().collect();
+        for f in &idx.files {
+            for u in &f.salt_uses {
+                if !names.contains(u.name.as_str()) {
+                    out.push(RawViolation::at(
+                        self.id(),
+                        &f.path,
+                        u.line,
+                        format!(
+                            "Rng fork xors {}, which is not defined anywhere in the \
+                             crate; define the SALT_* const at module scope",
+                            u.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The file D007 anchors on. The rule is silent when the anchor is not in
+/// the linted set (single-file fixtures), and hard-fails when the anchor
+/// exists but the struct/fn moved (that is how renames surface).
+const METRICS_ANCHOR: &str = "src/metrics/mod.rs";
+
+/// Field types that participate in cross-seed aggregation.
+const NUMERIC_TYPES: &[&str] =
+    &["f32", "f64", "u8", "u16", "u32", "u64", "usize", "i32", "i64", "Summary"];
+
+/// D007: metrics-aggregation coverage. Every numeric `RunMetrics` field
+/// must appear in `mean_of`, or carry a `lint:reducer(D007, field): why`
+/// annotation naming its non-mean reducer.
+#[derive(Debug)]
+pub struct MetricsCoverage;
+
+impl CrateRule for MetricsCoverage {
+    fn id(&self) -> &'static str {
+        "D007"
+    }
+    fn check(&self, idx: &CrateIndex, out: &mut Vec<RawViolation>) {
+        let Some(f) = idx.file_ending(METRICS_ANCHOR) else { return };
+        let Some(s) = f.find_type(ItemKind::Struct, "RunMetrics") else {
+            out.push(RawViolation::at(
+                self.id(),
+                &f.path,
+                1,
+                "RunMetrics struct not found: the aggregation-coverage anchor moved; \
+                 update analysis::rules::MetricsCoverage"
+                    .to_string(),
+            ));
+            return;
+        };
+        let Some(m) = f.find_fn(Some("RunMetrics"), "mean_of") else {
+            out.push(RawViolation::at(
+                self.id(),
+                &f.path,
+                s.line,
+                "RunMetrics::mean_of not found: the aggregation-coverage anchor moved; \
+                 update analysis::rules::MetricsCoverage"
+                    .to_string(),
+            ));
+            return;
+        };
+        let mut reducer_fields: BTreeSet<&str> = BTreeSet::new();
+        for d in &f.directives {
+            if d.verb != DirectiveVerb::Reducer || d.rule != "D007" {
+                continue;
+            }
+            for n in &d.names {
+                if s.fields.iter().any(|fl| fl.name == *n) {
+                    reducer_fields.insert(n);
+                } else {
+                    out.push(
+                        RawViolation::at(
+                            self.id(),
+                            &f.path,
+                            d.line,
+                            format!("lint:reducer names {n}, which is not a RunMetrics field"),
+                        )
+                        .with_related(&f.path, s.line, "RunMetrics definition"),
+                    );
+                }
+            }
+        }
+        for field in &s.fields {
+            if !NUMERIC_TYPES.contains(&field.ty.as_str()) {
+                continue;
+            }
+            if f.body_has_ident(m, &field.name) || reducer_fields.contains(field.name.as_str()) {
+                continue;
+            }
+            out.push(
+                RawViolation::at(
+                    self.id(),
+                    &f.path,
+                    field.line,
+                    format!(
+                        "RunMetrics.{} is never aggregated in mean_of and carries no \
+                         lint:reducer annotation: cross-seed summaries silently drop it",
+                        field.name
+                    ),
+                )
+                .with_related(&f.path, m.line, "mean_of aggregates fields here"),
+            );
+        }
+    }
+}
+
+/// The file D008 anchors on.
+const TRACE_ANCHOR: &str = "src/simulator/trace.rs";
+
+/// D008: trace-taxonomy coverage. Every `TraceEventKind` variant must be
+/// constructed somewhere in `src/simulator/` (outside the anchor) and
+/// handled — or `lint:covers`-annotated — in span assembly and both
+/// exporters.
+#[derive(Debug)]
+pub struct TraceCoverage;
+
+/// (impl type, fn name, role) of the three consumers every variant must
+/// reach.
+const TRACE_HANDLERS: &[(Option<&str>, &str, &str)] = &[
+    (None, "assemble_spans", "span assembly"),
+    (Some("TraceEvent"), "to_json", "JSONL exporter"),
+    (Some("TraceLog"), "to_chrome", "Chrome exporter"),
+];
+
+impl CrateRule for TraceCoverage {
+    fn id(&self) -> &'static str {
+        "D008"
+    }
+    fn check(&self, idx: &CrateIndex, out: &mut Vec<RawViolation>) {
+        let Some(f) = idx.file_ending(TRACE_ANCHOR) else { return };
+        let Some(e) = f.find_type(ItemKind::Enum, "TraceEventKind") else {
+            out.push(RawViolation::at(
+                self.id(),
+                &f.path,
+                1,
+                "TraceEventKind enum not found: the trace-taxonomy anchor moved; \
+                 update analysis::rules::TraceCoverage"
+                    .to_string(),
+            ));
+            return;
+        };
+        let variant_names: BTreeSet<&str> = e.variants.iter().map(|v| v.name.as_str()).collect();
+        // directive hygiene: a covers list naming a non-variant is how
+        // renames surface
+        for d in &f.directives {
+            if d.verb != DirectiveVerb::Covers || d.rule != "D008" {
+                continue;
+            }
+            for n in &d.names {
+                if !variant_names.contains(n.as_str()) {
+                    out.push(
+                        RawViolation::at(
+                            self.id(),
+                            &f.path,
+                            d.line,
+                            format!("lint:covers names {n}, which is not a TraceEventKind variant"),
+                        )
+                        .with_related(&f.path, e.line, "TraceEventKind definition"),
+                    );
+                }
+            }
+        }
+        for &(impl_ty, fn_name, role) in TRACE_HANDLERS {
+            let Some(fun) = f.find_fn(impl_ty, fn_name) else {
+                out.push(RawViolation::at(
+                    self.id(),
+                    &f.path,
+                    e.line,
+                    format!(
+                        "{fn_name} ({role}) not found in trace.rs: the taxonomy-coverage \
+                         anchor moved; update analysis::rules::TRACE_HANDLERS"
+                    ),
+                ));
+                continue;
+            };
+            let lines = f.body_lines(fun);
+            let covered: BTreeSet<&str> = f
+                .directives
+                .iter()
+                .filter(|d| {
+                    d.verb == DirectiveVerb::Covers
+                        && d.rule == "D008"
+                        && lines.is_some_and(|(lo, hi)| d.line >= lo && d.line <= hi)
+                })
+                .flat_map(|d| d.names.iter().map(|n| n.as_str()))
+                .collect();
+            for v in &e.variants {
+                if f.body_has_ident(fun, &v.name) || covered.contains(v.name.as_str()) {
+                    continue;
+                }
+                out.push(
+                    RawViolation::at(
+                        self.id(),
+                        &f.path,
+                        v.line,
+                        format!(
+                            "TraceEventKind::{} is not handled in {fn_name} ({role}); \
+                             add an arm or a lint:covers annotation on its wildcard",
+                            v.name
+                        ),
+                    )
+                    .with_related(&f.path, fun.line, "handler that must cover it"),
+                );
+            }
+        }
+        // construction check: only meaningful when at least one other
+        // simulator file is in the linted set (the single-file fixtures
+        // would otherwise report every variant as orphaned)
+        let others: Vec<&FileIndex> = idx
+            .files
+            .iter()
+            .filter(|o| o.path.contains("src/simulator/") && o.path != f.path)
+            .collect();
+        if others.is_empty() {
+            return;
+        }
+        for v in &e.variants {
+            let constructed = others.iter().any(|o| {
+                enum_mentions(&o.toks, "TraceEventKind", &v.name)
+                    .iter()
+                    .any(|m| !m.is_pattern && !m.in_test)
+            });
+            if !constructed {
+                out.push(RawViolation::at(
+                    self.id(),
+                    &f.path,
+                    v.line,
+                    format!(
+                        "TraceEventKind::{} is never constructed in src/simulator/: \
+                         dead taxonomy entries hide coverage gaps",
+                        v.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// D009: the single-funnel eviction contract (PR 5). `EventKind::Evict`
+/// carries an idle-epoch guard that only `schedule_idle_evict` maintains;
+/// constructing it anywhere else bypasses the staleness check.
+#[derive(Debug)]
+pub struct EvictFunnel;
+
+const EVICT_FUNNEL_FN: &str = "schedule_idle_evict";
+
+impl CrateRule for EvictFunnel {
+    fn id(&self) -> &'static str {
+        "D009"
+    }
+    fn check(&self, idx: &CrateIndex, out: &mut Vec<RawViolation>) {
+        // locate the funnel (any impl context, any simulator file)
+        let funnel = idx.files.iter().find_map(|f| {
+            if !f.path.contains("src/simulator/") {
+                return None;
+            }
+            f.find_fn_named(EVICT_FUNNEL_FN).map(|it| (f, it))
+        });
+        for f in &idx.files {
+            if !f.path.contains("src/simulator/") {
+                continue;
+            }
+            for m in enum_mentions(&f.toks, "EventKind", "Evict") {
+                if m.is_pattern || m.in_test {
+                    continue;
+                }
+                let inside = funnel.is_some_and(|(ff, it)| {
+                    ff.path == f.path
+                        && ff.body_lines(it).is_some_and(|(lo, hi)| m.line >= lo && m.line <= hi)
+                });
+                if inside {
+                    continue;
+                }
+                let mut v = RawViolation::at(
+                    self.id(),
+                    &f.path,
+                    m.line,
+                    format!(
+                        "EventKind::Evict constructed outside {EVICT_FUNNEL_FN}: the \
+                         idle-epoch staleness guard only holds on the single funnel"
+                    ),
+                );
+                if let Some((ff, it)) = funnel {
+                    v = v.with_related(&ff.path, it.line, "the sanctioned push site");
+                }
+                out.push(v);
+            }
+        }
+    }
+}
+
+/// D010: RNG-stream hygiene. Cloning an `Rng` duplicates its stream
+/// (draws stop being unique), and two `Rng::new` forks sharing one salt
+/// symbol are the same stream under two names.
+#[derive(Debug)]
+pub struct RngHygiene;
+
+impl CrateRule for RngHygiene {
+    fn id(&self) -> &'static str {
+        "D010"
+    }
+    fn check(&self, idx: &CrateIndex, out: &mut Vec<RawViolation>) {
+        // (a) `<rng-named ident>.clone()` — type-unaware by design: the
+        // naming convention is the contract
+        for f in &idx.files {
+            for (i, t) in f.toks.iter().enumerate() {
+                if t.kind == TokenKind::Ident
+                    && t.text.to_ascii_lowercase().contains("rng")
+                    && is_text(&f.toks, i + 1, ".")
+                    && is_text(&f.toks, i + 2, "clone")
+                    && is_text(&f.toks, i + 3, "(")
+                {
+                    out.push(RawViolation::at(
+                        self.id(),
+                        &f.path,
+                        t.line,
+                        format!(
+                            "{}.clone() duplicates an RNG stream; fork a new salted \
+                             stream instead (Rng::new(seed ^ SALT_X) or .fork())",
+                            t.text
+                        ),
+                    ));
+                }
+            }
+        }
+        // (b) one salt symbol feeding two forks
+        let mut uses: BTreeMap<&str, Vec<(&str, u32)>> = BTreeMap::new();
+        for f in &idx.files {
+            for u in &f.salt_uses {
+                uses.entry(&u.name).or_default().push((&f.path, u.line));
+            }
+        }
+        for (name, sites) in &uses {
+            for &(path, line) in &sites[1..] {
+                let (fp, fl) = sites[0];
+                out.push(
+                    RawViolation::at(
+                        self.id(),
+                        path,
+                        line,
+                        format!(
+                            "{name} already salts another Rng::new fork; two forks \
+                             sharing a salt are one stream under two names"
+                        ),
+                    )
+                    .with_related(fp, fl, "first fork with this salt"),
+                );
+            }
+        }
+    }
+}
+
+/// The token-pass registry, in rule-id order.
 pub fn all_rules() -> Vec<Box<dyn Rule>> {
     vec![
         Box::new(HashOrder),
@@ -296,15 +825,22 @@ pub fn all_rules() -> Vec<Box<dyn Rule>> {
     ]
 }
 
-/// Run every applicable rule over one file's token stream.
-pub fn check_file(path: &str, toks: &[Token]) -> Vec<RawViolation> {
-    let mut out = Vec::new();
+/// The crate-pass registry, in rule-id order.
+pub fn crate_rules() -> Vec<Box<dyn CrateRule>> {
+    vec![
+        Box::new(SaltRegistry),
+        Box::new(MetricsCoverage),
+        Box::new(TraceCoverage),
+        Box::new(EvictFunnel),
+        Box::new(RngHygiene),
+    ]
+}
+
+/// Run every applicable token rule over one file's token stream.
+pub fn check_file(path: &str, toks: &[Token], out: &mut Vec<RawViolation>) {
     for rule in all_rules() {
         if rule.applies(path) {
-            rule.check(path, toks, &mut out);
+            rule.check(path, toks, out);
         }
     }
-    // stable report order: by line, then rule id
-    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    out
 }

@@ -1,0 +1,431 @@
+//! The crate-wide symbol index — pass one's output, pass two's input
+//! (DESIGN.md §Static analysis v2).
+//!
+//! [`CrateIndex`] holds one [`FileIndex`] per linted file: its token
+//! stream, its item tree, its coverage directives, and the `Rng::new`
+//! fork sites extracted from it. Cross-file rules (D006–D010) query the
+//! index instead of re-scanning text, which is what lets a salt collision
+//! cite *both* definition sites.
+//!
+//! Two in-source directives ride on line comments (doc comments stay
+//! inert, exactly like `lint:allow`):
+//!
+//! * `lint:covers(D008, VariantA, VariantB): reason` — declares that a
+//!   wildcard arm inside the enclosing fn deliberately absorbs the listed
+//!   `TraceEventKind` variants;
+//! * `lint:reducer(D007, field_a, field_b): reason` — declares that a
+//!   `RunMetrics` field is aggregated by a non-mean reducer (max/min) and
+//!   is exempt from the `mean_of` coverage check.
+//!
+//! Like `lint:allow`, the reason is mandatory; a directive naming an
+//! unknown field/variant is itself a violation (it is how renames get
+//! caught).
+
+use super::lexer::{Comment, Token, TokenKind};
+use super::parse::{parse_items, Item, ItemKind};
+
+/// Directive verbs (the word after `lint:`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirectiveVerb {
+    Covers,
+    Reducer,
+}
+
+/// One parsed coverage directive.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    pub verb: DirectiveVerb,
+    /// The rule id inside the parens (`D007`/`D008`).
+    pub rule: String,
+    /// The field/variant names after the rule id.
+    pub names: Vec<String>,
+    pub line: u32,
+    pub reason: String,
+}
+
+/// One `Rng::new(.. ^ SALT_X ..)` fork site.
+#[derive(Debug, Clone)]
+pub struct SaltUse {
+    pub name: String,
+    pub line: u32,
+    pub in_test: bool,
+}
+
+/// Everything pass one learned about a single file.
+#[derive(Debug)]
+pub struct FileIndex {
+    /// Repo-relative path with `/` separators (rule scoping keys on it).
+    pub path: String,
+    pub toks: Vec<Token>,
+    pub items: Vec<Item>,
+    pub directives: Vec<Directive>,
+    pub salt_uses: Vec<SaltUse>,
+}
+
+/// A `const`/`static` definition site, flattened out of the item tree.
+#[derive(Debug, Clone)]
+pub struct ConstDef {
+    pub name: String,
+    pub path: String,
+    pub line: u32,
+    pub value: Option<u128>,
+}
+
+/// The whole crate, as pass two sees it. Files stay in walk order
+/// (sorted by path), so every query is deterministic.
+#[derive(Debug, Default)]
+pub struct CrateIndex {
+    pub files: Vec<FileIndex>,
+}
+
+impl FileIndex {
+    /// Index one file: lex must already have happened (the caller owns
+    /// the token stream so allows can be parsed from the same pass).
+    pub fn build(path: &str, toks: Vec<Token>, comments: &[Comment]) -> FileIndex {
+        let items = parse_items(&toks);
+        let directives = parse_directives(comments);
+        let salt_uses = extract_salt_uses(&toks);
+        FileIndex { path: path.to_string(), toks, items, directives, salt_uses }
+    }
+
+    /// Depth-first search for a fn item; `impl_type` narrows to methods
+    /// of that impl (`None` matches free fns and fns in plain mods).
+    pub fn find_fn(&self, impl_type: Option<&str>, name: &str) -> Option<&Item> {
+        fn walk<'a>(
+            items: &'a [Item],
+            in_impl: Option<&str>,
+            impl_type: Option<&str>,
+            name: &str,
+        ) -> Option<&'a Item> {
+            for it in items {
+                match it.kind {
+                    ItemKind::Fn if it.name == name && in_impl == impl_type => return Some(it),
+                    ItemKind::Impl => {
+                        if let Some(f) = walk(&it.children, Some(&it.name), impl_type, name) {
+                            return Some(f);
+                        }
+                    }
+                    ItemKind::Mod => {
+                        if let Some(f) = walk(&it.children, None, impl_type, name) {
+                            return Some(f);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            None
+        }
+        walk(&self.items, None, impl_type, name)
+    }
+
+    /// Depth-first search for a fn by name in *any* impl/mod context
+    /// (the D009 funnel is a method, but the rule should survive it
+    /// moving to a free fn).
+    pub fn find_fn_named(&self, name: &str) -> Option<&Item> {
+        fn walk<'a>(items: &'a [Item], name: &str) -> Option<&'a Item> {
+            for it in items {
+                if it.kind == ItemKind::Fn && it.name == name {
+                    return Some(it);
+                }
+                if let Some(f) = walk(&it.children, name) {
+                    return Some(f);
+                }
+            }
+            None
+        }
+        walk(&self.items, name)
+    }
+
+    /// Depth-first search for a struct/enum by name.
+    pub fn find_type(&self, kind: ItemKind, name: &str) -> Option<&Item> {
+        fn walk<'a>(items: &'a [Item], kind: ItemKind, name: &str) -> Option<&'a Item> {
+            for it in items {
+                if it.kind == kind && it.name == name {
+                    return Some(it);
+                }
+                if let Some(f) = walk(&it.children, kind, name) {
+                    return Some(f);
+                }
+            }
+            None
+        }
+        walk(&self.items, kind, name)
+    }
+
+    /// The source line range `[first, last]` of an item's body tokens.
+    pub fn body_lines(&self, item: &Item) -> Option<(u32, u32)> {
+        let (s, e) = item.body?;
+        if s >= e || e > self.toks.len() {
+            return None;
+        }
+        Some((self.toks[s].line, self.toks[e - 1].line))
+    }
+
+    /// Does `ident` appear as an identifier token inside the item's body?
+    pub fn body_has_ident(&self, item: &Item, ident: &str) -> bool {
+        let Some((s, e)) = item.body else { return false };
+        self.toks[s..e.min(self.toks.len())]
+            .iter()
+            .any(|t| t.kind == TokenKind::Ident && t.text == ident)
+    }
+}
+
+impl CrateIndex {
+    pub fn build(files: Vec<FileIndex>) -> CrateIndex {
+        CrateIndex { files }
+    }
+
+    /// The unique file whose path ends with `suffix` (anchor lookup).
+    pub fn file_ending(&self, suffix: &str) -> Option<&FileIndex> {
+        self.files.iter().find(|f| f.path.ends_with(suffix))
+    }
+
+    /// Every `const`/`static` whose name starts with `prefix`, flattened
+    /// across files, in (path, line) order.
+    pub fn consts_with_prefix(&self, prefix: &str) -> Vec<ConstDef> {
+        let mut out = Vec::new();
+        for f in &self.files {
+            fn walk(items: &[Item], prefix: &str, path: &str, out: &mut Vec<ConstDef>) {
+                for it in items {
+                    if matches!(it.kind, ItemKind::Const | ItemKind::Static)
+                        && it.name.starts_with(prefix)
+                    {
+                        out.push(ConstDef {
+                            name: it.name.clone(),
+                            path: path.to_string(),
+                            line: it.line,
+                            value: it.const_value,
+                        });
+                    }
+                    walk(&it.children, prefix, path, out);
+                }
+            }
+            walk(&f.items, prefix, &f.path, &mut out);
+        }
+        out
+    }
+}
+
+/// Parse `lint:covers(..)` / `lint:reducer(..)` directives out of line
+/// comments. Doc comments never carry directives (documentation about the
+/// syntax stays inert), matching the `lint:allow` convention.
+pub fn parse_directives(comments: &[Comment]) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for c in comments {
+        if c.text.starts_with("///") || c.text.starts_with("//!") {
+            continue;
+        }
+        for (needle, verb) in
+            [("lint:covers(", DirectiveVerb::Covers), ("lint:reducer(", DirectiveVerb::Reducer)]
+        {
+            let Some(at) = c.text.find(needle) else { continue };
+            let rest = &c.text[at + needle.len()..];
+            let Some(close) = rest.find(')') else { continue };
+            let mut parts = rest[..close].split(',').map(str::trim);
+            let rule = parts.next().unwrap_or("").to_string();
+            let names: Vec<String> =
+                parts.filter(|s| !s.is_empty()).map(str::to_string).collect();
+            let after = rest[close + 1..].trim_start();
+            let reason = after.strip_prefix(':').map(str::trim).unwrap_or("").to_string();
+            out.push(Directive { verb, rule, names, line: c.line, reason });
+        }
+    }
+    out
+}
+
+/// Extract `Rng::new( expr )` fork sites whose xor operands resolve to a
+/// bare `SALT_*`-suffixed path (`seed ^ SALT_X`, `s ^ crate::m::SALT_X`).
+/// Call operands (`seed ^ fnv1a(..)`) are derived salts, not symbols, and
+/// are deliberately skipped — D003 already polices literal operands.
+fn extract_salt_uses(toks: &[Token]) -> Vec<SaltUse> {
+    let mut out = Vec::new();
+    let text = |i: usize| toks.get(i).map(|t| t.text.as_str()).unwrap_or("");
+    for i in 0..toks.len() {
+        if !(toks[i].kind == TokenKind::Ident
+            && toks[i].text == "Rng"
+            && text(i + 1) == "::"
+            && text(i + 2) == "new"
+            && text(i + 3) == "(")
+        {
+            continue;
+        }
+        let mut j = i + 4;
+        let mut depth = 1i32;
+        while j < toks.len() && depth > 0 {
+            match text(j) {
+                "(" => depth += 1,
+                ")" => depth -= 1,
+                "^" => {
+                    for side in [salt_operand_after(toks, j), salt_operand_before(toks, j)] {
+                        if let Some((name, line, in_test)) = side {
+                            out.push(SaltUse { name, line, in_test });
+                        }
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Resolve the operand after `^` at index `x`: walk the `A::B::SALT_X`
+/// path forward; a trailing `(` makes it a call (skipped).
+fn salt_operand_after(toks: &[Token], x: usize) -> Option<(String, u32, bool)> {
+    let mut j = x + 1;
+    let mut last: Option<&Token> = None;
+    loop {
+        let t = toks.get(j)?;
+        if t.kind != TokenKind::Ident {
+            return None;
+        }
+        last = Some(t);
+        j += 1;
+        match toks.get(j).map(|t| t.text.as_str()) {
+            Some("::") => j += 1,
+            Some("(") => return None, // call, not a symbol
+            _ => break,
+        }
+    }
+    let t = last?;
+    t.text.starts_with("SALT_").then(|| (t.text.clone(), t.line, t.in_test))
+}
+
+/// Resolve the operand before `^` at index `x`: the ident just left of
+/// the operator (call results end in `)` and are skipped).
+fn salt_operand_before(toks: &[Token], x: usize) -> Option<(String, u32, bool)> {
+    let t = toks.get(x.checked_sub(1)?)?;
+    if t.kind != TokenKind::Ident || !t.text.starts_with("SALT_") {
+        return None;
+    }
+    Some((t.text.clone(), t.line, t.in_test))
+}
+
+/// One `Enum::Variant` mention, classified as pattern (match arm /
+/// binding position) or construction.
+#[derive(Debug, Clone)]
+pub struct Mention {
+    pub line: u32,
+    pub is_pattern: bool,
+    pub in_test: bool,
+}
+
+/// Find `enum_name :: variant` mentions in `toks`. Classification is
+/// positional: after the path (and its brace/paren payload group, if
+/// any), `=>`, `|`, `if`, or `=` mark a pattern; anything else is a
+/// construction. Type-unaware by design — see DESIGN.md divergences.
+pub fn enum_mentions(toks: &[Token], enum_name: &str, variant: &str) -> Vec<Mention> {
+    let text = |i: usize| toks.get(i).map(|t| t.text.as_str()).unwrap_or("");
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].kind == TokenKind::Ident
+            && toks[i].text == enum_name
+            && text(i + 1) == "::"
+            && text(i + 2) == variant)
+        {
+            continue;
+        }
+        let mut j = i + 3;
+        match text(j) {
+            "{" => j = skip_group(toks, j, "{", "}"),
+            "(" => j = skip_group(toks, j, "(", ")"),
+            _ => {}
+        }
+        let is_pattern = matches!(text(j), "=>" | "|" | "if" | "=");
+        out.push(Mention { line: toks[i].line, is_pattern, in_test: toks[i].in_test });
+    }
+    out
+}
+
+fn skip_group(toks: &[Token], i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < toks.len() {
+        if toks[j].text == open {
+            depth += 1;
+        } else if toks[j].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{lex, mark_test_regions};
+
+    fn index(path: &str, src: &str) -> FileIndex {
+        let (mut toks, comments) = lex(src);
+        mark_test_regions(&mut toks);
+        FileIndex::build(path, toks, &comments)
+    }
+
+    #[test]
+    fn salt_uses_resolve_paths_and_skip_calls() {
+        let f = index(
+            "src/a.rs",
+            "fn f(seed: u64) {\n\
+             \x20   let a = Rng::new(seed ^ SALT_A);\n\
+             \x20   let b = Rng::new(crate::util::SALT_B ^ seed);\n\
+             \x20   let c = Rng::new(seed ^ fnv1a(b\"tag\"));\n\
+             }",
+        );
+        let names: Vec<&str> = f.salt_uses.iter().map(|u| u.name.as_str()).collect();
+        assert_eq!(names, vec!["SALT_A", "SALT_B"]);
+    }
+
+    #[test]
+    fn directives_parse_names_and_reasons() {
+        let (_, comments) =
+            lex("// lint:covers(D008, A, B): wildcard arm\n// lint:reducer(D007, peak): max\n/// lint:covers(D008, Doc): inert\n");
+        let ds = parse_directives(&comments);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].verb, DirectiveVerb::Covers);
+        assert_eq!(ds[0].rule, "D008");
+        assert_eq!(ds[0].names, vec!["A", "B"]);
+        assert_eq!(ds[0].reason, "wildcard arm");
+        assert_eq!(ds[1].verb, DirectiveVerb::Reducer);
+    }
+
+    #[test]
+    fn enum_mentions_split_ctor_from_pattern() {
+        let src = "fn f(e: Kind) { match e { Kind::A { x } => x, _ => 0 }; \
+                   push(Kind::A { x: 1 }); if let Kind::A { x } = e {} }";
+        let (toks, _) = lex(src);
+        let m = enum_mentions(&toks, "Kind", "A");
+        assert_eq!(m.len(), 3);
+        assert!(m[0].is_pattern); // match arm
+        assert!(!m[1].is_pattern); // construction
+        assert!(m[2].is_pattern); // if-let binding
+    }
+
+    #[test]
+    fn const_prefix_query_spans_files() {
+        let a = index("src/a.rs", "pub const SALT_A: u64 = 0x1; const OTHER: u64 = 9;");
+        let b = index("src/b.rs", "mod inner { pub const SALT_B: u64 = 0x2; }");
+        let idx = CrateIndex::build(vec![a, b]);
+        let defs = idx.consts_with_prefix("SALT_");
+        let names: Vec<&str> = defs.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["SALT_A", "SALT_B"]);
+        assert_eq!(defs[0].value, Some(1));
+    }
+
+    #[test]
+    fn find_fn_disambiguates_impl_types() {
+        let f = index(
+            "src/a.rs",
+            "impl Foo { fn go(&self) -> u32 { 1 } }\nimpl Bar { fn go(&self) -> u32 { 2 } }\nfn go() {}",
+        );
+        let foo = f.find_fn(Some("Foo"), "go").unwrap();
+        let bar = f.find_fn(Some("Bar"), "go").unwrap();
+        let free = f.find_fn(None, "go").unwrap();
+        assert!(foo.line < bar.line && bar.line < free.line);
+        assert!(!f.body_has_ident(foo, "1")); // 1 is an Int, not an Ident
+    }
+}

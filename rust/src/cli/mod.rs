@@ -6,7 +6,7 @@
 //!   report      — latency breakdown + utilization timeline of a trace
 //!   profile     — isolated profiling of one function (SLO derivation)
 //!   selfcheck   — artifacts load + XLA/native learner parity
-//!   lint        — determinism linter (rules D001–D005, CI gate)
+//!   lint        — two-pass determinism linter (rules D001–D010, CI gate)
 //!   list        — known policies and experiments
 
 pub mod args;
@@ -31,7 +31,7 @@ pub fn main() -> i32 {
     }
 }
 
-const BOOL_FLAGS: &[&str] = &["xla", "native", "verbose", "json"];
+const BOOL_FLAGS: &[&str] = &["xla", "native", "verbose", "json", "list-rules"];
 
 fn ctx_from(a: &args::Args) -> Result<Ctx> {
     let backend = if a.get_bool("xla") { Backend::Xla } else { Backend::Native };
@@ -224,12 +224,36 @@ fn cmd_run(a: &args::Args) -> Result<()> {
     Ok(())
 }
 
-/// `shabari lint [--root <dir>] [--json]`: the determinism linter
-/// (DESIGN.md §Static analysis). Exit code is the CI gate: non-zero on
-/// any violation a `lint:allow(DXXX): <reason>` escape does not cover.
+/// `shabari lint [--root <dir>] [--json] [--only D006,D007]
+/// [--list-rules]`: the two-pass determinism linter (DESIGN.md §Static
+/// analysis). Exit code is the CI gate: non-zero on any violation a
+/// `lint:allow(DXXX): <reason>` escape does not cover.
 fn cmd_lint(a: &args::Args) -> Result<()> {
+    if a.get_bool("list-rules") {
+        print!("{}", crate::analysis::report::render_rule_list());
+        return Ok(());
+    }
+    let only = match a.get("only") {
+        Some(list) => {
+            let known: std::collections::BTreeSet<String> = crate::analysis::rules::rule_metas()
+                .iter()
+                .map(|m| m.id.to_string())
+                .collect();
+            let mut set = std::collections::BTreeSet::new();
+            for id in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                ensure!(
+                    known.contains(id),
+                    "--only: unknown rule '{id}' (see `shabari lint --list-rules`)"
+                );
+                set.insert(id.to_string());
+            }
+            ensure!(!set.is_empty(), "--only expects a comma list of rule ids");
+            Some(set)
+        }
+        None => None,
+    };
     let root = a.get_or("root", ".");
-    let out = crate::analysis::lint_tree(std::path::Path::new(&root))?;
+    let out = crate::analysis::lint_tree_only(std::path::Path::new(&root), only.as_ref())?;
     if a.get_bool("json") {
         println!("{}", crate::analysis::report::to_json(&out).to_pretty());
     } else {
@@ -348,11 +372,15 @@ fn print_help() {
            profile      isolated profiling runs (SLO derivation)\n\
                           --function <name>\n\
            selfcheck    verify artifacts + XLA/native learner parity\n\
-           lint         determinism linter: rules D001..D005 over\n\
-                        rust/{{src,tests,benches}} (non-zero exit on any\n\
-                        violation without a `lint:allow(DXXX): <reason>`)\n\
+           lint         two-pass determinism linter: token rules D001..D005\n\
+                        + cross-file rules D006..D010 over\n\
+                        rust/{{src,tests,benches}} and examples/ (non-zero\n\
+                        exit on any violation without a\n\
+                        `lint:allow(DXXX): <reason>`)\n\
                           --root <dir>      repo or crate root (default .)\n\
                           --json            machine-readable report\n\
+                          --only <ids>      comma list of rules to run\n\
+                          --list-rules      print the rule registry\n\
            list         known policies and experiment ids\n\
            help         this message\n\
          \n\

@@ -121,6 +121,7 @@ impl RunMetrics {
                 .round() as u64,
             // Peaks take the max, not the mean: they witness that *no*
             // replicate ever exceeded the admission limits.
+            // lint:reducer(D007, peak_alloc_vcpus, peak_alloc_mem_mb): max-reduced — an averaged peak would no longer witness the admission invariant
             peak_alloc_vcpus: runs.iter().map(|r| r.peak_alloc_vcpus).fold(0.0, f64::max),
             peak_alloc_mem_mb: runs.iter().map(|r| r.peak_alloc_mem_mb).fold(0.0, f64::max),
             evictions: (runs.iter().map(|r| r.evictions).sum::<u64>() as f64 / n).round()
@@ -139,6 +140,7 @@ impl RunMetrics {
                 .round() as u64,
             // The slowdown is a configuration echo, identical across
             // replicates of a cell; the min keeps it honest if not.
+            // lint:reducer(D007, straggler_slowdown): min-reduced — reports the worst configured straggler factor, never an average
             straggler_slowdown: runs
                 .iter()
                 .map(|r| r.straggler_slowdown)

@@ -1171,6 +1171,10 @@ impl<'p, P: Policy> Engine<'p, P> {
     /// `may_prewarm` gates the intent: only containers that actually
     /// served work get a replacement, so an unused pre-warm's own idle
     /// transition cannot chain further pre-warms after demand stops.
+    ///
+    /// This is the *only* place allowed to construct `EventKind::Evict`
+    /// (lint rule D009): the idle-epoch staleness guard is sound exactly
+    /// because every eviction deadline is stamped here.
     fn schedule_idle_evict(
         &mut self,
         worker: usize,

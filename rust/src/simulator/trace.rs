@@ -448,6 +448,7 @@ pub fn assemble_spans(events: &[TraceEvent]) -> Vec<InvocationSpans> {
                     st.done = Some((t, verdict));
                 }
             }
+            // lint:covers(D008, ContainerLaunch, ContainerReady, ContainerIdle, ContainerEvict, PrewarmFired, PrewarmShed, WorkerCrash, WorkerRestart): container/worker lifecycle events carry no invocation id, so span assembly reads only the per-invocation transitions
             _ => {}
         }
     }
@@ -855,6 +856,7 @@ impl TraceLog {
                 PrewarmShed { worker } => ("prewarm shed".to_string(), *worker),
                 WorkerCrash { worker } => ("CRASH".to_string(), *worker),
                 WorkerRestart { worker } => ("restart".to_string(), *worker),
+                // lint:covers(D008, Arrival, Decision, QueueEnter, QueueAdmit, ColdStartBegin, Bind, ExecBegin, End): per-invocation events reach Chrome as latency spans via spans() above, not as instant events
                 _ => continue,
             };
             evs.push(Json::obj(vec![

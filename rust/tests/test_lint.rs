@@ -1,13 +1,22 @@
 //! Determinism-linter battery (DESIGN.md §Static analysis).
 //!
 //! Per-rule positive/negative fixtures as embedded strings (no temp-file
-//! nondeterminism), the `lint:allow` escape semantics, and the self-check
-//! that the repo tree itself is lint-clean — which is exactly what the CI
-//! gate (`cargo run --release -- lint`) enforces.
+//! nondeterminism) for the token rules D001–D005 and the cross-file
+//! rules D006–D010 (including two-file fixtures proving cross-file
+//! resolution), the `lint:allow` / `lint:covers` / `lint:reducer`
+//! escape semantics, mutation self-checks over the real sources (delete
+//! an aggregated field, collide two salts, add an orphan trace variant —
+//! each must fail with a two-location diagnostic), and the self-check
+//! that the repo tree itself is lint-clean — which is exactly what the
+//! CI gate (`cargo run --release -- lint`) enforces.
 
+use std::collections::BTreeSet;
 use std::path::Path;
 
-use shabari::analysis::{lint_source, lint_tree, report, LintOutcome};
+use shabari::analysis::{
+    lint_source, lint_sources, lint_sources_only, lint_tree, report, rules, tree_files,
+    LintOutcome,
+};
 
 /// Rules fired on a fixture, in report order.
 fn rules_of(out: &LintOutcome) -> Vec<&str> {
@@ -80,7 +89,9 @@ fn d003_flags_inline_rng_salts() {
 
 #[test]
 fn d003_accepts_named_salts_plain_seeds_and_hashes() {
-    let named = "fn f(seed: u64) { let r = Rng::new(seed ^ SALT_ENGINE); }\n";
+    // the const is defined in-fixture so the D006 registry resolves it
+    let named = "const SALT_ENGINE: u64 = 0x5115_BA71;\n\
+                 fn f(seed: u64) { let r = Rng::new(seed ^ SALT_ENGINE); }\n";
     assert!(lint_source("src/simulator/x.rs", named).is_clean());
     assert!(lint_source("src/simulator/x.rs", "fn f() { let r = Rng::new(42); }\n").is_clean());
     let hashed = "fn f(seed: u64) { let r = Rng::new(seed ^ fnv1a(b\"tag\")); }\n";
@@ -241,6 +252,385 @@ fn json_report_is_deterministic() {
     let a = report::to_json(&lint_source("src/learner/x.rs", src)).to_pretty();
     let b = report::to_json(&lint_source("src/learner/x.rs", src)).to_pretty();
     assert_eq!(a, b);
+}
+
+// ---------------------------------------------- D006: salt registry
+
+#[test]
+fn d006_flags_duplicate_salt_names_with_both_sites() {
+    let a = ("src/simulator/a.rs", "pub const SALT_X: u64 = 0x1;\n");
+    let b = ("src/simulator/b.rs", "pub const SALT_X: u64 = 0x2;\n");
+    let out = lint_sources(&[a, b]);
+    assert_eq!(rules_of(&out), vec!["D006"]);
+    let v = &out.violations[0];
+    assert_eq!(v.path, "src/simulator/b.rs");
+    let r = v.related.as_ref().expect("duplicate must cite the first definition");
+    assert_eq!((r.path.as_str(), r.line), ("src/simulator/a.rs", 1));
+}
+
+#[test]
+fn d006_flags_value_collisions_across_files() {
+    // two distinct names, one literal value: streams would correlate
+    let a = ("src/simulator/a.rs", "pub const SALT_A: u64 = 0xBEEF;\n");
+    let b = ("src/simulator/b.rs", "pub const SALT_B: u64 = 0xBEEF;\n");
+    let out = lint_sources(&[a, b]);
+    assert_eq!(rules_of(&out), vec!["D006"]);
+    assert!(out.violations[0].related.is_some(), "{:?}", out.violations);
+    // distinct values are the contract
+    let a = ("src/simulator/a.rs", "pub const SALT_A: u64 = 0x1;\n");
+    let b = ("src/simulator/b.rs", "pub const SALT_B: u64 = 0x2;\n");
+    assert!(lint_sources(&[a, b]).is_clean());
+}
+
+#[test]
+fn d006_resolves_salt_uses_across_files() {
+    // definition in one file, fork in another: the crate pass must join them
+    let def = ("src/util/salts.rs", "pub const SALT_W: u64 = 0x3;\n");
+    let fork = ("src/workload/x.rs", "fn f(seed: u64) { let r = Rng::new(seed ^ SALT_W); }\n");
+    assert!(lint_sources(&[def, fork]).is_clean());
+    // without the defining file, the operand is unresolved
+    let out = lint_sources(&[fork]);
+    assert_eq!(rules_of(&out), vec!["D006"]);
+    assert!(out.violations[0].message.contains("SALT_W"), "{:?}", out.violations);
+}
+
+// ---------------------------------- D007: metrics-aggregation coverage
+
+const METRICS_FIXTURE: &str = "pub struct RunMetrics {\n\
+                               \x20   pub policy: String,\n\
+                               \x20   pub a_pct: f64,\n\
+                               \x20   pub peak: f64,\n\
+                               }\n\
+                               impl RunMetrics {\n\
+                               \x20   pub fn mean_of(runs: &[RunMetrics]) -> RunMetrics {\n\
+                               \x20       let a = runs.iter().map(|r| r.a_pct).sum::<f64>();\n\
+                               \x20       unimplemented!()\n\
+                               \x20   }\n\
+                               }\n";
+
+#[test]
+fn d007_flags_numeric_fields_missing_from_mean_of() {
+    let out = lint_source("src/metrics/mod.rs", METRICS_FIXTURE);
+    assert_eq!(rules_of(&out), vec!["D007"]);
+    let v = &out.violations[0];
+    assert_eq!(v.line, 4, "anchored at the field definition");
+    assert!(v.message.contains("peak"), "{}", v.message);
+    let r = v.related.as_ref().expect("must cite mean_of");
+    assert_eq!(r.line, 7);
+    // non-numeric fields (policy: String) are exempt, a_pct is referenced
+}
+
+#[test]
+fn d007_reducer_annotation_covers_max_reduced_fields() {
+    let src = format!("// lint:reducer(D007, peak): max-reduced fixture\n{METRICS_FIXTURE}");
+    assert!(lint_source("src/metrics/mod.rs", &src).is_clean());
+}
+
+#[test]
+fn d007_reducer_naming_an_unknown_field_is_a_violation() {
+    let src = format!("// lint:reducer(D007, nope): stale name\n{METRICS_FIXTURE}");
+    let out = lint_source("src/metrics/mod.rs", &src);
+    // the stale directive AND the still-uncovered field both fire
+    assert_eq!(rules_of(&out), vec!["D007", "D007"]);
+    assert!(out.violations.iter().any(|v| v.message.contains("nope")), "{:?}", out.violations);
+}
+
+#[test]
+fn d007_is_anchored_to_the_metrics_module_root() {
+    // the same shape elsewhere is not the aggregation contract
+    assert!(lint_source("src/metrics/histogram.rs", METRICS_FIXTURE).is_clean());
+}
+
+// ------------------------------------ D008: trace-taxonomy coverage
+
+const TRACE_FIXTURE: &str = "pub struct TraceEvent { pub kind: TraceEventKind }\n\
+    pub enum TraceEventKind {\n\
+    \x20   Arrival { inv: u64 },\n\
+    \x20   Stray { worker: usize },\n\
+    }\n\
+    pub fn assemble_spans(log: &TraceLog) -> Vec<Span> {\n\
+    \x20   match kind {\n\
+    \x20       TraceEventKind::Arrival { inv } => push(inv),\n\
+    \x20       // lint:covers(D008, Stray): fixture: worker events carry no invocation id\n\
+    \x20       _ => {}\n\
+    \x20   }\n\
+    }\n\
+    impl TraceEvent {\n\
+    \x20   pub fn to_json(&self) -> String {\n\
+    \x20       match &self.kind {\n\
+    \x20           TraceEventKind::Arrival { inv } => fmt(inv),\n\
+    \x20           TraceEventKind::Stray { worker } => fmt(worker),\n\
+    \x20       }\n\
+    \x20   }\n\
+    }\n\
+    impl TraceLog {\n\
+    \x20   pub fn to_chrome(&self) -> String {\n\
+    \x20       match &self.kind {\n\
+    \x20           TraceEventKind::Arrival { inv } => fmt(inv),\n\
+    \x20           TraceEventKind::Stray { worker } => fmt(worker),\n\
+    \x20       }\n\
+    \x20   }\n\
+    }\n";
+
+#[test]
+fn d008_accepts_handlers_that_cover_or_annotate_every_variant() {
+    assert!(lint_source("src/simulator/trace.rs", TRACE_FIXTURE).is_clean());
+}
+
+#[test]
+fn d008_flags_a_variant_a_handler_drops() {
+    // strip the covers annotation: assemble_spans no longer accounts for Stray
+    let src = TRACE_FIXTURE.replace(
+        "// lint:covers(D008, Stray): fixture: worker events carry no invocation id\n",
+        "",
+    );
+    let out = lint_source("src/simulator/trace.rs", &src);
+    assert_eq!(rules_of(&out), vec!["D008"]);
+    let v = &out.violations[0];
+    assert!(v.message.contains("Stray"), "{}", v.message);
+    assert!(v.message.contains("span assembly"), "{}", v.message);
+    assert!(v.related.is_some(), "must cite the handler");
+}
+
+#[test]
+fn d008_flags_variants_never_constructed_in_the_simulator() {
+    // a second simulator file turns the construction check on; it only
+    // builds Arrival, so Stray is dead taxonomy
+    let engine = ("src/simulator/engine.rs", "fn emit() { t(TraceEventKind::Arrival { inv: 1 }); }\n");
+    let out = lint_sources(&[("src/simulator/trace.rs", TRACE_FIXTURE), engine]);
+    assert_eq!(rules_of(&out), vec!["D008"]);
+    assert!(out.violations[0].message.contains("Stray"), "{:?}", out.violations);
+    assert!(out.violations[0].message.contains("constructed"), "{:?}", out.violations);
+    // patterns don't count as construction; real constructions do
+    let engine_ok = (
+        "src/simulator/engine.rs",
+        "fn emit() { t(TraceEventKind::Arrival { inv: 1 }); t(TraceEventKind::Stray { worker: 0 }); }\n",
+    );
+    assert!(lint_sources(&[("src/simulator/trace.rs", TRACE_FIXTURE), engine_ok]).is_clean());
+}
+
+#[test]
+fn d008_covers_naming_an_unknown_variant_is_a_violation() {
+    let src = TRACE_FIXTURE.replace(
+        "lint:covers(D008, Stray): fixture",
+        "lint:covers(D008, Stray, Gone): fixture",
+    );
+    let out = lint_source("src/simulator/trace.rs", &src);
+    assert_eq!(rules_of(&out), vec!["D008"]);
+    assert!(out.violations[0].message.contains("Gone"), "{:?}", out.violations);
+}
+
+// ---------------------------------------- D009: eviction funnel
+
+const ENGINE_FIXTURE_OK: &str = "impl Engine {\n\
+    \x20   fn schedule_idle_evict(&mut self) {\n\
+    \x20       self.push(t, EventKind::Evict { worker, container, idle_epoch });\n\
+    \x20   }\n\
+    \x20   fn handle(&mut self, e: EventKind) {\n\
+    \x20       match e { EventKind::Evict { worker, .. } => drain(worker), _ => {} }\n\
+    \x20   }\n\
+    }\n";
+
+#[test]
+fn d009_accepts_construction_inside_the_funnel_and_match_arms_anywhere() {
+    assert!(lint_source("src/simulator/engine.rs", ENGINE_FIXTURE_OK).is_clean());
+}
+
+#[test]
+fn d009_flags_evict_pushed_outside_the_funnel() {
+    let src = format!(
+        "{ENGINE_FIXTURE_OK}\
+         impl Rogue {{\n\
+         \x20   fn sneak(&mut self) {{\n\
+         \x20       self.push(t, EventKind::Evict {{ worker, container, idle_epoch }});\n\
+         \x20   }}\n\
+         }}\n"
+    );
+    let out = lint_source("src/simulator/engine.rs", &src);
+    assert_eq!(rules_of(&out), vec!["D009"]);
+    let v = &out.violations[0];
+    assert_eq!(v.line, 11, "the rogue push site");
+    let r = v.related.as_ref().expect("must cite the sanctioned site");
+    assert_eq!(r.line, 2, "schedule_idle_evict");
+}
+
+// ---------------------------------------- D010: RNG-stream hygiene
+
+#[test]
+fn d010_flags_rng_clones() {
+    let src = "fn f(rng: &Rng) { let r2 = rng.clone(); }\n";
+    let out = lint_source("src/workload/x.rs", src);
+    assert_eq!(rules_of(&out), vec!["D010"]);
+}
+
+#[test]
+fn d010_flags_two_forks_sharing_a_salt_across_files() {
+    let a = (
+        "src/simulator/a.rs",
+        "pub const SALT_S: u64 = 1;\nfn f(s: u64) { let r = Rng::new(s ^ SALT_S); }\n",
+    );
+    let b = ("src/simulator/b.rs", "fn g(s: u64) { let r = Rng::new(s ^ SALT_S); }\n");
+    let out = lint_sources(&[a, b]);
+    assert_eq!(rules_of(&out), vec!["D010"]);
+    let v = &out.violations[0];
+    assert_eq!(v.path, "src/simulator/b.rs");
+    let r = v.related.as_ref().expect("must cite the first fork");
+    assert_eq!((r.path.as_str(), r.line), ("src/simulator/a.rs", 2));
+    // distinct salts per fork are the contract
+    let b_ok = (
+        "src/simulator/b.rs",
+        "pub const SALT_T: u64 = 2;\nfn g(s: u64) { let r = Rng::new(s ^ SALT_T); }\n",
+    );
+    assert!(lint_sources(&[a, b_ok]).is_clean());
+}
+
+// -------------------------------------- directive hygiene & filtering
+
+#[test]
+fn directives_without_reasons_or_with_wrong_rules_are_violations() {
+    let bare = "// lint:reducer(D007, peak)\nfn f() {}\n";
+    let out = lint_source("src/metrics/x.rs", bare);
+    assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+    assert!(out.violations[0].message.contains("reason"), "{}", out.violations[0].message);
+    // covers belongs to D008, reducer to D007 — crossed verbs are errors
+    let crossed = "// lint:covers(D007, peak): wrong rule\nfn f() {}\n";
+    let out = lint_source("src/metrics/x.rs", crossed);
+    assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+    assert!(out.violations[0].message.contains("D008"), "{}", out.violations[0].message);
+}
+
+#[test]
+fn only_filter_restricts_rules_but_not_escape_hygiene() {
+    let a = (
+        "src/simulator/a.rs",
+        "use std::collections::HashMap;\npub const SALT_X: u64 = 1;\n",
+    );
+    let b = ("src/simulator/b.rs", "pub const SALT_X: u64 = 2;\n");
+    // unfiltered: the token rule and the crate rule both fire
+    assert_eq!(rules_of(&lint_sources(&[a, b])), vec!["D001", "D006"]);
+    let only: BTreeSet<String> = std::iter::once("D006".to_string()).collect();
+    assert_eq!(rules_of(&lint_sources_only(&[a, b], Some(&only))), vec!["D006"]);
+    // a reasonless escape still fires even when its rule is filtered out
+    let c = ("src/simulator/c.rs", "use std::collections::HashMap; // lint:allow(D001)\n");
+    let out = lint_sources_only(&[c], Some(&only));
+    assert_eq!(out.violations.len(), 1, "{:?}", out.violations);
+    assert!(out.violations[0].message.contains("reason"), "{}", out.violations[0].message);
+}
+
+// ------------------------------------------- registry & walk coverage
+
+#[test]
+fn rule_registry_lists_all_ten_rules_with_pass_labels() {
+    let metas = rules::rule_metas();
+    let ids: Vec<&str> = metas.iter().map(|m| m.id).collect();
+    assert_eq!(
+        ids,
+        ["D001", "D002", "D003", "D004", "D005", "D006", "D007", "D008", "D009", "D010"]
+    );
+    let listing = report::render_rule_list();
+    for id in ids {
+        assert!(listing.contains(id), "{listing}");
+    }
+    assert!(listing.contains("token"), "{listing}");
+    assert!(listing.contains("crate"), "{listing}");
+}
+
+#[test]
+fn json_report_carries_pass_scope_and_related_sites() {
+    let a = ("src/simulator/a.rs", "pub const SALT_X: u64 = 1;\n");
+    let b = ("src/simulator/b.rs", "pub const SALT_X: u64 = 2;\n");
+    let json = report::to_json(&lint_sources(&[a, b])).to_string();
+    assert!(json.contains("\"pass\":\"crate\""), "{json}");
+    assert!(json.contains("\"scope\":"), "{json}");
+    assert!(json.contains("\"related\":"), "{json}");
+    assert!(json.contains("src/simulator/a.rs"), "{json}");
+}
+
+#[test]
+fn tree_walk_covers_tests_benches_and_examples() {
+    let files = tree_files(Path::new(".")).expect("walk");
+    let labels: Vec<&str> = files.iter().map(|(l, _)| l.as_str()).collect();
+    assert!(labels.iter().any(|l| l.starts_with("src/")), "{labels:?}");
+    assert!(labels.contains(&"tests/test_lint.rs"), "{labels:?}");
+    assert!(labels.iter().any(|l| l.starts_with("benches/")), "{labels:?}");
+    assert!(labels.contains(&"examples/serve_trace.rs"), "{labels:?}");
+}
+
+// ------------------------------------- mutation self-checks (real tree)
+
+/// Integration tests run with cwd = the crate dir (`rust/`); keep the
+/// repo-root fallback so the battery also runs from the workspace root.
+fn read_src(rel: &str) -> String {
+    std::fs::read_to_string(rel)
+        .or_else(|_| std::fs::read_to_string(format!("rust/{rel}")))
+        .unwrap_or_else(|e| panic!("reading {rel}: {e}"))
+}
+
+#[test]
+fn deleting_a_field_from_mean_of_fails_with_two_locations() {
+    let metrics = read_src("src/metrics/mod.rs");
+    assert!(lint_source("src/metrics/mod.rs", &metrics).is_clean(), "baseline must be clean");
+    let cut = metrics.replace("oom_pct: avg(|r| r.oom_pct),", "");
+    assert_ne!(cut, metrics, "the aggregation line must exist to be deleted");
+    let out = lint_source("src/metrics/mod.rs", &cut);
+    let v = out
+        .violations
+        .iter()
+        .find(|v| v.rule == "D007")
+        .unwrap_or_else(|| panic!("dropped field must trip D007: {:?}", out.violations));
+    assert!(v.message.contains("oom_pct"), "{}", v.message);
+    assert!(v.related.is_some(), "must cite mean_of as the second location");
+}
+
+#[test]
+fn duplicating_a_salt_value_fails_with_two_locations() {
+    let engine = read_src("src/simulator/engine.rs");
+    let faults = read_src("src/simulator/faults/mod.rs");
+    let files = |e: &str, f: &str| {
+        lint_sources(&[
+            ("src/simulator/engine.rs", e),
+            ("src/simulator/faults/mod.rs", f),
+        ])
+    };
+    assert!(files(&engine, &faults).is_clean(), "baseline must be clean");
+    // give SALT_ENGINE the literal value of SALT_CRASH
+    let collided = engine.replace("0x5115_BA71", "0xC4A5_4ED1");
+    assert_ne!(collided, engine);
+    let out = files(&collided, &faults);
+    let v = out
+        .violations
+        .iter()
+        .find(|v| v.rule == "D006")
+        .unwrap_or_else(|| panic!("colliding salts must trip D006: {:?}", out.violations));
+    assert!(v.related.is_some(), "must cite the other definition");
+}
+
+#[test]
+fn adding_an_unhandled_trace_variant_fails_with_two_locations() {
+    let trace = read_src("src/simulator/trace.rs");
+    let engine = read_src("src/simulator/engine.rs");
+    let files = |t: &str, e: &str| {
+        lint_sources(&[
+            ("src/simulator/trace.rs", t),
+            ("src/simulator/engine.rs", e),
+        ])
+    };
+    assert!(files(&trace, &engine).is_clean(), "baseline must be clean");
+    let grown = trace.replace(
+        "WorkerRestart { worker: usize },",
+        "WorkerRestart { worker: usize },\n    Zombie { worker: usize },",
+    );
+    assert_ne!(grown, trace);
+    let out = files(&grown, &engine);
+    let zombie: Vec<_> =
+        out.violations.iter().filter(|v| v.rule == "D008" && v.message.contains("Zombie")).collect();
+    // unhandled in all three exporters plus never constructed
+    assert!(zombie.len() >= 3, "{:?}", out.violations);
+    assert!(
+        zombie.iter().any(|v| v.related.is_some()),
+        "handler gaps must cite the handler: {:?}",
+        out.violations
+    );
 }
 
 // ------------------------------------------------------------ self-check

@@ -32,6 +32,8 @@ fn legacy_trace(
     duration_s: f64,
     seed: u64,
 ) -> Vec<(f64, usize, usize)> {
+    // lint:allow(D010): the byte-pin deliberately mirrors the production
+    // SALT_TRACE fork to prove the trait refactor replays it exactly
     let mut rng = Rng::new(seed ^ SALT_TRACE);
     let starts = azure::arrival_times(rps, duration_s, &mut rng);
     starts
