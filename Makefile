@@ -2,7 +2,7 @@
 # rust sources: it AOT-lowers the L2 JAX graphs (and their L1 Pallas
 # kernels) to the HLO text artifacts the PJRT runtime loads.
 
-.PHONY: artifacts build test lint lint-rules bench bench-scale scenarios overload keepalive adversity trace clean
+.PHONY: artifacts build test lint lint-rules bench bench-scale scenarios overload keepalive adversity replay trace clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -52,6 +52,14 @@ keepalive:
 # out/adversity.json — EXPERIMENTS.md + DESIGN.md §Faults.
 adversity:
 	cargo run --release -- experiment adversity
+
+# Real-trace replay (policy x cluster-scaler grid over the --scenario
+# trace, or the embedded Azure sample): streaming-ingest mix report,
+# scaler:none control column byte-pinned to the fixed cluster, plus the
+# fifer scaling timeline; dumps out/replay.json — EXPERIMENTS.md +
+# DESIGN.md §Scaler / §Trace ingest.
+replay:
+	cargo run --release -- experiment replay
 
 # Traced demo run + digest: JSONL lifecycle trace and Chrome trace-event
 # timeline (load out/trace.json in Perfetto), then the latency-breakdown /

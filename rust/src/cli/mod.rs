@@ -47,6 +47,9 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
     let keepalive = crate::simulator::keepalive::parse(&a.get_or("keepalive", "fixed"))?;
     // ... and for the fault profile (default: an immortal, uniform cluster)
     let faults = crate::simulator::faults::parse(&a.get_or("faults", "none"))?;
+    // ... and for the cluster scaler (default: a fixed-size pool whose
+    // streams are byte-identical to every pre-scaler run)
+    let scaler = crate::simulator::scaler::parse(&a.get_or("scaler", "none"))?;
     // lifecycle tracing (DESIGN.md §Observability): either exporter flag
     // switches the engine's trace sink on; absent both, tracing stays
     // dormant and every stream is byte-identical to an untraced run
@@ -78,6 +81,7 @@ fn ctx_from(a: &args::Args) -> Result<Ctx> {
         keepalive_workers: a.get_usize("keepalive-workers", 4)?.max(1),
         faults,
         adversity_workers: a.get_usize("adversity-workers", 4)?.max(1),
+        scaler,
         trace,
     })
 }
@@ -116,6 +120,10 @@ fn run(argv: &[String]) -> Result<()> {
                 "faults:      {} (crash/chaos take ':<downtime_s>', \
                  stragglers ':<factor>')",
                 crate::simulator::faults::FAULTS.join(", ")
+            );
+            println!(
+                "scalers:     {} (fifer takes ':<headroom>' in (0,1])",
+                crate::simulator::scaler::SCALERS.join(", ")
             );
             Ok(())
         }
@@ -350,7 +358,7 @@ fn print_help() {
            experiment   regenerate a paper figure/table\n\
                           <id>              fig1..fig14, table1-3, scenarios,\n\
                                             scale, overload, keepalive,\n\
-                                            adversity, or 'all'\n\
+                                            adversity, replay, or 'all'\n\
                           --scale-workers <n>  scale-grid cluster size (default 64)\n\
                           --scale-rps <f>      scale-grid request rate (default 24)\n\
                           --overload-workers <n>  overload-sweep cluster size\n\
@@ -365,6 +373,10 @@ fn print_help() {
                                             fault-profile grid with per-replicate\n\
                                             invariant checks, dumps\n\
                                             out/adversity.json)\n\
+                                            ('replay' takes no size flag: the\n\
+                                            policy x scaler grid replays the\n\
+                                            --scenario trace, or the embedded\n\
+                                            sample, dumping out/replay.json)\n\
            report       digest a JSONL lifecycle trace: latency breakdown\n\
                         (decision/queue/cold-start/exec percentiles) +\n\
                         cluster utilization timeline\n\
@@ -406,6 +418,11 @@ fn print_help() {
                                    stragglers:<factor> (slow workers),\n\
                                    hetero (mixed worker classes), chaos or\n\
                                    chaos:<downtime_s> (all three at once)\n\
+           --scaler <name>         cluster scaler: none (default; fixed pool,\n\
+                                   byte-identical to pre-scaler streams) or\n\
+                                   fifer / fifer:<headroom> (reactive whole-\n\
+                                   worker scaling on queue depth + utilization,\n\
+                                   headroom in (0,1], default 0.7)\n\
            --trace <path>          record every lifecycle event + utilization\n\
                                    sample to a JSONL trace (off = byte-identical\n\
                                    to an untraced run; sweeps trace replicate 0\n\

@@ -16,6 +16,7 @@ use crate::metrics::{from_result, RunMetrics};
 use crate::simulator::engine::{simulate, SimResult};
 use crate::simulator::faults::FaultsSpec;
 use crate::simulator::keepalive::KeepAliveSpec;
+use crate::simulator::scaler::ScalerSpec;
 use crate::simulator::trace::{TraceConfig, TraceLog};
 use crate::simulator::{Policy, SimConfig};
 use crate::util::rng::fnv1a;
@@ -93,6 +94,10 @@ pub struct Ctx {
     /// (`--adversity-workers`; small so a single crash is a real fraction
     /// of capacity).
     pub adversity_workers: usize,
+    /// Cluster-scaling profile (`--scaler`, parsed at the CLI boundary
+    /// like `--faults`; `simulator::scaler::parse`). The default, `none`,
+    /// reproduces the fixed-cluster streams byte-for-byte.
+    pub scaler: ScalerSpec,
     /// Lifecycle-trace output request (`--trace`/`--trace-chrome`;
     /// DESIGN.md §Observability). `None` — the default — keeps tracing
     /// compiled in but dormant: byte-identical streams, zero extra RNG
@@ -118,6 +123,7 @@ impl Default for Ctx {
             keepalive_workers: 4,
             faults: FaultsSpec::default(),
             adversity_workers: 4,
+            scaler: ScalerSpec::default(),
             trace: None,
         }
     }
@@ -166,6 +172,12 @@ impl Ctx {
     /// adversity matrix uses per cell).
     pub fn with_faults(&self, faults: FaultsSpec) -> Ctx {
         Ctx { faults, ..self.clone() }
+    }
+
+    /// The same context under a different cluster-scaling profile (the
+    /// hook the replay experiment's scaler axis uses per cell).
+    pub fn with_scaler(&self, scaler: ScalerSpec) -> Ctx {
+        Ctx { scaler, ..self.clone() }
     }
 
     /// Build this context's scenario from the registry.
@@ -279,10 +291,11 @@ pub fn trace_paths(
         return (out.jsonl.clone(), out.chrome.clone());
     }
     let desc = format!(
-        "{name}@{rps}|scenario={}|keepalive={}|faults={}|workers={}|seed={}|sim_seed={}|dur={}",
+        "{name}@{rps}|scenario={}|keepalive={}|faults={}|scaler={}|workers={}|seed={}|sim_seed={}|dur={}",
         ctx.scenario,
         ctx.keepalive.label(),
         ctx.faults.label(),
+        ctx.scaler.label(),
         cfg.workers,
         ctx.seed,
         cfg.seed,
@@ -354,6 +367,7 @@ pub fn sim_config(ctx: &Ctx) -> SimConfig {
     let mut cfg = SimConfig { seed: ctx.seed ^ 0x51AB, ..Default::default() };
     ctx.keepalive.apply(&mut cfg);
     ctx.faults.apply(&mut cfg);
+    ctx.scaler.apply(&mut cfg);
     cfg.trace =
         ctx.trace.as_ref().map(|t| TraceConfig { sample_interval_s: t.interval_s });
     cfg
@@ -516,6 +530,21 @@ mod tests {
 
     fn cfg_default_faults() -> crate::simulator::faults::FaultsSpec {
         sim_config(&Ctx::default()).faults
+    }
+
+    #[test]
+    fn sim_config_applies_the_ctx_scaler_spec() {
+        use crate::simulator::scaler::{self, ScalerMode};
+        let base = Ctx::default();
+        let cfg = sim_config(&base);
+        assert_eq!(cfg.scaler.mode, ScalerMode::None, "default ctx scales nothing");
+        let cfg = sim_config(&base.with_scaler(scaler::parse("fifer:0.6").unwrap()));
+        assert_eq!(cfg.scaler.mode, ScalerMode::Fifer);
+        assert_eq!(cfg.scaler.headroom, Some(0.6));
+        // naming `none` explicitly is config-identical to the default
+        // (the byte-stream pin in test_determinism.rs rides on this)
+        let explicit = sim_config(&base.with_scaler(scaler::parse("none").unwrap()));
+        assert_eq!(explicit.scaler, sim_config(&Ctx::default()).scaler);
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod e2e;
 pub mod keepalive;
 pub mod overheads;
 pub mod overload;
+pub mod replay;
 pub mod scale;
 pub mod scenarios;
 pub mod sensitivity;
@@ -33,11 +34,12 @@ pub use common::Ctx;
 /// past-saturation sweep proving the admission invariant — DESIGN.md
 /// §Admission; `keepalive`, the keep-alive policy × workload matrix —
 /// DESIGN.md §KeepAlive; `adversity`, the policy × keep-alive ×
-/// fault-profile matrix — DESIGN.md §Faults).
+/// fault-profile matrix — DESIGN.md §Faults; `replay`, the real-trace
+/// policy × cluster-scaler grid — DESIGN.md §Scaler).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig6", "fig7a", "fig7b", "fig8", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "table1", "table2", "table3", "scenarios", "scale",
-    "overload", "keepalive", "adversity",
+    "overload", "keepalive", "adversity", "replay",
 ];
 
 /// Run one experiment by id.
@@ -65,6 +67,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "overload" => overload::overload(ctx),
         "keepalive" => keepalive::keepalive(ctx),
         "adversity" => adversity::adversity(ctx),
+        "replay" => replay::replay(ctx),
         "all" => {
             // Benchmark-style grids skipped under `all`: `scale` is a
             // wall-clock benchmark with its own pinned methodology
@@ -98,7 +101,8 @@ mod tests {
         // the paper's evaluation (figures 1-4, 6-14, tables 1-3) plus the
         // repo's own cross-scenario robustness matrix, the engine scale
         // benchmark, the past-saturation overload sweep, the keep-alive
-        // policy matrix, and the fault-injection adversity matrix
+        // policy matrix, the fault-injection adversity matrix, and the
+        // real-trace replay grid
         for id in super::EXPERIMENTS {
             assert!(
                 id.starts_with("fig")
@@ -108,9 +112,10 @@ mod tests {
                     || *id == "overload"
                     || *id == "keepalive"
                     || *id == "adversity"
+                    || *id == "replay"
             );
         }
-        assert_eq!(super::EXPERIMENTS.len(), 22);
+        assert_eq!(super::EXPERIMENTS.len(), 23);
     }
 
     #[test]

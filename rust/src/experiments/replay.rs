@@ -1,0 +1,415 @@
+//! `experiment replay` — real-trace replay made first-class: the
+//! streaming Azure-schema ingest (DESIGN.md §Trace ingest) characterized
+//! up front, then a policy × cluster-scaler grid replayed over the trace
+//! (DESIGN.md §Scaler), with the scaling timeline of one replicate
+//! exported alongside the cross-seed means.
+//!
+//! The question it answers: every other experiment drives synthetic
+//! arrival shapes on a fixed-size cluster. Shabari's deployment story is
+//! a real trace on an elastic pool — so this runner replays the
+//! configured trace (`--scenario trace-file:<path>`, or the embedded
+//! sample) and scores each policy twice: on the frozen cluster
+//! (`scaler:none`, byte-identical to the other experiments) and under
+//! Fifer-style reactive scaling (`scaler:fifer`), where capacity chases
+//! the trace's minute-scale bursts with a provisioning lag.
+//!
+//! Report sections (`out/replay.json`): `replay_mix` (functions, skew,
+//! burstiness, ingest residency), `rows` (the grid), `scaling_timeline`
+//! (timestamped provision/ready/drain events from replicate 0 of the
+//! first policy under `fifer`), `config`, `perf`.
+//!
+//! Emits `out/replay.json` (`make replay`; CI runs a shrunk smoke).
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::simulator::scaler;
+use crate::simulator::SimConfig;
+use crate::util::json::Json;
+use crate::util::table::{fnum, fpct, Table};
+use crate::workload::scenario::trace_file::{TraceFile, TOP_K};
+
+use super::common::{self, Ctx};
+use super::sweep::{self, Cell, CellOutcome};
+
+/// Policies on the replay grid: the full stack and the biggest static
+/// baseline (the paper's main foil) — the pair whose gap the scaler axis
+/// is expected to shrink.
+pub const REPLAY_POLICIES: &[&str] = &["shabari", "static-large"];
+
+/// The scaler axis: frozen cluster (control, byte-pinned) vs Fifer-style
+/// reactive whole-worker scaling.
+pub const REPLAY_SCALERS: &[&str] = &["none", "fifer"];
+
+/// Replay load: busy enough on the small base pool that trace bursts
+/// queue (giving the scaler a real signal), below the overload meltdown.
+pub const REPLAY_RPS: f64 = 12.0;
+
+/// Base pool for the replay grid: small, so one scaled-up worker is a
+/// real fraction of capacity and the `fifer` column visibly diverges.
+pub const REPLAY_WORKERS: usize = 4;
+
+/// How many retained functions the `replay_mix` section lists by name.
+const MIX_TOP_LISTED: usize = 8;
+
+/// The scenario this replay drives: the context's own trace when one was
+/// configured, otherwise the embedded sample trace.
+fn replay_scenario(ctx: &Ctx) -> String {
+    if ctx.scenario == "trace-file" || ctx.scenario.starts_with("trace-file:") {
+        ctx.scenario.clone()
+    } else {
+        "trace-file".to_string()
+    }
+}
+
+/// Parse the replay scenario's trace through the streaming ingest (the
+/// same parser the scenario registry uses — the memoized path cache makes
+/// this free for on-disk traces the grid also loads).
+fn load_trace(scenario: &str) -> Result<TraceFile> {
+    match scenario.strip_prefix("trace-file:") {
+        Some(path) => TraceFile::from_path(path),
+        None => TraceFile::sample(),
+    }
+}
+
+/// Cell label carrying the scaler axis (distinct labels salt replicate
+/// seeds, so `none` and `fifer` sample disjoint streams at replicates
+/// ≥ 1 while replicate 0 stays grid-wide paired).
+fn cell_label(scaler: &str) -> String {
+    format!("scaler:{scaler}")
+}
+
+/// Recover the scaler name from a cell label.
+fn cell_scaler(cell: &Cell) -> &str {
+    cell.label.strip_prefix("scaler:").unwrap_or(&cell.label)
+}
+
+/// Run the policy × scaler grid over the replay trace; outcome index is
+/// `pi * REPLAY_SCALERS.len() + si`. Every replicate runs
+/// `Cluster::check_invariants()` — the release-mode audit covers scaled-up
+/// extension workers exactly like base ones.
+pub fn run_replay(ctx: &Ctx, rps: f64) -> Result<Vec<CellOutcome<RunMetrics>>> {
+    let scenario = replay_scenario(ctx);
+    let cells: Vec<Cell> = REPLAY_POLICIES
+        .iter()
+        .flat_map(|p| {
+            REPLAY_SCALERS
+                .iter()
+                .map(move |s| Cell::labeled(p, rps, &cell_label(s), REPLAY_WORKERS as f64))
+        })
+        .collect();
+    sweep::run_cells(&cells, ctx.seed, ctx.seeds, ctx.jobs, |cell, seed| {
+        let spec = scaler::parse(cell_scaler(cell))?;
+        let cctx = ctx.with_seed(seed).with_scenario(&scenario).with_scaler(spec);
+        let workload = cctx.workload();
+        let cfg = SimConfig { workers: REPLAY_WORKERS, ..common::sim_config(&cctx) };
+        let (res, metrics) = common::run_one(&cell.policy, &cctx, &workload, cell.rps, &cfg)?;
+        res.cluster.check_invariants();
+        Ok(metrics)
+    })
+}
+
+/// The `replay_mix` characterization: what the ingest retained and how
+/// bursty / skewed the replayed trace is. Pure function of the parsed
+/// trace — no RNG, no simulation.
+fn mix_json(trace: &TraceFile) -> Json {
+    let ingest = trace.ingest();
+    let per_minute = trace.per_minute();
+    let total: u64 = per_minute.iter().sum();
+    let mean = total as f64 / per_minute.len().max(1) as f64;
+    let max = per_minute.iter().copied().max().unwrap_or(0) as f64;
+    let top_share = |k: usize| -> f64 {
+        let head: u64 = ingest.top.iter().take(k).map(|p| p.total).sum();
+        if total > 0 {
+            100.0 * head as f64 / total as f64
+        } else {
+            0.0
+        }
+    };
+    Json::obj(vec![
+        ("minutes", Json::Num(ingest.minutes as f64)),
+        ("rows", Json::Num(ingest.rows as f64)),
+        ("functions_retained", Json::Num(ingest.top.len() as f64)),
+        ("tail_rows", Json::Num(ingest.tail_rows as f64)),
+        ("top_k", Json::Num(TOP_K as f64)),
+        ("peak_resident_profiles", Json::Num(ingest.peak_resident as f64)),
+        ("invocations_total", Json::Num(total as f64)),
+        ("tail_invocations", Json::Num(ingest.tail_total() as f64)),
+        ("per_minute_mean", Json::Num(mean)),
+        ("per_minute_max", Json::Num(max)),
+        // minute-scale burstiness: how far the worst minute sits above
+        // the average (1.0 = perfectly flat)
+        ("burstiness_max_over_mean", Json::Num(if mean > 0.0 { max / mean } else { 0.0 })),
+        ("top1_share_pct", Json::Num(top_share(1))),
+        ("top8_share_pct", Json::Num(top_share(8))),
+        (
+            "top",
+            Json::Arr(
+                ingest
+                    .top
+                    .iter()
+                    .take(MIX_TOP_LISTED)
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::Str(p.name.clone())),
+                            ("total", Json::Num(p.total as f64)),
+                            (
+                                "share_pct",
+                                Json::Num(if total > 0 {
+                                    100.0 * p.total as f64 / total as f64
+                                } else {
+                                    0.0
+                                }),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// One extra replicate-0 run of the first policy under `fifer`, kept for
+/// its event-level scaling timeline (the grid only keeps aggregated
+/// metrics). Same seed and config as the grid's replicate 0, so the
+/// timeline matches the reported cell.
+fn timeline_json(ctx: &Ctx, scenario: &str, rps: f64) -> Result<Json> {
+    let spec = scaler::parse("fifer")?;
+    let cctx = ctx.with_scenario(scenario).with_scaler(spec);
+    let workload = cctx.workload();
+    let cfg = SimConfig { workers: REPLAY_WORKERS, ..common::sim_config(&cctx) };
+    let (res, _) = common::run_one(REPLAY_POLICIES[0], &cctx, &workload, rps, &cfg)?;
+    Ok(Json::obj(vec![
+        ("policy", Json::Str(REPLAY_POLICIES[0].to_string())),
+        ("scaler", Json::Str(spec.label())),
+        ("base_workers", Json::Num(REPLAY_WORKERS as f64)),
+        ("scale_ups", Json::Num(res.scale_ups as f64)),
+        ("scale_downs", Json::Num(res.scale_downs as f64)),
+        ("peak_up_workers", Json::Num(res.peak_up_workers as f64)),
+        (
+            "events",
+            Json::Arr(
+                res.scaling
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("at_s", Json::Num(e.at)),
+                            ("worker", Json::Num(e.worker as f64)),
+                            ("action", Json::Str(e.action.label().to_string())),
+                            ("up_workers", Json::Num(e.up_workers as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}
+
+pub fn replay(ctx: &Ctx) -> Result<()> {
+    // lint:allow(D002): host wall time for the runner's wall-clock report line only
+    let t0 = std::time::Instant::now();
+    let scenario = replay_scenario(ctx);
+    let trace = load_trace(&scenario)?;
+    let outcomes = run_replay(ctx, REPLAY_RPS)?;
+    let timeline = timeline_json(ctx, &scenario, REPLAY_RPS)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "(replay: scenario {scenario}, {} cells x {} seed(s) on {} job(s), {wall:.1}s wall; \
+         cluster invariants held on every replicate)",
+        outcomes.len(),
+        ctx.seeds,
+        ctx.jobs
+    );
+
+    let ingest = trace.ingest();
+    println!(
+        "(trace mix: {} rows -> {} retained + {} tail over {} minutes; \
+         peak resident profiles {} <= top-K+1 = {})",
+        ingest.rows,
+        ingest.top.len(),
+        ingest.tail_rows,
+        ingest.minutes,
+        ingest.peak_resident,
+        TOP_K + 1
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "replay: {} base workers @ {} rps, {}s trace (cross-seed means; \
+             peak = largest serving pool any replicate reached)",
+            REPLAY_WORKERS, REPLAY_RPS, ctx.duration_s
+        ),
+        &[
+            "system",
+            "scaler",
+            "SLO viol [95% CI]",
+            "cold",
+            "queue p99 s",
+            "scale-ups",
+            "scale-downs",
+            "peak workers",
+        ],
+    );
+    for out in &outcomes {
+        let m = out.mean_metrics();
+        t.row(vec![
+            out.cell.policy.clone(),
+            cell_scaler(&out.cell).to_string(),
+            out.stat(|m| m.slo_violation_pct).fmt_ci(1),
+            fpct(m.cold_start_pct),
+            fnum(m.queue_wait.p99, 2),
+            m.scale_up_events.to_string(),
+            m.scale_down_events.to_string(),
+            m.peak_up_workers.to_string(),
+        ]);
+    }
+    t.note(
+        "expected shape: scaler:none reproduces the fixed-cluster streams byte-for-byte; \
+         fifer trades extra (cold) capacity during trace bursts for lower queueing, \
+         and drains back to the base pool between them",
+    );
+    t.print();
+
+    let dump = Json::obj(vec![
+        ("perf", common::perf_json(wall, &outcomes)),
+        (
+            "config",
+            Json::obj(vec![
+                ("scenario", Json::Str(scenario.clone())),
+                ("base_workers", Json::Num(REPLAY_WORKERS as f64)),
+                ("rps", Json::Num(REPLAY_RPS)),
+                ("duration_s", Json::Num(ctx.duration_s)),
+                ("seeds", Json::Num(ctx.seeds as f64)),
+                ("jobs", Json::Num(ctx.jobs as f64)),
+                ("seed", Json::Num(ctx.seed as f64)),
+            ]),
+        ),
+        ("replay_mix", mix_json(&trace)),
+        ("scaling_timeline", timeline),
+        (
+            "rows",
+            Json::Arr(
+                outcomes
+                    .iter()
+                    .map(|out| {
+                        let m = out.mean_metrics();
+                        let viol = out.stat(|m| m.slo_violation_pct);
+                        Json::obj(vec![
+                            ("policy", Json::Str(out.cell.policy.clone())),
+                            ("scaler", Json::Str(cell_scaler(&out.cell).to_string())),
+                            ("slo_violation_pct_mean", Json::Num(viol.mean)),
+                            ("slo_violation_pct_ci95_lo", Json::Num(viol.ci95.0)),
+                            ("slo_violation_pct_ci95_hi", Json::Num(viol.ci95.1)),
+                            ("cold_start_pct", Json::Num(m.cold_start_pct)),
+                            ("queue_p99_s", Json::Num(m.queue_wait.p99)),
+                            ("queued_pct", Json::Num(m.queued_pct)),
+                            ("mean_e2e_s", Json::Num(m.mean_e2e_s)),
+                            ("scale_up_events", Json::Num(m.scale_up_events as f64)),
+                            ("scale_down_events", Json::Num(m.scale_down_events as f64)),
+                            ("peak_up_workers", Json::Num(m.peak_up_workers as f64)),
+                            ("idle_container_s", Json::Num(m.idle_container_s)),
+                            ("peak_alloc_vcpus", Json::Num(m.peak_alloc_vcpus)),
+                            ("invocations", Json::Num(m.invocations as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::create_dir_all("out").ok();
+    match std::fs::write("out/replay.json", dump.to_pretty()) {
+        Ok(()) => println!("(dumped out/replay.json)"),
+        Err(e) => eprintln!("warning: could not write out/replay.json: {e}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_labels_round_trip_and_salt_replicate_seeds() {
+        let c = Cell::labeled("shabari", REPLAY_RPS, &cell_label("fifer"), 4.0);
+        assert_eq!(cell_scaler(&c), "fifer");
+        // distinct scaler modes occupy distinct seed streams at rep >= 1,
+        // but replicate 0 stays paired for the byte-pin comparison
+        let a = Cell::labeled("shabari", REPLAY_RPS, &cell_label("none"), 4.0);
+        let b = Cell::labeled("shabari", REPLAY_RPS, &cell_label("fifer"), 4.0);
+        assert_ne!(sweep::cell_seed(42, &a, 1), sweep::cell_seed(42, &b, 1));
+        assert_eq!(sweep::cell_seed(42, &a, 0), sweep::cell_seed(42, &b, 0));
+    }
+
+    #[test]
+    fn replay_scenario_keeps_trace_files_and_overrides_everything_else() {
+        let ctx = Ctx::default();
+        assert_eq!(replay_scenario(&ctx), "trace-file");
+        assert_eq!(replay_scenario(&ctx.with_scenario("trace-file")), "trace-file");
+        assert_eq!(
+            replay_scenario(&ctx.with_scenario("trace-file:/tmp/azure.csv")),
+            "trace-file:/tmp/azure.csv"
+        );
+        assert_eq!(replay_scenario(&ctx.with_scenario("diurnal")), "trace-file");
+    }
+
+    #[test]
+    fn mix_section_characterizes_the_sample_trace() {
+        let trace = TraceFile::sample().unwrap();
+        let text = mix_json(&trace).to_pretty();
+        // the sample: 8 rows over 10 minutes, all retained, no tail, and
+        // a visible burst (minute 5 carries ~2.6x the mean)
+        assert!(text.contains("\"minutes\": 10"), "{text}");
+        assert!(text.contains("\"rows\": 8"), "{text}");
+        assert!(text.contains("\"functions_retained\": 8"), "{text}");
+        assert!(text.contains("\"tail_invocations\": 0"), "{text}");
+        let mix = mix_json(&trace);
+        let burst = match mix.get("burstiness_max_over_mean") {
+            Some(Json::Num(n)) => *n,
+            other => panic!("burstiness missing or non-numeric: {other:?}"),
+        };
+        assert!(burst > 1.5, "sample trace should read bursty, got {burst}");
+    }
+
+    /// Tiny-parameter smoke mirroring the CI job: the grid covers every
+    /// (policy, scaler) pair, is deterministic across thread counts (the
+    /// ISSUE's scaler determinism pin), and the frozen-cluster control
+    /// column reports zero scaling activity at exactly the base pool.
+    #[test]
+    fn replay_grid_covers_axes_and_is_jobs_invariant() {
+        let ctx = Ctx { duration_s: 30.0, seeds: 1, ..Default::default() };
+        let seq = run_replay(&Ctx { jobs: 1, ..ctx.clone() }, REPLAY_RPS).unwrap();
+        let par = run_replay(&Ctx { jobs: 4, ..ctx }, REPLAY_RPS).unwrap();
+        assert_eq!(seq.len(), REPLAY_POLICIES.len() * REPLAY_SCALERS.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.cell.id(), b.cell.id());
+            let (ma, mb) = (a.mean_metrics(), b.mean_metrics());
+            assert_eq!(ma.invocations, mb.invocations);
+            assert_eq!(
+                ma.slo_violation_pct.to_bits(),
+                mb.slo_violation_pct.to_bits(),
+                "{} diverged across --jobs",
+                a.cell.id()
+            );
+            assert_eq!(ma.scale_up_events, mb.scale_up_events);
+            assert_eq!(ma.scale_down_events, mb.scale_down_events);
+            assert_eq!(ma.peak_up_workers, mb.peak_up_workers);
+            match cell_scaler(&a.cell) {
+                "none" => {
+                    assert_eq!(ma.scale_up_events, 0, "{}", a.cell.id());
+                    assert_eq!(ma.scale_down_events, 0, "{}", a.cell.id());
+                    assert_eq!(ma.peak_up_workers, REPLAY_WORKERS, "{}", a.cell.id());
+                }
+                "fifer" => {
+                    assert!(ma.peak_up_workers >= REPLAY_WORKERS, "{}", a.cell.id());
+                    assert!(
+                        ma.peak_up_workers <= REPLAY_WORKERS * scaler::MAX_SCALE_FACTOR,
+                        "{}: peak {} above the scale cap",
+                        a.cell.id(),
+                        ma.peak_up_workers
+                    );
+                }
+                other => panic!("unregistered scaler {other}"),
+            }
+        }
+    }
+}

@@ -75,6 +75,14 @@ pub struct RunMetrics {
     pub requeued_on_crash: u64,
     /// Slowest configured worker speed factor (1.0 = no stragglers).
     pub straggler_slowdown: f64,
+    /// Extension-worker provisions the cluster scaler started
+    /// (DESIGN.md §Scaler; 0 when aggregated from bare records).
+    pub scale_up_events: u64,
+    /// Idle extension workers the scaler drained back out.
+    pub scale_down_events: u64,
+    /// Most workers ever serving at once (the configured base count
+    /// under `scaler:none`; 0 when aggregated from bare records).
+    pub peak_up_workers: usize,
     /// Discrete events the engine processed (0 when aggregated from bare
     /// records). With the harness's wall-clock this yields the
     /// self-throughput numbers (`sim_inv_per_s`, `sim_events_per_s`)
@@ -145,6 +153,15 @@ impl RunMetrics {
                 .iter()
                 .map(|r| r.straggler_slowdown)
                 .fold(1.0, f64::min),
+            scale_up_events: (runs.iter().map(|r| r.scale_up_events).sum::<u64>() as f64 / n)
+                .round() as u64,
+            scale_down_events: (runs.iter().map(|r| r.scale_down_events).sum::<u64>() as f64
+                / n)
+                .round() as u64,
+            // The peak takes the max: it witnesses the largest cluster any
+            // replicate ever needed, which an average would understate.
+            // lint:reducer(D007, peak_up_workers): max-reduced — reports the largest serving pool any replicate reached
+            peak_up_workers: runs.iter().map(|r| r.peak_up_workers).max().unwrap_or(0),
             sim_events: (runs.iter().map(|r| r.sim_events).sum::<u64>() as f64 / n).round()
                 as u64,
         }
@@ -209,6 +226,9 @@ pub fn aggregate(policy: &str, records: &[InvocationRecord]) -> RunMetrics {
         worker_crashes: 0,
         requeued_on_crash: 0,
         straggler_slowdown: 1.0,
+        scale_up_events: 0,
+        scale_down_events: 0,
+        peak_up_workers: 0,
         sim_events: 0,
     }
 }
@@ -230,6 +250,9 @@ pub fn from_result(policy: &str, res: &SimResult) -> RunMetrics {
     m.worker_crashes = res.worker_crashes;
     m.requeued_on_crash = res.requeued_on_crash;
     m.straggler_slowdown = res.straggler_slowdown;
+    m.scale_up_events = res.scale_ups;
+    m.scale_down_events = res.scale_downs;
+    m.peak_up_workers = res.peak_up_workers;
     m.sim_events = res.events_processed;
     m
 }
@@ -415,6 +438,25 @@ mod tests {
         assert_eq!(m.requeued_on_crash, 1);
         assert!((m.straggler_slowdown - 0.5).abs() < 1e-12, "slowdown reports the min");
         assert!((m.failed_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_metrics_average_and_peak_max() {
+        let mut a = aggregate("x", &[rec(1.0, 2.0, false, Verdict::Completed)]);
+        // bare-record aggregation carries no scaler counters
+        assert_eq!(a.scale_up_events + a.scale_down_events, 0);
+        assert_eq!(a.peak_up_workers, 0);
+        a.scale_up_events = 4;
+        a.scale_down_events = 2;
+        a.peak_up_workers = 20;
+        let mut b = a.clone();
+        b.scale_up_events = 2;
+        b.scale_down_events = 0;
+        b.peak_up_workers = 18;
+        let m = RunMetrics::mean_of(&[a, b]);
+        assert_eq!(m.scale_up_events, 3);
+        assert_eq!(m.scale_down_events, 1);
+        assert_eq!(m.peak_up_workers, 20, "peak pool size reports the max");
     }
 
     #[test]

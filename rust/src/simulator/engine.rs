@@ -28,8 +28,9 @@ use crate::util::rng::Rng;
 use super::container::Container;
 use super::faults::FaultPlan;
 use super::keepalive::{self, KeepAlivePolicy};
+use super::scaler::{ClusterScaler, ScaleAction, ScaleDecision, ScaleEvent, SCALER_TICK_S};
 use super::trace::{TimelineSample, TraceEventKind, TraceLog};
-use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec, QueuedAdmission};
+use super::worker::{ActiveInv, Cluster, Phase, PhaseSpec, QueuedAdmission, Worker};
 use super::{
     ContainerChoice, Decision, InvocationRecord, Policy, Request, SimConfig, SimTime, Verdict,
 };
@@ -59,6 +60,13 @@ enum EventKind {
     WorkerCrash { worker: usize },
     /// The crashed worker comes back empty after its downtime.
     WorkerRestart { worker: usize },
+    /// Cluster-scaler cadence (DESIGN.md §Scaler): read queue/utilization
+    /// signals and maybe provision or drain an extension worker. Never
+    /// pushed under `scaler:none`.
+    ScalerTick,
+    /// A provisioned extension worker finished booting and joins the
+    /// serving pool.
+    ScalerReady { worker: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -196,6 +204,16 @@ pub struct SimResult {
     pub requeued_on_crash: u64,
     /// Slowest configured worker speed factor (1.0 without stragglers).
     pub straggler_slowdown: f64,
+    /// Cluster-scaling timeline (DESIGN.md §Scaler), in event order —
+    /// empty under `scaler:none`.
+    pub scaling: Vec<ScaleEvent>,
+    /// Extension-worker provisions started (subset reach `Ready`).
+    pub scale_ups: u64,
+    /// Idle extension workers drained back out of the pool.
+    pub scale_downs: u64,
+    /// Most workers ever serving at once (the configured base count
+    /// under `scaler:none`).
+    pub peak_up_workers: usize,
     /// Heap events processed over the run — with wall-clock time at the
     /// caller this gives the engine's self-throughput (`sim_events_per_s`).
     pub events_processed: u64,
@@ -260,6 +278,10 @@ pub struct Engine<'p, P: Policy> {
     ready_miss: u64,
     /// Materialized fault schedule (empty under `faults:none`).
     faults: FaultPlan,
+    /// Live cluster-scaler state (DESIGN.md §Scaler); `None` under
+    /// `scaler:none` — zero ticks pushed, zero draws, byte-identical
+    /// streams to a scaler-free build.
+    scaler: Option<ClusterScaler>,
     /// `Starting` containers torn down by a crash: their in-flight
     /// `ContainerReady` events are void, not `ready_miss` tripwires.
     crashed_starting: BTreeSet<u64>,
@@ -307,6 +329,9 @@ impl<'p, P: Policy> Engine<'p, P> {
         // invocation can still be in flight.
         let horizon = requests.last().map(|r| r.arrival).unwrap_or(0.0) + cfg.timeout_s;
         let faults = cfg.faults.plan(cfg.workers, horizon, cfg.seed);
+        // Scaler state off its own salted stream (DESIGN.md §Scaler) —
+        // `scaler:none` builds nothing: zero draws, zero events.
+        let scaler = cfg.scaler.build(cfg.workers, horizon, cfg.seed);
         for (w, worker) in cluster.workers.iter_mut().enumerate() {
             worker.speed = faults.speed[w];
             let scale = faults.capacity_scale[w];
@@ -329,6 +354,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             meta.insert("keep_alive_s".to_string(), format!("{}", cfg.keep_alive_s));
             meta.insert("faults".to_string(), cfg.faults.label());
             meta.insert("fault_plan".to_string(), faults.describe());
+            meta.insert("scaler".to_string(), cfg.scaler.label());
             meta.insert("workers".to_string(), cfg.workers.to_string());
             meta.insert("seed".to_string(), cfg.seed.to_string());
             meta.insert("requests".to_string(), requests.len().to_string());
@@ -359,6 +385,7 @@ impl<'p, P: Policy> Engine<'p, P> {
             idle_container_s: 0.0,
             ready_miss: 0,
             faults,
+            scaler,
             crashed_starting: BTreeSet::new(),
             worker_crashes: 0,
             requeued_on_crash: 0,
@@ -418,6 +445,13 @@ impl<'p, P: Policy> Engine<'p, P> {
             let at = self.requests[i].arrival;
             self.push(at, EventKind::Arrival(i));
         }
+        // Scaler cadence last (DESIGN.md §Scaler): the tick chain carries
+        // itself forward from inside `on_scaler_tick`. Under `scaler:none`
+        // nothing is pushed here or later, so event sequence numbers stay
+        // byte-identical to a scaler-free build.
+        if self.scaler.is_some() && !self.requests.is_empty() {
+            self.push(SCALER_TICK_S, EventKind::ScalerTick);
+        }
         while let Some(ev) = self.events.pop() {
             debug_assert!(ev.at >= self.now - 1e-9, "time went backwards");
             self.events_processed += 1;
@@ -442,6 +476,8 @@ impl<'p, P: Policy> Engine<'p, P> {
                 }
                 EventKind::WorkerCrash { worker } => self.on_worker_crash(worker),
                 EventKind::WorkerRestart { worker } => self.on_worker_restart(worker),
+                EventKind::ScalerTick => self.on_scaler_tick(),
+                EventKind::ScalerReady { worker } => self.on_scaler_ready(worker),
             }
             // Admission is an invariant at *every* event, not just at the
             // end of the run. Cheap (two float compares per worker); the
@@ -473,6 +509,10 @@ impl<'p, P: Policy> Engine<'p, P> {
                 t.close(now, &self.cluster);
             }
         }
+        let (scaling, scale_ups, scale_downs, peak_up_workers) = match self.scaler {
+            Some(s) => (s.scaling, s.scale_ups, s.scale_downs, s.peak_up_workers),
+            None => (Vec::new(), 0, 0, self.cfg.workers),
+        };
         SimResult {
             records: self.records,
             cluster: self.cluster,
@@ -489,6 +529,10 @@ impl<'p, P: Policy> Engine<'p, P> {
             worker_crashes: self.worker_crashes,
             requeued_on_crash: self.requeued_on_crash,
             straggler_slowdown: self.faults.slowest_speed(),
+            scaling,
+            scale_ups,
+            scale_downs,
+            peak_up_workers,
             events_processed: self.events_processed,
             trace: self.trace,
         }
@@ -515,6 +559,165 @@ impl<'p, P: Policy> Engine<'p, P> {
                 w.mem_gb * 1024.0,
                 self.now
             );
+        }
+    }
+
+    // -- cluster scaling (DESIGN.md §Scaler) ----------------------------
+
+    /// One scaler cadence tick: read queue depth and vCPU utilization
+    /// over the *serving* pool (down workers — crashed, provisioning, or
+    /// drained — serve nothing and must not dilute the signals), act on
+    /// the decision, and reschedule the next tick while the horizon
+    /// still has work in flight.
+    fn on_scaler_tick(&mut self) {
+        let Some(s) = self.scaler.as_mut() else {
+            return;
+        };
+        let mut queued = 0usize;
+        let mut allocated = 0.0;
+        let mut limit = 0.0;
+        let mut up = 0usize;
+        for w in &self.cluster.workers {
+            if w.down {
+                continue;
+            }
+            up += 1;
+            queued += w.admission_queue_len();
+            allocated += w.allocated_vcpus;
+            limit += w.sched_vcpu_limit;
+        }
+        // A fully-down cluster reads as saturated: provisioning fresh
+        // capacity is exactly the right reaction to zero serving limit.
+        let utilization = if limit > 0.0 { allocated / limit } else { 1.0 };
+        s.peak_up_workers = s.peak_up_workers.max(up);
+        let decision = s.evaluate(queued, utilization, up);
+        let horizon = s.horizon_s;
+        match decision {
+            ScaleDecision::Up => self.scale_up(up),
+            ScaleDecision::Down => self.scale_down(up),
+            ScaleDecision::Hold => {}
+        }
+        if self.now + SCALER_TICK_S <= horizon {
+            self.push(self.now + SCALER_TICK_S, EventKind::ScalerTick);
+        }
+    }
+
+    /// Provision one extension worker: reuse the lowest-id drained
+    /// extension slot if one exists (stable worker ids keep the PR 3
+    /// worker-id tie-breaks meaningful across scale cycles), otherwise
+    /// append a fresh worker in the `down` state. It starts serving when
+    /// its `ScalerReady` fires after a boot delay drawn from the
+    /// scaler's own RNG stream.
+    fn scale_up(&mut self, up_now: usize) {
+        let Some(s) = self.scaler.as_ref() else {
+            return;
+        };
+        let base = s.base_workers;
+        let reuse = self
+            .cluster
+            .workers
+            .iter()
+            .skip(base)
+            .find(|w| w.down && !s.provisioning.contains(&w.id))
+            .map(|w| w.id);
+        let idle_reserves = self.ka.idle_reserves();
+        let worker = match reuse {
+            Some(id) => id,
+            None => {
+                let id = self.cluster.workers.len();
+                // Extension workers join at the *nominal* shape: the
+                // fault plan's straggler/hetero factors cover only the
+                // base ids it was materialized for.
+                let mut w = Worker::with_idle_reserves(id, &self.cfg, idle_reserves);
+                w.down = true;
+                self.cluster.workers.push(w);
+                id
+            }
+        };
+        let now = self.now;
+        let Some(s) = self.scaler.as_mut() else {
+            return;
+        };
+        s.provisioning.insert(worker);
+        s.scale_ups += 1;
+        s.scaling.push(ScaleEvent {
+            at: now,
+            worker,
+            action: ScaleAction::Provision,
+            up_workers: up_now,
+        });
+        let delay = s.boot_delay();
+        self.push(now + delay, EventKind::ScalerReady { worker });
+    }
+
+    /// A provisioned extension worker finished booting: it comes up
+    /// empty and serves from the next decision on. Work a policy routed
+    /// at it while it was still down parked on its FIFO queue and
+    /// drains now (same contract as a worker restart).
+    fn on_scaler_ready(&mut self, worker: usize) {
+        let now = self.now;
+        let Some(s) = self.scaler.as_mut() else {
+            return;
+        };
+        if !s.provisioning.remove(&worker) {
+            return; // defensive: never scheduled twice today
+        }
+        {
+            let w = &mut self.cluster.workers[worker];
+            debug_assert!(w.down, "scaler-ready worker was already up");
+            w.down = false;
+            // No active work existed while down; this just moves the
+            // processor-sharing clock past the provisioning window.
+            w.advance(now);
+        }
+        let up = self.cluster.workers.iter().filter(|w| !w.down).count();
+        s.peak_up_workers = s.peak_up_workers.max(up);
+        s.scaling.push(ScaleEvent { at: now, worker, action: ScaleAction::Ready, up_workers: up });
+        self.drain_admission(worker);
+    }
+
+    /// Drain one idle extension worker — highest id first (LIFO keeps
+    /// the pool compact and the choice deterministic), and only one
+    /// candidate with no active work, no queued admissions, and nothing
+    /// but warm-idle containers. Its warm pool is evicted in container-id
+    /// order (pressure-style: before the TTL deadline, to free capacity
+    /// — here the whole worker), then the worker leaves the serving pool
+    /// the same way a crashed worker does: every capacity predicate
+    /// answers false until the scaler re-provisions the slot.
+    fn scale_down(&mut self, up_now: usize) {
+        let Some(s) = self.scaler.as_ref() else {
+            return;
+        };
+        let target = self
+            .cluster
+            .workers
+            .iter()
+            .skip(s.base_workers)
+            .rev()
+            .find(|w| {
+                !w.down
+                    && w.active.is_empty()
+                    && w.admission_queue_len() == 0
+                    && w.containers.values().all(|c| c.is_warm_idle())
+            })
+            .map(|w| w.id);
+        let Some(worker) = target else {
+            return;
+        };
+        let cids: Vec<u64> = self.cluster.workers[worker].containers.keys().copied().collect();
+        for cid in cids {
+            self.evict_container(worker, cid, EvictReason::Pressure);
+        }
+        let now = self.now;
+        self.cluster.workers[worker].down = true;
+        if let Some(s) = self.scaler.as_mut() {
+            s.scale_downs += 1;
+            s.scaling.push(ScaleEvent {
+                at: now,
+                worker,
+                action: ScaleAction::Drain,
+                up_workers: up_now.saturating_sub(1),
+            });
         }
     }
 

@@ -42,6 +42,7 @@ pub mod container;
 pub mod engine;
 pub mod faults;
 pub mod keepalive;
+pub mod scaler;
 pub mod trace;
 pub mod worker;
 
@@ -208,6 +209,10 @@ pub struct SimConfig {
     /// default `none` adds zero events and zero RNG draws — byte-identical
     /// to the pre-fault engine.
     pub faults: faults::FaultsSpec,
+    /// Which cluster-scaling profile the run uses (DESIGN.md §Scaler).
+    /// The default `none` adds zero events and zero RNG draws —
+    /// byte-identical to the fixed-size cluster.
+    pub scaler: scaler::ScalerSpec,
     /// Platform max invocation walltime.
     pub timeout_s: f64,
     /// RNG seed for execution noise / cold-start draws.
@@ -231,6 +236,7 @@ impl Default for SimConfig {
             keep_alive_s: 600.0,
             keepalive: keepalive::KeepAliveMode::Fixed,
             faults: faults::FaultsSpec::default(),
+            scaler: scaler::ScalerSpec::default(),
             timeout_s: 300.0,
             seed: 0xC0FFEE,
             trace: None,

@@ -1,0 +1,347 @@
+//! Fifer-style proactive cluster autoscaling (ISSUE 10): an orthogonal
+//! capacity axis next to scheduling (`Policy`), retention
+//! (`KeepAlivePolicy`), and cluster dynamics (`FaultsSpec`). Fifer
+//! (Gunasekaran et al., PAPERS.md) shows that surviving hour-long
+//! replays of real traces at realistic rates needs a cluster that grows
+//! and shrinks with load, not a fixed worker count; this module adds an
+//! **extension pool** of workers above the configured base that the
+//! engine provisions and drains on queue-depth/utilization signals.
+//!
+//! Determinism contract (DESIGN.md §Scaler):
+//!
+//! * the scaler evaluates on a fixed cadence ([`SCALER_TICK_S`]) as
+//!   ordinary timestamped heap events — same-timestamp ties resolve by
+//!   push order (the PR 3 sequence-number contract), and every scaling
+//!   action names its worker id;
+//! * provisioning delays come from one `seed ^ SALT_SCALER` stream,
+//!   disjoint from the engine/trace/policy/fault streams, so enabling
+//!   the scaler never perturbs a pre-existing draw;
+//! * `scaler:none` (the default) builds no state: zero extra events,
+//!   zero extra draws, byte-identical streams to a build without this
+//!   module (pinned in `rust/tests/test_determinism.rs`).
+//!
+//! Divergence from Fifer: Fifer scales *per-function container pools*
+//! behind a load balancer with an LSTM load predictor; here the unit is
+//! the whole worker (the simulator's capacity grain), the signal is the
+//! current queue/utilization reading (reactive, no predictor), and the
+//! base pool is never drained — so `--scaler fifer` captures Fifer's
+//! headroom-driven proactive growth, not its ML forecasting.
+//!
+//! Parsed from `--scaler none|fifer[:headroom]` exactly like `--faults`
+//! (registry in [`SCALERS`], parser in [`parse`]).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::SimConfig;
+
+/// Seconds between scaler evaluations of the cluster signals.
+pub const SCALER_TICK_S: f64 = 5.0;
+
+/// Default utilization target: scale up when allocated vCPUs exceed this
+/// fraction of the serving pool's scheduler limit (Fifer's headroom
+/// knob). Override with `fifer:<headroom>`.
+pub const DEFAULT_HEADROOM: f64 = 0.7;
+
+/// Scale-down hysteresis: drain only when utilization falls below
+/// `headroom * DOWN_FRACTION` (and nothing is queued or provisioning),
+/// so the pool does not thrash around the threshold.
+pub const DOWN_FRACTION: f64 = 0.5;
+
+/// Extension-pool cap: the cluster never grows past this multiple of
+/// the configured base worker count.
+pub const MAX_SCALE_FACTOR: usize = 4;
+
+/// Mean worker provisioning (boot) delay in seconds — the cost Fifer's
+/// proactive growth exists to hide (VM/worker bring-up is seconds-to-
+/// minutes in the serverless fleets the paper measures).
+pub const BOOT_MEAN_S: f64 = 8.0;
+
+/// Lognormal sigma of the provisioning delay.
+pub const BOOT_SIGMA: f64 = 0.35;
+
+/// Salt for the scaler's provisioning-delay stream, decorrelated from
+/// the engine/workload/fault streams off the same seed (lint D006
+/// registry; pairwise-distinct from every other salt).
+pub const SALT_SCALER: u64 = 0x5CA1_E550;
+
+/// Which scaling profile a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScalerMode {
+    /// No scaling — the fixed-size pre-ISSUE-10 cluster.
+    #[default]
+    None,
+    /// Fifer-style reactive headroom scaling of an extension pool.
+    Fifer,
+}
+
+/// Parsed `--scaler` selection: mode plus its optional headroom target.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ScalerSpec {
+    pub mode: ScalerMode,
+    /// Utilization threshold for scale-up (`DEFAULT_HEADROOM` if unset).
+    pub headroom: Option<f64>,
+}
+
+/// One scaling action in the run's timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// An extension worker began provisioning (down until `Ready`).
+    Provision,
+    /// The provisioned worker finished booting and joined the pool.
+    Ready,
+    /// An idle extension worker was drained out of the pool.
+    Drain,
+}
+
+impl ScaleAction {
+    /// Stable lowercase label for reports/JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleAction::Provision => "provision",
+            ScaleAction::Ready => "ready",
+            ScaleAction::Drain => "drain",
+        }
+    }
+}
+
+/// One entry of the scaling timeline (`SimResult::scaling`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    pub at: f64,
+    pub worker: usize,
+    pub action: ScaleAction,
+    /// Serving (up) workers after this action took effect.
+    pub up_workers: usize,
+}
+
+/// What the scaler wants to do at one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    Up,
+    Down,
+}
+
+/// Live scaler state for one run, built by [`ScalerSpec::build`]
+/// (`None` under `scaler:none`: zero events, zero draws).
+#[derive(Debug)]
+pub struct ClusterScaler {
+    rng: Rng,
+    pub headroom: f64,
+    /// Workers `0..base_workers` are the configured pool — never drained.
+    pub base_workers: usize,
+    /// Hard cap on the total pool (base × [`MAX_SCALE_FACTOR`]).
+    pub max_workers: usize,
+    /// Last instant the tick cadence covers (last arrival + timeout).
+    pub horizon_s: f64,
+    /// Extension workers currently provisioning (down until their
+    /// `ScalerReady` fires).
+    pub provisioning: std::collections::BTreeSet<usize>,
+    /// The scaling timeline, in event order.
+    pub scaling: Vec<ScaleEvent>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Most workers ever serving at once.
+    pub peak_up_workers: usize,
+}
+
+impl ClusterScaler {
+    /// Fifer-style signals over the *serving* pool: grow when demand is
+    /// parked on admission queues or utilization runs past the headroom
+    /// target (and the cap allows); shrink — with hysteresis, and never
+    /// while a boot is in flight — when the queue is empty and
+    /// utilization sits below `headroom * DOWN_FRACTION`.
+    pub fn evaluate(&self, queued: usize, utilization: f64, up_workers: usize) -> ScaleDecision {
+        let pool = up_workers + self.provisioning.len();
+        if (queued > 0 || utilization > self.headroom) && pool < self.max_workers {
+            return ScaleDecision::Up;
+        }
+        if queued == 0
+            && utilization < self.headroom * DOWN_FRACTION
+            && self.provisioning.is_empty()
+            && up_workers > self.base_workers
+        {
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+
+    /// Draw one provisioning delay from the scaler's own stream.
+    pub fn boot_delay(&mut self) -> f64 {
+        self.rng.lognormal(BOOT_MEAN_S.ln(), BOOT_SIGMA).clamp(1.0, 60.0)
+    }
+}
+
+impl ScalerSpec {
+    /// Write this spec into a sim config (mirrors `FaultsSpec::apply`).
+    pub fn apply(&self, cfg: &mut SimConfig) {
+        cfg.scaler = *self;
+    }
+
+    /// Canonical registry-style label, e.g. `fifer:0.5`.
+    pub fn label(&self) -> String {
+        let name = match self.mode {
+            ScalerMode::None => "none",
+            ScalerMode::Fifer => "fifer",
+        };
+        match self.headroom {
+            Some(h) => format!("{name}:{h}"),
+            None => name.to_string(),
+        }
+    }
+
+    /// Build the live state for one run. `scaler:none` returns `None` —
+    /// the engine then pushes no ticks and draws nothing, keeping its
+    /// streams byte-identical to a build without the scaler.
+    pub fn build(&self, base_workers: usize, horizon_s: f64, seed: u64) -> Option<ClusterScaler> {
+        match self.mode {
+            ScalerMode::None => None,
+            ScalerMode::Fifer => Some(ClusterScaler {
+                rng: Rng::new(seed ^ SALT_SCALER),
+                headroom: self.headroom.unwrap_or(DEFAULT_HEADROOM),
+                base_workers,
+                max_workers: base_workers.max(1) * MAX_SCALE_FACTOR,
+                horizon_s,
+                provisioning: std::collections::BTreeSet::new(),
+                scaling: Vec::new(),
+                scale_ups: 0,
+                scale_downs: 0,
+                peak_up_workers: base_workers,
+            }),
+        }
+    }
+}
+
+/// All registered scaler names (shown by `list`; the parametric form
+/// `fifer:<headroom>` is accepted too).
+pub const SCALERS: &[&str] = &["none", "fifer"];
+
+/// Parse a `--scaler` value (mirrors `faults::parse`).
+pub fn parse(name: &str) -> Result<ScalerSpec> {
+    let (mode, param) = match name.split_once(':') {
+        Some((m, p)) => (m, Some(p)),
+        None => (name, None),
+    };
+    let headroom = match param {
+        None => None,
+        Some(p) => {
+            let h: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--scaler {mode}: bad headroom '{p}'"))?;
+            Some(h)
+        }
+    };
+    let spec = match mode {
+        "none" => {
+            ensure!(headroom.is_none(), "scaler 'none' takes no parameter");
+            ScalerSpec { mode: ScalerMode::None, headroom: None }
+        }
+        "fifer" => {
+            if let Some(h) = headroom {
+                ensure!(
+                    h.is_finite() && h > 0.0 && h <= 1.0,
+                    "--scaler fifer: headroom must be in (0, 1], got {h}"
+                );
+            }
+            ScalerSpec { mode: ScalerMode::Fifer, headroom }
+        }
+        other => bail!("unknown scaler '{other}' (known: {SCALERS:?}, or 'fifer:<headroom>')"),
+    };
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_registered_names() {
+        for name in SCALERS {
+            let spec = parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.label(), *name);
+        }
+    }
+
+    #[test]
+    fn parse_headroom_suffix_and_label_round_trip() {
+        let s = parse("fifer:0.5").unwrap();
+        assert_eq!(s.mode, ScalerMode::Fifer);
+        assert_eq!(s.headroom, Some(0.5));
+        assert_eq!(s.label(), "fifer:0.5");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_and_malformed() {
+        assert!(parse("autoscale").is_err());
+        assert!(parse("fifer:abc").is_err());
+        assert!(parse("fifer:0").is_err());
+        assert!(parse("fifer:-0.5").is_err());
+        assert!(parse("fifer:1.5").is_err());
+        assert!(parse("none:0.5").is_err());
+    }
+
+    #[test]
+    fn spec_applies_to_config() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.scaler.mode, ScalerMode::None);
+        parse("fifer:0.6").unwrap().apply(&mut cfg);
+        assert_eq!(cfg.scaler.mode, ScalerMode::Fifer);
+        assert_eq!(cfg.scaler.headroom, Some(0.6));
+    }
+
+    #[test]
+    fn none_builds_no_state() {
+        assert!(ScalerSpec::default().build(8, 600.0, 42).is_none());
+    }
+
+    #[test]
+    fn fifer_state_defaults_and_caps() {
+        let s = parse("fifer").unwrap().build(4, 600.0, 42).unwrap();
+        assert_eq!(s.headroom, DEFAULT_HEADROOM);
+        assert_eq!(s.base_workers, 4);
+        assert_eq!(s.max_workers, 16);
+        assert_eq!(s.peak_up_workers, 4);
+        assert!(s.scaling.is_empty());
+    }
+
+    #[test]
+    fn evaluate_signals() {
+        let mut s = parse("fifer:0.5").unwrap().build(4, 600.0, 1).unwrap();
+        // queued demand -> up, regardless of utilization
+        assert_eq!(s.evaluate(3, 0.1, 4), ScaleDecision::Up);
+        // hot pool -> up
+        assert_eq!(s.evaluate(0, 0.8, 4), ScaleDecision::Up);
+        // between the thresholds -> hold
+        assert_eq!(s.evaluate(0, 0.4, 5), ScaleDecision::Hold);
+        // cold pool with extension workers -> down
+        assert_eq!(s.evaluate(0, 0.1, 5), ScaleDecision::Down);
+        // cold pool at base size -> hold (the base is never drained)
+        assert_eq!(s.evaluate(0, 0.1, 4), ScaleDecision::Hold);
+        // at the cap -> hold even under pressure
+        assert_eq!(s.evaluate(9, 0.9, 16), ScaleDecision::Hold);
+        // a boot in flight suppresses scale-down
+        s.provisioning.insert(5);
+        assert_eq!(s.evaluate(0, 0.1, 5), ScaleDecision::Hold);
+        // and counts toward the cap
+        for w in 6..16 {
+            s.provisioning.insert(w);
+        }
+        assert_eq!(s.evaluate(9, 0.9, 5), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn boot_delays_are_deterministic_and_bounded() {
+        let mut a = parse("fifer").unwrap().build(4, 600.0, 7).unwrap();
+        let mut b = parse("fifer").unwrap().build(4, 600.0, 7).unwrap();
+        for _ in 0..32 {
+            let d = a.boot_delay();
+            assert_eq!(d, b.boot_delay());
+            assert!((1.0..=60.0).contains(&d), "delay {d}");
+        }
+        // a different seed samples a different stream
+        let mut c = parse("fifer").unwrap().build(4, 600.0, 8).unwrap();
+        assert_ne!(a.boot_delay(), c.boot_delay());
+    }
+}

@@ -104,16 +104,30 @@ pub fn arrival_times(rps: f64, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
 }
 
 /// Shared tail of every per-minute arrival process: uniform-random start
-/// times within each minute, clipped to the window, sorted (NaN-safe).
+/// times within each minute, sorted (NaN-safe).
+///
+/// The final minute of a non-multiple-of-60 window is *partial* (width
+/// `duration_s - lo < 60`). Earlier versions drew over the full minute and
+/// silently dropped draws landing past `duration_s`, which made the window
+/// total a coin flip (binomial thinning of the last minute) instead of the
+/// deterministic `round(...)` contract the rest of the pipeline pins.
+/// Instead, the partial minute's mass is rescaled to its covered fraction
+/// (`round(count * w / 60)` arrivals, uniform over `[lo, lo + w)`), so the
+/// delivered total is an exact function of the counts and the density at
+/// the window edge matches the rest of the minute. Multiple-of-60 windows
+/// take the `w == 60` path and consume the byte-identical draw sequence
+/// they always did.
 pub fn minute_starts(counts: &[u64], duration_s: f64, rng: &mut Rng) -> Vec<f64> {
     let mut times = Vec::new();
     for (m, count) in counts.iter().enumerate() {
         let lo = m as f64 * 60.0;
-        for _ in 0..*count {
-            let t = lo + rng.f64() * 60.0;
-            if t <= duration_s {
-                times.push(t);
-            }
+        let w = (duration_s - lo).min(60.0);
+        if w <= 0.0 {
+            continue;
+        }
+        let k = if w >= 60.0 { *count } else { ((*count as f64) * w / 60.0).round() as u64 };
+        for _ in 0..k {
+            times.push(lo + rng.f64() * w);
         }
     }
     times.sort_by(f64::total_cmp);
@@ -210,5 +224,59 @@ mod tests {
         let a = arrival_times(3.0, 300.0, &mut Rng::new(9));
         let b = arrival_times(3.0, 300.0, &mut Rng::new(9));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partial_minute_mass_is_rescaled_not_truncated() {
+        // one full minute + a 30 s partial minute: the partial minute
+        // carries round(10 * 30/60) = 5 arrivals, uniform over [60, 90).
+        let t = minute_starts(&[10, 10], 90.0, &mut Rng::new(1));
+        assert_eq!(t.len(), 15);
+        let tail: Vec<f64> = t.iter().copied().filter(|x| *x >= 60.0).collect();
+        assert_eq!(tail.len(), 5);
+        assert!(tail.iter().all(|x| (60.0..90.0).contains(x)), "{tail:?}");
+        // minutes past the window contribute nothing (and draw nothing)
+        let clipped = minute_starts(&[5, 5, 5], 60.0, &mut Rng::new(1));
+        assert_eq!(clipped.len(), 5);
+        assert!(clipped.iter().all(|x| (0.0..60.0).contains(x)));
+    }
+
+    #[test]
+    fn partial_minute_windows_deliver_an_exact_total() {
+        // the delivered total must be a deterministic function of the
+        // counts — not a binomial thinning of the final minute.
+        for &(rps, dur) in &[(4.0, 90.0), (6.0, 330.0)] {
+            let minutes = (dur / 60.0_f64).ceil() as usize;
+            let counts = per_minute_counts(rps, minutes, &mut Rng::new(5));
+            let w = dur - (minutes as f64 - 1.0) * 60.0;
+            let expect: u64 = counts[..minutes - 1].iter().sum::<u64>()
+                + ((counts[minutes - 1] as f64) * w / 60.0).round() as u64;
+            let t = arrival_times(rps, dur, &mut Rng::new(5));
+            assert_eq!(t.len() as u64, expect, "rps {rps} dur {dur}");
+            assert!(t.iter().all(|x| (0.0..=dur).contains(x)));
+            let rate = t.len() as f64 / dur;
+            assert!((rate - rps).abs() < 0.35 * rps, "rps {rps} dur {dur}: delivered {rate}");
+        }
+    }
+
+    #[test]
+    fn multiple_of_60_windows_keep_the_legacy_draw_stream() {
+        // the partial-minute fix must not shift full-minute windows: they
+        // consume byte-identical draws to the pre-fix recipe.
+        let counts = [3u64, 0, 7, 2];
+        let new = minute_starts(&counts, 240.0, &mut Rng::new(11));
+        let mut rng = Rng::new(11);
+        let mut old = Vec::new();
+        for (m, count) in counts.iter().enumerate() {
+            let lo = m as f64 * 60.0;
+            for _ in 0..*count {
+                let t = lo + rng.f64() * 60.0;
+                if t <= 240.0 {
+                    old.push(t);
+                }
+            }
+        }
+        old.sort_by(f64::total_cmp);
+        assert_eq!(new, old);
     }
 }

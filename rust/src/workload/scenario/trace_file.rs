@@ -1,42 +1,371 @@
 //! Trace replay: per-minute invocation counts from a CSV in the Azure
 //! Functions production-trace schema (Shahrad et al.),
 //! `HashOwner,HashApp,HashFunction,Trigger,1,2,...,N` — one row per
-//! function, one numeric column per minute of the day. All rows are
-//! summed into a cluster-wide per-minute profile, the profile is rescaled
-//! so the replay window averages the requested RPS (residue-preserving
-//! rounding, `azure::round_counts`), and windows longer than the trace
-//! tile it. A 10-minute sample in this schema is checked in at
-//! `rust/data/azure_sample.csv` (embedded at compile time, so `trace-file`
-//! works regardless of the working directory).
+//! function, one numeric column per minute of the day.
+//!
+//! The real 2019/2021 datasets carry millions of function-minutes, so the
+//! ingest is **streaming and bounded-memory** (DESIGN.md §Trace ingest):
+//!
+//! * a chunked line reader ([`for_each_line`]) feeds the parser complete
+//!   lines from fixed-size reads — the file is never materialized whole
+//!   (the old `read_to_string` path is gone);
+//! * per-function profiles are compact `u32` slabs, **hour-sharded**
+//!   (only hours with activity allocate a 60-minute slab), so a replay
+//!   window touches only the shards it overlaps;
+//! * only the **top-K** functions by total invocations are retained as
+//!   individual profiles ([`TOP_K`]); everything else is folded into one
+//!   aggregate tail profile at eviction time, bounding peak resident
+//!   profiles at `K + 1` regardless of row count (tracked in
+//!   [`Ingest::peak_resident`], asserted by the 50k-row test below).
+//!
+//! The cluster-wide per-minute profile (all rows summed — identical to
+//! the pre-streaming parser's output) is rescaled so the replay window
+//! averages the requested RPS (residue-preserving rounding,
+//! `azure::round_counts`), and windows longer than the trace tile it.
+//! Function popularity is **trace-derived**: invocations map onto catalog
+//! slots with weights from the ranked retained totals (head-heavy, like
+//! the real dataset) instead of the synthetic uniform/zipf picks. A
+//! 10-minute sample in this schema is checked in at
+//! `rust/data/azure_sample.csv` (embedded at compile time, so
+//! `trace-file` works regardless of the working directory).
 
 use std::collections::BTreeMap;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
+use crate::functions::catalog::CATALOG;
 use crate::util::rng::Rng;
 use crate::workload::azure;
 
 use super::Scenario;
 
-/// Parsed-profile cache keyed by path: sweep cells rebuild their scenario
+/// How many individual function profiles the ingest retains; everything
+/// below the cutoff is folded into the aggregate tail. 64 covers the
+/// head that carries almost all invocations in the production trace
+/// (popularity is heavily Zipf-skewed) while keeping peak resident
+/// memory at `TOP_K + 1` slabs regardless of dataset size.
+pub const TOP_K: usize = 64;
+
+/// Minutes per profile shard (one hour — the replay windows experiments
+/// use are minutes-to-hours, so an hour is the natural extraction unit).
+pub const SHARD_MINUTES: usize = 60;
+
+/// Bytes per read of the chunked line reader.
+const CHUNK_BYTES: usize = 64 * 1024;
+
+/// Parsed-ingest cache keyed by path: sweep cells rebuild their scenario
 /// per (cell, replicate) for determinism, and a real Azure day trace is
 /// hundreds of MB — re-reading it once per cell would dominate the sweep.
-/// Profiles are immutable once parsed, so one read per process suffices.
-fn path_cache() -> &'static Mutex<BTreeMap<String, Vec<u64>>> {
-    static CACHE: OnceLock<Mutex<BTreeMap<String, Vec<u64>>>> = OnceLock::new();
+/// Ingests are immutable once parsed (shared via `Arc`), so one read per
+/// process suffices.
+fn path_cache() -> &'static Mutex<BTreeMap<String, Arc<Ingest>>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<String, Arc<Ingest>>>> = OnceLock::new();
     CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Lock the path cache, recovering from poison: a panicking sweep thread
+/// must not cascade failures into unrelated cells. The map is only ever
+/// read or inserted into under the lock — never left mid-edit — so the
+/// inner value is always consistent and safe to take back.
+fn lock_cache() -> MutexGuard<'static, BTreeMap<String, Arc<Ingest>>> {
+    match path_cache().lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
 }
 
 /// The checked-in sample trace (Azure Functions schema, 10 minutes,
 /// 8 function rows with a minute-5/6 burst).
 pub const SAMPLE_TRACE_CSV: &str = include_str!("../../../data/azure_sample.csv");
 
-/// Replay of real per-minute invocation counts, rescaled to a target RPS.
+/// Per-minute counts for one retained (top-K) function, hour-sharded:
+/// only hours with nonzero activity allocate a slab, and counts are
+/// `u32` — the per-function-per-minute range of the dataset (the
+/// cluster-wide sums stay `u64`).
+#[derive(Debug, Clone)]
+pub struct FnProfile {
+    /// Stable identity from the row's HashFunction column (or a
+    /// synthesized `row-N` when the schema carries no id columns).
+    pub name: String,
+    /// Total invocations across the whole trace.
+    pub total: u64,
+    /// First row index this function appeared at (eviction tie-break).
+    first_row: usize,
+    /// hour index -> 60-minute count slab.
+    shards: BTreeMap<usize, Vec<u32>>,
+}
+
+impl FnProfile {
+    fn new(name: String, first_row: usize) -> Self {
+        FnProfile { name, total: 0, first_row, shards: BTreeMap::new() }
+    }
+
+    fn add(&mut self, minute: usize, count: u32) {
+        let (hour, offset) = (minute / SHARD_MINUTES, minute % SHARD_MINUTES);
+        let slab = self.shards.entry(hour).or_insert_with(|| vec![0u32; SHARD_MINUTES]);
+        slab[offset] += count;
+        self.total += count as u64;
+    }
+
+    /// Invocations in one trace minute (0 where no shard exists).
+    pub fn count_at(&self, minute: usize) -> u64 {
+        let (hour, offset) = (minute / SHARD_MINUTES, minute % SHARD_MINUTES);
+        self.shards.get(&hour).map_or(0, |slab| slab[offset] as u64)
+    }
+
+    /// Invocations inside `[start_minute, start_minute + minutes)` —
+    /// touches only the shards the window overlaps.
+    pub fn window_total(&self, start_minute: usize, minutes: usize) -> u64 {
+        let end = start_minute + minutes;
+        let first_hour = start_minute / SHARD_MINUTES;
+        let last_hour = end.div_ceil(SHARD_MINUTES);
+        self.shards
+            .range(first_hour..last_hour)
+            .map(|(hour, slab)| {
+                slab.iter()
+                    .enumerate()
+                    .filter(|(offset, _)| {
+                        let m = hour * SHARD_MINUTES + offset;
+                        m >= start_minute && m < end
+                    })
+                    .map(|(_, c)| *c as u64)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    /// How many hour shards this profile allocated.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// The bounded-memory result of streaming one trace CSV: cluster-wide
+/// per-minute sums, the retained top-K per-function profiles, and the
+/// aggregate tail everything else was folded into.
+#[derive(Debug, Default)]
+pub struct Ingest {
+    /// Number of per-minute columns in the schema.
+    pub minutes: usize,
+    /// Cluster-wide invocations per trace minute (every row summed —
+    /// byte-identical to the pre-streaming parser's profile).
+    pub per_minute: Vec<u64>,
+    /// Retained functions, ranked by (total desc, first-seen asc).
+    pub top: Vec<FnProfile>,
+    /// Per-minute sums of all rows *not* retained in `top`.
+    pub tail_per_minute: Vec<u64>,
+    /// Total function rows ingested.
+    pub rows: usize,
+    /// Rows folded into the tail (evicted or zero-mass).
+    pub tail_rows: usize,
+    /// Max individual profiles resident at any point during ingest —
+    /// the bounded-memory contract: never exceeds `TOP_K + 1`.
+    pub peak_resident: usize,
+}
+
+impl Ingest {
+    /// Stream-parse the Azure Functions trace schema from any byte
+    /// source: minute columns are the header fields that parse as
+    /// integers; every other column (hashes, trigger) is ignored except
+    /// the HashFunction-position column, which names the profile.
+    fn read<R: std::io::Read>(src: R) -> Result<Ingest> {
+        // (header field count, minute column indexes, name column)
+        let mut header: Option<(usize, Vec<usize>, Option<usize>)> = None;
+        let mut ingest = Ingest::default();
+        for_each_line(src, |lineno, line| {
+            if line.trim().is_empty() {
+                return Ok(());
+            }
+            if header.is_none() {
+                let fields: Vec<&str> = line.split(',').collect();
+                let minute_cols: Vec<usize> = fields
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| h.trim().parse::<u64>().is_ok())
+                    .map(|(i, _)| i)
+                    .collect();
+                ensure!(
+                    !minute_cols.is_empty(),
+                    "trace CSV header has no per-minute columns (expected Azure schema \
+                     'HashOwner,HashApp,HashFunction,Trigger,1,2,...')"
+                );
+                // HashFunction is the third id column in the Azure
+                // schema; fall back to the last id column in reduced
+                // test schemas.
+                let id_cols: Vec<usize> =
+                    (0..fields.len()).filter(|i| !minute_cols.contains(i)).collect();
+                let name_col = id_cols.get(2).or(id_cols.last()).copied();
+                ingest.minutes = minute_cols.len();
+                ingest.per_minute = vec![0; minute_cols.len()];
+                ingest.tail_per_minute = vec![0; minute_cols.len()];
+                header = Some((fields.len(), minute_cols, name_col));
+                return Ok(());
+            }
+            let (header_len, minute_cols, name_col) = header.as_ref().unwrap();
+            ingest.row(lineno, line, *header_len, minute_cols, *name_col)
+        })?;
+        ensure!(header.is_some(), "empty trace CSV");
+        ensure!(ingest.rows > 0, "trace CSV has a header but no function rows");
+        ensure!(ingest.per_minute.iter().sum::<u64>() > 0, "trace CSV carries zero invocations");
+        ingest.top.sort_by(|a, b| b.total.cmp(&a.total).then(a.first_row.cmp(&b.first_row)));
+        Ok(ingest)
+    }
+
+    fn row(
+        &mut self,
+        lineno: usize,
+        line: &str,
+        header_len: usize,
+        minute_cols: &[usize],
+        name_col: Option<usize>,
+    ) -> Result<()> {
+        let fields: Vec<&str> = line.split(',').collect();
+        ensure!(
+            fields.len() >= header_len,
+            "line {}: row has {} fields, header has {}",
+            lineno + 1,
+            fields.len(),
+            header_len
+        );
+        let name = name_col
+            .map(|c| fields[c].trim())
+            .filter(|n| !n.is_empty())
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("row-{}", lineno + 1));
+        let mut profile = FnProfile::new(name, self.rows);
+        for (slot, &col) in minute_cols.iter().enumerate() {
+            let field = fields[col].trim();
+            let count: u64 = field.parse().with_context(|| {
+                format!("line {}: bad count '{field}' in minute column {col}", lineno + 1)
+            })?;
+            if count == 0 {
+                continue;
+            }
+            let compact = u32::try_from(count).map_err(|_| {
+                anyhow::anyhow!(
+                    "line {}: count {count} in minute column {col} exceeds the u32 \
+                     profile-slab range",
+                    lineno + 1
+                )
+            })?;
+            self.per_minute[slot] += count;
+            profile.add(slot, compact);
+        }
+        self.rows += 1;
+        self.retain(profile);
+        Ok(())
+    }
+
+    /// Keep at most [`TOP_K`] individual profiles: when the pool
+    /// overflows, fold the smallest-total profile (ties: latest first
+    /// appearance) into the aggregate tail and drop its slabs.
+    fn retain(&mut self, profile: FnProfile) {
+        if profile.total == 0 {
+            // zero-mass rows carry no popularity or shape signal
+            self.tail_rows += 1;
+            return;
+        }
+        self.top.push(profile);
+        self.peak_resident = self.peak_resident.max(self.top.len());
+        if self.top.len() > TOP_K {
+            let mut evict = 0;
+            for i in 1..self.top.len() {
+                let (a, e) = (&self.top[i], &self.top[evict]);
+                if (a.total, std::cmp::Reverse(a.first_row))
+                    < (e.total, std::cmp::Reverse(e.first_row))
+                {
+                    evict = i;
+                }
+            }
+            let folded = self.top.swap_remove(evict);
+            self.tail_rows += 1;
+            for (hour, slab) in &folded.shards {
+                for (offset, count) in slab.iter().enumerate() {
+                    if *count > 0 {
+                        self.tail_per_minute[hour * SHARD_MINUTES + offset] += *count as u64;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total invocations folded into the aggregate tail.
+    pub fn tail_total(&self) -> u64 {
+        self.tail_per_minute.iter().sum()
+    }
+}
+
+/// Chunked line reader: fixed-size reads, complete lines handed to `f`
+/// with their 0-based file line number (blank lines included, so error
+/// messages can cite real file positions). Memory is O(chunk + longest
+/// line) regardless of source size.
+fn for_each_line<R: std::io::Read>(
+    mut src: R,
+    mut f: impl FnMut(usize, &str) -> Result<()>,
+) -> Result<()> {
+    fn trim_cr(line: &[u8]) -> &[u8] {
+        line.strip_suffix(b"\r").unwrap_or(line)
+    }
+    let mut chunk = vec![0u8; CHUNK_BYTES];
+    let mut carry: Vec<u8> = Vec::new();
+    let mut lineno = 0usize;
+    loop {
+        let n = src.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        let mut rest = &chunk[..n];
+        while let Some(pos) = rest.iter().position(|b| *b == b'\n') {
+            let (head, tail) = rest.split_at(pos);
+            if carry.is_empty() {
+                f(lineno, std::str::from_utf8(trim_cr(head))?)?;
+            } else {
+                carry.extend_from_slice(head);
+                f(lineno, std::str::from_utf8(trim_cr(&carry))?)?;
+                carry.clear();
+            }
+            lineno += 1;
+            rest = &tail[1..];
+        }
+        carry.extend_from_slice(rest);
+    }
+    if !carry.is_empty() {
+        f(lineno, std::str::from_utf8(trim_cr(&carry))?)?;
+    }
+    Ok(())
+}
+
+/// Replay of real per-minute invocation counts, rescaled to a target RPS,
+/// with trace-derived function popularity. Cheap to clone: the parsed
+/// ingest is shared behind an `Arc`.
 #[derive(Debug, Clone)]
 pub struct TraceFile {
-    /// Cluster-wide invocations per trace minute (all rows summed).
-    per_minute: Vec<u64>,
+    ingest: Arc<Ingest>,
+    /// Popularity weights over catalog slots, derived once from the
+    /// ranked retained-function totals plus the aggregate tail
+    /// (`pick_function` runs per invocation and must not re-derive them).
+    weights: Vec<f64>,
+}
+
+/// Map the ranked trace-function totals onto `n` catalog slots: rank `r`
+/// contributes to slot `r % n` (head functions land on the catalog head,
+/// mirroring the `ZipfSkew` convention), and the aggregate tail spreads
+/// uniformly — so replayed popularity follows the dataset's skew instead
+/// of a synthetic exponent.
+fn popularity_weights(ingest: &Ingest, n: usize) -> Vec<f64> {
+    let mut weights = vec![0.0; n];
+    for (rank, profile) in ingest.top.iter().enumerate() {
+        weights[rank % n] += profile.total as f64;
+    }
+    let tail = ingest.tail_total();
+    if tail > 0 {
+        let spread = tail as f64 / n as f64;
+        for w in weights.iter_mut() {
+            *w += spread;
+        }
+    }
+    weights
 }
 
 impl TraceFile {
@@ -46,64 +375,46 @@ impl TraceFile {
     }
 
     /// Load a CSV from disk (the `trace-file:<path>` registry form),
-    /// memoized per path for the life of the process.
+    /// memoized per path for the life of the process. The file is
+    /// streamed through the chunked reader — never read whole.
     pub fn from_path(path: &str) -> Result<Self> {
-        if let Some(per_minute) = path_cache().lock().expect("trace cache").get(path) {
-            return Ok(TraceFile { per_minute: per_minute.clone() });
+        if let Some(ingest) = lock_cache().get(path) {
+            return Ok(Self::from_ingest(Arc::clone(ingest)));
         }
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading trace file '{path}'"))?;
-        let parsed =
-            Self::from_csv(&text).with_context(|| format!("parsing trace file '{path}'"))?;
-        path_cache()
-            .lock()
-            .expect("trace cache")
-            .insert(path.to_string(), parsed.per_minute.clone());
-        Ok(parsed)
+        let file =
+            std::fs::File::open(path).with_context(|| format!("reading trace file '{path}'"))?;
+        let ingest = Ingest::read(file)
+            .with_context(|| format!("parsing trace file '{path}'"))
+            .map(Arc::new)?;
+        lock_cache().insert(path.to_string(), Arc::clone(&ingest));
+        Ok(Self::from_ingest(ingest))
     }
 
-    /// Parse the Azure Functions trace schema: minute columns are the
-    /// header fields that parse as integers; every other column
-    /// (hashes, trigger) is ignored. Rows sum into one profile.
+    /// Parse an in-memory CSV (embedded sample, tests) through the same
+    /// streaming parser the disk path uses.
     pub fn from_csv(text: &str) -> Result<Self> {
-        // enumerate before filtering so error messages cite real file lines
-        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
-        let (_, header) = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace CSV"))?;
-        let minute_cols: Vec<usize> = header
-            .split(',')
-            .enumerate()
-            .filter(|(_, h)| h.trim().parse::<u64>().is_ok())
-            .map(|(i, _)| i)
-            .collect();
-        anyhow::ensure!(
-            !minute_cols.is_empty(),
-            "trace CSV header has no per-minute columns (expected Azure schema \
-             'HashOwner,HashApp,HashFunction,Trigger,1,2,...')"
-        );
-        let mut per_minute = vec![0u64; minute_cols.len()];
-        let mut rows = 0usize;
-        for (lineno, line) in lines {
-            let fields: Vec<&str> = line.split(',').collect();
-            for (slot, &col) in minute_cols.iter().enumerate() {
-                let field = fields.get(col).map(|f| f.trim()).unwrap_or("");
-                let count: u64 = field.parse().with_context(|| {
-                    format!("line {}: bad count '{field}' in minute column {col}", lineno + 1)
-                })?;
-                per_minute[slot] += count;
-            }
-            rows += 1;
-        }
-        anyhow::ensure!(rows > 0, "trace CSV has a header but no function rows");
-        anyhow::ensure!(
-            per_minute.iter().sum::<u64>() > 0,
-            "trace CSV carries zero invocations"
-        );
-        Ok(TraceFile { per_minute })
+        Self::from_reader(text.as_bytes())
+    }
+
+    /// Stream-parse any byte source.
+    pub fn from_reader<R: std::io::Read>(src: R) -> Result<Self> {
+        Ok(Self::from_ingest(Arc::new(Ingest::read(src)?)))
+    }
+
+    fn from_ingest(ingest: Arc<Ingest>) -> Self {
+        let weights = popularity_weights(&ingest, CATALOG.len());
+        TraceFile { ingest, weights }
     }
 
     /// The parsed cluster-wide per-minute profile (before rescaling).
     pub fn per_minute(&self) -> &[u64] {
-        &self.per_minute
+        &self.ingest.per_minute
+    }
+
+    /// The full ingest: retained profiles, tail, resident-memory stats
+    /// (consumed by `experiment replay`'s characterization report).
+    pub fn ingest(&self) -> &Ingest {
+        &self.ingest
     }
 }
 
@@ -118,10 +429,22 @@ impl Scenario for TraceFile {
         // (rescale handles a window landing entirely on zero-count minutes
         // by falling back to a uniform profile — no 0/0)
         let mut raw: Vec<f64> = (0..minutes)
-            .map(|m| self.per_minute[m % self.per_minute.len()] as f64)
+            .map(|m| self.ingest.per_minute[m % self.ingest.per_minute.len()] as f64)
             .collect();
         azure::rescale_to_rps(&mut raw, rps);
         azure::profile_starts(&raw, duration_s, rng)
+    }
+
+    /// Trace-derived popularity: one categorical draw over the ranked
+    /// dataset weights per invocation. This deliberately replaced the
+    /// PR 2 uniform pick (one `below` draw) — a documented stream shift
+    /// for `trace-file` scenarios only (CHANGES.md, PR 10).
+    fn pick_function(&self, funcs: &[usize], rng: &mut Rng) -> usize {
+        if funcs.len() <= self.weights.len() {
+            funcs[rng.categorical(&self.weights[..funcs.len()])]
+        } else {
+            funcs[rng.categorical(&popularity_weights(&self.ingest, funcs.len()))]
+        }
     }
 }
 
@@ -136,6 +459,14 @@ mod tests {
     fn sample_parses_to_known_profile() {
         let t = TraceFile::sample().unwrap();
         assert_eq!(t.per_minute(), SAMPLE_PER_MINUTE);
+        // 8 rows, all retained (under the top-K cutoff), no tail
+        assert_eq!(t.ingest().rows, 8);
+        assert_eq!(t.ingest().top.len(), 8);
+        assert_eq!(t.ingest().tail_total(), 0);
+        // ranked by total, names from the HashFunction column
+        let totals: Vec<u64> = t.ingest().top.iter().map(|p| p.total).collect();
+        assert!(totals.windows(2).all(|w| w[0] >= w[1]), "{totals:?}");
+        assert!(t.ingest().top[0].name.starts_with("func-"), "{}", t.ingest().top[0].name);
     }
 
     #[test]
@@ -192,6 +523,23 @@ mod tests {
     }
 
     #[test]
+    fn short_rows_report_field_counts() {
+        // a truncated row must fail with the field-count diagnosis, not
+        // the misleading `bad count ''` the old parser produced
+        let err = TraceFile::from_csv("HashOwner,Trigger,1,2\nabc,http,3\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2: row has 3 fields, header has 4"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_counts_rejected_with_context() {
+        let text = "HashOwner,Trigger,1,2\nabc,http,1,5000000000\n";
+        let err = TraceFile::from_csv(text).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("u32"), "{msg}");
+    }
+
+    #[test]
     fn malformed_csvs_rejected() {
         assert!(TraceFile::from_csv("").is_err());
         assert!(TraceFile::from_csv("HashOwner,HashApp,Trigger\n").is_err(), "no minute cols");
@@ -207,5 +555,134 @@ mod tests {
             TraceFile::from_csv("HashOwner,Trigger,1,2\nabc,http,3,oops\n").is_err(),
             "non-numeric count"
         );
+    }
+
+    #[test]
+    fn path_cache_recovers_from_poison() {
+        // one panicking sweep thread must not cascade the memo into
+        // panics for every later cell (the old `.expect("trace cache")`)
+        let path = std::env::temp_dir().join("shabari_poison_regression.csv");
+        std::fs::write(&path, "HashOwner,HashApp,HashFunction,Trigger,1,2\na,b,f1,http,3,4\n")
+            .unwrap();
+        let poison = std::thread::spawn(|| {
+            let _guard = lock_cache();
+            panic!("poison the trace cache on purpose");
+        })
+        .join();
+        assert!(poison.is_err(), "the poisoning thread must have panicked");
+        let t = TraceFile::from_path(path.to_str().unwrap()).unwrap();
+        assert_eq!(t.per_minute(), [3, 4]);
+        // and the memo still serves
+        let again = TraceFile::from_path(path.to_str().unwrap()).unwrap();
+        assert_eq!(again.per_minute(), [3, 4]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Synthesize a trace CSV: `rows` functions over `minutes` columns,
+    /// function `i` active in minute `i % minutes` with count `weight(i)`.
+    fn synth_csv(rows: usize, minutes: usize, weight: impl Fn(usize) -> u64) -> String {
+        let mut csv = String::from("HashOwner,HashApp,HashFunction,Trigger");
+        for m in 1..=minutes {
+            csv.push_str(&format!(",{m}"));
+        }
+        csv.push('\n');
+        for i in 0..rows {
+            csv.push_str(&format!("o{i},a{i},f{i},http"));
+            for m in 0..minutes {
+                let c = if m == i % minutes { weight(i) } else { 0 };
+                csv.push_str(&format!(",{c}"));
+            }
+            csv.push('\n');
+        }
+        csv
+    }
+
+    #[test]
+    fn topk_eviction_folds_the_smallest_into_the_tail() {
+        // TOP_K + 2 functions with distinct totals 1..=K+2: the two
+        // smallest must be folded into the tail, everything conserved
+        let rows = TOP_K + 2;
+        let csv = synth_csv(rows, 4, |i| (i + 1) as u64);
+        let t = TraceFile::from_csv(&csv).unwrap();
+        let ingest = t.ingest();
+        assert_eq!(ingest.rows, rows);
+        assert_eq!(ingest.top.len(), TOP_K);
+        assert_eq!(ingest.tail_rows, 2);
+        assert_eq!(ingest.tail_total(), 1 + 2, "totals 1 and 2 evicted");
+        assert_eq!(ingest.peak_resident, TOP_K + 1);
+        assert_eq!(ingest.top[0].total, rows as u64, "head retained and ranked first");
+        // conservation: cluster profile == retained + tail, per minute
+        for m in 0..ingest.minutes {
+            let retained: u64 = ingest.top.iter().map(|p| p.count_at(m)).sum();
+            assert_eq!(ingest.per_minute[m], retained + ingest.tail_per_minute[m], "minute {m}");
+        }
+    }
+
+    #[test]
+    fn bounded_memory_on_a_50k_row_trace() {
+        // the acceptance bound: peak resident profiles never exceed
+        // TOP_K + 1 no matter how many rows stream through
+        let rows = 50_000;
+        let csv = synth_csv(rows, 20, |i| (i % 97 + 1) as u64);
+        let t = TraceFile::from_reader(csv.as_bytes()).unwrap();
+        let ingest = t.ingest();
+        assert_eq!(ingest.rows, rows);
+        assert!(
+            ingest.peak_resident <= TOP_K + 1,
+            "peak resident {} exceeds the top-K bound",
+            ingest.peak_resident
+        );
+        assert_eq!(ingest.top.len(), TOP_K);
+        assert_eq!(ingest.tail_rows, rows - TOP_K);
+        let expect: u64 = (0..rows).map(|i| (i % 97 + 1) as u64).sum();
+        assert_eq!(ingest.per_minute.iter().sum::<u64>(), expect, "no mass lost to eviction");
+    }
+
+    #[test]
+    fn hour_shards_slice_windows_exactly() {
+        // one function active across three hour shards; boundary minutes
+        // 59/60 and 119/120 must land in the right shard and window
+        let minutes = 125;
+        let mut csv = String::from("HashOwner,HashApp,HashFunction,Trigger");
+        for m in 1..=minutes {
+            csv.push_str(&format!(",{m}"));
+        }
+        csv.push('\n');
+        csv.push_str("o,a,f,http");
+        for m in 0..minutes {
+            let c = match m {
+                0 | 59 | 60 | 119 | 120 | 124 => m + 1,
+                _ => 0,
+            };
+            csv.push_str(&format!(",{c}"));
+        }
+        csv.push('\n');
+        let t = TraceFile::from_csv(&csv).unwrap();
+        let p = &t.ingest().top[0];
+        assert_eq!(p.shard_count(), 3, "hours 0, 1, 2");
+        for m in [0usize, 59, 60, 119, 120, 124] {
+            assert_eq!(p.count_at(m), (m + 1) as u64, "minute {m}");
+        }
+        assert_eq!(p.count_at(1), 0);
+        assert_eq!(p.window_total(59, 2), 60 + 61, "window straddling the hour boundary");
+        assert_eq!(p.window_total(0, 60), 1 + 60, "first hour only");
+        assert_eq!(p.window_total(120, 5), 121 + 125, "partial last shard");
+        assert_eq!(p.window_total(0, minutes), p.total);
+    }
+
+    #[test]
+    fn popularity_follows_the_trace_ranking() {
+        let t = TraceFile::sample().unwrap();
+        let funcs: Vec<usize> = (0..CATALOG.len()).collect();
+        let mut rng = Rng::new(9);
+        let mut counts = vec![0usize; CATALOG.len()];
+        for _ in 0..20_000 {
+            counts[t.pick_function(&funcs, &mut rng)] += 1;
+        }
+        // the sample has 8 ranked functions and no tail: the catalog head
+        // must dominate and slots past the ranked mass stay silent
+        assert!(counts[0] > counts[7], "head above the last ranked slot: {counts:?}");
+        assert_eq!(counts[CATALOG.len() - 1], 0, "no tail mass -> silent slot: {counts:?}");
+        assert!(counts[0] > 2 * counts[CATALOG.len() - 1].max(1), "{counts:?}");
     }
 }

@@ -135,6 +135,41 @@ fn faults_none_is_byte_identical_to_the_default_config() {
 }
 
 #[test]
+fn scaler_none_is_byte_identical_to_the_default_config() {
+    // The scaler axis at `none` must be a true no-op (ISSUE 10): a config
+    // that never mentions a scaler and one that explicitly parses
+    // `--scaler none` produce byte-identical record streams and learner
+    // state — no scaler state is built, no tick event is seeded, and the
+    // `SALT_SCALER` stream is never forked.
+    let plain = SimConfig { workers: 1, ..SimConfig::default() };
+    let mut parsed = SimConfig { workers: 1, ..SimConfig::default() };
+    shabari::simulator::scaler::parse("none").unwrap().apply(&mut parsed);
+    let a = fingerprint(plain);
+    let b = fingerprint(parsed);
+    assert_eq!(a.0.len(), 60, "all invocations must complete");
+    assert_eq!(a, b, "--scaler none perturbed the default byte stream");
+}
+
+#[test]
+fn fifer_scaled_runs_are_byte_deterministic() {
+    // Scaling decisions ride the ordinary event heap and a dedicated RNG
+    // fork, so the same scaled config twice must agree byte-for-byte —
+    // including the cluster invariants (checked inside `fingerprint`)
+    // after any extension workers join and drain. The tie-heavy
+    // single-worker wave load saturates the pool, giving the queue-depth
+    // signal real material to react to.
+    let cfg = || {
+        let mut c = SimConfig { workers: 1, ..SimConfig::default() };
+        shabari::simulator::scaler::parse("fifer").unwrap().apply(&mut c);
+        c
+    };
+    let a = fingerprint(cfg());
+    let b = fingerprint(cfg());
+    assert_eq!(a.0.len(), 60, "all invocations must complete under scaling");
+    assert_eq!(a, b, "fifer-scaled runs diverged across identical configs");
+}
+
+#[test]
 fn tracing_leaves_the_record_stream_byte_identical() {
     // The trace sink must be pure observation (the observability PR's
     // zero-cost-when-on guarantee for *simulation state*): a traced run

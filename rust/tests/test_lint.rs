@@ -606,6 +606,41 @@ fn duplicating_a_salt_value_fails_with_two_locations() {
 }
 
 #[test]
+fn scaler_salt_is_registered_and_its_fork_is_covered() {
+    // SALT_SCALER is part of the D006 registry: colliding its value with
+    // SALT_ENGINE must fire with both definition sites cited.
+    let engine = read_src("src/simulator/engine.rs");
+    let scaler = read_src("src/simulator/scaler/mod.rs");
+    let files = |e: &str, s: &str| {
+        lint_sources(&[
+            ("src/simulator/engine.rs", e),
+            ("src/simulator/scaler/mod.rs", s),
+        ])
+    };
+    assert!(files(&engine, &scaler).is_clean(), "baseline must be clean");
+    assert!(scaler.contains("0x5CA1_E550"), "SALT_SCALER value moved; update this test");
+    let collided = scaler.replace("0x5CA1_E550", "0x5115_BA71");
+    assert_ne!(collided, scaler);
+    let out = files(&engine, &collided);
+    let v = out
+        .violations
+        .iter()
+        .find(|v| v.rule == "D006")
+        .unwrap_or_else(|| panic!("colliding SALT_SCALER must trip D006: {:?}", out.violations));
+    assert!(v.related.is_some(), "must cite the other definition");
+    // D003 covers the scaler module like everything else: an
+    // inline-literal fork there is flagged
+    let inline = "fn f(seed: u64) { let r = Rng::new(seed ^ 0x5CA1_E550); }\n";
+    assert_eq!(rules_of(&lint_source("src/simulator/scaler/x.rs", inline)), vec!["D003"]);
+    // D010: a second fork off SALT_SCALER anywhere in the crate is one
+    // stream under two names
+    let second =
+        ("src/simulator/x.rs", "fn g(s: u64) { let r = Rng::new(s ^ SALT_SCALER); }\n");
+    let out = lint_sources(&[("src/simulator/scaler/mod.rs", scaler.as_str()), second]);
+    assert_eq!(rules_of(&out), vec!["D010"]);
+}
+
+#[test]
 fn adding_an_unhandled_trace_variant_fails_with_two_locations() {
     let trace = read_src("src/simulator/trace.rs");
     let engine = read_src("src/simulator/engine.rs");

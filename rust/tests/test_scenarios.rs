@@ -108,6 +108,43 @@ fn every_scenario_satisfies_the_arrival_properties() {
 }
 
 #[test]
+fn partial_minute_windows_deliver_the_full_requested_rate() {
+    // 90 s and 330 s end mid-minute. Before the PR 10 `minute_starts`
+    // fix, the whole final partial minute's mass was silently dropped
+    // (a 33% deficit at 90 s, 9% at 330 s); after the clamp-and-rescale
+    // fix, every scenario delivers the requested rate on any window.
+    for name in scenario::SCENARIOS {
+        let s = scenario::by_name(name).unwrap();
+        for duration in [90.0, 330.0] {
+            let (seeds, rps) = (40u64, 6.0);
+            let mut total = 0usize;
+            for seed in 0..seeds {
+                let a = s.arrival_times(rps, duration, &mut Rng::new(0xD0_0000 + seed));
+                assert!(
+                    a.iter().all(|t| (0.0..=duration).contains(t)),
+                    "{name}@{duration}s: arrival outside the window"
+                );
+                total += a.len();
+            }
+            let rate = total as f64 / (seeds as f64 * duration);
+            if *name == "flash-crowd" {
+                // the burst adds load on top of the base rate by design
+                assert!(
+                    rate >= rps * 0.92 && rate <= rps * 4.0,
+                    "{name}@{duration}s: rate {rate:.2} vs base {rps}"
+                );
+            } else {
+                assert!(
+                    (rate - rps).abs() < 0.08 * rps,
+                    "{name}@{duration}s: rate {rate:.2} vs requested {rps} \
+                     (partial-minute mass lost?)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn trace_file_round_trips_the_sample_csv() {
     // integration tests run with cwd = the crate root (rust/)
     let from_disk = TraceFile::from_path("data/azure_sample.csv").unwrap();
